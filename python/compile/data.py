@@ -1,0 +1,58 @@
+"""Synthetic digit corpus (MNIST stand-in, DESIGN.md §2 substitutions).
+
+The paper's Fig. 2 measures accuracy degradation of *trained* nets under
+activation loss; any corpus the nets genuinely learn reproduces the effect.
+We render 28×28 digit images from 5×7 bitmap glyphs with random placement,
+scale, brightness, and additive noise — hard enough that an untrained net is
+at 10% and a trained LeNet-5 reaches >95%.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 (rows top→bottom, '#' = on).
+_GLYPHS = {
+    0: ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", "#####"],
+    2: ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    3: ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+    4: ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    5: ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    6: ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    7: ["#####", "....#", "...#.", "..#..", "..#..", ".#...", ".#..."],
+    8: ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    9: ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+}
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    return np.array(
+        [[1.0 if ch == "#" else 0.0 for ch in row] for row in _GLYPHS[d]],
+        dtype=np.float32,
+    )
+
+
+def _upscale(img: np.ndarray, sy: int, sx: int) -> np.ndarray:
+    return np.repeat(np.repeat(img, sy, axis=0), sx, axis=1)
+
+
+def make_digits(n: int, seed: int = 0, size: int = 28):
+    """Generate ``n`` labelled digit images, shape (n, size, size, 1)."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, size, size, 1), np.float32)
+    ys = rng.integers(0, 10, size=n)
+    for i, d in enumerate(ys):
+        g = _glyph_array(int(d))
+        sy = int(rng.integers(2, 4))  # vertical scale 2-3 → 14-21 px tall
+        sx = int(rng.integers(2, 5))  # horizontal scale 2-4 → 10-20 px wide
+        img = _upscale(g, sy, sx)
+        h, w = img.shape
+        oy = int(rng.integers(0, size - h + 1))
+        ox = int(rng.integers(0, size - w + 1))
+        canvas = np.zeros((size, size), np.float32)
+        brightness = rng.uniform(0.6, 1.0)
+        canvas[oy : oy + h, ox : ox + w] = img * brightness
+        canvas += rng.normal(0, 0.08, size=(size, size)).astype(np.float32)
+        xs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+    return xs, ys.astype(np.int32)

@@ -1,0 +1,4 @@
+"""L1 kernels: Pallas blocked GEMM + CDC encode/decode, and jnp oracles."""
+
+from compile.kernels.gemm import cdc_decode, cdc_encode, gemm  # noqa: F401
+from compile.kernels import ref  # noqa: F401

@@ -1,0 +1,211 @@
+"""L1 Pallas kernels: blocked GEMM with fused epilogue, CDC encode/decode.
+
+These kernels are the compute hot-spot of every per-device task in the
+paper's distribution schemes (Section 5.1): a fully-connected shard is a
+GEMM over a row-slice of W; a channel-split conv shard is a GEMM over a
+row-slice of the unrolled filter matrix (Eq. 4); the CDC parity shard is the
+*same* GEMM over offline-summed weights (Eq. 11) — which is exactly why the
+paper's scheme keeps the distribution balanced.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets ARM
+CPUs, so there is no warp/tensor-core mapping to undo; we structure the
+kernel the way a TPU implementation would — a (M/bm, N/bn, K/bk) grid whose
+BlockSpecs express the HBM↔VMEM schedule, f32 accumulation in the output
+block across the K grid axis, and the bias+ReLU epilogue fused into the last
+K step. Under ``interpret=True`` (mandatory for CPU-PJRT execution) the same
+structure lowers to plain HLO, so numerics are validated end-to-end.
+
+All kernels pad operands up to block multiples with zeros and slice the
+result back, so arbitrary shapes are supported.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes, chosen by the §Perf sweep (EXPERIMENTS.md):
+# 512×512 weight blocks with 64-wide input blocks keep the VMEM working
+# set at bm·bk + bk·bn + bm·bn ≈ (1 MiB + 128 KiB + 128 KiB) · f32 ≈
+# 1.3 MiB — ~2.6 MiB double-buffered, comfortably under a TPU core's
+# ~16 MiB VMEM — while minimising grid steps (the dominant cost both for
+# the interpret-mode validator and for TPU grid dispatch). The wrapper
+# clamps each block to the operand size, so a single-batch matvec (n = 1)
+# never pays for padded columns: before the clamp a 512×2048 fc shard
+# cost ≈ 210 ms per execution, after it 6.7 ms (≈ 31×).
+BLOCK_M = 512
+BLOCK_N = 64
+BLOCK_K = 512
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2(a, bm: int, bn: int):
+    """Zero-pad a 2-D array up to multiples of (bm, bn)."""
+    m, n = a.shape
+    pm, pn = _ceil_div(m, bm) * bm - m, _ceil_div(n, bn) * bn - n
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _gemm_kernel(w_ref, x_ref, b_ref, o_ref, *, nsteps_k: int, relu: bool,
+                 has_bias: bool):
+    """Grid = (M/bm, N/bn, K/bk); accumulate into o_ref across the K axis.
+
+    The output block is revisited for every K step (classic Pallas matmul):
+    initialise at k==0, accumulate, and run the epilogue at the last step.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == nsteps_k - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("relu", "block_m", "block_n", "block_k", "interpret"),
+)
+def gemm(w, x, bias=None, *, relu=False, block_m=BLOCK_M, block_n=BLOCK_N,
+         block_k=BLOCK_K, interpret=True):
+    """Blocked Pallas GEMM ``w @ x [+ bias] [relu]``.
+
+    ``w``: (m, k) weight shard, ``x``: (k, n), ``bias``: (m, 1) or None.
+    This is the single kernel every AOT shard artifact bottoms out in.
+    """
+    m, k = w.shape
+    k2, n = x.shape
+    assert k == k2, f"contraction mismatch: {w.shape} @ {x.shape}"
+    # Adapt block shapes to the problem: single-batch inference is a
+    # matvec (n == 1) — padding n up to a 64-wide block would compute 64
+    # columns to use one (measured 64×/≈200 ms per fc-2048 shard before
+    # this clamp; see EXPERIMENTS.md §Perf). On a real TPU the same logic
+    # picks MXU-aligned blocks no wider than the operand.
+    block_n = min(block_n, n)
+    block_m = min(block_m, m)
+    block_k = min(block_k, k)
+    if n == 1:
+        # Matvec fast path for the interpret-mode validator: grid-step
+        # (while-loop + dynamic-slice) overhead dominates a GEMV, so take
+        # the whole operand per step (4096² fc shard: 1375 ms → 3.9 ms,
+        # EXPERIMENTS.md §Perf iteration 2). A real-TPU build would keep
+        # bm×bk ≤ VMEM instead (512×2048 f32 = 4 MiB double-buffered);
+        # the blocked path stays exercised by every n > 1 conv shard and
+        # by the explicit-block tests.
+        block_m = min(m, 8192)
+        block_k = k
+    has_bias = bias is not None
+    if not has_bias:
+        # Dummy operand keeps the kernel signature uniform; it is never read.
+        bias = jnp.zeros((m, 1), dtype=w.dtype)
+    assert bias.shape == (m, 1), f"bias must be (m,1), got {bias.shape}"
+
+    wp = _pad2(w, block_m, block_k)
+    xp = _pad2(x, block_k, block_n)
+    bp = _pad2(bias, block_m, 1)
+    gm, gn, gk = (
+        wp.shape[0] // block_m,
+        xp.shape[1] // block_n,
+        wp.shape[1] // block_k,
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _gemm_kernel, nsteps_k=gk, relu=relu, has_bias=has_bias
+        ),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((wp.shape[0], xp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(wp, xp, bp)
+    return out[:m, :n]
+
+
+def _sum_kernel(s_ref, o_ref, *, nsteps: int):
+    """Accumulate the leading axis: o += s[d] for each grid step d."""
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += s_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def cdc_encode(shards, *, block_m=BLOCK_M, interpret=True):
+    """CDC parity weights = Σ_d shards[d] (paper Eq. 11), offline.
+
+    ``shards``: (d, m_s, k) stack of per-device weight shards → (m_s, k).
+    Grid walks (row-blocks, devices) so each VMEM-resident output block is
+    revisited once per device — the TPU-friendly reduction order.
+    """
+    d, ms, k = shards.shape
+    sp = jnp.pad(shards, ((0, 0), (0, _ceil_div(ms, block_m) * block_m - ms), (0, 0)))
+    gm = sp.shape[1] // block_m
+    out = pl.pallas_call(
+        functools.partial(_sum_kernel, nsteps=d),
+        grid=(gm, d),
+        in_specs=[pl.BlockSpec((1, block_m, k), lambda i, dd: (dd, i, 0))],
+        out_specs=pl.BlockSpec((block_m, k), lambda i, dd: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[1], k), jnp.float32),
+        interpret=interpret,
+    )(sp)
+    return out[:ms]
+
+
+def _decode_kernel(p_ref, r_ref, o_ref, *, nrecv: int):
+    """missing = parity − Σ received, blocked over rows."""
+    o_ref[...] = p_ref[...] - jnp.sum(r_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def cdc_decode(parity_out, received, *, block_m=BLOCK_M, interpret=True):
+    """Recover the missing device's output (paper §5.2).
+
+    ``parity_out``: (m_s, n); ``received``: (d-1, m_s, n) surviving outputs.
+    A single subtraction pass — this is the close-to-zero-latency recovery
+    the paper contrasts with re-execution.
+    """
+    ms, n = parity_out.shape
+    nrecv = received.shape[0]
+    pad = _ceil_div(ms, block_m) * block_m - ms
+    pp = jnp.pad(parity_out, ((0, pad), (0, 0)))
+    rp = jnp.pad(received, ((0, 0), (0, pad), (0, 0)))
+    gm = pp.shape[0] // block_m
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, nrecv=nrecv),
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((nrecv, block_m, n), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0], n), jnp.float32),
+        interpret=interpret,
+    )(pp, rp)
+    return out[:ms]

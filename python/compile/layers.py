@@ -1,0 +1,85 @@
+"""L2 layer forward functions, built on the L1 Pallas GEMM kernel.
+
+Each forward mirrors Section 3 of the paper: fully-connected layers are a
+direct GEMM (Eq. 3); convolution layers are transformed to GEMM via patch
+unrolling (Fig. 4 / Eq. 4) so that *every* compute-heavy layer bottoms out
+in the same kernel — which is what lets the CDC scheme live at the library
+(GEMM) level, below the user's program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gemm
+
+
+def im2col(x, fh: int, fw: int, stride: int = 1, padding: str = "SAME"):
+    """Unroll (H, W, C) input into the (F²C, OH·OW) patch matrix of Fig. 4.
+
+    Uses ``conv_general_dilated_patches`` so the unroll lowers to a single
+    HLO convolution — cheap on any PJRT backend. Feature order is C-major
+    then fh, fw (JAX's patch order); the filter matrix in :func:`conv2d`
+    is flattened in the matching order.
+    """
+    h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x[None],  # add batch
+        filter_shape=(fh, fw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]  # (OH, OW, C*fh*fw)
+    oh, ow, f2c = patches.shape
+    return patches.reshape(oh * ow, f2c).T, (oh, ow)
+
+
+def filters_to_matrix(w):
+    """(K, F, F, C) filters → (K, F²C) matrix, feature order matching im2col.
+
+    JAX's dilated-patches order features as (C, fh, fw), so transpose the
+    filter accordingly before flattening.
+    """
+    k, fh, fw, c = w.shape
+    return w.transpose(0, 3, 1, 2).reshape(k, c * fh * fw)
+
+
+def fc(w, b, x, *, relu=True, interpret=True):
+    """Fully-connected layer (Eq. 3): σ(Wx + b); ``x``: (k, n) column(s)."""
+    bias = b.reshape(-1, 1) if b is not None else None
+    return gemm(w, x, bias, relu=relu, interpret=interpret)
+
+
+def conv2d(w, b, x, *, stride=1, padding="SAME", relu=True, interpret=True):
+    """Convolution layer via im2col + GEMM (Eq. 4). Returns (OH, OW, K)."""
+    k = w.shape[0]
+    cols, (oh, ow) = im2col(x, w.shape[1], w.shape[2], stride, padding)
+    wmat = filters_to_matrix(w)
+    bias = b.reshape(-1, 1) if b is not None else None
+    out = gemm(wmat, cols, bias, relu=relu, interpret=interpret)  # (K, OH·OW)
+    return out.reshape(k, oh, ow).transpose(1, 2, 0)
+
+
+def maxpool(x, size=2, stride=2):
+    """Max-pool (VALID) — grouped with its parent layer per paper §3."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(size, size, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avgpool_global(x):
+    """Global average pool: (H, W, C) → (C,)."""
+    return jnp.mean(x, axis=(0, 1))
+
+
+def softmax(logits):
+    """Numerically-stable softmax over the leading axis of (m, 1)."""
+    z = logits - jnp.max(logits, axis=0, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=0, keepdims=True)

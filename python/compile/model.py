@@ -1,0 +1,148 @@
+# L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+"""Full-model forwards, parameter init, and the per-device shard functions
+that ``aot.py`` lowers to HLO artifacts.
+
+CDC epilogue placement: the parity device computes Σ_d (W_d x + b_d), which
+is linear — so recovery by subtraction is only valid on *pre-activation*
+outputs. Shard artifacts therefore come in two flavors:
+
+* ``relu=True``  — non-CDC fast path; activation (and pool) fused on-device.
+* ``relu=False`` — CDC mode; devices ship pre-activation outputs and the
+  merge point (rust ``tensor`` module) applies σ/pool after concat or after
+  CDC recovery. The paper notes this freedom explicitly for channel
+  splitting ("before or after activation function", §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import layers
+from compile.zoo import ModelDesc, layer_io_shapes
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def init_params(model: ModelDesc, seed: int = 0) -> Dict[str, Tuple[np.ndarray, np.ndarray]]:
+    """He-init conv (K,F,F,C) / fc (m,k) weights + zero biases per layer."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+    for layer, (inp, _out) in zip(model.layers, layer_io_shapes(model)):
+        if layer.kind == "conv":
+            c = inp[-1]
+            fan_in = layer.f * layer.f * c
+            w = rng.normal(0, np.sqrt(2.0 / fan_in),
+                           size=(layer.k, layer.f, layer.f, c)).astype(np.float32)
+            b = np.zeros(layer.k, np.float32)
+        elif layer.kind == "fc":
+            k = inp[0]
+            w = rng.normal(0, np.sqrt(2.0 / k), size=(layer.m, k)).astype(np.float32)
+            b = np.zeros(layer.m, np.float32)
+        else:
+            continue
+        params[layer.name] = (w, b)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-model forward (training, goldens, python-side oracle for rust e2e)
+
+
+def forward(model: ModelDesc, params, x, *, interpret=True, taps=False):
+    """Run the full graph on one input. ``x``: (H,W,C) or (k,) for fc models.
+
+    With ``taps=True`` also returns the post-layer activations in graph
+    order — used to cross-check the rust pipeline layer by layer.
+    """
+    acts = []
+    cur = x if x.ndim > 1 else x.reshape(-1, 1)
+    for layer in model.layers:
+        if layer.kind == "conv":
+            w, b = params[layer.name]
+            cur = layers.conv2d(jnp.asarray(w), jnp.asarray(b), cur,
+                                stride=layer.s, padding=layer.padding,
+                                relu=layer.relu, interpret=interpret)
+            if layer.pool:
+                cur = layers.maxpool(cur, layer.pool, layer.pool)
+        elif layer.kind == "maxpool":
+            cur = layers.maxpool(cur, layer.pool, layer.pool)
+        elif layer.kind == "flatten":
+            cur = cur.reshape(-1, 1)
+        elif layer.kind == "gap":
+            cur = layers.avgpool_global(cur).reshape(-1, 1)
+        elif layer.kind == "fc":
+            w, b = params[layer.name]
+            cur = layers.fc(jnp.asarray(w), jnp.asarray(b), cur,
+                            relu=layer.relu, interpret=interpret)
+        if taps:
+            acts.append(cur)
+    logits = cur.reshape(-1)
+    return (logits, acts) if taps else logits
+
+
+# ---------------------------------------------------------------------------
+# Shard functions — what aot.py lowers. Weights are runtime *parameters*
+# (not baked constants) so one executable serves every shard of that shape:
+# the paper's "all weights on every device's SD card" task-switching model.
+
+
+def fc_shard_fn(m_s: int, k: int, n: int, *, relu: bool):
+    """Shard of an fc layer under output splitting (or the CDC parity —
+    same shape, summed weights): (w, b, x) → w@x + b [relu]."""
+
+    def fn(w, b, x):
+        return (layers.fc(w, b.reshape(-1), x, relu=relu),)
+
+    spec = (
+        jax.ShapeDtypeStruct((m_s, k), jnp.float32),
+        jax.ShapeDtypeStruct((m_s, 1), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    return fn, spec
+
+
+def conv_shard_fn(h: int, w_: int, c: int, k_s: int, f: int, stride: int,
+                  padding: str, *, relu: bool, pool: int):
+    """Shard of a conv layer under channel splitting: the device holds a
+    row-slice (its filters) of the unrolled filter matrix and the *full*
+    input; emits its slice of the output depth (paper Fig. 8).
+
+    (wmat (k_s, f²c), b (k_s,1), x (h,w,c)) → (oh', ow', k_s); pool only in
+    the non-CDC flavor (pool is nonlinear, so CDC shards defer it).
+    """
+
+    def fn(wmat, b, x):
+        cols, (oh, ow) = layers.im2col(x, f, f, stride, padding)
+        out = layers.gemm(wmat, cols, b, relu=relu)
+        out = out.reshape(k_s, oh, ow).transpose(1, 2, 0)
+        if pool:
+            out = layers.maxpool(out, pool, pool)
+        return (out,)
+
+    spec = (
+        jax.ShapeDtypeStruct((k_s, f * f * c), jnp.float32),
+        jax.ShapeDtypeStruct((k_s, 1), jnp.float32),
+        jax.ShapeDtypeStruct((h, w_, c), jnp.float32),
+    )
+    return fn, spec
+
+
+def maxpool_fn(h: int, w_: int, c: int, size: int):
+    """Standalone pool artifact (merge-side pool for CDC conv layers)."""
+
+    def fn(x):
+        return (layers.maxpool(x, size, size),)
+
+    return fn, (jax.ShapeDtypeStruct((h, w_, c), jnp.float32),)
+
+
+def filters_to_matrix(w: np.ndarray) -> np.ndarray:
+    """numpy twin of layers.filters_to_matrix for weight preparation."""
+    k, fh, fw, c = w.shape
+    return np.ascontiguousarray(w.transpose(0, 3, 1, 2).reshape(k, c * fh * fw))

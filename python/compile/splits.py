@@ -1,0 +1,204 @@
+"""Model-parallel splitting methods and CDC parity construction (paper §4-5).
+
+Implements, at the matrix level of Section 5.1, the five distribution
+methods of Section 4 and the CDC weight coding of Sections 5.2-5.3:
+
+  fc:    output splitting   (divides W rows + output — CDC-suitable)
+         input splitting    (divides W cols + input  — NOT suitable)
+  conv:  channel splitting  (divides filter-matrix rows — CDC-suitable)
+         spatial splitting  (divides unrolled-input cols — NOT suitable)
+         filter splitting   (divides both depth-wise     — NOT suitable)
+
+Table 1 of the paper is reproduced by :data:`SUITABILITY`; the rust
+`partition` module mirrors this logic and a golden-manifest test keeps the
+two in sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def balanced_ranges(total: int, parts: int) -> List[Tuple[int, int]]:
+    """Split ``range(total)`` into ``parts`` contiguous ranges whose sizes
+    differ by at most one — the paper's balanced work assignment."""
+    if parts <= 0:
+        raise ValueError("parts must be positive")
+    base, extra = divmod(total, parts)
+    ranges, start = [], 0
+    for i in range(parts):
+        size = base + (1 if i < extra else 0)
+        ranges.append((start, start + size))
+        start += size
+    return ranges
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """One device's task: a GEMM over a slice of the layer's weight/input.
+
+    ``rows``/``cols`` describe which slice of the *full* weight matrix this
+    shard owns (rows ⇒ output split / channel split; cols ⇒ input split /
+    filter split). ``is_parity`` marks the CDC device of Eq. 11.
+    """
+
+    device: int
+    w: np.ndarray          # (m_s, k_s) weight slice (zero-padded if needed)
+    b: Optional[np.ndarray]  # (m_s,) bias slice or None
+    rows: Tuple[int, int]  # row range [lo, hi) in the full W
+    cols: Tuple[int, int]  # col range [lo, hi) in the full W
+    is_parity: bool = False
+    covers: Tuple[int, ...] = ()  # data-shard devices a parity shard protects
+
+
+def _pad_rows(w: np.ndarray, rows: int) -> np.ndarray:
+    if w.shape[0] == rows:
+        return w
+    return np.pad(w, ((0, rows - w.shape[0]), (0, 0)))
+
+
+def output_split(w: np.ndarray, b: Optional[np.ndarray], n_dev: int,
+                 *, uniform: bool = True) -> List[Shard]:
+    """fc output splitting (Fig. 6): W rows divided among devices.
+
+    With ``uniform=True`` every shard is zero-padded to the max shard height
+    so the CDC parity (an elementwise sum of shards, Eq. 11) is well formed;
+    the padding rows compute zeros and are dropped at merge.
+    """
+    m, k = w.shape
+    ranges = balanced_ranges(m, n_dev)
+    max_rows = max(hi - lo for lo, hi in ranges)
+    shards = []
+    for dev, (lo, hi) in enumerate(ranges):
+        ws = w[lo:hi]
+        bs = b[lo:hi] if b is not None else None
+        if uniform:
+            ws = _pad_rows(ws, max_rows)
+            if bs is not None:
+                bs = np.pad(bs, (0, max_rows - (hi - lo)))
+        shards.append(Shard(dev, ws, bs, (lo, hi), (0, k)))
+    return shards
+
+
+def input_split(w: np.ndarray, b: Optional[np.ndarray], n_dev: int) -> List[Shard]:
+    """fc input splitting (Fig. 7): W cols + input divided; devices emit
+    partial sums over the *whole* output. Bias/σ applied after aggregation,
+    so shards carry no bias. Not CDC-suitable (paper Eq. 13-14)."""
+    m, k = w.shape
+    shards = []
+    for dev, (lo, hi) in enumerate(balanced_ranges(k, n_dev)):
+        shards.append(Shard(dev, w[:, lo:hi], None, (0, m), (lo, hi)))
+    return shards
+
+
+def channel_split(wmat: np.ndarray, b: Optional[np.ndarray], n_dev: int,
+                  *, uniform: bool = True) -> List[Shard]:
+    """conv channel splitting (Fig. 8): identical in matrix form to fc
+    output splitting but over the unrolled (K, F²C) filter matrix."""
+    return output_split(wmat, b, n_dev, uniform=uniform)
+
+
+def spatial_split_ranges(out_hw: Tuple[int, int], n_dev: int) -> List[Tuple[int, int]]:
+    """conv spatial splitting (Fig. 9): divide the unrolled-input columns
+    (== output pixels, row-major) among devices. Each device needs the full
+    filter matrix; merge is a column concat. Not CDC-suitable."""
+    oh, ow = out_hw
+    return balanced_ranges(oh * ow, n_dev)
+
+
+def filter_split(wmat: np.ndarray, n_dev: int) -> List[Shard]:
+    """conv filter splitting (Fig. 10): depth-wise division of both filter
+    matrix columns and unrolled-input rows; outer-product style partial
+    sums. Not CDC-suitable."""
+    m, k = wmat.shape
+    shards = []
+    for dev, (lo, hi) in enumerate(balanced_ranges(k, n_dev)):
+        shards.append(Shard(dev, wmat[:, lo:hi], None, (0, m), (lo, hi)))
+    return shards
+
+
+def cdc_parity_shard(shards: List[Shard], *, covers: Optional[List[int]] = None,
+                     device: Optional[int] = None) -> Shard:
+    """Build the CDC parity shard (Eq. 11) over ``covers`` data shards.
+
+    The parity weights are the elementwise sum of the covered shards'
+    (uniform-height) weights — computed offline, input-independent. The
+    parity bias is likewise the sum, so parity output = Σ (W_d x + b_d),
+    and a missing device's *pre-activation* output is recovered by plain
+    subtraction. (Shards must therefore run with the activation deferred to
+    the merge point when CDC is enabled; see ``aot.py``.)
+    """
+    covered = shards if covers is None else [shards[i] for i in covers]
+    if not covered:
+        raise ValueError("parity must cover at least one shard")
+    hts = {s.w.shape for s in covered}
+    if len(hts) != 1:
+        raise ValueError(f"covered shards must be uniform, got {hts}")
+    if any(s.is_parity for s in covered):
+        raise ValueError("parity-of-parity is not supported")
+    w = np.sum([s.w for s in covered], axis=0)
+    b = None
+    if covered[0].b is not None:
+        b = np.sum([s.b for s in covered], axis=0)
+    return Shard(
+        device=len(shards) if device is None else device,
+        w=w,
+        b=b,
+        rows=(-1, -1),
+        cols=covered[0].cols,
+        is_parity=True,
+        covers=tuple(s.device for s in covered),
+    )
+
+
+def cdc_decode(parity_out: np.ndarray, received: List[np.ndarray]) -> np.ndarray:
+    """Recover the single missing shard output: parity − Σ received."""
+    out = parity_out.copy()
+    for r in received:
+        out -= r
+    return out
+
+
+def multi_parity_shards(shards: List[Shard], group_size: int) -> List[Shard]:
+    """Fig. 18: multiple parity devices, each summing a *group* of shards.
+
+    With groups of ``group_size`` the system tolerates one failure per
+    group — e.g. 4 data shards with group_size=2 gives two parity devices
+    and tolerance to two failures (one in each half). ``group_size ==
+    len(shards)`` degenerates to the single-parity scheme.
+    """
+    data = [s for s in shards if not s.is_parity]
+    parities = []
+    for gi, (lo, hi) in enumerate(
+        balanced_ranges(len(data), -(-len(data) // group_size))
+    ):
+        parities.append(
+            cdc_parity_shard(data, covers=list(range(lo, hi)),
+                             device=len(data) + gi)
+        )
+    return parities
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — Distribution Techniques Suitable for Robustness.
+# (layer, method) -> (divides_input, divides_weight, divides_output, suitable)
+SUITABILITY = {
+    ("fc", "output"): (False, True, True, True),
+    ("fc", "input"): (True, True, False, False),
+    ("conv", "channel"): (False, True, True, True),
+    ("conv", "spatial"): (True, False, True, False),
+    ("conv", "filter"): (True, True, True, False),
+}
+
+
+def is_cdc_suitable(layer: str, method: str) -> bool:
+    """A method admits library-level CDC iff it divides the weights *without*
+    dividing the input (paper §5.3): parity weights can then be summed
+    offline. Methods that divide the input would need runtime input sums
+    (2× compute) — no better than modular redundancy."""
+    din, dw, _dout, suitable = SUITABILITY[(layer, method)]
+    assert suitable == (dw and not din)
+    return suitable

@@ -1,0 +1,116 @@
+"""Build-time training of the Fig.-2 models on the synthetic digit corpus.
+
+Training uses a plain-jnp *batched* forward (``jax.lax`` convolutions) for
+speed; the Pallas/im2col inference path is numerically cross-checked against
+this forward by the pytest suite, so the trained weights transfer exactly.
+Runs once inside ``make artifacts`` (seconds-to-minutes on CPU) and never at
+runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.data import make_digits
+from compile.model import init_params
+from compile.zoo import ModelDesc
+
+
+def batched_forward(model: ModelDesc, params, xb):
+    """(B,H,W,C) (or (B,k)) → (B, classes) logits, pure jnp, train-time only."""
+    cur = xb
+    for layer in model.layers:
+        if layer.kind == "conv":
+            w, b = params[layer.name]
+            # w: (K,F,F,C) → HWIO
+            out = jax.lax.conv_general_dilated(
+                cur,
+                jnp.transpose(w, (1, 2, 3, 0)),
+                window_strides=(layer.s, layer.s),
+                padding=layer.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b.reshape(1, 1, 1, -1)
+            if layer.relu:
+                out = jnp.maximum(out, 0.0)
+            cur = out
+            if layer.pool:
+                cur = jax.lax.reduce_window(
+                    cur, -jnp.inf, jax.lax.max,
+                    (1, layer.pool, layer.pool, 1),
+                    (1, layer.pool, layer.pool, 1), "VALID",
+                )
+        elif layer.kind == "maxpool":
+            cur = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max,
+                (1, layer.pool, layer.pool, 1),
+                (1, layer.pool, layer.pool, 1), "VALID",
+            )
+        elif layer.kind == "flatten":
+            cur = cur.reshape(cur.shape[0], -1)
+        elif layer.kind == "gap":
+            cur = jnp.mean(cur, axis=(1, 2))
+        elif layer.kind == "fc":
+            w, b = params[layer.name]
+            if layer.relu:
+                cur = jnp.maximum(cur @ w.T + b, 0.0)
+            else:
+                cur = cur @ w.T + b
+    return cur
+
+
+def _loss(model: ModelDesc, params, xb, yb):
+    logits = batched_forward(model, params, xb)
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(logz[jnp.arange(xb.shape[0]), yb])
+
+
+def train(model: ModelDesc, *, n_train=6000, n_test=1024, epochs=4,
+          batch=64, lr=0.05, seed=0, verbose=True) -> Tuple[Dict, float]:
+    """SGD-with-momentum training; returns (params, test_accuracy)."""
+    xs, ys = make_digits(n_train, seed=seed)
+    xt, yt = make_digits(n_test, seed=seed + 1)
+    params = {k: (jnp.asarray(w), jnp.asarray(b))
+              for k, (w, b) in init_params(model, seed=seed).items()}
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, xb, yb: _loss(model, p, xb, yb)))
+
+    @jax.jit
+    def step(params, vel, xb, yb):
+        loss, g = grad_fn(params, xb, yb)
+        vel = jax.tree_util.tree_map(lambda v, gg: 0.9 * v - lr * gg, vel, g)
+        params = jax.tree_util.tree_map(lambda p, v: p + v, params, vel)
+        return params, vel, loss
+
+    rng = np.random.default_rng(seed)
+    nsteps = n_train // batch
+    for ep in range(epochs):
+        order = rng.permutation(n_train)
+        tot = 0.0
+        for i in range(nsteps):
+            idx = order[i * batch : (i + 1) * batch]
+            xb = jnp.asarray(xs[idx])
+            if model.input_shape == (xs.shape[1] * xs.shape[2],):
+                xb = xb.reshape(batch, -1)
+            params, vel, loss = step(params, vel, xb, jnp.asarray(ys[idx]))
+            tot += float(loss)
+        acc = accuracy(model, params, xt, yt)
+        if verbose:
+            print(f"[train:{model.name}] epoch {ep+1}/{epochs} "
+                  f"loss={tot/nsteps:.4f} test_acc={acc:.4f}")
+    np_params = {k: (np.asarray(w), np.asarray(b)) for k, (w, b) in params.items()}
+    return np_params, accuracy(model, params, xt, yt)
+
+
+def accuracy(model: ModelDesc, params, xt, yt, batch=256) -> float:
+    correct = 0
+    fwd = jax.jit(lambda xb: batched_forward(model, params, xb))
+    for i in range(0, len(xt), batch):
+        xb = jnp.asarray(xt[i : i + batch])
+        pred = np.asarray(jnp.argmax(fwd(xb), axis=1))
+        correct += int((pred == yt[i : i + batch]).sum())
+    return correct / len(xt)

@@ -1,0 +1,241 @@
+"""Model zoo: layer-graph descriptors for the DNNs used in the paper's
+evaluation, scaled to CPU-runnable sizes (DESIGN.md §2 substitutions).
+
+* ``lenet5``   — exact LeNet-5 structure (trained; Fig. 2a).
+* ``deepnet``  — deeper CNN standing in for Inception v3 (trained; Fig. 2b:
+                 the claim reproduced is the *ordering* — deeper/more general
+                 models are more sensitive to activation loss).
+* ``alexnet``  — AlexNet-class structure (case studies I/II, Fig. 11-15).
+* ``vgg16``    — VGG16-class structure (coverage study, Fig. 17).
+* ``c3d``      — C3D-class structure with two large fc layers (Fig. 17c/d,
+                 the two-model-parallel-layer deployment).
+* ``fc2048``   — the single 2048-wide fc micro-model of Fig. 1 / §6.
+
+Descriptors are the single source of truth: ``aot.py`` serialises them into
+``artifacts/manifest.json`` and the rust ``model`` module loads them from
+there, so the two languages cannot drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    """One layer of a model graph (kinds: conv, fc, maxpool, flatten, gap)."""
+
+    name: str
+    kind: str
+    # conv: filters k, size f, stride s; fc: out_features m
+    k: int = 0
+    f: int = 0
+    s: int = 1
+    m: int = 0
+    relu: bool = True
+    padding: str = "SAME"
+    pool: int = 0  # maxpool window/stride
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDesc:
+    name: str
+    input_shape: Tuple[int, ...]  # (H, W, C) or (K,) for pure-fc models
+    layers: Tuple[LayerDesc, ...]
+    classes: int
+    trained: bool = False
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "classes": self.classes,
+            "trained": self.trained,
+            "layers": [l.to_json() for l in self.layers],
+        }
+
+
+def conv(name, k, f, s=1, pool=0, relu=True, padding="SAME"):
+    return LayerDesc(name, "conv", k=k, f=f, s=s, pool=pool, relu=relu,
+                     padding=padding)
+
+
+def fc(name, m, relu=True):
+    return LayerDesc(name, "fc", m=m, relu=relu)
+
+
+def maxpool(name, size=2):
+    return LayerDesc(name, "maxpool", pool=size)
+
+
+def flatten(name="flatten"):
+    return LayerDesc(name, "flatten")
+
+
+def gap(name="gap"):
+    return LayerDesc(name, "gap")
+
+
+LENET5 = ModelDesc(
+    "lenet5",
+    (28, 28, 1),
+    (
+        conv("conv1", k=6, f=5, pool=2),
+        conv("conv2", k=16, f=5, pool=2),
+        flatten(),
+        fc("fc1", 120),
+        fc("fc2", 84),
+        fc("fc3", 10, relu=False),
+    ),
+    classes=10,
+    trained=True,
+)
+
+DEEPNET = ModelDesc(
+    "deepnet",
+    (28, 28, 1),
+    (
+        conv("conv1a", k=16, f=3),
+        conv("conv1b", k=16, f=3, pool=2),
+        conv("conv2a", k=32, f=3),
+        conv("conv2b", k=32, f=3, pool=2),
+        conv("conv3a", k=48, f=3),
+        conv("conv3b", k=48, f=3),
+        gap(),
+        fc("fc1", 64),
+        fc("fc2", 10, relu=False),
+    ),
+    classes=10,
+    trained=True,
+)
+
+# AlexNet-class: conv trunk scaled for CPU, but fc6/fc7 kept *RPi-heavy*
+# (fc6 = 4096×4096 ≈ 16.8M MACs ≈ 200 ms on an RPi) so the case studies'
+# failover/straggler effects are compute-dominant like the paper's real
+# AlexNet (whose fc6 is 38M MACs) rather than drowned in WiFi jitter.
+ALEXNET = ModelDesc(
+    "alexnet",
+    (32, 32, 3),
+    (
+        conv("conv1", k=16, f=5, pool=2),
+        conv("conv2", k=32, f=5, pool=2),
+        conv("conv3", k=48, f=3),
+        conv("conv4", k=48, f=3),
+        conv("conv5", k=64, f=3),
+        flatten(),
+        fc("fc6", 4096),
+        fc("fc7", 1024),
+        fc("fc8", 10, relu=False),
+    ),
+    classes=10,
+)
+
+VGG16 = ModelDesc(
+    "vgg16",
+    (32, 32, 3),
+    (
+        conv("conv1_1", k=8, f=3),
+        conv("conv1_2", k=8, f=3, pool=2),
+        conv("conv2_1", k=16, f=3),
+        conv("conv2_2", k=16, f=3, pool=2),
+        conv("conv3_1", k=32, f=3),
+        conv("conv3_2", k=32, f=3),
+        conv("conv3_3", k=32, f=3, pool=2),
+        conv("conv4_1", k=64, f=3),
+        conv("conv4_2", k=64, f=3),
+        conv("conv4_3", k=64, f=3, pool=2),
+        conv("conv5_1", k=64, f=3),
+        conv("conv5_2", k=64, f=3),
+        conv("conv5_3", k=64, f=3, pool=2),
+        flatten(),
+        fc("fc1", 256),
+        fc("fc2", 256),
+        fc("fc3", 10, relu=False),
+    ),
+    classes=10,
+)
+
+# C3D stand-in: the coverage study (Fig. 17c/d) only needs its *shape* —
+# a conv trunk plus two large fc layers that are distributed with model
+# parallelism. 3D convs are collapsed to 2D (DESIGN.md §2).
+C3D = ModelDesc(
+    "c3d",
+    (32, 32, 3),
+    (
+        conv("conv1", k=16, f=3, pool=2),
+        conv("conv2", k=32, f=3, pool=2),
+        conv("conv3a", k=48, f=3),
+        conv("conv3b", k=48, f=3, pool=2),
+        conv("conv4a", k=64, f=3),
+        conv("conv4b", k=64, f=3, pool=2),
+        flatten(),
+        fc("fc6", 512),
+        fc("fc7", 512),
+        fc("fc8", 10, relu=False),
+    ),
+    classes=10,
+)
+
+# Fig. 1 / §6 anchor: a single fully-connected layer "of size 2048".
+FC2048 = ModelDesc(
+    "fc2048",
+    (2048,),
+    (fc("fc", 2048, relu=True),),
+    classes=2048,
+)
+
+ZOO = {m.name: m for m in (LENET5, DEEPNET, ALEXNET, VGG16, C3D, FC2048)}
+
+
+def layer_io_shapes(model: ModelDesc) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """Propagate shapes through the graph; returns [(in_shape, out_shape)]."""
+    shapes = []
+    cur: Tuple[int, ...] = model.input_shape
+    for layer in model.layers:
+        inp = cur
+        if layer.kind == "conv":
+            h, w, _c = cur
+            if layer.padding == "SAME":
+                oh, ow = -(-h // layer.s), -(-w // layer.s)
+            else:
+                oh = (h - layer.f) // layer.s + 1
+                ow = (w - layer.f) // layer.s + 1
+            cur = (oh, ow, layer.k)
+            if layer.pool:
+                cur = (cur[0] // layer.pool, cur[1] // layer.pool, layer.k)
+        elif layer.kind == "maxpool":
+            h, w, c = cur
+            cur = (h // layer.pool, w // layer.pool, c)
+        elif layer.kind == "flatten":
+            n = 1
+            for d in cur:
+                n *= d
+            cur = (n,)
+        elif layer.kind == "gap":
+            cur = (cur[-1],)
+        elif layer.kind == "fc":
+            cur = (layer.m,)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown layer kind {layer.kind}")
+        shapes.append((inp, cur))
+    return shapes
+
+
+def layer_flops(model: ModelDesc) -> List[int]:
+    """MAC count per layer — the cost model used for balanced assignment
+    and for the fleet simulator's compute-time scaling."""
+    out = []
+    for layer, (inp, outp) in zip(model.layers, layer_io_shapes(model)):
+        if layer.kind == "conv":
+            oh, ow = (outp[0] * layer.pool, outp[1] * layer.pool) if layer.pool else outp[:2]
+            out.append(layer.k * layer.f * layer.f * inp[-1] * oh * ow)
+        elif layer.kind == "fc":
+            out.append(layer.m * inp[0])
+        else:
+            out.append(0)
+    return out

@@ -1,0 +1,105 @@
+"""AOT pipeline tests: HLO-text emission, manifest integrity, and the
+build-path helpers. Keeps the python↔rust contract honest."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import fc_shard_fn
+from compile.zoo import ZOO, layer_flops, layer_io_shapes
+
+
+def test_to_hlo_text_emits_parseable_module():
+    import jax
+
+    fn, spec = fc_shard_fn(4, 6, 1, relu=True)
+    lowered = jax.jit(fn).lower(*spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:60]
+    assert "ROOT" in text
+    # return_tuple=True: root must be a tuple for rust's to_tuple1().
+    assert "(f32[4,1]" in text or "tuple" in text
+
+
+def test_artifact_set_dedupes(tmp_path):
+    arts = aot.ArtifactSet(str(tmp_path))
+    a = arts.fc_shard(8, 16, relu=True)
+    b = arts.fc_shard(8, 16, relu=True)
+    c = arts.fc_shard(8, 16, relu=False)
+    assert a == b
+    assert c != a
+    assert len(arts.entries) == 2
+    assert os.path.exists(tmp_path / "hlo" / f"{a}.hlo.txt")
+
+
+def test_fc_split_plan_covers_every_model():
+    """Every split degree in the plan must divide work uniformly into
+    ceil(m/d) shards — the shapes the rust LayerPlan will request."""
+    for name, plan in aot.FC_SPLITS.items():
+        model = ZOO[name]
+        fc_layers = {l.name: l for l in model.layers if l.kind == "fc"}
+        for lname, degrees in plan.items():
+            assert lname in fc_layers, f"{name}.{lname}"
+            assert 1 in degrees, "d=1 needed for Fig.2 / local pipeline"
+            for d in degrees:
+                assert -(-fc_layers[lname].m // d) >= 1
+
+
+def test_manifest_exists_and_references_resolve():
+    """Run against the built artifacts dir if present (make artifacts)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(root, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    m = json.load(open(manifest_path))
+    names = {a["name"] for a in m["artifacts"]}
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(root, a["file"])), a["name"]
+    for model in m["models"]:
+        assert os.path.exists(os.path.join(root, model["weights_file"]))
+        for layer in model["layers"]:
+            for arts in layer.get("splits", {}).values():
+                for key in ("relu", "lin"):
+                    if key in arts:
+                        assert arts[key] in names, arts[key]
+    for g in m["goldens"]:
+        for k, v in g.items():
+            if isinstance(v, str) and v.endswith(".bin"):
+                assert os.path.exists(os.path.join(root, v)), v
+
+
+def test_weight_offsets_are_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(root, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    m = json.load(open(manifest_path))
+    for model in m["models"]:
+        size = os.path.getsize(os.path.join(root, model["weights_file"]))
+        for layer in model["layers"]:
+            if "w_offset" not in layer:
+                continue
+            mm, kk = layer["w_shape"]
+            assert layer["w_offset"] + 4 * mm * kk <= size
+            assert layer["b_offset"] + 4 * mm <= size
+
+
+def test_layer_flops_positive_for_weighted_layers():
+    for model in ZOO.values():
+        flops = layer_flops(model)
+        for layer, f in zip(model.layers, flops):
+            if layer.kind in ("fc", "conv"):
+                assert f > 0, f"{model.name}.{layer.name}"
+            else:
+                assert f == 0
+
+
+def test_io_shapes_consistent_with_flatten():
+    for model in ZOO.values():
+        shapes = layer_io_shapes(model)
+        for layer, (inp, out) in zip(model.layers, shapes):
+            if layer.kind == "flatten":
+                assert out[0] == int(np.prod(inp))

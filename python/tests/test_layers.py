@@ -1,0 +1,90 @@
+"""L2 layer forwards vs oracles: the Pallas-backed conv/fc path must agree
+with the pure-jnp reference AND with the batched training forward — the
+latter guarantees trained weights transfer exactly to the inference path."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import layers
+from compile.kernels.ref import conv2d_ref, gemm_ref, maxpool_ref
+from compile.model import filters_to_matrix, forward, init_params
+from compile.train import batched_forward
+from compile.zoo import LENET5, ZOO, layer_io_shapes
+
+RNG = np.random.default_rng(1)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("h,w,c,k,f,stride", [
+    (8, 8, 3, 4, 3, 1),
+    (7, 5, 2, 3, 3, 1),
+    (12, 12, 1, 6, 5, 1),
+    (8, 8, 4, 4, 3, 2),
+])
+def test_conv2d_matches_ref(h, w, c, k, f, stride):
+    x = randn(h, w, c)
+    wt = randn(k, f, f, c)
+    b = randn(k)
+    got = layers.conv2d(wt, b, x, stride=stride, relu=True)
+    want = conv2d_ref(x, wt, b, stride=stride, relu=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_valid_padding():
+    x = randn(9, 9, 2)
+    wt = randn(3, 3, 3, 2)
+    got = layers.conv2d(wt, None, x, padding="VALID", relu=False)
+    want = conv2d_ref(x, wt, None, padding="VALID", relu=False)
+    assert got.shape == (7, 7, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_fc_matches_ref():
+    w, b, x = randn(12, 30), randn(12), randn(30, 1)
+    got = layers.fc(w, b, x, relu=True)
+    want = gemm_ref(w, x, b.reshape(-1, 1), relu=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_maxpool_matches_ref():
+    x = randn(6, 6, 4)
+    np.testing.assert_allclose(
+        np.asarray(layers.maxpool(x)), np.asarray(maxpool_ref(x)), rtol=1e-6
+    )
+
+
+def test_filters_to_matrix_order_matches_im2col():
+    """W·im2col(x) must equal the true conv — the feature orders of the
+    filter matrix and the patch matrix have to agree."""
+    x = randn(5, 5, 3)
+    wt = randn(2, 3, 3, 3)
+    cols, (oh, ow) = layers.im2col(x, 3, 3, 1, "SAME")
+    wmat = layers.filters_to_matrix(wt)
+    via_gemm = (wmat @ cols).reshape(2, oh, ow).transpose(1, 2, 0)
+    want = conv2d_ref(x, wt, None, relu=False)
+    np.testing.assert_allclose(np.asarray(via_gemm), np.asarray(want), rtol=1e-3, atol=1e-3)
+    # numpy twin used by the weight emitter must agree with the jax one.
+    np.testing.assert_allclose(filters_to_matrix(np.asarray(wt)), np.asarray(wmat))
+
+
+@pytest.mark.parametrize("name", list(ZOO))
+def test_zoo_shapes_propagate(name):
+    model = ZOO[name]
+    shapes = layer_io_shapes(model)
+    assert len(shapes) == len(model.layers)
+    assert shapes[-1][1] == (model.classes,)
+
+
+def test_full_forward_matches_batched_forward():
+    """Single-example Pallas path == batched jnp training path, so trained
+    weights transfer exactly (DESIGN.md §3)."""
+    params = init_params(LENET5, seed=3)
+    x = randn(28, 28, 1)
+    single = forward(LENET5, params, x)
+    jp = {k: (jnp.asarray(w), jnp.asarray(b)) for k, (w, b) in params.items()}
+    batched = batched_forward(LENET5, jp, x[None])[0]
+    np.testing.assert_allclose(np.asarray(single), np.asarray(batched), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,143 @@
+"""Splitting methods + CDC parity algebra (paper §4-5) at the python level.
+
+These mirror the rust `partition`/`cdc` tests; the golden-manifest rust
+integration tests keep the two implementations honest against each other.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import splits
+
+RNG = np.random.default_rng(2)
+
+
+# ---------------------------------------------------------------------------
+# balanced ranges
+
+
+@given(total=st.integers(1, 4000), parts=st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_balanced_ranges_cover_contiguously(total, parts):
+    r = splits.balanced_ranges(total, parts)
+    assert len(r) == parts
+    assert r[0][0] == 0 and r[-1][1] == total
+    sizes = [hi - lo for lo, hi in r]
+    assert max(sizes) - min(sizes) <= 1
+    for (a, b), (c, d) in zip(r, r[1:]):
+        assert b == c
+
+
+def test_balanced_ranges_rejects_zero_parts():
+    with pytest.raises(ValueError):
+        splits.balanced_ranges(10, 0)
+
+
+# ---------------------------------------------------------------------------
+# output splitting + CDC
+
+
+def test_output_split_reassembles():
+    w = RNG.normal(size=(10, 6)).astype(np.float32)
+    b = RNG.normal(size=10).astype(np.float32)
+    shards = splits.output_split(w, b, 3)
+    # Uniform heights with zero padding.
+    assert {s.w.shape for s in shards} == {(4, 6)}
+    # Real rows reassemble the full matrix.
+    rows = np.concatenate([s.w[: s.rows[1] - s.rows[0]] for s in shards])
+    np.testing.assert_array_equal(rows, w)
+
+
+def test_parity_recovers_every_shard():
+    w = RNG.normal(size=(9, 5)).astype(np.float32)
+    b = RNG.normal(size=9).astype(np.float32)
+    x = RNG.normal(size=(5, 1)).astype(np.float32)
+    shards = splits.output_split(w, b, 3)
+    parity = splits.cdc_parity_shard(shards)
+    outs = [s.w @ x + s.b.reshape(-1, 1) for s in shards]
+    pout = parity.w @ x + parity.b.reshape(-1, 1)
+    for lose in range(3):
+        rec = splits.cdc_decode(pout, [o for i, o in enumerate(outs) if i != lose])
+        np.testing.assert_allclose(rec, outs[lose], rtol=1e-4, atol=1e-4)
+
+
+def test_parity_requires_uniform_shards():
+    w = RNG.normal(size=(10, 4)).astype(np.float32)
+    shards = splits.output_split(w, None, 3, uniform=False)
+    with pytest.raises(ValueError):
+        splits.cdc_parity_shard(shards)
+
+
+def test_parity_of_parity_rejected():
+    w = RNG.normal(size=(8, 4)).astype(np.float32)
+    shards = splits.output_split(w, None, 2)
+    p = splits.cdc_parity_shard(shards)
+    with pytest.raises(ValueError):
+        splits.cdc_parity_shard(shards + [p])
+
+
+def test_multi_parity_groups_fig18():
+    w = RNG.normal(size=(8, 4)).astype(np.float32)
+    shards = splits.output_split(w, None, 4)
+    parities = splits.multi_parity_shards(shards, group_size=2)
+    assert len(parities) == 2
+    assert parities[0].covers == (0, 1)
+    assert parities[1].covers == (2, 3)
+    # Degenerate group covers everything = classic single parity.
+    single = splits.multi_parity_shards(shards, group_size=4)
+    assert len(single) == 1
+    assert single[0].covers == (0, 1, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# input splitting: partial sums, and WHY it is not CDC-suitable
+
+
+def test_input_split_partial_sums():
+    w = RNG.normal(size=(6, 8)).astype(np.float32)
+    x = RNG.normal(size=(8, 1)).astype(np.float32)
+    shards = splits.input_split(w, None, 2)
+    partials = [
+        s.w @ x[s.cols[0] : s.cols[1]] for s in shards
+    ]
+    np.testing.assert_allclose(sum(partials), w @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_input_split_shares_no_weight_factor():
+    """Paper Eq. 13-14: the two partial sums share no common factor, so a
+    'parity' device would have to redo *all* the work — the suitability
+    criterion in Table 1."""
+    w = RNG.normal(size=(6, 8)).astype(np.float32)
+    shards = splits.input_split(w, None, 2)
+    # Column ranges are disjoint…
+    assert shards[0].cols == (0, 4) and shards[1].cols == (4, 8)
+    # …so summing shard weights is meaningless: there is no x-independent
+    # combination that yields the other shard's contribution.
+    assert shards[0].w.shape == shards[1].w.shape
+    assert not np.allclose(shards[0].w, shards[1].w)
+
+
+# ---------------------------------------------------------------------------
+# Table 1
+
+
+def test_table1_suitability():
+    assert splits.is_cdc_suitable("fc", "output")
+    assert not splits.is_cdc_suitable("fc", "input")
+    assert splits.is_cdc_suitable("conv", "channel")
+    assert not splits.is_cdc_suitable("conv", "spatial")
+    assert not splits.is_cdc_suitable("conv", "filter")
+
+
+def test_spatial_split_ranges_cover_output():
+    r = splits.spatial_split_ranges((6, 7), 4)
+    assert r[0][0] == 0 and r[-1][1] == 42
+
+
+def test_filter_split_partials_sum_to_full():
+    wmat = RNG.normal(size=(5, 12)).astype(np.float32)
+    cols = RNG.normal(size=(12, 9)).astype(np.float32)
+    shards = splits.filter_split(wmat, 3)
+    partials = [s.w @ cols[s.cols[0] : s.cols[1]] for s in shards]
+    np.testing.assert_allclose(sum(partials), wmat @ cols, rtol=1e-4, atol=1e-4)

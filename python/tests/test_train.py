@@ -1,0 +1,44 @@
+"""Training-path tests: synthetic corpus sanity and learnability."""
+
+import numpy as np
+
+from compile.data import make_digits
+from compile.train import accuracy, batched_forward, train
+from compile.zoo import LENET5
+
+
+def test_corpus_is_deterministic_and_labeled():
+    x1, y1 = make_digits(64, seed=5)
+    x2, y2 = make_digits(64, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (64, 28, 28, 1)
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+    assert set(np.unique(y1)).issubset(set(range(10)))
+
+
+def test_corpus_varies_with_seed():
+    x1, _ = make_digits(16, seed=1)
+    x2, _ = make_digits(16, seed=2)
+    assert not np.allclose(x1, x2)
+
+
+def test_untrained_net_is_chance_level():
+    import jax.numpy as jnp
+
+    from compile.model import init_params
+
+    params = {
+        k: (jnp.asarray(w), jnp.asarray(b))
+        for k, (w, b) in init_params(LENET5, seed=0).items()
+    }
+    xt, yt = make_digits(256, seed=9)
+    acc = accuracy(LENET5, params, xt, yt)
+    assert acc < 0.35, f"untrained accuracy suspiciously high: {acc}"
+
+
+def test_lenet_learns_the_corpus():
+    # A short run must already beat chance decisively (full training in
+    # `make artifacts` reaches >99%).
+    _params, acc = train(LENET5, n_train=2500, n_test=256, epochs=3, verbose=False)
+    assert acc > 0.45, f"lenet failed to learn: {acc}"

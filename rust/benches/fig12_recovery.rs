@@ -1,0 +1,112 @@
+//! Bench target for Fig. 12 (Case Study I) and Fig. 13 (Case Study II):
+//! end-to-end request latency of the AlexNet deployment before failure,
+//! after non-CDC failover (expected ≈ 2.4× on the affected path), and
+//! under CDC with a failed device (expected ≈ 1×) — plus the recovery
+//! *mechanism* cost itself (decode vs re-execution), the paper's
+//! "close-to-zero vs restart-everything" comparison.
+//!
+//! Run with `cargo bench --bench fig12_recovery` after `make artifacts`.
+
+use cdc_dnn::bench::Bench;
+use cdc_dnn::cdc;
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec};
+use cdc_dnn::fleet::{FailurePlan, NetConfig};
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::{Manifest, Runtime};
+use cdc_dnn::tensor::Tensor;
+
+fn alexnet_cfg(cdc_on: bool) -> SessionConfig {
+    let mut cfg = SessionConfig::new("alexnet");
+    cfg.n_devices = 5;
+    cfg.net = NetConfig::ideal(); // isolate compute/recovery effects
+    cfg.splits.insert(
+        "fc6".into(),
+        if cdc_on { SplitSpec::cdc(2) } else { SplitSpec::plain(2) },
+    );
+    for (layer, dev) in [
+        ("conv1", 0usize),
+        ("conv2", 0),
+        ("conv3", 1),
+        ("conv4", 1),
+        ("conv5", 1),
+        ("fc7", 4),
+        ("fc8", 4),
+    ] {
+        cfg.placement.insert(layer.into(), vec![dev]);
+    }
+    cfg.placement.insert("fc6".into(), vec![2, 3]);
+    cfg
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(5);
+    let x = Tensor::randn(vec![32, 32, 3], &mut rng);
+
+    // Healthy baseline.
+    let mut s = Session::start("artifacts", alexnet_cfg(false)).unwrap();
+    s.infer(&x).unwrap();
+    Bench::new("case1/healthy_request_wallclock").iters(5, 30).run(|| {
+        s.infer(&x).unwrap();
+    });
+    let healthy_sim = s.infer(&x).unwrap().total_ms;
+
+    // Post-failover: device 3 runs both fc6 shards serially.
+    s.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+    let _ = s.infer(&x);
+    s.drain();
+    s.failover(2, 3).unwrap();
+    let failover_sim = s.infer(&x).unwrap().total_ms;
+    Bench::new("case1/failover_request_wallclock").iters(5, 30).run(|| {
+        s.infer(&x).unwrap();
+    });
+
+    // CDC under failure: no slowdown, no loss.
+    let mut sc = Session::start("artifacts", alexnet_cfg(true)).unwrap();
+    sc.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+    let cdc_sim = sc.infer(&x).unwrap().total_ms;
+    Bench::new("case2/cdc_failed_device_wallclock").iters(5, 30).run(|| {
+        sc.infer(&x).unwrap();
+    });
+
+    println!(
+        "\nsimulated request latency: healthy={healthy_sim:.1}ms \
+         failover={failover_sim:.1}ms ({:.2}x, paper ~2.4x on the affected \
+         path) cdc_under_failure={cdc_sim:.1}ms ({:.2}x, paper ~1x)",
+        failover_sim / healthy_sim,
+        cdc_sim / healthy_sim
+    );
+
+    // Recovery mechanism: CDC subtraction vs vanilla re-execution of the
+    // missing shard (load weights + GEMM) — §5.2's second benefit.
+    let manifest = Manifest::load("artifacts").unwrap();
+    let runtime = Runtime::new().unwrap();
+    let m = 128usize;
+    let parity = Tensor::randn(vec![m, 1], &mut rng);
+    let other = Tensor::randn(vec![m, 1], &mut rng);
+    Bench::new("recovery/cdc_decode (local subtraction)")
+        .iters(100, 1000)
+        .run(|| {
+            cdc::decode(&parity, &[&other]).unwrap();
+        });
+    if manifest.artifacts.contains_key("fc_m128_k256_lin") {
+        let w = Tensor::randn(vec![128, 256], &mut rng);
+        let b = Tensor::randn(vec![128, 1], &mut rng);
+        let xi = Tensor::randn(vec![256, 1], &mut rng);
+        runtime.execute(&manifest, "fc_m128_k256_lin", &[&w, &b, &xi]).unwrap();
+        Bench::new("recovery/vanilla_reexecution (GEMM)").run(|| {
+            runtime
+                .execute(&manifest, "fc_m128_k256_lin", &[&w, &b, &xi])
+                .unwrap();
+        });
+    } else {
+        // Builder fallback when the exact artifact is absent.
+        let exe = runtime.build_gemm(128, 256, 1, true, false).unwrap();
+        let w = Tensor::randn(vec![128, 256], &mut rng);
+        let b = Tensor::randn(vec![128, 1], &mut rng);
+        let xi = Tensor::randn(vec![256, 1], &mut rng);
+        runtime.run_built(&exe, &[&w, &xi, &b]).unwrap();
+        Bench::new("recovery/vanilla_reexecution (GEMM, builder)").run(|| {
+            runtime.run_built(&exe, &[&w, &xi, &b]).unwrap();
+        });
+    }
+}

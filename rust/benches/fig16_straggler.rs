@@ -1,0 +1,78 @@
+//! Bench target for Fig. 16 (straggler mitigation sweep) plus the
+//! ablations DESIGN.md §6 calls out: the substitution-threshold sweep and
+//! the policy-resolution cost (the coordinator's per-layer decision must
+//! be negligible next to shard service times).
+//!
+//! Run with `cargo bench --bench fig16_straggler` after `make artifacts`.
+
+use cdc_dnn::bench::Bench;
+use cdc_dnn::coordinator::policy;
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec};
+use cdc_dnn::metrics::Series;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+
+fn fc_cfg(d: usize, threshold: f64, seed: u64) -> SessionConfig {
+    let mut cfg = SessionConfig::new("fc2048");
+    cfg.n_devices = d;
+    cfg.seed = seed;
+    cfg.threshold_factor = threshold;
+    cfg.splits.insert("fc".into(), SplitSpec::cdc(d));
+    cfg
+}
+
+fn mean_latency(d: usize, threshold: f64, reqs: usize) -> f64 {
+    let mut s = Session::start("artifacts", fc_cfg(d, threshold, 7)).unwrap();
+    let mut rng = Pcg32::seeded(11);
+    let mut lat = Series::new();
+    for _ in 0..reqs {
+        let x = Tensor::randn(vec![2048], &mut rng);
+        lat.record(s.infer(&x).unwrap().total_ms);
+    }
+    lat.summary().mean
+}
+
+fn main() {
+    let reqs = 150;
+
+    // Fig. 16 series: improvement vs device count.
+    println!("fig16: mitigation improvement vs devices (n={reqs} requests)");
+    for d in [2usize, 4, 8] {
+        let off = mean_latency(d, f64::INFINITY, reqs);
+        let on = mean_latency(d, 0.0, reqs);
+        println!(
+            "  d={d}: no-mit {off:.1} ms, mit {on:.1} ms, improvement {:.1}%",
+            100.0 * (1.0 - on / off)
+        );
+    }
+
+    // Ablation: threshold-factor sweep at d=4 (paper §6.2: "a lower
+    // threshold reduces latency").
+    println!("\nablation: threshold sweep at d=4");
+    for t in [0.0, 2.0, 8.0, 24.0, f64::INFINITY] {
+        let m = mean_latency(4, t, reqs);
+        println!("  threshold_factor={t}: mean {m:.1} ms");
+    }
+
+    // Wall-clock of one mitigated request (coordination overhead incl.).
+    let mut s = Session::start("artifacts", fc_cfg(4, 0.0, 3)).unwrap();
+    let mut rng = Pcg32::seeded(13);
+    let x = Tensor::randn(vec![2048], &mut rng);
+    s.infer(&x).unwrap();
+    Bench::new("fig16/request_wallclock_d4_mitigated").iters(5, 50).run(|| {
+        s.infer(&x).unwrap();
+    });
+
+    // Pure policy resolution cost.
+    let data: Vec<f64> = (0..8).map(|i| 50.0 + i as f64).collect();
+    Bench::new("policy/resolve_grouped_8shards")
+        .iters(1000, 10_000)
+        .run(|| {
+            std::hint::black_box(policy::resolve_grouped(
+                std::hint::black_box(&data),
+                &[60.0],
+                &[vec![0, 1, 2, 3, 4, 5, 6, 7]],
+                75.0,
+            ));
+        });
+}

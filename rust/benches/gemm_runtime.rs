@@ -1,0 +1,78 @@
+//! Micro-benchmarks of the runtime hot path: PJRT artifact execution for
+//! the shard shapes the paper's deployments use, the XlaBuilder fallback,
+//! and the coordinator-side merge ops (CDC decode must be "close-to-zero"
+//! next to a shard execution — this bench substantiates that claim).
+
+use cdc_dnn::bench::Bench;
+use cdc_dnn::cdc;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::{Manifest, Runtime};
+use cdc_dnn::tensor::Tensor;
+
+fn main() {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let runtime = Runtime::new().expect("pjrt");
+    let mut rng = Pcg32::seeded(1);
+
+    // --- fc-2048 shard (the paper's §6 anchor task), 4-way split ------
+    if manifest.artifacts.contains_key("fc_m512_k2048_lin") {
+        let w = Tensor::randn(vec![512, 2048], &mut rng);
+        let b = Tensor::randn(vec![512, 1], &mut rng);
+        let x = Tensor::randn(vec![2048, 1], &mut rng);
+        runtime.execute(&manifest, "fc_m512_k2048_lin", &[&w, &b, &x]).unwrap();
+        Bench::new("pjrt_exec/fc2048_shard_d4 (512x2048)").run(|| {
+            runtime
+                .execute(&manifest, "fc_m512_k2048_lin", &[&w, &b, &x])
+                .unwrap();
+        });
+        // XlaBuilder fallback of the same GEMM, for comparison.
+        let exe = runtime.build_gemm(512, 2048, 1, true, false).unwrap();
+        Bench::new("pjrt_exec/fc2048_shard_builder_fallback").run(|| {
+            runtime.run_built(&exe, &[&w, &x, &b]).unwrap();
+        });
+    }
+
+    // --- LeNet conv shard --------------------------------------------
+    if let Some(meta) = manifest
+        .artifacts
+        .values()
+        .find(|a| a.name.starts_with("conv_h14w14c6_k16"))
+        .cloned()
+    {
+        let ins: Vec<Tensor> =
+            meta.params.iter().map(|p| Tensor::randn(p.clone(), &mut rng)).collect();
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        runtime.execute(&manifest, &meta.name, &refs).unwrap();
+        Bench::new("pjrt_exec/lenet_conv2_shard").run(|| {
+            runtime.execute(&manifest, &meta.name, &refs).unwrap();
+        });
+    }
+
+    // --- merge-path ops: the "close-to-zero" recovery claim ------------
+    let parity = Tensor::randn(vec![512, 1], &mut rng);
+    let received: Vec<Tensor> =
+        (0..3).map(|_| Tensor::randn(vec![512, 1], &mut rng)).collect();
+    let refs: Vec<&Tensor> = received.iter().collect();
+    Bench::new("merge/cdc_decode_512 (recovery subtraction)")
+        .iters(100, 1000)
+        .run(|| {
+            cdc::decode(&parity, &refs).unwrap();
+        });
+
+    let parts: Vec<Tensor> =
+        (0..4).map(|_| Tensor::randn(vec![512, 1], &mut rng)).collect();
+    let prefs: Vec<&Tensor> = parts.iter().collect();
+    Bench::new("merge/concat0_4x512").iters(100, 1000).run(|| {
+        Tensor::concat0(&prefs).unwrap().take_rows(2048).unwrap();
+    });
+
+    let conv_parts: Vec<Tensor> =
+        (0..2).map(|_| Tensor::randn(vec![28, 28, 8], &mut rng)).collect();
+    let crefs: Vec<&Tensor> = conv_parts.iter().collect();
+    Bench::new("merge/concat_channels+pool 28x28x16")
+        .iters(100, 1000)
+        .run(|| {
+            let cat = Tensor::concat_channels(&crefs).unwrap();
+            cat.maxpool(2, 2).unwrap();
+        });
+}

@@ -1,0 +1,97 @@
+//! In-tree micro-benchmark harness (offline environment: no criterion).
+//!
+//! `cargo bench` targets use [`Bench`] for wall-clock measurements of the
+//! hot paths (PJRT dispatch, CDC decode, merge) and the experiment drivers
+//! reuse [`Timer`] for coarse phase timing. Reports mean/p50/p95/p99 over
+//! a warmed-up sample set, criterion-style.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+
+/// One benchmark's configuration.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    iters: usize,
+}
+
+impl Bench {
+    /// Default: 10 warm-up + 100 measured iterations.
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup_iters: 10, iters: 100 }
+    }
+
+    /// Override iteration counts.
+    pub fn iters(mut self, warmup: usize, measured: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.iters = measured;
+        self
+    }
+
+    /// Run the closure repeatedly; returns (and prints) the summary of
+    /// per-iteration wall-clock milliseconds.
+    pub fn run<F: FnMut()>(self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "bench {:<40} mean={:>9.4}ms p50={:>9.4}ms p95={:>9.4}ms p99={:>9.4}ms (n={})",
+            self.name, s.mean, s.p50, s.p95, s.p99, s.count
+        );
+        s
+    }
+}
+
+/// Coarse phase timer for experiment drivers.
+pub struct Timer {
+    t0: Instant,
+    label: String,
+}
+
+impl Timer {
+    /// Start a labelled timer.
+    pub fn start(label: &str) -> Timer {
+        Timer { t0: Instant::now(), label: label.to_string() }
+    }
+
+    /// Elapsed milliseconds.
+    pub fn ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Print and return elapsed ms.
+    pub fn report(&self) -> f64 {
+        let ms = self.ms();
+        println!("[time] {}: {:.1} ms", self.label, ms);
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = Bench::new("noop").iters(2, 20).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.count, 20);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start("t");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.ms() >= 2.0);
+    }
+}

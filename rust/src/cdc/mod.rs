@@ -1,0 +1,126 @@
+//! Coded distributed computing: parity construction, recovery, multi-
+//! failure schemes, and the coverage calculus of the paper's Fig. 17.
+
+pub mod coverage;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Parity weights for a set of uniform-height shards (paper Eq. 11):
+/// the elementwise sum, computed offline, input-independent.
+pub fn parity_weights(shards: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor)> {
+    let (w0, b0) = shards.first().ok_or_else(|| {
+        Error::Config("parity over zero shards".into())
+    })?;
+    let mut pw = w0.clone();
+    let mut pb = b0.clone();
+    for (w, b) in &shards[1..] {
+        pw.add_assign(w)?;
+        pb.add_assign(b)?;
+    }
+    Ok((pw, pb))
+}
+
+/// Recover the single missing shard output: parity − Σ received (§5.2).
+/// `received` are the surviving data-shard outputs covered by this parity.
+pub fn decode(parity_out: &Tensor, received: &[&Tensor]) -> Result<Tensor> {
+    let mut out = parity_out.clone();
+    for r in received {
+        out.sub_assign(r)?;
+    }
+    Ok(out)
+}
+
+/// Fig. 18 multi-failure scheme: parity *groups*. Each parity device sums
+/// a contiguous group of ≤ `group_size` data shards; the system tolerates
+/// one failure per group. `group_size == n` degenerates to single parity.
+///
+/// Returns the cover sets (shard indices per parity device).
+pub fn parity_groups(n_shards: usize, group_size: usize) -> Result<Vec<Vec<usize>>> {
+    if group_size == 0 || n_shards == 0 {
+        return Err(Error::Config("parity_groups: empty".into()));
+    }
+    let n_groups = n_shards.div_ceil(group_size);
+    let ranges = crate::partition::balanced_ranges(n_shards, n_groups);
+    Ok(ranges
+        .into_iter()
+        .map(|(lo, hi)| (lo..hi).collect())
+        .collect())
+}
+
+/// Number of simultaneous failures the group scheme provably tolerates:
+/// one per group (the paper's "partial error correction" note — two
+/// failures in one group are not recoverable without Hamming-style codes).
+pub fn tolerated_failures(groups: &[Vec<usize>]) -> usize {
+    groups.len()
+}
+
+/// Can this failure set be recovered by the group scheme?
+pub fn recoverable(groups: &[Vec<usize>], failed: &[usize]) -> bool {
+    groups.iter().all(|g| g.iter().filter(|s| failed.contains(s)).count() <= 1)
+        && failed
+            .iter()
+            .all(|f| groups.iter().any(|g| g.contains(f)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn parity_then_decode_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let shards: Vec<(Tensor, Tensor)> = (0..4)
+            .map(|_| {
+                (
+                    Tensor::randn(vec![8, 5], &mut rng),
+                    Tensor::randn(vec![8, 1], &mut rng),
+                )
+            })
+            .collect();
+        let x = Tensor::randn(vec![5, 1], &mut rng);
+        let outs: Vec<Tensor> = shards
+            .iter()
+            .map(|(w, b)| {
+                let mut y = w.matmul(&x).unwrap();
+                y.add_assign(b).unwrap();
+                y
+            })
+            .collect();
+        let (pw, pb) = parity_weights(&shards).unwrap();
+        let mut parity_out = pw.matmul(&x).unwrap();
+        parity_out.add_assign(&pb).unwrap();
+
+        // Lose shard 2.
+        let received: Vec<&Tensor> = [&outs[0], &outs[1], &outs[3]].to_vec();
+        let rec = decode(&parity_out, &received).unwrap();
+        assert!(rec.max_abs_diff(&outs[2]) < 1e-4);
+    }
+
+    #[test]
+    fn groups_cover_all_shards_once() {
+        let g = parity_groups(7, 3).unwrap();
+        assert_eq!(g.len(), 3);
+        let mut all: Vec<usize> = g.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recoverability_semantics() {
+        let g = parity_groups(4, 2).unwrap(); // [[0,1],[2,3]]
+        assert!(recoverable(&g, &[]));
+        assert!(recoverable(&g, &[0]));
+        assert!(recoverable(&g, &[0, 2])); // one per group
+        assert!(!recoverable(&g, &[0, 1])); // two in one group
+        assert!(recoverable(&g, &[1, 3]));
+    }
+
+    #[test]
+    fn single_group_is_classic_cdc() {
+        let g = parity_groups(5, 5).unwrap();
+        assert_eq!(g, vec![vec![0, 1, 2, 3, 4]]);
+        assert_eq!(tolerated_failures(&g), 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Deployment configuration files — the paper's per-system "task
+//! allocation file" (§6: "for each number of available devices, a single
+//! task allocation file is loaded to all devices"; on failure "the system
+//! uses another pre-defined distribution file with fewer devices").
+//!
+//! JSON on disk ⇄ [`SessionConfig`] in memory, including the failover
+//! variants referenced by name.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Redundancy, SessionConfig, SplitSpec};
+use crate::error::{Error, Result};
+use crate::fleet::NetConfig;
+use crate::json::{obj, Value};
+
+/// Parse a redundancy tag ("none" | "cdc" | "cdc:<group>" | "2mr").
+pub fn parse_redundancy(s: &str) -> Result<Redundancy> {
+    if let Some(g) = s.strip_prefix("cdc:") {
+        let g: usize = g
+            .parse()
+            .map_err(|_| Error::Config(format!("bad group size in {s:?}")))?;
+        return Ok(Redundancy::CdcGrouped(g));
+    }
+    match s {
+        "none" => Ok(Redundancy::None),
+        "cdc" => Ok(Redundancy::Cdc),
+        "2mr" => Ok(Redundancy::TwoMr),
+        _ => Err(Error::Config(format!("unknown redundancy {s:?}"))),
+    }
+}
+
+fn redundancy_tag(r: Redundancy) -> String {
+    match r {
+        Redundancy::None => "none".into(),
+        Redundancy::Cdc => "cdc".into(),
+        Redundancy::CdcGrouped(g) => format!("cdc:{g}"),
+        Redundancy::TwoMr => "2mr".into(),
+    }
+}
+
+/// Load a deployment file into a SessionConfig.
+pub fn load_deployment(path: &std::path::Path) -> Result<SessionConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    deployment_from_json(&Value::parse(&text)?)
+}
+
+/// Parse a deployment JSON value.
+pub fn deployment_from_json(v: &Value) -> Result<SessionConfig> {
+    let mut cfg = SessionConfig::new(v.get("model")?.as_str()?);
+    cfg.n_devices = v.get("n_devices")?.as_usize()?;
+    if let Some(t) = v.opt("threshold_factor") {
+        cfg.threshold_factor = t.as_f64()?;
+    }
+    if let Some(s) = v.opt("seed") {
+        cfg.seed = s.as_usize()? as u64;
+    }
+    if let Some(d) = v.opt("detection_ms") {
+        cfg.detection_ms = d.as_f64()?;
+    }
+    if let Some(r) = v.opt("device_rate_macs_per_ms") {
+        cfg.device_rate = r.as_f64()?;
+    }
+    if let Some(n) = v.opt("net") {
+        let mut net = NetConfig::default();
+        if n.as_str().ok() == Some("ideal") {
+            net = NetConfig::ideal();
+        } else {
+            let o = n.as_obj()?;
+            let set = |k: &str, dst: &mut f64| -> Result<()> {
+                if let Some(x) = o.get(k) {
+                    *dst = x.as_f64()?;
+                }
+                Ok(())
+            };
+            set("base_ms", &mut net.base_ms)?;
+            set("bandwidth_mbps", &mut net.bandwidth_mbps)?;
+            set("p_fast", &mut net.p_fast)?;
+            set("lognorm_mu", &mut net.lognorm_mu)?;
+            set("lognorm_sigma", &mut net.lognorm_sigma)?;
+            set("pareto_xm", &mut net.pareto_xm)?;
+            set("pareto_alpha", &mut net.pareto_alpha)?;
+            set("max_ms", &mut net.max_ms)?;
+        }
+        cfg.net = net;
+    }
+    if let Some(splits) = v.opt("splits") {
+        for (layer, spec) in splits.as_obj()? {
+            let d = spec.get("d")?.as_usize()?;
+            let red = match spec.opt("redundancy") {
+                Some(r) => parse_redundancy(r.as_str()?)?,
+                None => Redundancy::None,
+            };
+            cfg.splits.insert(layer.clone(), SplitSpec { d, redundancy: red });
+        }
+    }
+    if let Some(pl) = v.opt("placement") {
+        for (layer, devs) in pl.as_obj()? {
+            cfg.placement.insert(layer.clone(), devs.as_usize_vec()?);
+        }
+    }
+    Ok(cfg)
+}
+
+/// Serialise a SessionConfig back to the deployment-file JSON shape.
+pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
+    let splits: BTreeMap<String, Value> = cfg
+        .splits
+        .iter()
+        .map(|(k, s)| {
+            (
+                k.clone(),
+                obj(vec![
+                    ("d", Value::Num(s.d as f64)),
+                    ("redundancy", Value::Str(redundancy_tag(s.redundancy))),
+                ]),
+            )
+        })
+        .collect();
+    let placement: BTreeMap<String, Value> = cfg
+        .placement
+        .iter()
+        .map(|(k, devs)| {
+            (
+                k.clone(),
+                Value::Arr(devs.iter().map(|&d| Value::Num(d as f64)).collect()),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("model", Value::Str(cfg.model.clone())),
+        ("n_devices", Value::Num(cfg.n_devices as f64)),
+        ("threshold_factor", Value::Num(cfg.threshold_factor)),
+        ("seed", Value::Num(cfg.seed as f64)),
+        ("detection_ms", Value::Num(cfg.detection_ms)),
+        ("device_rate_macs_per_ms", Value::Num(cfg.device_rate)),
+        ("splits", Value::Obj(splits)),
+        ("placement", Value::Obj(placement)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_deployment() {
+        let mut cfg = SessionConfig::new("lenet5");
+        cfg.n_devices = 4;
+        cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+        cfg.splits.insert(
+            "fc2".into(),
+            SplitSpec { d: 2, redundancy: Redundancy::CdcGrouped(1) },
+        );
+        cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+        let json = deployment_to_json(&cfg);
+        let back = deployment_from_json(&json).unwrap();
+        assert_eq!(back.model, "lenet5");
+        assert_eq!(back.n_devices, 4);
+        assert_eq!(back.splits["fc1"].d, 4);
+        assert_eq!(back.splits["fc1"].redundancy, Redundancy::Cdc);
+        assert_eq!(back.splits["fc2"].redundancy, Redundancy::CdcGrouped(1));
+        assert_eq!(back.placement["fc1"], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn redundancy_tags() {
+        assert_eq!(parse_redundancy("cdc").unwrap(), Redundancy::Cdc);
+        assert_eq!(parse_redundancy("cdc:3").unwrap(), Redundancy::CdcGrouped(3));
+        assert_eq!(parse_redundancy("2mr").unwrap(), Redundancy::TwoMr);
+        assert_eq!(parse_redundancy("none").unwrap(), Redundancy::None);
+        assert!(parse_redundancy("bogus").is_err());
+        assert!(parse_redundancy("cdc:x").is_err());
+    }
+
+    #[test]
+    fn ideal_net_tag() {
+        let v = Value::parse(
+            r#"{"model":"lenet5","n_devices":2,"net":"ideal"}"#,
+        )
+        .unwrap();
+        let cfg = deployment_from_json(&v).unwrap();
+        assert_eq!(cfg.net.base_ms, 0.0);
+    }
+}

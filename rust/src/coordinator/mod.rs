@@ -1,0 +1,733 @@
+//! The L3 coordinator: deploys a model across the fleet per an assignment
+//! plan, drives single-batch inference requests through it, merges shard
+//! outputs, and applies the paper's robustness machinery (CDC parity,
+//! straggler substitution, 2MR, failover).
+
+pub mod policy;
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::cdc;
+use crate::error::{Error, Result};
+use crate::fleet::{Completion, Device, DeviceConfig, NetConfig, TaskDef, WorkOrder};
+use crate::model::{shard_io_bytes, shard_macs, Weights};
+use crate::partition::LayerPlan;
+use crate::runtime::manifest::{LayerManifest, Manifest, ModelManifest};
+use crate::runtime::server::{ComputeHandle, ComputeServer};
+use crate::tensor::Tensor;
+pub use policy::Outcome;
+
+/// Redundancy mode of one distributed layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Redundancy {
+    /// No redundancy: a failed shard loses the request (until failover).
+    None,
+    /// One CDC parity device covering all d data shards (paper §5).
+    Cdc,
+    /// Fig. 18: parity groups of the given size (1 failure per group).
+    CdcGrouped(usize),
+    /// Double modular redundancy: every shard duplicated.
+    TwoMr,
+}
+
+/// Per-layer split request.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitSpec {
+    pub d: usize,
+    pub redundancy: Redundancy,
+}
+
+impl SplitSpec {
+    /// A plain d-way split.
+    pub fn plain(d: usize) -> SplitSpec {
+        SplitSpec { d, redundancy: Redundancy::None }
+    }
+
+    /// A d-way split protected by one CDC parity device.
+    pub fn cdc(d: usize) -> SplitSpec {
+        SplitSpec { d, redundancy: Redundancy::Cdc }
+    }
+}
+
+/// Session construction parameters.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub model: String,
+    /// Weighted-layer name → split spec; layers not listed run whole
+    /// (d = 1) on a single device.
+    pub splits: BTreeMap<String, SplitSpec>,
+    /// Number of data devices in the fleet (parity/replica devices are
+    /// allocated on top, like the paper's "extra device").
+    pub n_devices: usize,
+    /// Straggler gate: substitution not initiated before
+    /// `threshold_factor ×` the layer's expected service time. ∞ disables
+    /// mitigation (pure fault tolerance).
+    pub threshold_factor: f64,
+    pub net: NetConfig,
+    /// Device compute rate (MACs/ms); default RPi.
+    pub device_rate: f64,
+    pub seed: u64,
+    /// Failure-detection time for the non-CDC recovery path (paper: "takes
+    /// tens of seconds").
+    pub detection_ms: f64,
+    /// Explicit layer placement (the paper's per-device allocation file,
+    /// Fig. 11/13): layer name → data-shard devices (length must equal the
+    /// layer's split degree). Unplaced layers are assigned round-robin.
+    pub placement: BTreeMap<String, Vec<usize>>,
+}
+
+impl SessionConfig {
+    /// Reasonable defaults around a model name.
+    pub fn new(model: &str) -> SessionConfig {
+        SessionConfig {
+            model: model.to_string(),
+            splits: BTreeMap::new(),
+            n_devices: 1,
+            threshold_factor: f64::INFINITY,
+            net: NetConfig::default(),
+            device_rate: crate::fleet::RPI_MACS_PER_MS,
+            seed: 2021,
+            detection_ms: 20_000.0,
+            placement: BTreeMap::new(),
+        }
+    }
+}
+
+/// How one layer executes.
+enum Exec {
+    /// Merge-point op (pool/flatten/gap) — negligible cost.
+    Local(usize),
+    /// Distributed (possibly d=1) weighted layer.
+    Shards {
+        layer_idx: usize,
+        /// The split plan (kept for introspection/ablations).
+        #[allow(dead_code)]
+        plan: LayerPlan,
+        /// (device, task id) per data shard.
+        data: Vec<(usize, u64)>,
+        /// CDC parity devices: (device, task id, covered shard indices).
+        parities: Vec<(usize, u64, Vec<usize>)>,
+        /// 2MR replicas: (device, task id) aligned with `data`.
+        replicas: Vec<(usize, u64)>,
+        /// Fused-activation artifact in use (non-CDC fast path)?
+        fused_relu: bool,
+        /// Expected service time (ms) for the threshold gate.
+        expected_ms: f64,
+        request_bytes: u64,
+    },
+}
+
+/// Per-layer trace of one request.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub layer: String,
+    pub t_start_ms: f64,
+    pub t_done_ms: f64,
+    pub outcome: &'static str,
+    pub recovered_shard: Option<usize>,
+    /// Simulated arrival time of each data shard (∞ = lost).
+    pub data_arrivals_ms: Vec<f64>,
+    /// Simulated arrival time of each parity/replica shard.
+    pub aux_arrivals_ms: Vec<f64>,
+}
+
+/// Full trace of one request.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub req: u64,
+    pub output: Tensor,
+    pub total_ms: f64,
+    pub layers: Vec<LayerTrace>,
+    /// True if any layer used CDC substitution.
+    pub any_recovery: bool,
+}
+
+impl RequestTrace {
+    /// Service time of the slowest distributed stage. Under pipelined
+    /// steady-state serving the request *rate* is bottleneck-limited, so
+    /// the paper's Case-Study-I "2.4x slowdown" manifests as this
+    /// stage time doubling when a failed device's shard is re-assigned
+    /// serially onto its neighbour.
+    pub fn bottleneck_ms(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.t_done_ms - l.t_start_ms)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// A deployed model serving session over a simulated fleet.
+pub struct Session {
+    cfg: SessionConfig,
+    model: ModelManifest,
+    devices: Vec<Device>,
+    exec: Vec<Exec>,
+    /// Task definitions kept for failover re-deployment.
+    task_defs: BTreeMap<u64, TaskDef>,
+    /// task id → owning device (mutated by failover).
+    task_owner: BTreeMap<u64, usize>,
+    completions: Receiver<Completion>,
+    _completions_tx: Sender<Completion>,
+    next_req: u64,
+    /// Devices currently considered failed by the *coordinator*.
+    known_failed: Vec<usize>,
+    /// Extra devices allocated beyond cfg.n_devices (parity/replicas).
+    pub extra_devices: usize,
+    _server: Option<ComputeServer>,
+}
+
+impl Session {
+    /// Build a session with its own compute server over `artifacts_root`.
+    pub fn start(
+        artifacts_root: impl Into<std::path::PathBuf>,
+        cfg: SessionConfig,
+    ) -> Result<Session> {
+        let root = artifacts_root.into();
+        let server = ComputeServer::spawn(root.clone())?;
+        let manifest = Manifest::load(&root)?;
+        Session::start_with(manifest, server.handle(), Some(server), cfg)
+    }
+
+    /// Build a session over an existing compute server (lets experiments
+    /// share one PJRT instance across many sessions).
+    pub fn start_shared(
+        manifest: &Manifest,
+        compute: ComputeHandle,
+        cfg: SessionConfig,
+    ) -> Result<Session> {
+        Session::start_with(manifest.clone_shallow()?, compute, None, cfg)
+    }
+
+    fn start_with(
+        manifest: Manifest,
+        compute: ComputeHandle,
+        server: Option<ComputeServer>,
+        cfg: SessionConfig,
+    ) -> Result<Session> {
+        let model = manifest.model(&cfg.model)?.clone();
+        let weights = Weights::load(&manifest, &model)?;
+
+        // ---- build the execution plan --------------------------------
+        let mut exec = Vec::new();
+        let mut next_task = 0u64;
+        let mut next_data_dev = 0usize;
+        let mut extra = 0usize;
+        struct Pending {
+            task: u64,
+            device: usize,
+            def: TaskDef,
+        }
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut preload: Vec<String> = Vec::new();
+
+        for (layer_idx, layer) in model.layers.iter().enumerate() {
+            if !layer.is_weighted() {
+                exec.push(Exec::Local(layer_idx));
+                continue;
+            }
+            let spec = cfg
+                .splits
+                .get(&layer.name)
+                .copied()
+                .unwrap_or(SplitSpec::plain(1));
+            if spec.d > cfg.n_devices {
+                return Err(Error::Config(format!(
+                    "layer {} wants d={} > {} devices",
+                    layer.name, spec.d, cfg.n_devices
+                )));
+            }
+            let plan = LayerPlan::build(layer, spec.d)?;
+            // CDC needs the pre-activation (lin) artifact; otherwise use
+            // the fused flavor when present.
+            let use_cdc = matches!(
+                spec.redundancy,
+                Redundancy::Cdc | Redundancy::CdcGrouped(_)
+            );
+            let (artifact, fused_relu) = if use_cdc || plan.artifact_relu.is_none() {
+                (plan.artifact_lin.clone(), false)
+            } else {
+                (plan.artifact_relu.clone().unwrap(), true)
+            };
+            preload.push(artifact.clone());
+
+            let macs = shard_macs(layer, spec.d);
+            let (req_bytes, reply_bytes) = shard_io_bytes(layer, spec.d);
+            let placed = match cfg.placement.get(&layer.name) {
+                Some(devs) => {
+                    if devs.len() != spec.d {
+                        return Err(Error::Config(format!(
+                            "placement for {} has {} devices, split is {}",
+                            layer.name,
+                            devs.len(),
+                            spec.d
+                        )));
+                    }
+                    if let Some(bad) = devs.iter().find(|&&d| d >= cfg.n_devices) {
+                        return Err(Error::Config(format!(
+                            "placement for {} uses device {bad} >= n_devices {}",
+                            layer.name, cfg.n_devices
+                        )));
+                    }
+                    Some(devs.clone())
+                }
+                None => None,
+            };
+            let mut shard_wb: Vec<(Arc<Tensor>, Arc<Tensor>)> = Vec::new();
+            let mut data = Vec::new();
+            for s in &plan.shards {
+                let (w, b) = plan.shard_weights(&weights, s)?;
+                let (w, b) = (Arc::new(w), Arc::new(b));
+                let task = next_task;
+                next_task += 1;
+                let device = match &placed {
+                    Some(devs) => devs[s.index],
+                    None => {
+                        let d = next_data_dev % cfg.n_devices;
+                        next_data_dev += 1;
+                        d
+                    }
+                };
+                pending.push(Pending {
+                    task,
+                    device,
+                    def: TaskDef {
+                        id: task,
+                        artifact: artifact.clone(),
+                        w: w.clone(),
+                        b: b.clone(),
+                        macs,
+                        reply_bytes,
+                    },
+                });
+                shard_wb.push((w, b));
+                data.push((device, task));
+            }
+
+            let mut parities = Vec::new();
+            let mut replicas = Vec::new();
+            match spec.redundancy {
+                Redundancy::None => {}
+                Redundancy::Cdc | Redundancy::CdcGrouped(_) => {
+                    let group_size = match spec.redundancy {
+                        Redundancy::CdcGrouped(g) => g,
+                        _ => spec.d,
+                    };
+                    let groups = cdc::parity_groups(spec.d, group_size)?;
+                    for cover in groups {
+                        let members: Vec<(Tensor, Tensor)> = cover
+                            .iter()
+                            .map(|&i| {
+                                let (w, b) = &shard_wb[i];
+                                (w.as_ref().clone(), b.as_ref().clone())
+                            })
+                            .collect();
+                        let (pw, pb) = cdc::parity_weights(&members)?;
+                        let (pw, pb) = (Arc::new(pw), Arc::new(pb));
+                        let task = next_task;
+                        next_task += 1;
+                        let device = cfg.n_devices + extra;
+                        extra += 1;
+                        pending.push(Pending {
+                            task,
+                            device,
+                            def: TaskDef {
+                                id: task,
+                                artifact: artifact.clone(),
+                                w: pw,
+                                b: pb,
+                                macs,
+                                reply_bytes,
+                            },
+                        });
+                        parities.push((device, task, cover));
+                    }
+                }
+                Redundancy::TwoMr => {
+                    for (i, (w, b)) in shard_wb.iter().enumerate() {
+                        let task = next_task;
+                        next_task += 1;
+                        let device = cfg.n_devices + extra;
+                        extra += 1;
+                        pending.push(Pending {
+                            task,
+                            device,
+                            def: TaskDef {
+                                id: task,
+                                artifact: artifact.clone(),
+                                w: w.clone(),
+                                b: b.clone(),
+                                macs,
+                                reply_bytes,
+                            },
+                        });
+                        let _ = i;
+                        replicas.push((device, task));
+                    }
+                }
+            }
+
+            let net_ms = 2.0 * cfg.net.base_ms
+                + ((req_bytes + reply_bytes) as f64 * 8.0)
+                    / (cfg.net.bandwidth_mbps * 1000.0);
+            let expected_ms = macs as f64 / cfg.device_rate + net_ms;
+            exec.push(Exec::Shards {
+                layer_idx,
+                plan,
+                data,
+                parities,
+                replicas,
+                fused_relu,
+                expected_ms,
+                request_bytes: req_bytes,
+            });
+        }
+
+        // ---- spawn the fleet ------------------------------------------
+        let n_total = cfg.n_devices + extra;
+        let (ctx, crx) = channel();
+        let mut devices = Vec::with_capacity(n_total);
+        for id in 0..n_total {
+            let dcfg = DeviceConfig {
+                id,
+                rate_macs_per_ms: cfg.device_rate,
+                failure: Default::default(),
+            };
+            devices.push(Device::spawn(
+                dcfg,
+                cfg.net.clone(),
+                cfg.seed,
+                compute.clone(),
+                ctx.clone(),
+            )?);
+        }
+
+        // Warm the executable cache so compile time never pollutes latency.
+        preload.sort();
+        preload.dedup();
+        compute.preload(&preload)?;
+
+        // ---- deploy tasks ----------------------------------------------
+        let mut task_defs = BTreeMap::new();
+        let mut task_owner = BTreeMap::new();
+        let mut per_device: BTreeMap<usize, Vec<TaskDef>> = BTreeMap::new();
+        for p in pending {
+            task_defs.insert(p.task, p.def.clone());
+            task_owner.insert(p.task, p.device);
+            per_device.entry(p.device).or_default().push(p.def);
+        }
+        for (dev, defs) in per_device {
+            devices[dev].deploy(defs)?;
+        }
+
+        Ok(Session {
+            cfg,
+            model,
+            devices,
+            exec,
+            task_defs,
+            task_owner,
+            completions: crx,
+            _completions_tx: ctx,
+            next_req: 0,
+            known_failed: Vec::new(),
+            extra_devices: extra,
+            _server: server,
+        })
+    }
+
+    /// Total devices in the fleet (data + redundancy).
+    pub fn total_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The model served by this session.
+    pub fn model(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    /// Inject a failure plan into a device (experiments flip this).
+    pub fn set_failure(&self, device: usize, plan: crate::fleet::FailurePlan) -> Result<()> {
+        self.devices
+            .get(device)
+            .ok_or_else(|| Error::Config(format!("no device {device}")))?
+            .set_failure(plan)
+    }
+
+    /// Coordinator-side failover (the paper's non-CDC recovery): reassign
+    /// every task of `failed` to `target`, which then executes them
+    /// serially — Case Study I's ~2.4× steady-state slowdown. Returns the
+    /// number of moved tasks. (Detection latency is accounted by the
+    /// caller via `cfg.detection_ms`.)
+    pub fn failover(&mut self, failed: usize, target: usize) -> Result<usize> {
+        let moved: Vec<u64> = self
+            .task_owner
+            .iter()
+            .filter(|(_, &d)| d == failed)
+            .map(|(&t, _)| t)
+            .collect();
+        let defs: Vec<TaskDef> = moved
+            .iter()
+            .map(|t| self.task_defs[t].clone())
+            .collect();
+        self.devices[failed].undeploy(moved.clone())?;
+        self.devices[target].deploy(defs)?;
+        for t in &moved {
+            self.task_owner.insert(*t, target);
+        }
+        for e in &mut self.exec {
+            if let Exec::Shards { data, parities, replicas, .. } = e {
+                for (d, t) in data.iter_mut() {
+                    if moved.contains(t) {
+                        *d = target;
+                    }
+                }
+                for (d, t, _) in parities.iter_mut() {
+                    if moved.contains(t) {
+                        *d = target;
+                    }
+                }
+                for (d, t) in replicas.iter_mut() {
+                    if moved.contains(t) {
+                        *d = target;
+                    }
+                }
+            }
+        }
+        self.known_failed.push(failed);
+        Ok(moved.len())
+    }
+
+    /// Run one single-batch inference through the distributed model.
+    pub fn infer(&mut self, input: &Tensor) -> Result<RequestTrace> {
+        let req = self.next_req;
+        self.next_req += 1;
+        let mut t_now = 0.0f64;
+        let mut traces = Vec::new();
+        let mut any_recovery = false;
+
+        let mut cur = if self.model.input_shape.len() == 1 {
+            input.clone().reshape(vec![input.len(), 1])?
+        } else {
+            input.clone()
+        };
+
+        // Local clones to avoid borrowing `self` across the loop.
+        for ei in 0..self.exec.len() {
+            match &self.exec[ei] {
+                Exec::Local(layer_idx) => {
+                    let layer = &self.model.layers[*layer_idx];
+                    cur = apply_local(layer, cur)?;
+                }
+                Exec::Shards {
+                    layer_idx,
+                    plan: _,
+                    data,
+                    parities,
+                    replicas,
+                    fused_relu,
+                    expected_ms,
+                    request_bytes,
+                } => {
+                    let layer = &self.model.layers[*layer_idx];
+                    let t_start = t_now;
+
+                    // ---- dispatch: group tasks per device (a device with
+                    // several tasks — e.g. after failover — runs serially).
+                    let mut orders: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+                    let all_tasks = data
+                        .iter()
+                        .copied()
+                        .chain(parities.iter().map(|(d, t, _)| (*d, *t)))
+                        .chain(replicas.iter().copied());
+                    for (dev, task) in all_tasks {
+                        orders.entry(dev).or_default().push(task);
+                    }
+                    let n_expected: usize =
+                        orders.values().map(|v| v.len()).sum();
+                    let shared_input = Arc::new(cur.clone());
+                    for (dev, tasks) in &orders {
+                        self.devices[*dev].dispatch(WorkOrder {
+                            req,
+                            tasks: tasks.clone(),
+                            input: shared_input.clone(),
+                            request_bytes: *request_bytes,
+                            t_dispatch_ms: t_now,
+                        })?;
+                    }
+
+                    // ---- gather all completions for this layer.
+                    let mut by_task: BTreeMap<u64, Completion> = BTreeMap::new();
+                    while by_task.len() < n_expected {
+                        let c = self.completions.recv().map_err(|_| {
+                            Error::Fleet("completion channel closed".into())
+                        })?;
+                        if c.req == req {
+                            by_task.insert(c.task, c);
+                        }
+                    }
+
+                    // ---- resolve the outcome via the pure policy layer.
+                    let data_t: Vec<f64> = data
+                        .iter()
+                        .map(|(_, t)| by_task[t].t_arrival_ms)
+                        .collect();
+                    let threshold = if self.cfg.threshold_factor.is_finite() {
+                        t_now + self.cfg.threshold_factor * expected_ms
+                    } else {
+                        f64::INFINITY
+                    };
+                    // Normalise every redundancy mode into (t_ms, missing
+                    // data-shard indices to reconstruct, trace kind).
+                    let lost = |layer: &LayerManifest| {
+                        Error::Fleet(format!(
+                            "request {req} lost at layer {} (unrecoverable)",
+                            layer.name
+                        ))
+                    };
+                    let (t_ms, missing, kind) = if !replicas.is_empty() {
+                        let rep_t: Vec<f64> = replicas
+                            .iter()
+                            .map(|(_, t)| by_task[t].t_arrival_ms)
+                            .collect();
+                        match policy::resolve_2mr(&data_t, &rep_t) {
+                            policy::Outcome::Lost => return Err(lost(layer)),
+                            o => (o.t_ms(), Vec::new(), "all_data"),
+                        }
+                    } else if !parities.is_empty() {
+                        let par_t: Vec<f64> = parities
+                            .iter()
+                            .map(|(_, t, _)| by_task[t].t_arrival_ms)
+                            .collect();
+                        let groups: Vec<Vec<usize>> =
+                            parities.iter().map(|(_, _, g)| g.clone()).collect();
+                        match policy::resolve_grouped(&data_t, &par_t, &groups, threshold)
+                        {
+                            policy::GroupedOutcome::Lost => return Err(lost(layer)),
+                            policy::GroupedOutcome::Ok { t_ms, missing } => {
+                                let kind =
+                                    if missing.is_empty() { "all_data" } else { "recovered" };
+                                (t_ms, missing, kind)
+                            }
+                        }
+                    } else {
+                        match policy::resolve(&data_t, None, f64::INFINITY) {
+                            policy::Outcome::Lost => return Err(lost(layer)),
+                            o => (o.t_ms(), Vec::new(), "all_data"),
+                        }
+                    };
+                    if !missing.is_empty() {
+                        any_recovery = true;
+                    }
+
+                    // ---- materialise shard outputs (decode the missing
+                    // ones from their parity group: parity − Σ received —
+                    // the paper's close-to-zero-latency subtraction).
+                    let mut parts: Vec<Option<Tensor>> = data
+                        .iter()
+                        .map(|(_, t)| by_task[t].result.clone())
+                        .collect();
+                    // 2MR: fill from the replica when the primary is lost.
+                    for (i, (_, rt)) in replicas.iter().enumerate() {
+                        if parts[i].is_none() {
+                            parts[i] = by_task[rt].result.clone();
+                        }
+                    }
+                    for &mi in &missing {
+                        let (_, ptask, cover) = parities
+                            .iter()
+                            .find(|(_, _, g)| g.contains(&mi))
+                            .expect("recovered shard must be covered");
+                        let parity_out = by_task[ptask]
+                            .result
+                            .clone()
+                            .ok_or_else(|| Error::Fleet("parity result lost".into()))?;
+                        let received: Vec<Tensor> = cover
+                            .iter()
+                            .filter(|&&i| i != mi)
+                            .map(|&i| {
+                                parts[i].clone().ok_or_else(|| {
+                                    Error::Fleet("covered shard lost".into())
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        let refs: Vec<&Tensor> = received.iter().collect();
+                        parts[mi] = Some(cdc::decode(&parity_out, &refs)?);
+                    }
+                    let out: Vec<Tensor> = parts
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            p.ok_or_else(|| {
+                                Error::Fleet(format!("shard {i} unexpectedly lost"))
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    t_now = t_ms;
+                    let missing_first = missing.first().copied();
+
+                    // Merge: concat + trim padding + deferred epilogue.
+                    let refs: Vec<&Tensor> = out.iter().collect();
+                    let mut merged = if layer.kind == "fc" {
+                        Tensor::concat0(&refs)?.take_rows(layer.m)?
+                    } else {
+                        let cat = Tensor::concat_channels(&refs)?;
+                        cat.take_channels(0, layer.k)?
+                    };
+                    if layer.relu && !fused_relu {
+                        merged.relu();
+                    }
+                    if layer.kind == "conv" && layer.pool > 0 {
+                        merged = merged.maxpool(layer.pool, layer.pool)?;
+                    }
+                    cur = merged;
+
+                    traces.push(LayerTrace {
+                        layer: layer.name.clone(),
+                        t_start_ms: t_start,
+                        t_done_ms: t_now,
+                        outcome: kind,
+                        recovered_shard: missing_first,
+                        data_arrivals_ms: data_t.clone(),
+                        aux_arrivals_ms: parities
+                            .iter()
+                            .map(|(_, t, _)| by_task[t].t_arrival_ms)
+                            .chain(replicas.iter().map(|(_, t)| by_task[t].t_arrival_ms))
+                            .collect(),
+                    });
+                }
+            }
+        }
+
+        Ok(RequestTrace {
+            req,
+            output: cur,
+            total_ms: t_now,
+            layers: traces,
+            any_recovery,
+        })
+    }
+
+    /// Drain stale completions (lost requests leave orphans behind).
+    pub fn drain(&mut self) {
+        while self.completions.try_recv().is_ok() {}
+    }
+}
+
+fn apply_local(layer: &LayerManifest, cur: Tensor) -> Result<Tensor> {
+    match layer.kind.as_str() {
+        "maxpool" => cur.maxpool(layer.pool, layer.pool),
+        "flatten" => Ok(cur.flatten_col()),
+        "gap" => cur.gap(),
+        other => Err(Error::Config(format!("unexpected local layer {other}"))),
+    }
+}
+
+impl Manifest {
+    /// Cheap logical clone for sessions sharing a compute server: re-reads
+    /// the manifest from disk (the JSON is small).
+    pub fn clone_shallow(&self) -> Result<Manifest> {
+        Manifest::load(&self.root)
+    }
+}

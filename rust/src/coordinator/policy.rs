@@ -1,0 +1,232 @@
+//! Pure gather-resolution policies: given simulated arrival times for a
+//! layer's shards, decide *when* the layer completes and *how* (all data,
+//! CDC substitution, or lost). Keeping this logic pure makes the paper's
+//! latency semantics property-testable independent of threads and PJRT.
+
+/// How a distributed layer completed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Outcome {
+    /// All data shards arrived; completion at the slowest data arrival.
+    AllData { t_ms: f64 },
+    /// Parity substituted for exactly one data shard (failure *or*
+    /// straggler): completion when n of n+1 results were in hand (gated by
+    /// the threshold), recovery itself is a local subtraction (§5.2).
+    Recovered { t_ms: f64, missing: usize },
+    /// Unrecoverable: ≥ 1 shard missing and no usable parity.
+    Lost,
+}
+
+impl Outcome {
+    /// Completion time; ∞ when lost.
+    pub fn t_ms(&self) -> f64 {
+        match self {
+            Outcome::AllData { t_ms } => *t_ms,
+            Outcome::Recovered { t_ms, .. } => *t_ms,
+            Outcome::Lost => f64::INFINITY,
+        }
+    }
+}
+
+/// Resolve a layer protected by (at most) one parity shard.
+///
+/// * `data`: simulated arrival time per data shard (∞ = never arrived).
+/// * `parity`: arrival of the parity shard, if one was deployed.
+/// * `threshold_ms`: straggler-mitigation gate — parity substitution may
+///   not be *initiated* before this absolute time (paper §6.2: "a device
+///   waits for a particular amount of time; adjusting this waiting
+///   threshold treats our method as a solution to the straggler problem").
+///   `0.0` = substitute as soon as any n of n+1 results are in.
+pub fn resolve(data: &[f64], parity: Option<f64>, threshold_ms: f64) -> Outcome {
+    assert!(!data.is_empty());
+    let t_all = data.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+
+    let Some(t_parity) = parity else {
+        return if t_all.is_finite() {
+            Outcome::AllData { t_ms: t_all }
+        } else {
+            Outcome::Lost
+        };
+    };
+
+    // Completion-by-substitution: drop the slowest data shard, finish at
+    // max(parity, remaining data, threshold).
+    let (slowest_idx, _) = data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let t_rest = data
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != slowest_idx)
+        .map(|(_, t)| *t)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(f64::NEG_INFINITY);
+    let t_rest = if data.len() == 1 { 0.0 } else { t_rest };
+    // Earliest instant n of n+1 results are in hand.
+    let t_sub = t_parity.max(t_rest);
+
+    if t_all.is_finite() {
+        // Straggler case: substitution may not be *initiated* before the
+        // threshold, so it completes at max(t_sub, threshold); waiting for
+        // the slow shard completes at t_all — take whichever is earlier.
+        let gated = t_sub.max(threshold_ms);
+        if t_all <= gated {
+            Outcome::AllData { t_ms: t_all }
+        } else {
+            Outcome::Recovered { t_ms: gated, missing: slowest_idx }
+        }
+    } else if t_sub.is_finite() {
+        // Failure case: the missing shard never arrives, substitution is
+        // forced. A finite threshold still gates when the coordinator
+        // gives up waiting; an infinite one means "recover as soon as n
+        // results are in hand" (pure fault tolerance, no mitigation).
+        let t = if threshold_ms.is_finite() { t_sub.max(threshold_ms) } else { t_sub };
+        Outcome::Recovered { t_ms: t, missing: slowest_idx }
+    } else {
+        Outcome::Lost
+    }
+}
+
+/// Resolve a 2MR (double-modular-redundancy) layer: every shard has two
+/// replicas; a shard is ready at the *earlier* replica, the layer at the
+/// slowest shard; lost if both replicas of any shard are lost.
+pub fn resolve_2mr(primary: &[f64], replica: &[f64]) -> Outcome {
+    assert_eq!(primary.len(), replica.len());
+    let mut t = f64::NEG_INFINITY;
+    for (p, r) in primary.iter().zip(replica) {
+        let shard = p.min(*r);
+        if !shard.is_finite() {
+            return Outcome::Lost;
+        }
+        t = t.max(shard);
+    }
+    Outcome::AllData { t_ms: t }
+}
+
+/// Result of resolving a (multi-)parity layer: possibly several shards
+/// recovered — at most one per parity group (Fig. 18).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupedOutcome {
+    /// Layer completed at `t_ms`; `missing` lists the data shards that
+    /// must be reconstructed from their group parity (empty = all data).
+    Ok { t_ms: f64, missing: Vec<usize> },
+    /// ≥ 2 shards missing in one group — unrecoverable.
+    Lost,
+}
+
+/// Resolve a Fig.-18 multi-parity layer: `groups[g]` lists the data-shard
+/// indices covered by parity `g`. Each group must independently complete;
+/// the layer completes at the slowest group. The single-parity scheme of
+/// §5 is the one-group special case.
+pub fn resolve_grouped(
+    data: &[f64],
+    parities: &[f64],
+    groups: &[Vec<usize>],
+    threshold_ms: f64,
+) -> GroupedOutcome {
+    assert_eq!(parities.len(), groups.len());
+    let mut t = f64::NEG_INFINITY;
+    let mut missing = Vec::new();
+    for (g, cover) in groups.iter().enumerate() {
+        let sub: Vec<f64> = cover.iter().map(|&i| data[i]).collect();
+        match resolve(&sub, Some(parities[g]), threshold_ms) {
+            Outcome::Lost => return GroupedOutcome::Lost,
+            Outcome::AllData { t_ms } => t = t.max(t_ms),
+            Outcome::Recovered { t_ms, missing: m } => {
+                t = t.max(t_ms);
+                missing.push(cover[m]);
+            }
+        }
+    }
+    GroupedOutcome::Ok { t_ms: t, missing }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const INF: f64 = f64::INFINITY;
+
+    #[test]
+    fn all_data_fast_path() {
+        assert_eq!(
+            resolve(&[10.0, 20.0], Some(100.0), 0.0),
+            Outcome::AllData { t_ms: 20.0 }
+        );
+    }
+
+    #[test]
+    fn no_parity_failure_is_lost() {
+        assert_eq!(resolve(&[10.0, INF], None, 0.0), Outcome::Lost);
+        assert_eq!(resolve(&[10.0, 20.0], None, 0.0), Outcome::AllData { t_ms: 20.0 });
+    }
+
+    #[test]
+    fn parity_replaces_failed_shard() {
+        let o = resolve(&[10.0, INF, 30.0], Some(40.0), 0.0);
+        assert_eq!(o, Outcome::Recovered { t_ms: 40.0, missing: 1 });
+    }
+
+    #[test]
+    fn parity_beats_straggler() {
+        // Shard 0 is a 500 ms straggler; parity at 25 ms lets the layer
+        // complete at 30 ms (slowest of the n fastest).
+        let o = resolve(&[500.0, 20.0, 30.0], Some(25.0), 0.0);
+        assert_eq!(o, Outcome::Recovered { t_ms: 30.0, missing: 0 });
+    }
+
+    #[test]
+    fn threshold_gates_substitution() {
+        // Same straggler, but substitution may not start before 100 ms.
+        let o = resolve(&[500.0, 20.0, 30.0], Some(25.0), 100.0);
+        assert_eq!(o, Outcome::Recovered { t_ms: 100.0, missing: 0 });
+        // A huge threshold means we wait for all data.
+        let o = resolve(&[500.0, 20.0, 30.0], Some(25.0), 1000.0);
+        assert_eq!(o, Outcome::AllData { t_ms: 500.0 });
+    }
+
+    #[test]
+    fn two_failures_one_parity_lost() {
+        assert_eq!(resolve(&[INF, INF, 10.0], Some(5.0), 0.0), Outcome::Lost);
+    }
+
+    #[test]
+    fn single_shard_with_parity() {
+        // d=1 + parity: parity alone can stand in.
+        let o = resolve(&[INF], Some(42.0), 0.0);
+        assert_eq!(o, Outcome::Recovered { t_ms: 42.0, missing: 0 });
+    }
+
+    #[test]
+    fn parity_lost_degrades_gracefully() {
+        assert_eq!(
+            resolve(&[10.0, 20.0], Some(INF), 0.0),
+            Outcome::AllData { t_ms: 20.0 }
+        );
+        assert_eq!(resolve(&[10.0, INF], Some(INF), 0.0), Outcome::Lost);
+    }
+
+    #[test]
+    fn two_mr_first_response_wins() {
+        let o = resolve_2mr(&[100.0, 30.0], &[20.0, INF]);
+        assert_eq!(o, Outcome::AllData { t_ms: 30.0 });
+        assert_eq!(resolve_2mr(&[INF, 30.0], &[INF, 10.0]), Outcome::Lost);
+    }
+
+    #[test]
+    fn grouped_tolerates_one_failure_per_group() {
+        let groups = vec![vec![0, 1], vec![2, 3]];
+        // One failure in each group — recoverable (Fig. 18 bottom).
+        let o = resolve_grouped(&[INF, 10.0, 20.0, INF], &[15.0, 25.0], &groups, 0.0);
+        assert_eq!(
+            o,
+            GroupedOutcome::Ok { t_ms: 25.0, missing: vec![0, 3] }
+        );
+        // Two failures in one group — lost.
+        let o = resolve_grouped(&[INF, INF, 20.0, 30.0], &[15.0, 25.0], &groups, 0.0);
+        assert_eq!(o, GroupedOutcome::Lost);
+        // No failures: all-data, no missing.
+        let o = resolve_grouped(&[1.0, 2.0, 3.0, 4.0], &[9.0, 9.0], &groups, 100.0);
+        assert_eq!(o, GroupedOutcome::Ok { t_ms: 4.0, missing: vec![] });
+    }
+}

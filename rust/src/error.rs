@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the cdc-dnn library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Malformed or missing artifact manifest / weights / goldens.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// JSON parse error (line/col best-effort).
+    #[error("json error: {0}")]
+    Json(String),
+    /// Shape mismatch in tensor ops or executor inputs.
+    #[error("shape error: {0}")]
+    Shape(String),
+    /// Underlying XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+    /// Invalid deployment / partition configuration.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Fleet communication failure (device hung up, channel closed).
+    #[error("fleet error: {0}")]
+    Fleet(String),
+    /// IO error with path context.
+    #[error("io error: {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Wrap an io::Error with the offending path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,139 @@
+//! Ablations for the design choices DESIGN.md §6 calls out:
+//!
+//! 1. **Decode placement** — recover the missing shard by rust-side
+//!    subtraction (shipped design) vs re-executing the missing GEMM
+//!    locally vs the paper's vanilla re-dispatch (weights reload + input
+//!    re-request + remote compute, costed by the fleet timing model).
+//! 2. **CDC overhead without failure** — what the extra parity device
+//!    costs a healthy system (answer: nothing on the critical path; it
+//!    can only help via substitution).
+//! 3. **Grouped-parity granularity** — tolerance vs added devices as the
+//!    group size shrinks (the Fig. 18 trade dial).
+
+use std::time::Instant;
+
+use crate::cdc;
+use crate::coordinator::{Redundancy, Session, SessionConfig, SplitSpec};
+use crate::error::Result;
+use crate::fleet::{NetConfig, RPI_MACS_PER_MS};
+use crate::json::{obj, Value};
+use crate::metrics::Series;
+use crate::rng::Pcg32;
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+
+use super::{print_table, ExpCtx};
+
+fn fc_cfg(ctx: &ExpCtx, red: Redundancy, threshold: f64) -> SessionConfig {
+    let mut cfg = SessionConfig::new("fc2048");
+    cfg.n_devices = 4;
+    cfg.seed = ctx.seed;
+    cfg.net = NetConfig::moderate();
+    cfg.threshold_factor = threshold;
+    cfg.splits.insert("fc".into(), SplitSpec { d: 4, redundancy: red });
+    cfg
+}
+
+/// Run all three ablations.
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    println!("\n=== Ablations (DESIGN.md §6) ===");
+
+    // ---- 1. decode placement -----------------------------------------
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let runtime = Runtime::new()?;
+    let mut rng = Pcg32::seeded(ctx.seed);
+    let ms = 512usize;
+    let parity = Tensor::randn(vec![ms, 1], &mut rng);
+    let others: Vec<Tensor> = (0..3).map(|_| Tensor::randn(vec![ms, 1], &mut rng)).collect();
+    let refs: Vec<&Tensor> = others.iter().collect();
+    let t0 = Instant::now();
+    let iters = 2000;
+    for _ in 0..iters {
+        std::hint::black_box(cdc::decode(&parity, &refs)?);
+    }
+    let decode_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let w = Tensor::randn(vec![ms, 2048], &mut rng);
+    let b = Tensor::randn(vec![ms, 1], &mut rng);
+    let x = Tensor::randn(vec![2048, 1], &mut rng);
+    runtime.execute(&manifest, "fc_m512_k2048_lin", &[&w, &b, &x])?;
+    let t0 = Instant::now();
+    for _ in 0..50 {
+        runtime.execute(&manifest, "fc_m512_k2048_lin", &[&w, &b, &x])?;
+    }
+    let reexec_us = t0.elapsed().as_secs_f64() * 1e6 / 50.0;
+
+    // Vanilla re-dispatch cost under the simulated fleet (paper §5.2's
+    // description: load weights, re-request input, compute remotely).
+    let net = NetConfig::moderate();
+    let mut nrng = Pcg32::seeded(ctx.seed + 1);
+    let mut vanilla = Series::new();
+    for _ in 0..2000 {
+        let t = net.sample_request((2048 * 4) as u64)
+            + (512.0 * 2048.0) / RPI_MACS_PER_MS
+            + net.sample((512 * 4) as u64, &mut nrng);
+        vanilla.record(t);
+    }
+    println!("\nablation 1 — recovery mechanism (fc-2048 shard, 4-way):");
+    print_table(
+        &["mechanism", "cost"],
+        &[
+            vec!["CDC decode (rust subtraction)".into(), format!("{decode_us:.1} µs")],
+            vec!["local re-execution (PJRT GEMM)".into(), format!("{reexec_us:.1} µs")],
+            vec![
+                "vanilla re-dispatch (simulated RPi+WLAN)".into(),
+                format!("{:.0} ms (mean)", vanilla.summary().mean),
+            ],
+        ],
+    );
+
+    // ---- 2. CDC overhead without failure ------------------------------
+    let n = ctx.n_requests();
+    let mut plain = Session::start(&ctx.artifacts, fc_cfg(ctx, Redundancy::None, f64::INFINITY))?;
+    let mut coded =
+        Session::start(&ctx.artifacts, fc_cfg(ctx, Redundancy::Cdc, f64::INFINITY))?;
+    let mut s_plain = Series::new();
+    let mut s_coded = Series::new();
+    let mut xrng = Pcg32::seeded(ctx.seed ^ 0xab1a);
+    for _ in 0..n {
+        let x = Tensor::randn(vec![2048], &mut xrng);
+        s_plain.record(plain.infer(&x)?.total_ms);
+        s_coded.record(coded.infer(&x)?.total_ms);
+    }
+    println!("\nablation 2 — healthy-system cost of the parity device:");
+    println!("  plain d=4:     {}", s_plain.summary().line());
+    println!("  cdc d=4+1:     {}", s_coded.summary().line());
+    println!(
+        "  overhead: {:.1}% (parity is off the critical path; it can only substitute)",
+        100.0 * (s_coded.summary().mean / s_plain.summary().mean - 1.0)
+    );
+
+    // ---- 3. parity-group granularity ----------------------------------
+    println!("\nablation 3 — group size vs devices vs tolerance (d = 8 shards):");
+    let mut rows = Vec::new();
+    for gsize in [8usize, 4, 2, 1] {
+        let groups = cdc::parity_groups(8, gsize)?;
+        rows.push(vec![
+            format!("{gsize}"),
+            format!("{}", groups.len()),
+            format!("{}", cdc::tolerated_failures(&groups)),
+            format!("{:.0}%", 100.0 * groups.len() as f64 / 8.0),
+        ]);
+    }
+    print_table(
+        &["group size", "parity devices", "guaranteed failures tolerated", "extra hardware"],
+        &rows,
+    );
+
+    ctx.write_result(
+        "ablations",
+        &obj(vec![
+            ("decode_us", Value::Num(decode_us)),
+            ("reexec_us", Value::Num(reexec_us)),
+            ("vanilla_ms", Value::Num(vanilla.summary().mean)),
+            ("healthy_plain_ms", Value::Num(s_plain.summary().mean)),
+            ("healthy_cdc_ms", Value::Num(s_coded.summary().mean)),
+        ]),
+    )?;
+    Ok(())
+}

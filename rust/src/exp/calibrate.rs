@@ -1,0 +1,49 @@
+//! Calibration report — the §6 anchors that pin the simulator to the
+//! paper's testbed: fc-2048 = 50 ms on one RPi-class device; WiFi
+//! 94.1 Mbps / 0.3 ms; Fig.-1 CDF anchors of the latency model.
+
+use crate::error::Result;
+use crate::fleet::{NetConfig, RPI_MACS_PER_MS};
+use crate::json::{obj, Value};
+use crate::metrics::Series;
+use crate::rng::Pcg32;
+
+use super::{print_table, ExpCtx};
+
+/// Print + persist the calibration table.
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let fc2048_ms = (2048.0 * 2048.0) / RPI_MACS_PER_MS;
+    let net = NetConfig::default();
+    let mut rng = Pcg32::seeded(ctx.seed);
+    let mut s = Series::new();
+    for _ in 0..20_000 {
+        s.record(net.sample(8 * 1024, &mut rng) + 50.0);
+    }
+    let rows = vec![
+        vec!["fc-2048 on one device".into(), format!("{fc2048_ms:.1} ms"), "50 ms".into()],
+        vec!["WiFi bandwidth".into(), format!("{} Mbps", net.bandwidth_mbps), "94.1 Mbps".into()],
+        vec!["client-to-client base".into(), format!("{} ms", net.base_ms), "0.3 ms".into()],
+        vec![
+            "response CDF @100 ms".into(),
+            format!("{:.1}%", 100.0 * s.cdf_at(100.0)),
+            "~34%".into(),
+        ],
+        vec![
+            "response CDF @150 ms".into(),
+            format!("{:.1}%", 100.0 * s.cdf_at(150.0)),
+            "~42%".into(),
+        ],
+    ];
+    println!("\n=== Calibration vs paper §2/§6 anchors ===");
+    print_table(&["quantity", "simulator", "paper"], &rows);
+
+    ctx.write_result(
+        "calibrate",
+        &obj(vec![
+            ("fc2048_ms", Value::Num(fc2048_ms)),
+            ("cdf_100ms", Value::Num(s.cdf_at(100.0))),
+            ("cdf_150ms", Value::Num(s.cdf_at(150.0))),
+        ]),
+    )?;
+    Ok(())
+}

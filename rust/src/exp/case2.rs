@@ -1,0 +1,125 @@
+//! Case Study II (Figs. 13-15) — the same AlexNet deployment plus one CDC
+//! parity device covering the fc6 split. Under a device failure the system
+//! keeps serving with *no* slowdown and *no* lost requests; during normal
+//! operation the extra device doubles as straggler mitigation (Figs.
+//! 14-15), tightening the latency distribution.
+
+use crate::coordinator::{Session, SessionConfig, SplitSpec};
+use crate::error::Result;
+use crate::fleet::FailurePlan;
+use crate::json::{obj, Value};
+use crate::metrics::Series;
+use crate::rng::Pcg32;
+
+use super::case1::{alexnet_5dev, alexnet_input};
+use super::ExpCtx;
+
+/// The six-device allocation: case-1's five devices + a parity for fc6.
+pub fn alexnet_6dev(ctx: &ExpCtx, threshold_factor: f64) -> SessionConfig {
+    let mut cfg = alexnet_5dev(ctx);
+    cfg.splits.insert("fc6".into(), SplitSpec::cdc(2));
+    cfg.threshold_factor = threshold_factor;
+    cfg
+}
+
+/// Results of the case study.
+#[derive(Debug)]
+pub struct Case2 {
+    pub healthy: Series,
+    pub failed: Series,
+    pub no_mitigation: Series,
+    pub with_mitigation: Series,
+    pub lost_requests: u64,
+    pub recovered_requests: u64,
+}
+
+/// Run the experiment.
+pub fn run(ctx: &ExpCtx) -> Result<Case2> {
+    let n = ctx.n_requests();
+    let mut rng = Pcg32::seeded(ctx.seed ^ 0xca5e2);
+
+    // --- robustness: failure causes no slowdown and loses nothing -------
+    let mut session = Session::start(&ctx.artifacts, alexnet_6dev(ctx, f64::INFINITY))?;
+    assert_eq!(session.total_devices(), 6);
+    let mut healthy = Series::new();
+    for _ in 0..n {
+        healthy.record(session.infer(&alexnet_input(&mut rng))?.total_ms);
+    }
+    session.set_failure(2, FailurePlan::PermanentAt(0))?;
+    let mut failed = Series::new();
+    let mut lost = 0u64;
+    let mut recovered = 0u64;
+    for _ in 0..n {
+        match session.infer(&alexnet_input(&mut rng)) {
+            Ok(t) => {
+                failed.record(t.total_ms);
+                if t.any_recovery {
+                    recovered += 1;
+                }
+            }
+            Err(_) => lost += 1,
+        }
+    }
+
+    // --- straggler mitigation on the healthy system (Figs. 14-15) -------
+    let mut s_off = Session::start(&ctx.artifacts, alexnet_6dev(ctx, f64::INFINITY))?;
+    let mut s_on = Session::start(&ctx.artifacts, alexnet_6dev(ctx, 1.5))?;
+    let mut no_mit = Series::new();
+    let mut with_mit = Series::new();
+    for _ in 0..n {
+        let x = alexnet_input(&mut rng);
+        no_mit.record(s_off.infer(&x)?.total_ms);
+        with_mit.record(s_on.infer(&x)?.total_ms);
+    }
+
+    let (sh, sf) = (healthy.summary(), failed.summary());
+    let (s0, s1) = (no_mit.summary(), with_mit.summary());
+    println!("\n=== Case Study II: AlexNet + CDC parity device (Figs. 13-15) ===");
+    println!("healthy:        {}", sh.line());
+    println!("device C down:  {}", sf.line());
+    println!(
+        "lost requests with CDC: {lost} (paper: zero); recovered: {recovered}/{n}"
+    );
+    println!(
+        "slowdown under failure: {:.2}× (paper: none)",
+        sf.mean / sh.mean
+    );
+    println!("\nno straggler mitigation (Fig. 14): {}", s0.line());
+    println!("{}", no_mit.render_histogram(0.0, 800.0, 16, 40));
+    println!("with straggler mitigation (Fig. 15): {}", s1.line());
+    println!("{}", with_mit.render_histogram(0.0, 800.0, 16, 40));
+    println!(
+        "mitigation improvement: mean {:.1}%, p95 {:.1}%",
+        100.0 * (1.0 - s1.mean / s0.mean),
+        100.0 * (1.0 - s1.p95 / s0.p95)
+    );
+
+    ctx.write_result(
+        "fig13_15_case2",
+        &obj(vec![
+            ("experiment", Value::Str("case2_cdc".into())),
+            ("requests_per_phase", Value::Num(n as f64)),
+            ("healthy_mean_ms", Value::Num(sh.mean)),
+            ("failed_mean_ms", Value::Num(sf.mean)),
+            ("failure_slowdown", Value::Num(sf.mean / sh.mean)),
+            ("lost_requests", Value::Num(lost as f64)),
+            ("recovered_requests", Value::Num(recovered as f64)),
+            ("no_mitigation_mean_ms", Value::Num(s0.mean)),
+            ("with_mitigation_mean_ms", Value::Num(s1.mean)),
+            ("no_mitigation_p95_ms", Value::Num(s0.p95)),
+            ("with_mitigation_p95_ms", Value::Num(s1.p95)),
+            (
+                "mitigation_mean_improvement",
+                Value::Num(1.0 - s1.mean / s0.mean),
+            ),
+        ]),
+    )?;
+    Ok(Case2 {
+        healthy,
+        failed,
+        no_mitigation: no_mit,
+        with_mitigation: with_mit,
+        lost_requests: lost,
+        recovered_requests: recovered,
+    })
+}

@@ -1,0 +1,126 @@
+//! Fig. 17 — full-model single-failure coverage: 2MR vs hybrid CDC+2MR.
+//!
+//! For each of the four paper deployments we sweep the number of
+//! *additional* redundancy devices and report the fraction of original
+//! devices protected. CDC+2MR dominates because one parity device covers a
+//! whole model-parallel layer (constant cost) where 2MR covers one device
+//! per replica (linear cost). The analytic curves are cross-checked by a
+//! Monte-Carlo failure simulation over the same deployments.
+
+use crate::cdc::coverage::{fig17_deployments, Deployment};
+use crate::error::Result;
+use crate::json::{obj, Value};
+use crate::rng::Pcg32;
+
+use super::{print_table, ExpCtx};
+
+/// Monte-Carlo cross-check: sample a uniformly random single failure and
+/// count how often the scheme masks it. Must agree with the analytic
+/// coverage to sampling error.
+pub fn simulate_coverage(
+    dep: &Deployment,
+    extra: usize,
+    hybrid: bool,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Pcg32::seeded(seed);
+    let n = dep.total_devices();
+    // Build the per-device protection map the scheme buys with `extra`.
+    let mut protected = vec![false; n];
+    let mut budget = extra;
+    if hybrid {
+        // Parity devices on the widest MP layers first.
+        let mut layers: Vec<(usize, usize)> = Vec::new(); // (start, width)
+        let mut start = 0;
+        for &w in &dep.mp_layers {
+            layers.push((start, w));
+            start += w;
+        }
+        layers.sort_by(|a, b| b.1.cmp(&a.1));
+        for (s, w) in layers {
+            if budget == 0 {
+                break;
+            }
+            for p in protected.iter_mut().skip(s).take(w) {
+                *p = true;
+            }
+            budget -= 1;
+        }
+    }
+    // Remaining budget: 2MR the first unprotected devices.
+    for p in protected.iter_mut() {
+        if budget == 0 {
+            break;
+        }
+        if !*p {
+            *p = true;
+            budget -= 1;
+        }
+    }
+    let mut masked = 0usize;
+    for _ in 0..trials {
+        let victim = rng.below(n);
+        if protected[victim] {
+            masked += 1;
+        }
+    }
+    masked as f64 / trials as f64
+}
+
+/// Run the study; returns (deployment name, extra, 2mr, cdc+2mr) tuples.
+pub fn run(ctx: &ExpCtx) -> Result<Vec<(String, usize, f64, f64)>> {
+    let mut all = Vec::new();
+    let mut json_deps = Vec::new();
+    println!("\n=== Fig. 17: full-model coverage, 2MR vs CDC+2MR ===");
+    for dep in fig17_deployments() {
+        let n = dep.total_devices();
+        let mut rows = Vec::new();
+        let mut series = Vec::new();
+        for extra in 0..=n {
+            let c2 = dep.coverage_2mr(extra);
+            let ch = dep.coverage_cdc_2mr(extra);
+            // Monte-Carlo agreement check (quick mode skips).
+            if !ctx.quick {
+                let sim = simulate_coverage(&dep, extra, true, 4000, ctx.seed + extra as u64);
+                debug_assert!((sim - ch).abs() < 0.05);
+            }
+            rows.push(vec![
+                format!("{extra}"),
+                format!("{:.0}%", c2 * 100.0),
+                format!("{:.0}%", ch * 100.0),
+            ]);
+            series.push(obj(vec![
+                ("extra", Value::Num(extra as f64)),
+                ("coverage_2mr", Value::Num(c2)),
+                ("coverage_cdc_2mr", Value::Num(ch)),
+            ]));
+            all.push((dep.name.clone(), extra, c2, ch));
+        }
+        let (full_2mr, full_hybrid) = dep.full_coverage_cost();
+        println!(
+            "\n{} — {} devices (MP layers: {:?}, singles: {})",
+            dep.name, n, dep.mp_layers, dep.single_devices
+        );
+        print_table(&["extra devices", "2MR", "CDC+2MR"], &rows);
+        println!(
+            "full coverage: 2MR needs +{full_2mr} (linear), CDC+2MR needs \
+             +{full_hybrid} (constant per MP layer — (1+1/N)× vs 2× hardware)"
+        );
+        json_deps.push(obj(vec![
+            ("name", Value::Str(dep.name.clone())),
+            ("devices", Value::Num(n as f64)),
+            ("full_cost_2mr", Value::Num(full_2mr as f64)),
+            ("full_cost_cdc_2mr", Value::Num(full_hybrid as f64)),
+            ("series", Value::Arr(series)),
+        ]));
+    }
+    ctx.write_result(
+        "fig17",
+        &obj(vec![
+            ("experiment", Value::Str("fig17_coverage".into())),
+            ("deployments", Value::Arr(json_deps)),
+        ]),
+    )?;
+    Ok(all)
+}

@@ -1,0 +1,127 @@
+//! Fig. 18 — tolerating multiple failures with overlapping partial-sum
+//! parity groups.
+//!
+//! Three fc2048 setups in increasing tolerance: no parity, one parity over
+//! all four shards (§5 scheme: 1 failure), and two parities over groups of
+//! two (the paper's last setup: up to 2 failures, one per group — "almost
+//! complete" coverage; two failures in one group need Hamming-style codes).
+//! We inject every failure pattern and measure the fraction of requests
+//! served.
+
+use crate::coordinator::{Redundancy, Session, SessionConfig, SplitSpec};
+use crate::error::Result;
+use crate::fleet::FailurePlan;
+use crate::json::{obj, Value};
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+use super::{print_table, ExpCtx};
+
+/// One measured setup.
+#[derive(Debug)]
+pub struct Setup {
+    pub label: &'static str,
+    pub redundancy: Redundancy,
+    /// survived[f] = fraction of requests served with f injected failures
+    /// (averaged over failure patterns).
+    pub survived: Vec<f64>,
+}
+
+fn cfg_for(ctx: &ExpCtx, red: Redundancy) -> SessionConfig {
+    let mut cfg = SessionConfig::new("fc2048");
+    cfg.n_devices = 4;
+    cfg.seed = ctx.seed;
+    cfg.splits.insert("fc".into(), SplitSpec { d: 4, redundancy: red });
+    cfg
+}
+
+/// All k-subsets of 0..n (n is tiny here).
+fn subsets(n: usize, k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..n {
+            cur.push(i);
+            rec(i + 1, n, k, cur, out);
+            cur.pop();
+        }
+    }
+    rec(0, n, k, &mut cur, &mut out);
+    out
+}
+
+/// Run the study.
+pub fn run(ctx: &ExpCtx) -> Result<Vec<Setup>> {
+    let setups = [
+        ("no parity", Redundancy::None),
+        ("1 parity (all shards)", Redundancy::Cdc),
+        ("2 parities (groups of 2)", Redundancy::CdcGrouped(2)),
+    ];
+    let reqs_per_pattern = if ctx.quick { 3 } else { 10 };
+    let mut results = Vec::new();
+    let mut rows = Vec::new();
+    for (label, red) in setups {
+        let mut survived = Vec::new();
+        for f in 0..=2usize {
+            let patterns = subsets(4, f);
+            let mut ok = 0usize;
+            let mut total = 0usize;
+            for pat in &patterns {
+                let mut session = Session::start(&ctx.artifacts, cfg_for(ctx, red))?;
+                for &dev in pat {
+                    session.set_failure(dev, FailurePlan::PermanentAt(0))?;
+                }
+                let mut rng = Pcg32::seeded(ctx.seed ^ (f as u64) << 8);
+                for _ in 0..reqs_per_pattern {
+                    total += 1;
+                    let x = Tensor::randn(vec![2048], &mut rng);
+                    match session.infer(&x) {
+                        Ok(_) => ok += 1,
+                        Err(_) => session.drain(),
+                    }
+                }
+            }
+            survived.push(ok as f64 / total as f64);
+        }
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}%", survived[0] * 100.0),
+            format!("{:.0}%", survived[1] * 100.0),
+            format!("{:.0}%", survived[2] * 100.0),
+        ]);
+        results.push(Setup { label, redundancy: red, survived });
+    }
+
+    println!("\n=== Fig. 18: tolerating multiple failures (fc2048, 4 shards) ===");
+    print_table(&["setup", "0 failures", "1 failure", "2 failures"], &rows);
+    println!(
+        "(paper: grouped parities tolerate one failure per group — partial \
+         coverage of 2 failures; full 2-failure correction needs \
+         Hamming-style codes)"
+    );
+
+    let json: Vec<Value> = results
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("setup", Value::Str(s.label.into())),
+                (
+                    "survived",
+                    Value::Arr(s.survived.iter().map(|&v| Value::Num(v)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    ctx.write_result(
+        "fig18",
+        &obj(vec![
+            ("experiment", Value::Str("fig18_multi_failure".into())),
+            ("setups", Value::Arr(json)),
+        ]),
+    )?;
+    Ok(results)
+}

@@ -1,0 +1,98 @@
+//! Fig. 2 — destructive accuracy drop under per-layer activation loss.
+//!
+//! The paper zeroes a fraction of one layer's data in LeNet-5 (a) and
+//! Inception v3 (b) and shows (i) accuracy collapses for loss > 70% and
+//! (ii) the deeper/more general model is *more* sensitive. We reproduce
+//! with the trained `lenet5` and the deeper trained `deepnet` stand-in
+//! (DESIGN.md §2), running real inference through the d=1 artifacts with
+//! loss injected between layers.
+
+use crate::error::Result;
+use crate::json::{obj, Value};
+use crate::model::{load_eval_set, LocalPipeline, LossInjection, Weights};
+use crate::rng::Pcg32;
+use crate::runtime::{Manifest, Runtime};
+
+use super::{print_table, ExpCtx};
+
+/// Loss fractions swept (the paper's x-axis).
+pub const FRACTIONS: [f64; 8] = [0.0, 0.1, 0.3, 0.5, 0.7, 0.8, 0.9, 0.99];
+
+/// One measured curve.
+#[derive(Debug)]
+pub struct Curve {
+    pub model: String,
+    pub layer_idx: usize,
+    pub accuracy: Vec<f64>,
+}
+
+/// Run the experiment; returns the curves for tests.
+pub fn run(ctx: &ExpCtx) -> Result<Vec<Curve>> {
+    let manifest = Manifest::load(&ctx.artifacts)?;
+    let runtime = Runtime::new()?;
+    let (images, labels) = load_eval_set(&manifest)?;
+    let n_eval = if ctx.quick { 64.min(images.len()) } else { images.len() };
+    let images = &images[..n_eval];
+    let labels = &labels[..n_eval];
+
+    let mut curves = Vec::new();
+    let mut rows = Vec::new();
+    for model_name in ["lenet5", "deepnet"] {
+        let Ok(model) = manifest.model(model_name) else { continue };
+        let weights = Weights::load(&manifest, model)?;
+        let pipe = LocalPipeline { runtime: &runtime, manifest: &manifest, model, weights: &weights };
+        // Inject into the middle weighted layer (a conv for both models),
+        // like the paper's per-layer loss.
+        let n_weighted =
+            model.layers.iter().filter(|l| l.is_weighted()).count();
+        let layer_idx = n_weighted / 2;
+        let mut acc = Vec::new();
+        for &f in &FRACTIONS {
+            let mut rng = Pcg32::new(ctx.seed, (f * 1000.0) as u64);
+            let loss = if f == 0.0 {
+                None
+            } else {
+                Some(LossInjection { layer_idx, fraction: f })
+            };
+            let a = pipe.accuracy(images, labels, loss, &mut rng)?;
+            acc.push(a);
+            rows.push(vec![
+                model_name.to_string(),
+                format!("{layer_idx}"),
+                format!("{:.0}%", f * 100.0),
+                format!("{:.1}%", a * 100.0),
+            ]);
+        }
+        curves.push(Curve { model: model_name.into(), layer_idx, accuracy: acc });
+    }
+
+    println!("\n=== Fig. 2: accuracy under per-layer data loss ===");
+    print_table(&["model", "layer", "loss", "accuracy"], &rows);
+
+    let json_curves: Vec<Value> = curves
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("model", Value::Str(c.model.clone())),
+                ("layer_idx", Value::Num(c.layer_idx as f64)),
+                (
+                    "fractions",
+                    Value::Arr(FRACTIONS.iter().map(|&f| Value::Num(f)).collect()),
+                ),
+                (
+                    "accuracy",
+                    Value::Arr(c.accuracy.iter().map(|&a| Value::Num(a)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    ctx.write_result(
+        "fig2",
+        &obj(vec![
+            ("experiment", Value::Str("fig2_accuracy_vs_loss".into())),
+            ("eval_images", Value::Num(n_eval as f64)),
+            ("curves", Value::Arr(json_curves)),
+        ]),
+    )?;
+    Ok(curves)
+}

@@ -1,0 +1,97 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §4 for the index). Each driver prints the figure's
+//! rows/series to stdout and writes a machine-readable JSON record under
+//! the results directory for EXPERIMENTS.md.
+
+pub mod ablate;
+pub mod calibrate;
+pub mod case1;
+pub mod case2;
+pub mod fig1;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig2;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Shared experiment context (CLI-provided).
+#[derive(Debug, Clone)]
+pub struct ExpCtx {
+    /// AOT artifacts directory.
+    pub artifacts: PathBuf,
+    /// Where result JSON files go.
+    pub results: PathBuf,
+    /// Request count per measured series (drivers may scale it).
+    pub requests: usize,
+    pub seed: u64,
+    /// Reduced workload for smoke runs.
+    pub quick: bool,
+}
+
+impl ExpCtx {
+    /// Defaults rooted at the repo layout.
+    pub fn new(artifacts: impl Into<PathBuf>) -> ExpCtx {
+        ExpCtx {
+            artifacts: artifacts.into(),
+            results: PathBuf::from("results"),
+            requests: 400,
+            seed: 2021,
+            quick: false,
+        }
+    }
+
+    /// Effective request count (quick mode quarters it).
+    pub fn n_requests(&self) -> usize {
+        if self.quick {
+            (self.requests / 4).max(20)
+        } else {
+            self.requests
+        }
+    }
+
+    /// Write a result JSON document.
+    pub fn write_result(&self, name: &str, v: &Value) -> Result<()> {
+        std::fs::create_dir_all(&self.results)
+            .map_err(|e| Error::io(self.results.display().to_string(), e))?;
+        let path = self.results.join(format!("{name}.json"));
+        std::fs::write(&path, v.to_string_pretty())
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        println!("[result] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Render a simple aligned table to stdout.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let parts: Vec<String> = cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        println!("| {} |", parts.join(" | "));
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    println!(
+        "|{}|",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    );
+    for row in rows {
+        line(row.clone());
+    }
+}

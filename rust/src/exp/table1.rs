@@ -1,0 +1,54 @@
+//! Table 1 — distribution techniques suitable for CDC robustness.
+//!
+//! The Yes/No column is *derived*, not hard-coded: a method is suitable
+//! iff it divides the weights without dividing the input (§5.3). The unit
+//! and property tests in `partition` prove each row; this driver prints
+//! the table and records it.
+
+use crate::error::Result;
+use crate::json::{obj, Value};
+use crate::partition::SplitMethod;
+
+use super::{print_table, ExpCtx};
+
+/// Print + persist Table 1.
+pub fn run(ctx: &ExpCtx) -> Result<Vec<(String, bool)>> {
+    let yn = |b: bool| if b { "Yes" } else { "No" }.to_string();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for m in SplitMethod::ALL {
+        let p = m.props();
+        rows.push(vec![
+            p.layer.to_string(),
+            m.name().to_string(),
+            yn(p.divides_input),
+            yn(p.divides_weight),
+            yn(p.divides_output),
+            yn(m.cdc_suitable()),
+        ]);
+        out.push((format!("{}/{}", p.layer, m.name()), m.cdc_suitable()));
+    }
+    println!("\n=== Table 1: distribution techniques suitable for robustness ===");
+    print_table(
+        &["layer", "method", "divides input", "divides weight", "divides output", "suitable"],
+        &rows,
+    );
+
+    let json_rows: Vec<Value> = out
+        .iter()
+        .map(|(k, s)| {
+            obj(vec![
+                ("method", Value::Str(k.clone())),
+                ("suitable", Value::Bool(*s)),
+            ])
+        })
+        .collect();
+    ctx.write_result(
+        "table1",
+        &obj(vec![
+            ("experiment", Value::Str("table1_suitability".into())),
+            ("rows", Value::Arr(json_rows)),
+        ]),
+    )?;
+    Ok(out)
+}

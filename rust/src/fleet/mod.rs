@@ -1,0 +1,293 @@
+//! Simulated IoT fleet: device threads with real PJRT compute and a
+//! simulated RPi/WiFi timing model.
+//!
+//! Each [`Device`] is an OS thread holding its deployed tasks (artifact
+//! name + its weight shard — the paper's "all weights on the SD card"
+//! model) and a per-device RNG stream. On a [`WorkOrder`] it *really*
+//! executes its shard through the shared PJRT compute server, then stamps
+//! the completion with a **simulated** arrival time:
+//!
+//! ```text
+//! arrival = t_dispatch + net(request bytes) + Σ compute(tasks) + net(reply)
+//! compute(task) = task.macs / rate_macs_per_ms     (RPi-calibrated)
+//! ```
+//!
+//! Failures (permanent or intermittent) null the result; in virtual-time
+//! mode the completion is still delivered with `t_arrival = ∞` so the
+//! coordinator's policy layer sees the full arrival picture and stays
+//! deterministic. This keeps the *code path* identical to a lossy network
+//! while making every experiment reproducible from a seed.
+
+pub mod net;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+use crate::runtime::server::ComputeHandle;
+use crate::tensor::Tensor;
+pub use net::NetConfig;
+
+/// RPi 3B compute rate, calibrated to the paper's §6 anchor: a 2048-wide
+/// fc layer (2048² MACs) takes 50 ms on one device.
+pub const RPI_MACS_PER_MS: f64 = (2048.0 * 2048.0) / 50.0;
+
+/// Failure behaviour of one device (paper §2: devices become busy, lose
+/// connectivity, or disappear).
+#[derive(Debug, Clone, Default)]
+pub enum FailurePlan {
+    /// Healthy device.
+    #[default]
+    None,
+    /// Device dies permanently at the given request index.
+    PermanentAt(u64),
+    /// Each task reply is independently lost with this probability
+    /// (short disconnects / user interaction).
+    Intermittent(f64),
+}
+
+impl FailurePlan {
+    /// Does this device drop the reply for request `req`?
+    pub fn drops(&self, req: u64, rng: &mut Pcg32) -> bool {
+        match self {
+            FailurePlan::None => false,
+            FailurePlan::PermanentAt(at) => req >= *at,
+            FailurePlan::Intermittent(p) => rng.bernoulli(*p),
+        }
+    }
+}
+
+/// Static description of one simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub id: usize,
+    /// Compute rate in MACs/ms (default: RPi 3B).
+    pub rate_macs_per_ms: f64,
+    pub failure: FailurePlan,
+}
+
+impl DeviceConfig {
+    /// A healthy RPi-class device.
+    pub fn rpi(id: usize) -> DeviceConfig {
+        DeviceConfig { id, rate_macs_per_ms: RPI_MACS_PER_MS, failure: FailurePlan::None }
+    }
+}
+
+/// A deployed task: one shard of one layer.
+#[derive(Debug, Clone)]
+pub struct TaskDef {
+    /// Unique id within the session.
+    pub id: u64,
+    /// Artifact to execute.
+    pub artifact: String,
+    /// This shard's weight slice (w, b) — resident on the device and
+    /// shared (`Arc`) with the coordinator's failover copy: a 4096² fc
+    /// shard is 64 MiB, so weights must never be deep-copied per request.
+    pub w: Arc<Tensor>,
+    pub b: Arc<Tensor>,
+    /// Cost model inputs.
+    pub macs: u64,
+    pub reply_bytes: u64,
+}
+
+/// One layer's work for one device (may contain several tasks after a
+/// failover reassignment — they execute serially, which is exactly the
+/// paper's Case-Study-I slowdown mechanism).
+#[derive(Debug)]
+pub struct WorkOrder {
+    pub req: u64,
+    /// Task ids to run, in order.
+    pub tasks: Vec<u64>,
+    pub input: Arc<Tensor>,
+    pub request_bytes: u64,
+    /// Simulated dispatch timestamp (ms).
+    pub t_dispatch_ms: f64,
+}
+
+/// A task completion event.
+#[derive(Debug)]
+pub struct Completion {
+    pub req: u64,
+    pub task: u64,
+    pub device: usize,
+    /// None when the reply was lost (failure/drop).
+    pub result: Option<Tensor>,
+    /// Simulated arrival time at the coordinator (ms); ∞ when lost.
+    pub t_arrival_ms: f64,
+}
+
+enum ToDevice {
+    Deploy(Vec<TaskDef>),
+    Undeploy(Vec<u64>),
+    Work(WorkOrder),
+    SetFailure(FailurePlan),
+}
+
+/// Handle to a running device thread.
+pub struct Device {
+    pub id: usize,
+    tx: Sender<ToDevice>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Device {
+    /// Spawn a device thread.
+    ///
+    /// `completions` is the shared channel back to the coordinator;
+    /// `compute` is the PJRT compute-server handle; `net`/`cfg` drive the
+    /// timing model; `seed` makes the device's stochastic behaviour
+    /// reproducible.
+    pub fn spawn(
+        cfg: DeviceConfig,
+        net: NetConfig,
+        seed: u64,
+        compute: ComputeHandle,
+        completions: Sender<Completion>,
+    ) -> Result<Device> {
+        let (tx, rx) = channel();
+        let id = cfg.id;
+        let join = std::thread::Builder::new()
+            .name(format!("device-{id}"))
+            .spawn(move || device_main(cfg, net, seed, compute, rx, completions))
+            .map_err(|e| Error::Fleet(format!("spawn device {id}: {e}")))?;
+        Ok(Device { id, tx, join: Some(join) })
+    }
+
+    /// Install tasks (weights included) on the device.
+    pub fn deploy(&self, tasks: Vec<TaskDef>) -> Result<()> {
+        self.send(ToDevice::Deploy(tasks))
+    }
+
+    /// Remove tasks from the device.
+    pub fn undeploy(&self, task_ids: Vec<u64>) -> Result<()> {
+        self.send(ToDevice::Undeploy(task_ids))
+    }
+
+    /// Dispatch one layer's work.
+    pub fn dispatch(&self, order: WorkOrder) -> Result<()> {
+        self.send(ToDevice::Work(order))
+    }
+
+    /// Change the failure plan mid-experiment (case studies flip this).
+    pub fn set_failure(&self, plan: FailurePlan) -> Result<()> {
+        self.send(ToDevice::SetFailure(plan))
+    }
+
+    fn send(&self, msg: ToDevice) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| Error::Fleet(format!("device {} is gone", self.id)))
+    }
+}
+
+impl Drop for Device {
+    fn drop(&mut self) {
+        // Closing the channel ends the thread's recv loop.
+        let (dead, _) = channel();
+        self.tx = dead;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn device_main(
+    cfg: DeviceConfig,
+    net: NetConfig,
+    seed: u64,
+    compute: ComputeHandle,
+    rx: Receiver<ToDevice>,
+    completions: Sender<Completion>,
+) {
+    let mut tasks: std::collections::HashMap<u64, TaskDef> = Default::default();
+    let mut rng = Pcg32::new(seed, cfg.id as u64 + 1000);
+    let mut failure = cfg.failure.clone();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToDevice::Deploy(ts) => {
+                for t in ts {
+                    tasks.insert(t.id, t);
+                }
+            }
+            ToDevice::Undeploy(ids) => {
+                for id in ids {
+                    tasks.remove(&id);
+                }
+            }
+            ToDevice::SetFailure(plan) => failure = plan,
+            ToDevice::Work(order) => {
+                let dropped = failure.drops(order.req, &mut rng);
+                // Request transfer happens once per order (deterministic
+                // leg; congestion jitter is on the replies — see net.rs).
+                let mut cum_ms = net.sample_request(order.request_bytes);
+                for task_id in &order.tasks {
+                    let task = match tasks.get(task_id) {
+                        Some(t) => t,
+                        None => {
+                            let _ = completions.send(Completion {
+                                req: order.req,
+                                task: *task_id,
+                                device: cfg.id,
+                                result: None,
+                                t_arrival_ms: f64::INFINITY,
+                            });
+                            continue;
+                        }
+                    };
+                    // REAL compute through PJRT (correctness), SIMULATED
+                    // service time (performance model).
+                    let result = compute
+                        .execute(&task.artifact, vec![
+                            task.w.clone(),
+                            task.b.clone(),
+                            order.input.clone(),
+                        ])
+                        .ok();
+                    cum_ms += task.macs as f64 / cfg.rate_macs_per_ms;
+                    let reply_ms = net.sample(task.reply_bytes, &mut rng);
+                    let (result, t_arrival_ms) = if dropped || result.is_none() {
+                        (None, f64::INFINITY)
+                    } else {
+                        (result, order.t_dispatch_ms + cum_ms + reply_ms)
+                    };
+                    let _ = completions.send(Completion {
+                        req: order.req,
+                        task: *task_id,
+                        device: cfg.id,
+                        result,
+                        t_arrival_ms,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_plans() {
+        let mut rng = Pcg32::seeded(1);
+        assert!(!FailurePlan::None.drops(5, &mut rng));
+        let p = FailurePlan::PermanentAt(3);
+        assert!(!p.drops(2, &mut rng));
+        assert!(p.drops(3, &mut rng));
+        assert!(p.drops(100, &mut rng));
+        let i = FailurePlan::Intermittent(1.0);
+        assert!(i.drops(0, &mut rng));
+        let never = FailurePlan::Intermittent(0.0);
+        assert!(!never.drops(0, &mut rng));
+    }
+
+    #[test]
+    fn rpi_rate_matches_paper_anchor() {
+        // fc-2048 on one RPi = 50 ms (paper §2/§6).
+        let macs = 2048u64 * 2048;
+        let ms = macs as f64 / RPI_MACS_PER_MS;
+        assert!((ms - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,32 @@
+//! # cdc-dnn — Robust distributed DNN inference with Coded Distributed Computing
+//!
+//! Reproduction of Hadidi, Cao & Kim, *"Creating Robust Deep Neural
+//! Networks With Coded Distributed Computing for IoT Systems"* (2021).
+//!
+//! The crate is the L3 coordinator of a three-layer stack (see DESIGN.md):
+//! JAX/Pallas author the per-device GEMM programs at build time; this crate
+//! loads the AOT artifacts via PJRT, distributes single-batch inference
+//! across a (simulated) IoT fleet with the paper's model-parallel splitting
+//! methods, and makes the system robust to device failure/stragglers with
+//! one extra *coded* device per layer whose weights are the offline sum of
+//! the data shards — recovery is a local subtraction, cost is constant in
+//! fleet size.
+
+pub mod cdc;
+pub mod coordinator;
+pub mod bench;
+pub mod config;
+pub mod error;
+pub mod exp;
+pub mod fleet;
+pub mod json;
+pub mod model;
+pub mod partition;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod tensor;
+
+pub use error::{Error, Result};
+pub use tensor::Tensor;

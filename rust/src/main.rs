@@ -1,0 +1,184 @@
+//! `cdc-dnn` — CLI launcher for the coded-distributed-computing DNN
+//! serving system and its paper-reproduction experiments.
+//!
+//! ```text
+//! cdc-dnn <command> [options]
+//!
+//! commands:
+//!   fig1        arrival-time histogram (paper Fig. 1)
+//!   fig2        accuracy vs per-layer data loss (Fig. 2)
+//!   table1      split-method suitability table (Table 1)
+//!   case1       AlexNet failure without robustness (Figs. 11-12)
+//!   case2       AlexNet + CDC parity device (Figs. 13-15)
+//!   fig16       straggler-mitigation sweep (Fig. 16)
+//!   fig17       coverage: 2MR vs CDC+2MR (Fig. 17)
+//!   fig18       multi-failure parity groups (Fig. 18)
+//!   calibrate   simulator-vs-paper anchor table
+//!   serve       serve a deployment file (see --deployment)
+//!   all         every experiment in order
+//!
+//! options:
+//!   --artifacts DIR    AOT artifacts directory   [default: artifacts]
+//!   --results DIR      result JSON directory     [default: results]
+//!   --requests N       requests per series       [default: 400]
+//!   --seed S           experiment seed           [default: 2021]
+//!   --quick            reduced workloads (CI smoke)
+//!   --deployment FILE  deployment JSON for `serve`
+//! ```
+
+use cdc_dnn::config::load_deployment;
+use cdc_dnn::coordinator::Session;
+use cdc_dnn::exp::{self, ExpCtx};
+use cdc_dnn::metrics::Series;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+
+fn usage() -> ! {
+    // The module doc above is the single source of truth for help text.
+    print!("{}", HELP);
+    std::process::exit(2);
+}
+
+const HELP: &str = "cdc-dnn — robust distributed DNN inference with CDC\n\n\
+usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
+       [--seed S] [--quick] [--deployment FILE]\n\n\
+commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          serve all\n";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args[0].clone();
+    let mut ctx = ExpCtx::new("artifacts");
+    let mut deployment: Option<String> = None;
+    let mut i = 1;
+    while i < args.len() {
+        let need = |i: usize| {
+            args.get(i + 1).cloned().unwrap_or_else(|| {
+                eprintln!("missing value for {}", args[i]);
+                std::process::exit(2)
+            })
+        };
+        match args[i].as_str() {
+            "--artifacts" => {
+                ctx.artifacts = need(i).into();
+                i += 2;
+            }
+            "--results" => {
+                ctx.results = need(i).into();
+                i += 2;
+            }
+            "--requests" => {
+                ctx.requests = need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --requests");
+                    std::process::exit(2)
+                });
+                i += 2;
+            }
+            "--seed" => {
+                ctx.seed = need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --seed");
+                    std::process::exit(2)
+                });
+                i += 2;
+            }
+            "--quick" => {
+                ctx.quick = true;
+                i += 1;
+            }
+            "--deployment" => {
+                deployment = Some(need(i));
+                i += 2;
+            }
+            "-h" | "--help" => usage(),
+            other => {
+                eprintln!("unknown option {other}");
+                usage();
+            }
+        }
+    }
+
+    let result = match cmd.as_str() {
+        "fig1" => exp::fig1::run(&ctx).map(|_| ()),
+        "fig2" => exp::fig2::run(&ctx).map(|_| ()),
+        "table1" => exp::table1::run(&ctx).map(|_| ()),
+        "case1" => exp::case1::run(&ctx).map(|_| ()),
+        "case2" => exp::case2::run(&ctx).map(|_| ()),
+        "fig16" => exp::fig16::run(&ctx).map(|_| ()),
+        "fig17" => exp::fig17::run(&ctx).map(|_| ()),
+        "fig18" => exp::fig18::run(&ctx).map(|_| ()),
+        "calibrate" => exp::calibrate::run(&ctx),
+        "ablate" => exp::ablate::run(&ctx),
+        "serve" => serve(&ctx, deployment.as_deref()),
+        "all" => run_all(&ctx),
+        _ => {
+            eprintln!("unknown command {cmd}");
+            usage();
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run_all(ctx: &ExpCtx) -> cdc_dnn::Result<()> {
+    exp::calibrate::run(ctx)?;
+    exp::table1::run(ctx)?;
+    exp::fig1::run(ctx)?;
+    exp::fig2::run(ctx)?;
+    exp::case1::run(ctx)?;
+    exp::case2::run(ctx)?;
+    exp::fig16::run(ctx)?;
+    exp::fig17::run(ctx)?;
+    exp::fig18::run(ctx)?;
+    exp::ablate::run(ctx)?;
+    Ok(())
+}
+
+/// Serve a deployment file: run `--requests` single-batch inferences with
+/// random inputs and report the latency distribution and loss statistics.
+fn serve(ctx: &ExpCtx, deployment: Option<&str>) -> cdc_dnn::Result<()> {
+    let path = deployment.unwrap_or("configs/lenet5_cdc.json");
+    let cfg = load_deployment(std::path::Path::new(path))?;
+    println!(
+        "serving {} on {} data devices (+redundancy)…",
+        cfg.model, cfg.n_devices
+    );
+    let input_shape = {
+        let manifest = cdc_dnn::runtime::Manifest::load(&ctx.artifacts)?;
+        manifest.model(&cfg.model)?.input_shape.clone()
+    };
+    let mut session = Session::start(&ctx.artifacts, cfg)?;
+    let mut rng = Pcg32::seeded(ctx.seed);
+    let mut lat = Series::new();
+    let mut lost = 0u64;
+    let mut recovered = 0u64;
+    let n = ctx.n_requests();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let x = Tensor::randn(input_shape.clone(), &mut rng);
+        match session.infer(&x) {
+            Ok(t) => {
+                lat.record(t.total_ms);
+                if t.any_recovery {
+                    recovered += 1;
+                }
+            }
+            Err(_) => {
+                lost += 1;
+                session.drain();
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = lat.summary();
+    println!("requests: {n}  lost: {lost}  recovered: {recovered}");
+    println!("simulated latency: {}", s.line());
+    println!(
+        "harness wall-clock: {wall:.2}s ({:.1} req/s through real PJRT compute)",
+        n as f64 / wall
+    );
+    Ok(())
+}

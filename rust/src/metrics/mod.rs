@@ -1,0 +1,238 @@
+//! Streaming latency metrics: histograms, percentiles, ASCII rendering.
+//!
+//! Every experiment in the paper reports arrival-time / end-to-end latency
+//! *distributions* (Figs. 1, 12, 14, 15), so the harness keeps full sample
+//! vectors (experiments are small enough) plus log-bucketed histograms for
+//! rendering, and a `Summary` with the standard percentiles.
+
+use std::fmt::Write as _;
+
+/// A collected latency series (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    /// Empty series.
+    pub fn new() -> Series {
+        Series::default()
+    }
+
+    /// Record one sample (ms).
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if no samples.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Raw samples.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Summary statistics of the series.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// Fraction of samples ≤ x (empirical CDF — Fig. 1's "34% within
+    /// 100 ms" style anchors).
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let n = self.samples.iter().filter(|&&v| v <= x).count();
+        n as f64 / self.samples.len() as f64
+    }
+
+    /// Fixed-width histogram over [lo, hi) with `bins` buckets;
+    /// returns bucket counts (values outside clamp to first/last).
+    pub fn histogram(&self, lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; bins];
+        if self.samples.is_empty() || hi <= lo {
+            return counts;
+        }
+        let w = (hi - lo) / bins as f64;
+        for &s in &self.samples {
+            let idx = (((s - lo) / w).floor() as i64).clamp(0, bins as i64 - 1);
+            counts[idx as usize] += 1;
+        }
+        counts
+    }
+
+    /// Render an ASCII histogram like the paper's latency figures.
+    pub fn render_histogram(&self, lo: f64, hi: f64, bins: usize, width: usize) -> String {
+        let counts = self.histogram(lo, hi, bins);
+        let max = counts.iter().copied().max().unwrap_or(1).max(1);
+        let w = (hi - lo) / bins as f64;
+        let mut out = String::new();
+        for (i, c) in counts.iter().enumerate() {
+            let bar = "#".repeat(c * width / max);
+            let pct = 100.0 * *c as f64 / self.samples.len().max(1) as f64;
+            let _ = writeln!(
+                out,
+                "{:>8.1}-{:<8.1} |{:<w$}| {:>5} ({pct:>5.1}%)",
+                lo + i as f64 * w,
+                lo + (i + 1) as f64 * w,
+                bar,
+                c,
+                w = width,
+            );
+        }
+        out
+    }
+}
+
+/// Percentile summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                count: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 0.50),
+            p95: percentile_sorted(&s, 0.95),
+            p99: percentile_sorted(&s, 0.99),
+            max: s[n - 1],
+        }
+    }
+
+    /// One-line report string.
+    pub fn line(&self) -> String {
+        format!(
+            "n={} mean={:.2} std={:.2} min={:.2} p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+            self.count, self.mean, self.std, self.min, self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
+/// Percentile of an already-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Throughput counter over simulated or wall time.
+#[derive(Debug, Default, Clone)]
+pub struct Throughput {
+    pub completed: u64,
+    pub failed: u64,
+    pub recovered: u64,
+    pub total_ms: f64,
+}
+
+impl Throughput {
+    /// Requests/second given accumulated time.
+    pub fn rps(&self) -> f64 {
+        if self.total_ms <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.total_ms / 1000.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.p95 - 95.05).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn cdf_anchors() {
+        let mut s = Series::new();
+        for v in [50.0, 80.0, 120.0, 200.0] {
+            s.record(v);
+        }
+        assert_eq!(s.cdf_at(100.0), 0.5);
+        assert_eq!(s.cdf_at(49.0), 0.0);
+        assert_eq!(s.cdf_at(200.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_clamping() {
+        let mut s = Series::new();
+        for v in [-5.0, 0.0, 9.9, 10.0, 19.9, 25.0] {
+            s.record(v);
+        }
+        let h = s.histogram(0.0, 20.0, 2);
+        assert_eq!(h, vec![3, 3]); // -5 clamps low, 25 clamps high
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = Series::new();
+        assert_eq!(s.summary().count, 0);
+        assert_eq!(s.cdf_at(1.0), 0.0);
+        assert_eq!(s.histogram(0.0, 1.0, 4), vec![0; 4]);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let mut s = Series::new();
+        for _ in 0..10 {
+            s.record(5.0);
+        }
+        let r = s.render_histogram(0.0, 10.0, 2, 20);
+        assert!(r.contains("10"), "{r}");
+    }
+}

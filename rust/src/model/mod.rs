@@ -1,0 +1,212 @@
+//! Model weights + local reference pipeline.
+//!
+//! Weights live in `artifacts/weights/<model>.bin` in matrix form (conv
+//! filters pre-unrolled to (K, F²C) by the build path) and are loaded here
+//! into [`Tensor`]s. The [`LocalPipeline`] runs a whole model on the local
+//! PJRT runtime through the same d=1 artifacts the fleet uses — it is the
+//! accuracy oracle for the Fig. 2 loss-injection experiment and the
+//! correctness reference for the distributed coordinator.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+use crate::runtime::manifest::{LayerManifest, Manifest, ModelManifest};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Per-layer weight matrices of one model.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    /// layer name → (W (m,k), b (m,1)).
+    by_layer: BTreeMap<String, (Tensor, Tensor)>,
+}
+
+impl Weights {
+    /// Load a model's weights from its manifest entry.
+    pub fn load(manifest: &Manifest, model: &ModelManifest) -> Result<Weights> {
+        let raw = manifest.read_f32(&model.weights_file)?;
+        let mut by_layer = BTreeMap::new();
+        for layer in &model.layers {
+            if !layer.is_weighted() {
+                continue;
+            }
+            let (m, k) = layer.w_shape.ok_or_else(|| {
+                Error::Artifact(format!("layer {} missing w_shape", layer.name))
+            })?;
+            let wo = layer.w_offset.unwrap() / 4;
+            let bo = layer.b_offset.unwrap() / 4;
+            let w = Tensor::new(vec![m, k], raw[wo..wo + m * k].to_vec())?;
+            let b = Tensor::new(vec![m, 1], raw[bo..bo + m].to_vec())?;
+            by_layer.insert(layer.name.clone(), (w, b));
+        }
+        Ok(Weights { by_layer })
+    }
+
+    /// Weight matrix of a layer.
+    pub fn w(&self, layer: &str) -> Result<&Tensor> {
+        self.by_layer
+            .get(layer)
+            .map(|(w, _)| w)
+            .ok_or_else(|| Error::Config(format!("no weights for layer {layer:?}")))
+    }
+
+    /// Bias column of a layer.
+    pub fn b(&self, layer: &str) -> Result<&Tensor> {
+        self.by_layer
+            .get(layer)
+            .map(|(_, b)| b)
+            .ok_or_else(|| Error::Config(format!("no weights for layer {layer:?}")))
+    }
+}
+
+/// MAC count of one layer (cost model used for balanced assignment and the
+/// fleet's service-time scaling).
+pub fn layer_macs(layer: &LayerManifest) -> u64 {
+    match layer.kind.as_str() {
+        "fc" => (layer.m * layer.input_shape[0]) as u64,
+        "conv" => {
+            // Output spatial size *before* any fused pool.
+            let (h, w) = (layer.input_shape[0], layer.input_shape[1]);
+            let (oh, ow) = if layer.padding == "SAME" {
+                (h.div_ceil(layer.s), w.div_ceil(layer.s))
+            } else {
+                ((h - layer.f) / layer.s + 1, (w - layer.f) / layer.s + 1)
+            };
+            (layer.k * layer.f * layer.f * layer.input_shape[2] * oh * ow) as u64
+        }
+        _ => 0,
+    }
+}
+
+/// MACs of one shard when the layer is split `d` ways (uniform shards).
+pub fn shard_macs(layer: &LayerManifest, d: usize) -> u64 {
+    if d <= 1 {
+        return layer_macs(layer);
+    }
+    let total = layer_macs(layer);
+    let height = if layer.kind == "fc" { layer.m } else { layer.k };
+    total * (height.div_ceil(d) as u64) / height as u64
+}
+
+/// Approximate request/response bytes for a shard task (f32 payloads) —
+/// drives the network model's bandwidth term.
+pub fn shard_io_bytes(layer: &LayerManifest, d: usize) -> (u64, u64) {
+    let input: usize = layer.input_shape.iter().product();
+    let out_height = layer.shard_height(d);
+    let output = match layer.kind.as_str() {
+        "fc" => out_height,
+        "conv" => {
+            let oh = layer.output_shape[0] * layer.pool.max(1);
+            let ow = layer.output_shape[1] * layer.pool.max(1);
+            oh * ow * out_height
+        }
+        _ => 0,
+    };
+    ((input * 4) as u64, (output * 4) as u64)
+}
+
+/// Local single-device executor over d=1 artifacts (+ rust epilogues).
+pub struct LocalPipeline<'a> {
+    pub runtime: &'a Runtime,
+    pub manifest: &'a Manifest,
+    pub model: &'a ModelManifest,
+    pub weights: &'a Weights,
+}
+
+/// Where to inject activation loss for Fig. 2.
+#[derive(Debug, Clone, Copy)]
+pub struct LossInjection {
+    /// Index into the model's weighted layers (0 = first conv/fc).
+    pub layer_idx: usize,
+    /// Fraction of that layer's output activations zeroed.
+    pub fraction: f64,
+}
+
+impl<'a> LocalPipeline<'a> {
+    /// Run the model on one input; optionally zero a fraction of one
+    /// layer's output activations (the paper's Fig. 2 data-loss model).
+    pub fn run(
+        &self,
+        x: &Tensor,
+        loss: Option<LossInjection>,
+        rng: &mut Pcg32,
+    ) -> Result<Tensor> {
+        let mut cur = if self.model.input_shape.len() == 1 {
+            x.clone().reshape(vec![x.len(), 1])?
+        } else {
+            x.clone()
+        };
+        let mut weighted_idx = 0usize;
+        for layer in &self.model.layers {
+            match layer.kind.as_str() {
+                "fc" | "conv" => {
+                    let arts = layer.splits.get(&1).ok_or_else(|| {
+                        Error::Config(format!("layer {} has no d=1 artifact", layer.name))
+                    })?;
+                    // Use the fused-activation flavor when available.
+                    let (name, fused_relu) = match &arts.relu {
+                        Some(r) => (r.as_str(), true),
+                        None => (arts.lin.as_str(), false),
+                    };
+                    let w = self.weights.w(&layer.name)?;
+                    let b = self.weights.b(&layer.name)?;
+                    let mut out = self.runtime.execute(self.manifest, name, &[w, b, &cur])?;
+                    if layer.relu && !fused_relu {
+                        out.relu();
+                    }
+                    if layer.kind == "conv" && layer.pool > 0 {
+                        out = out.maxpool(layer.pool, layer.pool)?;
+                    }
+                    if let Some(li) = loss {
+                        if li.layer_idx == weighted_idx {
+                            out.inject_loss(li.fraction, rng);
+                        }
+                    }
+                    weighted_idx += 1;
+                    cur = out;
+                }
+                "maxpool" => cur = cur.maxpool(layer.pool, layer.pool)?,
+                "flatten" => cur = cur.flatten_col(),
+                "gap" => cur = cur.gap()?,
+                other => return Err(Error::Config(format!("unknown layer kind {other}"))),
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Classification accuracy over the manifest's eval set with optional
+    /// loss injection — one Fig. 2 data point.
+    pub fn accuracy(
+        &self,
+        images: &[Tensor],
+        labels: &[i32],
+        loss: Option<LossInjection>,
+        rng: &mut Pcg32,
+    ) -> Result<f64> {
+        let mut correct = 0usize;
+        for (img, &label) in images.iter().zip(labels) {
+            let logits = self.run(img, loss, rng)?;
+            if logits.argmax() == label as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / images.len() as f64)
+    }
+}
+
+/// Load the Fig.-2 eval set as (images, labels).
+pub fn load_eval_set(manifest: &Manifest) -> Result<(Vec<Tensor>, Vec<i32>)> {
+    let ev = &manifest.eval_set;
+    let raw = manifest.read_f32(&ev.images)?;
+    let labels = manifest.read_i32(&ev.labels)?;
+    let per: usize = ev.image_shape.iter().product();
+    if raw.len() != per * ev.count || labels.len() != ev.count {
+        return Err(Error::Artifact("eval set size mismatch".into()));
+    }
+    let images = raw
+        .chunks_exact(per)
+        .map(|c| Tensor::new(ev.image_shape.clone(), c.to_vec()))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((images, labels))
+}

@@ -1,0 +1,251 @@
+//! Model-parallel splitting methods (paper §4) and their matrix-level
+//! properties (§5.1, Table 1), plus shard-plan construction.
+//!
+//! Mirrors `python/compile/splits.py`; the two are kept in sync by the
+//! golden-manifest tests.
+
+use crate::error::{Error, Result};
+use crate::model::Weights;
+use crate::runtime::manifest::LayerManifest;
+use crate::tensor::Tensor;
+
+/// The five distribution methods of Section 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SplitMethod {
+    /// fc: each device computes a row-slice of the output (Fig. 5a/6).
+    OutputSplit,
+    /// fc: each device holds a column-slice of W and an input slice (Fig. 5b/7).
+    InputSplit,
+    /// conv: each device holds a subset of filters (Fig. 8).
+    ChannelSplit,
+    /// conv: each device processes a spatial slice of the input (Fig. 9).
+    SpatialSplit,
+    /// conv: depth-wise split of both filters and input (Fig. 10).
+    FilterSplit,
+}
+
+/// Matrix-level properties of a split method (one row of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitProps {
+    pub layer: &'static str,
+    pub divides_input: bool,
+    pub divides_weight: bool,
+    pub divides_output: bool,
+}
+
+impl SplitMethod {
+    /// All methods in Table 1 order.
+    pub const ALL: [SplitMethod; 5] = [
+        SplitMethod::OutputSplit,
+        SplitMethod::InputSplit,
+        SplitMethod::ChannelSplit,
+        SplitMethod::SpatialSplit,
+        SplitMethod::FilterSplit,
+    ];
+
+    /// Table-1 row for this method.
+    pub fn props(self) -> SplitProps {
+        match self {
+            SplitMethod::OutputSplit => SplitProps {
+                layer: "fc",
+                divides_input: false,
+                divides_weight: true,
+                divides_output: true,
+            },
+            SplitMethod::InputSplit => SplitProps {
+                layer: "fc",
+                divides_input: true,
+                divides_weight: true,
+                divides_output: false,
+            },
+            SplitMethod::ChannelSplit => SplitProps {
+                layer: "conv",
+                divides_input: false,
+                divides_weight: true,
+                divides_output: true,
+            },
+            SplitMethod::SpatialSplit => SplitProps {
+                layer: "conv",
+                divides_input: true,
+                divides_weight: false,
+                divides_output: true,
+            },
+            SplitMethod::FilterSplit => SplitProps {
+                layer: "conv",
+                divides_input: true,
+                divides_weight: true,
+                divides_output: true,
+            },
+        }
+    }
+
+    /// The paper's §5.3 criterion: a method admits library-level CDC iff
+    /// it divides the weights *without* dividing the input — only then can
+    /// the parity weights be summed offline, input-independently.
+    pub fn cdc_suitable(self) -> bool {
+        let p = self.props();
+        p.divides_weight && !p.divides_input
+    }
+
+    /// Method name as printed in Table 1.
+    pub fn name(self) -> &'static str {
+        match self {
+            SplitMethod::OutputSplit => "Output",
+            SplitMethod::InputSplit => "Input",
+            SplitMethod::ChannelSplit => "Channel",
+            SplitMethod::SpatialSplit => "Spatial",
+            SplitMethod::FilterSplit => "Filter",
+        }
+    }
+
+    /// The CDC-suitable method for a layer kind.
+    pub fn suitable_for(kind: &str) -> Option<SplitMethod> {
+        match kind {
+            "fc" => Some(SplitMethod::OutputSplit),
+            "conv" => Some(SplitMethod::ChannelSplit),
+            _ => None,
+        }
+    }
+}
+
+/// Split `total` into `parts` contiguous ranges differing by ≤ 1 in size.
+pub fn balanced_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0, "parts must be positive");
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+/// One device's slice of a layer under output/channel splitting.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Shard index within the layer (0..d).
+    pub index: usize,
+    /// Row range [lo, hi) of the full weight matrix this shard owns.
+    pub rows: (usize, usize),
+    /// Uniform shard height (ceil(m/d)); rows beyond `hi-lo` are zero pad.
+    pub height: usize,
+}
+
+/// The split plan of one layer: `d` uniform shards (+ optional parity).
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub layer: String,
+    pub method: SplitMethod,
+    pub d: usize,
+    pub shards: Vec<ShardSpec>,
+    /// Artifact names for the two epilogue flavors.
+    pub artifact_lin: String,
+    pub artifact_relu: Option<String>,
+}
+
+impl LayerPlan {
+    /// Build the plan for a weighted layer split `d` ways with its
+    /// CDC-suitable method. Errors if the manifest carries no artifacts
+    /// for this degree.
+    pub fn build(layer: &LayerManifest, d: usize) -> Result<LayerPlan> {
+        let method = SplitMethod::suitable_for(&layer.kind).ok_or_else(|| {
+            Error::Config(format!("layer kind {} is not distributable", layer.kind))
+        })?;
+        let arts = layer.splits.get(&d).ok_or_else(|| {
+            Error::Config(format!(
+                "layer {} has no artifacts for split degree {d} (available: {:?})",
+                layer.name,
+                layer.splits.keys().collect::<Vec<_>>()
+            ))
+        })?;
+        let total = if layer.kind == "fc" { layer.m } else { layer.k };
+        let height = total.div_ceil(d);
+        let shards = (0..d)
+            .map(|i| ShardSpec {
+                index: i,
+                rows: (i * height, ((i + 1) * height).min(total)),
+                height,
+            })
+            .collect();
+        Ok(LayerPlan {
+            layer: layer.name.clone(),
+            method,
+            d,
+            shards,
+            artifact_lin: arts.lin.clone(),
+            artifact_relu: arts.relu.clone(),
+        })
+    }
+
+    /// Total real (unpadded) rows across shards — must equal the layer
+    /// height (balanced-assignment invariant).
+    pub fn covered_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.rows.1 - s.rows.0).sum()
+    }
+
+    /// Slice one shard's (zero-padded) weights out of the full matrices.
+    pub fn shard_weights(
+        &self,
+        weights: &Weights,
+        spec: &ShardSpec,
+    ) -> Result<(Tensor, Tensor)> {
+        let w = weights.w(&self.layer)?;
+        let b = weights.b(&self.layer)?;
+        let k = w.shape()[1];
+        let (lo, hi) = spec.rows;
+        let mut wd = vec![0.0f32; spec.height * k];
+        wd[..(hi - lo) * k].copy_from_slice(&w.data()[lo * k..hi * k]);
+        let mut bd = vec![0.0f32; spec.height];
+        bd[..hi - lo].copy_from_slice(&b.data()[lo..hi]);
+        Ok((
+            Tensor::new(vec![spec.height, k], wd)?,
+            Tensor::new(vec![spec.height, 1], bd)?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reproduced() {
+        // Exactly the Yes/No column of Table 1.
+        use SplitMethod::*;
+        assert!(OutputSplit.cdc_suitable());
+        assert!(!InputSplit.cdc_suitable());
+        assert!(ChannelSplit.cdc_suitable());
+        assert!(!SpatialSplit.cdc_suitable());
+        assert!(!FilterSplit.cdc_suitable());
+    }
+
+    #[test]
+    fn suitability_criterion_matches_props() {
+        for m in SplitMethod::ALL {
+            let p = m.props();
+            assert_eq!(m.cdc_suitable(), p.divides_weight && !p.divides_input);
+        }
+    }
+
+    #[test]
+    fn balanced_ranges_cover_and_balance() {
+        for total in [1usize, 7, 10, 120, 2048] {
+            for parts in [1usize, 2, 3, 4, 7] {
+                let r = balanced_ranges(total, parts);
+                assert_eq!(r.len(), parts);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, total);
+                let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "{total}/{parts}: {sizes:?}");
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Typed view of `artifacts/manifest.json`, the contract between the
+//! python build path (`compile/aot.py`) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+/// Artifact kind — which shard function a program implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// fc shard: gemm (m,k)×(k,1) + bias [+ relu].
+    Fc,
+    /// conv channel-split shard: im2col + gemm over (h,w,c) input.
+    Conv,
+}
+
+/// One AOT-compiled HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub relu: bool,
+    /// Parameter shapes in call order (weights, bias, input).
+    pub params: Vec<Vec<usize>>,
+}
+
+/// The two epilogue flavors an (layer, split-degree) pair may ship with.
+#[derive(Debug, Clone)]
+pub struct SplitArtifacts {
+    /// Fused-activation artifact (non-CDC fast path); absent for layers
+    /// without activation and for final logits layers.
+    pub relu: Option<String>,
+    /// Pre-activation artifact (CDC mode; activation applied at merge).
+    pub lin: String,
+}
+
+/// One layer of a model as recorded in the manifest.
+#[derive(Debug, Clone)]
+pub struct LayerManifest {
+    pub name: String,
+    pub kind: String, // conv | fc | maxpool | flatten | gap
+    pub k: usize,
+    pub f: usize,
+    pub s: usize,
+    pub m: usize,
+    pub relu: bool,
+    pub padding: String,
+    pub pool: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Byte offsets into the model weights file (fc/conv only).
+    pub w_offset: Option<usize>,
+    pub b_offset: Option<usize>,
+    /// Weight matrix shape (m, k) — conv filters pre-unrolled.
+    pub w_shape: Option<(usize, usize)>,
+    /// split-degree → artifact names.
+    pub splits: BTreeMap<usize, SplitArtifacts>,
+}
+
+impl LayerManifest {
+    /// True for the compute layers that get distributed.
+    pub fn is_weighted(&self) -> bool {
+        matches!(self.kind.as_str(), "fc" | "conv")
+    }
+
+    /// Output height of one shard when split `d` ways (rows for fc,
+    /// channels for conv): uniform ceil division with zero padding.
+    pub fn shard_height(&self, d: usize) -> usize {
+        let total = if self.kind == "fc" { self.m } else { self.k };
+        total.div_ceil(d)
+    }
+}
+
+/// One model deployment description.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub trained: bool,
+    pub layers: Vec<LayerManifest>,
+    pub weights_file: String,
+}
+
+/// Held-out evaluation set for Fig. 2.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub images: String,
+    pub labels: String,
+    pub count: usize,
+    pub image_shape: Vec<usize>,
+}
+
+/// The parsed manifest plus its root directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub eval_set: EvalSet,
+    pub goldens: Vec<Value>,
+    pub raw: Value,
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let raw = Value::parse(&text)?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in raw.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let kind = match a.get("kind")?.as_str()? {
+                "fc" => ArtifactKind::Fc,
+                "conv" => ArtifactKind::Conv,
+                other => {
+                    return Err(Error::Artifact(format!("unknown artifact kind {other}")))
+                }
+            };
+            let params = a
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_usize_vec())
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: a.get("file")?.as_str()?.to_string(),
+                    kind,
+                    relu: a.get("relu")?.as_bool()?,
+                    params,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for m in raw.get("models")?.as_arr()? {
+            let model = parse_model(m)?;
+            // Validate artifact references.
+            for layer in &model.layers {
+                for arts in layer.splits.values() {
+                    for name in arts.relu.iter().chain(std::iter::once(&arts.lin)) {
+                        if !artifacts.contains_key(name) {
+                            return Err(Error::Artifact(format!(
+                                "model {} layer {} references unknown artifact {name}",
+                                model.name, layer.name
+                            )));
+                        }
+                    }
+                }
+            }
+            models.insert(model.name.clone(), model);
+        }
+
+        let ev = raw.get("eval_set")?;
+        let eval_set = EvalSet {
+            images: ev.get("images")?.as_str()?.to_string(),
+            labels: ev.get("labels")?.as_str()?.to_string(),
+            count: ev.get("count")?.as_usize()?,
+            image_shape: ev.get("image_shape")?.as_usize_vec()?,
+        };
+
+        let goldens = raw.get("goldens")?.as_arr()?.to_vec();
+        Ok(Manifest { root, models, artifacts, eval_set, goldens, raw })
+    }
+
+    /// Model lookup with a helpful error.
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("unknown model {name:?}")))
+    }
+
+    /// Artifact lookup with a helpful error.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Absolute path of a manifest-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Read a raw little-endian f32 file (weights, goldens, eval images).
+    pub fn read_f32(&self, rel: &str) -> Result<Vec<f32>> {
+        let path = self.path(rel);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::Artifact(format!("{rel}: length not multiple of 4")));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a raw little-endian i32 file (labels).
+    pub fn read_i32(&self, rel: &str) -> Result<Vec<i32>> {
+        let path = self.path(rel);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn parse_model(m: &Value) -> Result<ModelManifest> {
+    let mut layers = Vec::new();
+    for l in m.get("layers")?.as_arr()? {
+        let mut splits = BTreeMap::new();
+        if let Some(sp) = l.opt("splits") {
+            for (d, v) in sp.as_obj()? {
+                let d: usize = d
+                    .parse()
+                    .map_err(|_| Error::Json(format!("bad split degree {d:?}")))?;
+                splits.insert(
+                    d,
+                    SplitArtifacts {
+                        relu: v.opt("relu").map(|r| r.as_str().map(str::to_string)).transpose()?,
+                        lin: v.get("lin")?.as_str()?.to_string(),
+                    },
+                );
+            }
+        }
+        layers.push(LayerManifest {
+            name: l.get("name")?.as_str()?.to_string(),
+            kind: l.get("kind")?.as_str()?.to_string(),
+            k: l.get("k")?.as_usize()?,
+            f: l.get("f")?.as_usize()?,
+            s: l.get("s")?.as_usize()?,
+            m: l.get("m")?.as_usize()?,
+            relu: l.get("relu")?.as_bool()?,
+            padding: l.get("padding")?.as_str()?.to_string(),
+            pool: l.get("pool")?.as_usize()?,
+            input_shape: l.get("input_shape")?.as_usize_vec()?,
+            output_shape: l.get("output_shape")?.as_usize_vec()?,
+            w_offset: l.opt("w_offset").map(|v| v.as_usize()).transpose()?,
+            b_offset: l.opt("b_offset").map(|v| v.as_usize()).transpose()?,
+            w_shape: match l.opt("w_shape") {
+                Some(v) => {
+                    let d = v.as_usize_vec()?;
+                    Some((d[0], d[1]))
+                }
+                None => None,
+            },
+            splits,
+        });
+    }
+    Ok(ModelManifest {
+        name: m.get("name")?.as_str()?.to_string(),
+        input_shape: m.get("input_shape")?.as_usize_vec()?,
+        classes: m.get("classes")?.as_usize()?,
+        trained: m.get("trained")?.as_bool()?,
+        layers,
+        weights_file: m.get("weights_file")?.as_str()?.to_string(),
+    })
+}

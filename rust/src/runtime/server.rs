@@ -1,0 +1,163 @@
+//! Channel-based compute server: the one thread that owns PJRT state.
+//!
+//! `PjRtClient` is not `Send`, so the multi-threaded fleet simulator cannot
+//! share executables directly. Instead a dedicated server thread owns the
+//! [`Runtime`] + [`Manifest`] and serves execute requests over an mpsc
+//! channel; device threads hold cheap cloneable [`ComputeHandle`]s.
+//!
+//! Serialising the *wall-clock* compute does not distort experiments: the
+//! fleet's timing model is simulated (each device's service time is derived
+//! from the layer cost model + its compute rate), so PJRT throughput only
+//! affects how fast experiments run, not what they measure. The perf pass
+//! (EXPERIMENTS.md §Perf) benchmarks this server's dispatch overhead.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Arc<Tensor>>,
+        reply: Sender<std::result::Result<Tensor, String>>,
+    },
+    Preload {
+        artifacts: Vec<String>,
+        reply: Sender<std::result::Result<(), String>>,
+    },
+}
+
+/// Cloneable handle to the compute server thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: Sender<Request>,
+    execs: Arc<AtomicU64>,
+}
+
+impl ComputeHandle {
+    /// Execute an artifact by name; blocks until the result is ready.
+    /// Inputs are `Arc`-shared: no tensor payload is copied to enqueue.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Arc<Tensor>>) -> Result<Tensor> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| Error::Fleet("compute server is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Fleet("compute server dropped reply".into()))?
+            .map_err(Error::Xla)
+    }
+
+    /// Pre-compile a set of artifacts (deploy-time warm-up, keeps compile
+    /// time out of latency measurements).
+    pub fn preload(&self, artifacts: &[String]) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Preload { artifacts: artifacts.to_vec(), reply })
+            .map_err(|_| Error::Fleet("compute server is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Fleet("compute server dropped reply".into()))?
+            .map_err(Error::Xla)
+    }
+
+    /// Total PJRT executions served.
+    pub fn exec_count(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+}
+
+/// The running compute server (join handle + its public handle).
+pub struct ComputeServer {
+    handle: ComputeHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ComputeServer {
+    /// Spawn the server thread over an artifacts directory.
+    ///
+    /// The Runtime and Manifest are constructed *on* the server thread
+    /// (PJRT state must not cross threads); construction errors are
+    /// reported through the first recv.
+    pub fn spawn(artifacts_root: impl Into<std::path::PathBuf>) -> Result<ComputeServer> {
+        let root = artifacts_root.into();
+        let (tx, rx) = channel::<Request>();
+        let execs = Arc::new(AtomicU64::new(0));
+        let execs2 = execs.clone();
+        let (init_tx, init_rx) = channel::<std::result::Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || serve(root, rx, execs2, init_tx))
+            .map_err(|e| Error::Fleet(format!("spawn compute server: {e}")))?;
+        init_rx
+            .recv()
+            .map_err(|_| Error::Fleet("compute server died during init".into()))?
+            .map_err(Error::Xla)?;
+        Ok(ComputeServer { handle: ComputeHandle { tx, execs }, join: Some(join) })
+    }
+
+    /// A cloneable handle for device threads.
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeServer {
+    fn drop(&mut self) {
+        // Close our handle's sender by replacing it, then join.
+        let (dead_tx, _) = channel();
+        self.handle.tx = dead_tx;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve(
+    root: std::path::PathBuf,
+    rx: Receiver<Request>,
+    execs: Arc<AtomicU64>,
+    init_tx: Sender<std::result::Result<(), String>>,
+) {
+    let runtime = match Runtime::new() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = init_tx.send(Err(format!("pjrt init: {e}")));
+            return;
+        }
+    };
+    let manifest = match Manifest::load(&root) {
+        Ok(m) => m,
+        Err(e) => {
+            let _ = init_tx.send(Err(format!("manifest: {e}")));
+            return;
+        }
+    };
+    let _ = init_tx.send(Ok(()));
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute { artifact, inputs, reply } => {
+                let refs: Vec<&Tensor> =
+                    inputs.iter().map(|a| a.as_ref()).collect();
+                let res = runtime
+                    .execute(&manifest, &artifact, &refs)
+                    .map_err(|e| e.to_string());
+                execs.store(runtime.exec_count(), Ordering::Relaxed);
+                let _ = reply.send(res);
+            }
+            Request::Preload { artifacts, reply } => {
+                let mut res = Ok(());
+                for a in &artifacts {
+                    if let Err(e) = runtime.preload(&manifest, a) {
+                        res = Err(format!("{a}: {e}"));
+                        break;
+                    }
+                }
+                let _ = reply.send(res);
+            }
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Dense f32 tensor substrate for the coordinator's merge path.
+//!
+//! The *compute* hot path (per-device GEMMs) runs inside AOT-compiled XLA
+//! executables; this module implements only what the merge point of the
+//! paper needs: concatenation (output/channel splitting), elementwise
+//! add/sub (input-split aggregation and CDC recovery), the deferred
+//! epilogues (ReLU, max-pool, softmax) for CDC mode, and the loss-injection
+//! helper for the Fig. 2 experiment.
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg32;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create from shape + data; checks element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// I.i.d. N(0,1) tensor (tests, workload generators).
+    pub fn randn(shape: Vec<usize>, rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: (0..n).map(|_| rng.normal() as f32).collect() }
+    }
+
+    /// Column vector from a slice.
+    pub fn col(data: &[f32]) -> Tensor {
+        Tensor { shape: vec![data.len(), 1], data: data.to_vec() }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Raw data view.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw data, mutable.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into raw data.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {shape:?}",
+                self.shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Flatten to a column vector (m, 1) — the paper's `flatten` layer.
+    pub fn flatten_col(self) -> Tensor {
+        let n = self.data.len();
+        Tensor { shape: vec![n, 1], data: self.data }
+    }
+
+    /// Elementwise in-place add. Shapes must match.
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.zip_assign(other, |a, b| a + b)
+    }
+
+    /// Elementwise in-place subtract (CDC recovery: parity − Σ received).
+    pub fn sub_assign(&mut self, other: &Tensor) -> Result<()> {
+        self.zip_assign(other, |a, b| a - b)
+    }
+
+    fn zip_assign(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "elementwise op on {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, *b);
+        }
+        Ok(())
+    }
+
+    /// In-place ReLU (deferred epilogue in CDC mode).
+    pub fn relu(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Concatenate along axis 0 (fc output splitting merge: stack rows).
+    pub fn concat0(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(Error::Shape("concat0 of zero tensors".into()));
+        }
+        let tail = &parts[0].shape[1..];
+        let mut rows = 0;
+        for p in parts {
+            if &p.shape[1..] != tail {
+                return Err(Error::Shape(format!(
+                    "concat0 tail mismatch: {:?} vs {:?}",
+                    parts[0].shape, p.shape
+                )));
+            }
+            rows += p.shape[0];
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Concatenate (H, W, C) tensors along the channel axis (conv channel
+    /// splitting merge, paper Fig. 8).
+    pub fn concat_channels(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(Error::Shape("concat_channels of zero tensors".into()));
+        }
+        let (h, w) = match parts[0].shape[..] {
+            [h, w, _] => (h, w),
+            _ => {
+                return Err(Error::Shape(format!(
+                    "concat_channels wants rank-3, got {:?}",
+                    parts[0].shape
+                )))
+            }
+        };
+        let mut c_total = 0;
+        for p in parts {
+            match p.shape[..] {
+                [ph, pw, pc] if ph == h && pw == w => c_total += pc,
+                _ => {
+                    return Err(Error::Shape(format!(
+                        "concat_channels mismatch: {:?} vs {:?}",
+                        parts[0].shape, p.shape
+                    )))
+                }
+            }
+        }
+        let mut data = vec![0.0f32; h * w * c_total];
+        for (y, row) in data.chunks_mut(c_total).enumerate() {
+            let _ = y;
+            let mut off = 0;
+            for p in parts {
+                let pc = p.shape[2];
+                let src = &p.data[y * pc..(y + 1) * pc];
+                row[off..off + pc].copy_from_slice(src);
+                off += pc;
+            }
+        }
+        Ok(Tensor { shape: vec![h, w, c_total], data })
+    }
+
+    /// Take the first `rows` rows (drops CDC padding rows after merge).
+    pub fn take_rows(&self, rows: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || self.shape[0] < rows {
+            return Err(Error::Shape(format!(
+                "take_rows({rows}) of {:?}",
+                self.shape
+            )));
+        }
+        let stride: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        Ok(Tensor { shape, data: self.data[..rows * stride].to_vec() })
+    }
+
+    /// Take channels [lo, hi) of an (H, W, C) tensor.
+    pub fn take_channels(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        let (h, w, c) = match self.shape[..] {
+            [h, w, c] => (h, w, c),
+            _ => return Err(Error::Shape(format!("take_channels of {:?}", self.shape))),
+        };
+        if lo > hi || hi > c {
+            return Err(Error::Shape(format!("take_channels({lo},{hi}) of C={c}")));
+        }
+        let mut data = Vec::with_capacity(h * w * (hi - lo));
+        for px in self.data.chunks(c) {
+            data.extend_from_slice(&px[lo..hi]);
+        }
+        Tensor::new(vec![h, w, hi - lo], data)
+    }
+
+    /// Max-pool (H, W, C) with square window/stride, VALID padding —
+    /// the merge-side pool for CDC conv layers.
+    pub fn maxpool(&self, size: usize, stride: usize) -> Result<Tensor> {
+        let (h, w, c) = match self.shape[..] {
+            [h, w, c] => (h, w, c),
+            _ => return Err(Error::Shape(format!("maxpool of {:?}", self.shape))),
+        };
+        let oh = (h - size) / stride + 1;
+        let ow = (w - size) / stride + 1;
+        let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for dy in 0..size {
+                    for dx in 0..size {
+                        let iy = oy * stride + dy;
+                        let ix = ox * stride + dx;
+                        let src = &self.data[(iy * w + ix) * c..(iy * w + ix + 1) * c];
+                        let dst = &mut out[(oy * ow + ox) * c..(oy * ow + ox + 1) * c];
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            if *s > *d {
+                                *d = *s;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![oh, ow, c], out)
+    }
+
+    /// Global average pool: (H, W, C) → (C, 1).
+    pub fn gap(&self) -> Result<Tensor> {
+        let (h, w, c) = match self.shape[..] {
+            [h, w, c] => (h, w, c),
+            _ => return Err(Error::Shape(format!("gap of {:?}", self.shape))),
+        };
+        let mut out = vec![0.0f32; c];
+        for px in self.data.chunks(c) {
+            for (o, v) in out.iter_mut().zip(px) {
+                *o += v;
+            }
+        }
+        let n = (h * w) as f32;
+        for o in &mut out {
+            *o /= n;
+        }
+        Tensor::new(vec![c, 1], out)
+    }
+
+    /// Numerically-stable softmax over all elements (for logits columns).
+    pub fn softmax(&self) -> Tensor {
+        let max = self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = self.data.iter().map(|v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        Tensor { shape: self.shape.clone(), data: exps.iter().map(|e| e / sum).collect() }
+    }
+
+    /// Index of the max element (classification readout).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Zero out a random `fraction` of elements (Fig. 2 data-loss model:
+    /// the granularity of loss in distributed IoT systems is whole
+    /// activations, not bits).
+    pub fn inject_loss(&mut self, fraction: f64, rng: &mut Pcg32) -> usize {
+        let mut lost = 0;
+        for v in &mut self.data {
+            if rng.bernoulli(fraction) {
+                *v = 0.0;
+                lost += 1;
+            }
+        }
+        lost
+    }
+
+    /// Max absolute difference vs another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Reference CPU GEMM: self (m,k) × rhs (k,n) — used only by tests and
+    /// the XlaBuilder-fallback cross-checks, never on the serving path.
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (m, k) = match self.shape[..] {
+            [m, k] => (m, k),
+            _ => return Err(Error::Shape(format!("matmul lhs {:?}", self.shape))),
+        };
+        let (k2, n) = match rhs.shape[..] {
+            [k2, n] => (k2, n),
+            _ => return Err(Error::Shape(format!("matmul rhs {:?}", rhs.shape))),
+        };
+        if k != k2 {
+            return Err(Error::Shape(format!("matmul {m}x{k} @ {k2}x{n}")));
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[kk * n..(kk + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, r) in dst.iter_mut().zip(row) {
+                    *d += a * r;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn concat0_stacks_rows() {
+        let a = t(&[2, 2], &[1., 2., 3., 4.]);
+        let b = t(&[1, 2], &[5., 6.]);
+        let c = Tensor::concat0(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+        let bad = t(&[1, 3], &[0.; 3]);
+        assert!(Tensor::concat0(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn concat_channels_interleaves() {
+        // 1x2 image, 1+2 channels.
+        let a = t(&[1, 2, 1], &[1., 2.]);
+        let b = t(&[1, 2, 2], &[10., 11., 20., 21.]);
+        let c = Tensor::concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[1, 2, 3]);
+        assert_eq!(c.data(), &[1., 10., 11., 2., 20., 21.]);
+    }
+
+    #[test]
+    fn take_channels_roundtrip() {
+        let x = t(&[1, 2, 3], &[1., 10., 11., 2., 20., 21.]);
+        let a = x.take_channels(0, 1).unwrap();
+        let b = x.take_channels(1, 3).unwrap();
+        let back = Tensor::concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn cdc_subtract_recovers() {
+        // parity = s0 + s1 + s2; missing s1 = parity − s0 − s2.
+        let s0 = t(&[2, 1], &[1., 2.]);
+        let s1 = t(&[2, 1], &[3., 4.]);
+        let s2 = t(&[2, 1], &[5., 6.]);
+        let mut parity = Tensor::zeros(vec![2, 1]);
+        for s in [&s0, &s1, &s2] {
+            parity.add_assign(s).unwrap();
+        }
+        parity.sub_assign(&s0).unwrap();
+        parity.sub_assign(&s2).unwrap();
+        assert_eq!(parity, s1);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = t(&[2, 2, 1], &[1., 3., 2., 4.]);
+        let y = x.maxpool(2, 2).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1]);
+        assert_eq!(y.data(), &[4.]);
+    }
+
+    #[test]
+    fn softmax_and_argmax() {
+        let x = t(&[3, 1], &[0., 1., 2.]);
+        let s = x.softmax();
+        let sum: f32 = s.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert_eq!(x.argmax(), 2);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = t(&[2, 2], &[-1., 2., -3., 4.]);
+        x.relu();
+        assert_eq!(x.data(), &[0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = t(&[2, 2, 2], &[1., 10., 2., 20., 3., 30., 4., 40.]);
+        let g = x.gap().unwrap();
+        assert_eq!(g.shape(), &[2, 1]);
+        assert_eq!(g.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn matmul_matches_hand() {
+        let a = t(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let b = t(&[3, 2], &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn inject_loss_fraction() {
+        let mut rng = Pcg32::seeded(1);
+        let mut x = Tensor::new(vec![10_000], vec![1.0; 10_000]).unwrap();
+        let lost = x.inject_loss(0.3, &mut rng);
+        assert!((lost as f64 - 3000.0).abs() < 200.0, "lost={lost}");
+        let zeros = x.data().iter().filter(|v| **v == 0.0).count();
+        assert_eq!(zeros, lost);
+    }
+}

@@ -1,0 +1,84 @@
+//! Tiny property-testing substrate (offline environment: no proptest).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it reports the case index, the
+//! reproducing seed, and a Debug dump of the failing input. Used by
+//! `rust/tests/properties.rs` for the coordinator/CDC invariants.
+
+use crate::rng::Pcg32;
+
+/// Run `prop` over `cases` generated inputs; panics with a reproducible
+/// seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        // Each case gets an independent, reconstructible stream.
+        let mut rng = Pcg32::new(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Pcg32;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// A vector of finite arrival times with `n_inf` entries set to ∞ at
+    /// random positions — the canonical "arrivals with failures" input.
+    pub fn arrivals(rng: &mut Pcg32, n: usize, n_inf: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.range(1.0, 1000.0)).collect();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        for &i in idx.iter().take(n_inf) {
+            v[i] = f64::INFINITY;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            50,
+            |rng| rng.below(100),
+            |&x| if x < 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(2, 50, |rng| rng.below(10), |&x| {
+            if x != 7 {
+                Ok(())
+            } else {
+                Err("hit 7".into())
+            }
+        });
+    }
+
+    #[test]
+    fn arrivals_have_requested_failures() {
+        let mut rng = crate::rng::Pcg32::seeded(3);
+        let a = gen::arrivals(&mut rng, 10, 3);
+        assert_eq!(a.iter().filter(|t| t.is_infinite()).count(), 3);
+    }
+}

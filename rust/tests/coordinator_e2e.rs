@@ -1,0 +1,200 @@
+//! End-to-end coordinator tests: the distributed pipeline (fleet threads +
+//! PJRT artifacts + merge/recovery) must agree with the python full-model
+//! golden logits — with and without failures, under every redundancy mode.
+
+use cdc_dnn::coordinator::{Redundancy, Session, SessionConfig, SplitSpec};
+use cdc_dnn::fleet::{FailurePlan, NetConfig};
+use cdc_dnn::runtime::Manifest;
+use cdc_dnn::tensor::Tensor;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn golden_model_io(name: &str) -> (Tensor, Tensor) {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let g = m
+        .goldens
+        .iter()
+        .find(|g| {
+            g.get("kind").unwrap().as_str().unwrap() == "model"
+                && g.get("model").unwrap().as_str().unwrap() == name
+        })
+        .expect("model golden");
+    let shape = g.get("input_shape").unwrap().as_usize_vec().unwrap();
+    let input = Tensor::new(
+        shape,
+        m.read_f32(g.get("input").unwrap().as_str().unwrap()).unwrap(),
+    )
+    .unwrap();
+    let logits_raw = m.read_f32(g.get("logits").unwrap().as_str().unwrap()).unwrap();
+    let logits = Tensor::new(vec![logits_raw.len(), 1], logits_raw).unwrap();
+    (input, logits)
+}
+
+fn lenet_cfg(n_devices: usize) -> SessionConfig {
+    let mut cfg = SessionConfig::new("lenet5");
+    cfg.n_devices = n_devices;
+    cfg.net = NetConfig::ideal();
+    cfg
+}
+
+#[test]
+fn single_device_matches_python_golden() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut s = Session::start(artifacts_root(), lenet_cfg(1)).unwrap();
+    let trace = s.infer(&input).unwrap();
+    assert!(
+        trace.output.max_abs_diff(&want) < 1e-3,
+        "diff={}",
+        trace.output.max_abs_diff(&want)
+    );
+    assert!(!trace.any_recovery);
+}
+
+#[test]
+fn distributed_split_matches_golden() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(4);
+    cfg.splits.insert("conv2".into(), SplitSpec::plain(2));
+    cfg.splits.insert("fc1".into(), SplitSpec::plain(4));
+    cfg.splits.insert("fc2".into(), SplitSpec::plain(2));
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    let trace = s.infer(&input).unwrap();
+    assert!(
+        trace.output.max_abs_diff(&want) < 1e-3,
+        "diff={}",
+        trace.output.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn cdc_split_matches_golden_without_failure() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(4);
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    assert_eq!(s.total_devices(), 6, "4 data + 2 parity");
+    let trace = s.infer(&input).unwrap();
+    assert!(trace.output.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn cdc_recovers_exact_logits_under_failure() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(4);
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    // Paper-style allocation file: whole layers pinned to device 0, the
+    // split layer spread over all four devices.
+    for l in ["conv1", "conv2", "fc2", "fc3"] {
+        cfg.placement.insert(l.into(), vec![0]);
+    }
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+
+    // Kill the device owning only fc1's shard 1.
+    s.set_failure(1, FailurePlan::PermanentAt(0)).unwrap();
+    let trace = s.infer(&input).unwrap();
+    assert!(trace.any_recovery, "parity substitution must kick in");
+    assert!(
+        trace.output.max_abs_diff(&want) < 1e-3,
+        "recovered logits diverge: {}",
+        trace.output.max_abs_diff(&want)
+    );
+    let fc1 = trace.layers.iter().find(|l| l.layer == "fc1").unwrap();
+    assert_eq!(fc1.outcome, "recovered");
+}
+
+#[test]
+fn plain_split_loses_request_on_failure() {
+    let (input, _) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(2);
+    cfg.splits.insert("fc1".into(), SplitSpec::plain(2));
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    s.set_failure(1, FailurePlan::PermanentAt(0)).unwrap();
+    let err = s.infer(&input).unwrap_err();
+    assert!(format!("{err}").contains("lost"), "{err}");
+}
+
+#[test]
+fn failover_restores_service_after_loss() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(2);
+    cfg.splits.insert("fc1".into(), SplitSpec::plain(2));
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    s.set_failure(1, FailurePlan::PermanentAt(0)).unwrap();
+    assert!(s.infer(&input).is_err());
+    s.drain();
+    // Coordinator detects + reassigns device 1's tasks to device 0.
+    let moved = s.failover(1, 0).unwrap();
+    assert!(moved > 0);
+    let trace = s.infer(&input).unwrap();
+    assert!(trace.output.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn two_mr_tolerates_one_failure() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(2);
+    cfg.splits.insert(
+        "fc1".into(),
+        SplitSpec { d: 2, redundancy: Redundancy::TwoMr },
+    );
+    for l in ["conv1", "conv2", "fc2", "fc3"] {
+        cfg.placement.insert(l.into(), vec![1]);
+    }
+    cfg.placement.insert("fc1".into(), vec![0, 1]);
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    assert_eq!(s.total_devices(), 4, "2 data + 2 replicas");
+    // Device 0 hosts only fc1 shard 0; its replica lives on device 2.
+    s.set_failure(0, FailurePlan::PermanentAt(0)).unwrap();
+    let trace = s.infer(&input).unwrap();
+    assert!(trace.output.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn grouped_parity_tolerates_one_failure_per_group() {
+    let (input, want) = golden_model_io("lenet5");
+    let mut cfg = lenet_cfg(4);
+    cfg.splits.insert(
+        "fc1".into(),
+        SplitSpec { d: 4, redundancy: Redundancy::CdcGrouped(2) },
+    );
+    for l in ["conv1", "conv2", "fc2", "fc3"] {
+        cfg.placement.insert(l.into(), vec![1]);
+    }
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    assert_eq!(s.total_devices(), 6, "4 data + 2 group parities");
+    // One failure in each group: devices 0 (group A) and 2 (group B).
+    s.set_failure(0, FailurePlan::PermanentAt(0)).unwrap();
+    s.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+    let trace = s.infer(&input).unwrap();
+    assert!(trace.any_recovery);
+    assert!(trace.output.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn fc2048_microbenchmark_model_runs() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    if !m.models.contains_key("fc2048") {
+        return; // quick artifact sets may omit it
+    }
+    let mut cfg = SessionConfig::new("fc2048");
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::ideal();
+    cfg.splits.insert("fc".into(), SplitSpec::cdc(4));
+    let mut s = Session::start(artifacts_root(), cfg).unwrap();
+    let mut rng = cdc_dnn::rng::Pcg32::seeded(3);
+    let x = Tensor::randn(vec![2048], &mut rng);
+    let t = s.infer(&x).unwrap();
+    assert_eq!(t.output.shape(), &[2048, 1]);
+    // Ideal network: latency = shard compute = (2048/4)*2048 MACs @ RPi.
+    let expect = (512.0 * 2048.0) / cdc_dnn::fleet::RPI_MACS_PER_MS;
+    assert!(
+        (t.total_ms - expect).abs() < 1.0,
+        "latency {} vs expected {expect}",
+        t.total_ms
+    );
+}

@@ -1,0 +1,131 @@
+//! Integration tests over the manifest/model/config layers against the
+//! real artifact set: error paths, weight loading, cost model, and the
+//! local pipeline's accuracy on the trained model.
+
+use cdc_dnn::config::{deployment_from_json, load_deployment};
+use cdc_dnn::json::Value;
+use cdc_dnn::model::{layer_macs, load_eval_set, shard_io_bytes, shard_macs, LocalPipeline, Weights};
+use cdc_dnn::partition::LayerPlan;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::{Manifest, Runtime};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn manifest_rejects_missing_dir() {
+    assert!(Manifest::load("/nonexistent/path").is_err());
+}
+
+#[test]
+fn manifest_unknown_lookups_error_helpfully() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let err = format!("{}", m.model("nope").unwrap_err());
+    assert!(err.contains("nope"));
+    let err = format!("{}", m.artifact("nope").unwrap_err());
+    assert!(err.contains("nope"));
+}
+
+#[test]
+fn all_models_load_weights_with_consistent_shapes() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    for model in m.models.values() {
+        let w = Weights::load(&m, model).unwrap();
+        for layer in &model.layers {
+            if !layer.is_weighted() {
+                continue;
+            }
+            let (mm, kk) = layer.w_shape.unwrap();
+            assert_eq!(w.w(&layer.name).unwrap().shape(), &[mm, kk]);
+            assert_eq!(w.b(&layer.name).unwrap().shape(), &[mm, 1]);
+        }
+    }
+}
+
+#[test]
+fn cost_model_is_monotone_in_split_degree() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let model = m.model("fc2048").unwrap();
+    let layer = &model.layers[0];
+    let total = layer_macs(layer);
+    assert_eq!(total, 2048 * 2048);
+    let mut prev = u64::MAX;
+    for d in [1usize, 2, 4, 8] {
+        let s = shard_macs(layer, d);
+        assert!(s <= prev, "shard macs must shrink with d");
+        assert!(s * d as u64 >= total, "shards must cover the layer");
+        prev = s;
+    }
+    let (req, reply) = shard_io_bytes(layer, 4);
+    assert_eq!(req, 2048 * 4);
+    assert_eq!(reply, 512 * 4);
+}
+
+#[test]
+fn layer_plan_rejects_missing_split_degree() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let model = m.model("fc2048").unwrap();
+    let err = LayerPlan::build(&model.layers[0], 5).unwrap_err();
+    assert!(format!("{err}").contains("split degree 5"));
+}
+
+#[test]
+fn layer_plan_covers_all_rows() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let model = m.model("lenet5").unwrap();
+    for layer in model.layers.iter().filter(|l| l.is_weighted()) {
+        for &d in layer.splits.keys() {
+            let plan = LayerPlan::build(layer, d).unwrap();
+            let total = if layer.kind == "fc" { layer.m } else { layer.k };
+            assert_eq!(plan.covered_rows(), total, "{}@{d}", layer.name);
+        }
+    }
+}
+
+#[test]
+fn trained_lenet_accuracy_through_artifacts() {
+    // The local pipeline (d=1 artifacts, rust epilogues) must reproduce
+    // the training-time accuracy — the Fig. 2 zero-loss anchor.
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let rt = Runtime::new().unwrap();
+    let model = m.model("lenet5").unwrap();
+    let weights = Weights::load(&m, model).unwrap();
+    let pipe = LocalPipeline { runtime: &rt, manifest: &m, model, weights: &weights };
+    let (images, labels) = load_eval_set(&m).unwrap();
+    let n = 64.min(images.len());
+    let mut rng = Pcg32::seeded(0);
+    let acc = pipe.accuracy(&images[..n], &labels[..n], None, &mut rng).unwrap();
+    assert!(acc > 0.9, "trained model accuracy through rust pipeline: {acc}");
+}
+
+#[test]
+fn deployment_file_round_trips_through_disk() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/lenet5_cdc.json");
+    let cfg = load_deployment(&path).unwrap();
+    assert_eq!(cfg.model, "lenet5");
+    assert_eq!(cfg.n_devices, 4);
+    assert_eq!(cfg.splits["fc1"].d, 4);
+    assert_eq!(cfg.placement["fc1"], vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn deployment_rejects_malformed_specs() {
+    let bad = Value::parse(r#"{"model":"lenet5"}"#).unwrap();
+    assert!(deployment_from_json(&bad).is_err(), "n_devices required");
+    let bad = Value::parse(
+        r#"{"model":"lenet5","n_devices":2,"splits":{"fc1":{"d":2,"redundancy":"xyz"}}}"#,
+    )
+    .unwrap();
+    assert!(deployment_from_json(&bad).is_err(), "bad redundancy tag");
+}
+
+#[test]
+fn eval_set_matches_manifest_count() {
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let (images, labels) = load_eval_set(&m).unwrap();
+    assert_eq!(images.len(), m.eval_set.count);
+    assert_eq!(labels.len(), m.eval_set.count);
+    assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+}

@@ -1,0 +1,300 @@
+//! Property tests (via the in-tree `testkit` substrate) over the
+//! coordinator's pure invariants: gather-policy semantics, CDC algebra,
+//! partition balance, coverage monotonicity, and JSON round-trips.
+
+use cdc_dnn::cdc;
+use cdc_dnn::cdc::coverage::Deployment;
+use cdc_dnn::coordinator::policy::{self, GroupedOutcome, Outcome};
+use cdc_dnn::json::Value;
+use cdc_dnn::partition::balanced_ranges;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::{forall, gen};
+
+/// CDC algebra: for random shard weights/inputs, losing ANY single shard
+/// is exactly recoverable from the parity (to f32 tolerance).
+#[test]
+fn prop_cdc_recovers_any_single_shard() {
+    forall(
+        0xc0de,
+        60,
+        |rng| {
+            let d = gen::usize_in(rng, 1, 6);
+            let m = gen::usize_in(rng, 1, 24);
+            let k = gen::usize_in(rng, 1, 24);
+            let shards: Vec<(Tensor, Tensor)> = (0..d)
+                .map(|_| {
+                    (
+                        Tensor::randn(vec![m, k], rng),
+                        Tensor::randn(vec![m, 1], rng),
+                    )
+                })
+                .collect();
+            let x = Tensor::randn(vec![k, 1], rng);
+            let lose = rng.below(d);
+            (shards, x, lose)
+        },
+        |(shards, x, lose)| {
+            let outs: Vec<Tensor> = shards
+                .iter()
+                .map(|(w, b)| {
+                    let mut y = w.matmul(x).unwrap();
+                    y.add_assign(b).unwrap();
+                    y
+                })
+                .collect();
+            let (pw, pb) = cdc::parity_weights(shards).unwrap();
+            let mut parity = pw.matmul(x).unwrap();
+            parity.add_assign(&pb).unwrap();
+            let received: Vec<&Tensor> = outs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i != lose)
+                .map(|(_, t)| t)
+                .collect();
+            let rec = cdc::decode(&parity, &received).unwrap();
+            let diff = rec.max_abs_diff(&outs[*lose]);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("recovery diff {diff}"))
+            }
+        },
+    );
+}
+
+/// Policy: with a parity shard, the layer NEVER completes later than the
+/// no-parity baseline, and never earlier than the d-th fastest arrival.
+#[test]
+fn prop_policy_parity_never_hurts() {
+    forall(
+        0x9a7e,
+        400,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 8);
+            let n_inf = rng.below(2.min(n + 1));
+            let data = gen::arrivals(rng, n, n_inf);
+            let parity = rng.range(1.0, 1000.0);
+            let threshold = if rng.bernoulli(0.3) {
+                f64::INFINITY
+            } else {
+                rng.range(0.0, 500.0)
+            };
+            (data, parity, threshold)
+        },
+        |(data, parity, threshold)| {
+            let with = policy::resolve(data, Some(*parity), *threshold);
+            let without = policy::resolve(data, None, f64::INFINITY);
+            // Lower bound: can't finish before d-th smallest arrival of
+            // the d+1 available results.
+            let mut all: Vec<f64> = data.clone();
+            all.push(*parity);
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let kth = all[data.len() - 1];
+            match (with, without) {
+                (Outcome::Lost, Outcome::Lost) => Ok(()),
+                (Outcome::Lost, _) => Err("parity made things worse".into()),
+                (o, Outcome::Lost) => {
+                    if o.t_ms().is_finite() {
+                        Ok(())
+                    } else {
+                        Err("recovered but infinite time".into())
+                    }
+                }
+                (o, base) => {
+                    if o.t_ms() <= base.t_ms() + 1e-9 && o.t_ms() >= kth - 1e-9 {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "with={} base={} kth={kth}",
+                            o.t_ms(),
+                            base.t_ms()
+                        ))
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Policy: mitigation latency is monotone in the threshold — a lower
+/// waiting threshold never yields a *later* completion (paper §6.2).
+#[test]
+fn prop_policy_threshold_monotone() {
+    forall(
+        0x7472,
+        400,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 8);
+            let data = gen::arrivals(rng, n, 0);
+            let parity = rng.range(1.0, 1000.0);
+            let t1 = rng.range(0.0, 800.0);
+            let t2 = t1 + rng.range(0.0, 400.0);
+            (data, parity, t1, t2)
+        },
+        |(data, parity, t1, t2)| {
+            let lo = policy::resolve(data, Some(*parity), *t1).t_ms();
+            let hi = policy::resolve(data, Some(*parity), *t2).t_ms();
+            if lo <= hi + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("t({t1})={lo} > t({t2})={hi}"))
+            }
+        },
+    );
+}
+
+/// Grouped parity: a failure pattern is recoverable iff every group has
+/// at most one failure — and then resolve_grouped agrees with the static
+/// `cdc::recoverable` predicate.
+#[test]
+fn prop_grouped_matches_recoverable_predicate() {
+    forall(
+        0x6e0d,
+        300,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 9);
+            let gsize = gen::usize_in(rng, 1, n);
+            let n_fail = rng.below(n + 1).min(4);
+            let data = gen::arrivals(rng, n, n_fail);
+            (n, gsize, data)
+        },
+        |(n, gsize, data)| {
+            let groups = cdc::parity_groups(*n, *gsize).unwrap();
+            let parities: Vec<f64> = groups.iter().map(|_| 10.0).collect();
+            let failed: Vec<usize> = data
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.is_infinite())
+                .map(|(i, _)| i)
+                .collect();
+            let want = cdc::recoverable(&groups, &failed);
+            let got = !matches!(
+                policy::resolve_grouped(data, &parities, &groups, 0.0),
+                GroupedOutcome::Lost
+            );
+            if want == got {
+                Ok(())
+            } else {
+                Err(format!("predicate={want} policy={got} failed={failed:?}"))
+            }
+        },
+    );
+}
+
+/// Partition: balanced ranges always cover [0, total) contiguously with
+/// sizes differing by ≤ 1 — the paper's balanced-assignment requirement.
+#[test]
+fn prop_balanced_ranges() {
+    forall(
+        0xba1a,
+        500,
+        |rng| {
+            let total = gen::usize_in(rng, 1, 5000);
+            let parts = gen::usize_in(rng, 1, 16);
+            (total, parts)
+        },
+        |(total, parts)| {
+            let r = balanced_ranges(*total, *parts);
+            if r.len() != *parts {
+                return Err("wrong part count".into());
+            }
+            if r[0].0 != 0 || r.last().unwrap().1 != *total {
+                return Err("doesn't cover".into());
+            }
+            for w in r.windows(2) {
+                if w[0].1 != w[1].0 {
+                    return Err("not contiguous".into());
+                }
+            }
+            let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            if mx - mn <= 1 {
+                Ok(())
+            } else {
+                Err(format!("imbalanced: {sizes:?}"))
+            }
+        },
+    );
+}
+
+/// Coverage: hybrid CDC+2MR dominates 2MR for every deployment shape and
+/// budget, and both are monotone in the budget.
+#[test]
+fn prop_coverage_domination() {
+    forall(
+        0xc07e,
+        300,
+        |rng| {
+            let n_mp = rng.below(4);
+            let mp: Vec<usize> = (0..n_mp).map(|_| gen::usize_in(rng, 2, 8)).collect();
+            let singles = rng.below(8);
+            (mp, singles.max(1))
+        },
+        |(mp, singles)| {
+            let dep = Deployment::new("p", mp.clone(), *singles);
+            let n = dep.total_devices();
+            let mut prev2 = -1.0;
+            let mut prevh = -1.0;
+            for extra in 0..=n + 2 {
+                let c2 = dep.coverage_2mr(extra);
+                let ch = dep.coverage_cdc_2mr(extra);
+                if ch + 1e-12 < c2 {
+                    return Err(format!("2MR beat hybrid at extra={extra}"));
+                }
+                if c2 < prev2 - 1e-12 || ch < prevh - 1e-12 {
+                    return Err("coverage not monotone".into());
+                }
+                prev2 = c2;
+                prevh = ch;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// JSON: parse(serialize(v)) == v for random JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Pcg32, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bernoulli(0.5)),
+            // Use representable-exact values to avoid float formatting noise.
+            2 => Value::Num((rng.below(1_000_000) as f64) / 64.0),
+            3 => {
+                let n = rng.below(8);
+                Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr(
+                (0..rng.below(4)).map(|_| random_value(rng, depth - 1)).collect(),
+            ),
+            _ => Value::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        0x150f,
+        300,
+        |rng| random_value(rng, 3),
+        |v| {
+            let s = v.to_string_compact();
+            let back = Value::parse(&s).map_err(|e| format!("{e} in {s}"))?;
+            if &back == v {
+                Ok(())
+            } else {
+                Err(format!("roundtrip mismatch: {s}"))
+            }
+        },
+    );
+}

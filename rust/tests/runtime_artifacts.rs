@@ -1,0 +1,147 @@
+//! Integration: AOT artifacts load, compile, execute, and match the
+//! python-side goldens bit-for-bit-ish (f32 tolerance).
+//!
+//! Requires `make artifacts` to have populated ./artifacts.
+
+use cdc_dnn::runtime::{Manifest, Runtime};
+use cdc_dnn::tensor::Tensor;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load() -> (Runtime, Manifest) {
+    let m = Manifest::load(artifacts_root()).expect("run `make artifacts` first");
+    let r = Runtime::new().expect("pjrt cpu client");
+    (r, m)
+}
+
+fn golden<'a>(m: &'a Manifest, kind: &str) -> &'a cdc_dnn::json::Value {
+    m.goldens
+        .iter()
+        .find(|g| g.get("kind").unwrap().as_str().unwrap() == kind)
+        .expect(kind)
+}
+
+fn read_tensor(m: &Manifest, rel: &str, shape: Vec<usize>) -> Tensor {
+    Tensor::new(shape, m.read_f32(rel).unwrap()).unwrap()
+}
+
+#[test]
+fn fc_artifact_matches_golden() {
+    let (rt, m) = load();
+    let g = golden(&m, "fc");
+    let name = g.get("artifact").unwrap().as_str().unwrap();
+    let shapes: Vec<Vec<usize>> = g
+        .get("shapes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_usize_vec().unwrap())
+        .collect();
+    let ins = g.get("inputs").unwrap().as_arr().unwrap();
+    let w = read_tensor(&m, ins[0].as_str().unwrap(), shapes[0].clone());
+    let b = read_tensor(&m, ins[1].as_str().unwrap(), shapes[1].clone());
+    let x = read_tensor(&m, ins[2].as_str().unwrap(), shapes[2].clone());
+    let want = read_tensor(&m, g.get("output").unwrap().as_str().unwrap(), shapes[3].clone());
+    let got = rt.execute(&m, name, &[&w, &b, &x]).unwrap();
+    assert_eq!(got.shape(), want.shape());
+    assert!(got.max_abs_diff(&want) < 1e-4, "diff={}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn cdc_recovery_matches_golden() {
+    // Execute 2 surviving data shards + parity through the *artifact*, and
+    // reconstruct the missing one by subtraction — the paper's §5.2 flow.
+    let (rt, m) = load();
+    let g = golden(&m, "cdc_fc");
+    let name = g.get("artifact").unwrap().as_str().unwrap();
+    let mtot = g.get("m").unwrap().as_usize().unwrap();
+    let k = g.get("k").unwrap().as_usize().unwrap();
+    let n_shards = g.get("n_shards").unwrap().as_usize().unwrap();
+    let ms = mtot / n_shards;
+
+    let wfull = read_tensor(&m, g.get("w_full").unwrap().as_str().unwrap(), vec![mtot, k]);
+    let bfull = read_tensor(&m, g.get("b_full").unwrap().as_str().unwrap(), vec![mtot, 1]);
+    let x = read_tensor(&m, g.get("x").unwrap().as_str().unwrap(), vec![k, 1]);
+
+    // Build shard weights in rust (row slices) + parity (sum of shards).
+    let mut shard_w: Vec<Tensor> = Vec::new();
+    let mut shard_b: Vec<Tensor> = Vec::new();
+    for s in 0..n_shards {
+        let w = Tensor::new(
+            vec![ms, k],
+            wfull.data()[s * ms * k..(s + 1) * ms * k].to_vec(),
+        )
+        .unwrap();
+        let b = Tensor::new(vec![ms, 1], bfull.data()[s * ms..(s + 1) * ms].to_vec()).unwrap();
+        shard_w.push(w);
+        shard_b.push(b);
+    }
+    let mut pw = Tensor::zeros(vec![ms, k]);
+    let mut pb = Tensor::zeros(vec![ms, 1]);
+    for (w, b) in shard_w.iter().zip(&shard_b) {
+        pw.add_assign(w).unwrap();
+        pb.add_assign(b).unwrap();
+    }
+
+    // Expected outputs from the python side.
+    let outs = g.get("shard_outputs").unwrap().as_arr().unwrap();
+    let want: Vec<Tensor> = outs
+        .iter()
+        .map(|o| read_tensor(&m, o.as_str().unwrap(), vec![ms, 1]))
+        .collect();
+
+    // Run every shard through the artifact; check against golden.
+    let mut got: Vec<Tensor> = Vec::new();
+    for i in 0..n_shards {
+        let y = rt.execute(&m, name, &[&shard_w[i], &shard_b[i], &x]).unwrap();
+        assert!(y.max_abs_diff(&want[i]) < 1e-4, "shard {i}");
+        got.push(y);
+    }
+    let parity = rt.execute(&m, name, &[&pw, &pb, &x]).unwrap();
+    assert!(parity.max_abs_diff(&want[n_shards]) < 1e-4, "parity");
+
+    // Lose shard 1; recover via parity − others.
+    let mut rec = parity.clone();
+    rec.sub_assign(&got[0]).unwrap();
+    rec.sub_assign(&got[2]).unwrap();
+    assert!(
+        rec.max_abs_diff(&want[1]) < 1e-3,
+        "recovered diff={}",
+        rec.max_abs_diff(&want[1])
+    );
+}
+
+#[test]
+fn conv_artifact_runs_and_shapes() {
+    let (rt, m) = load();
+    // Find any conv artifact and run it on zero inputs; shape must match.
+    let meta = m
+        .artifacts
+        .values()
+        .find(|a| matches!(a.kind, cdc_dnn::runtime::ArtifactKind::Conv))
+        .expect("at least one conv artifact");
+    let ins: Vec<Tensor> = meta.params.iter().map(|p| Tensor::zeros(p.clone())).collect();
+    let refs: Vec<&Tensor> = ins.iter().collect();
+    let out = rt.execute(&m, &meta.name, &refs).unwrap();
+    assert_eq!(out.shape().len(), 3, "conv shard output is (OH, OW, K_s)");
+}
+
+#[test]
+fn builder_fallback_matches_artifact() {
+    let (rt, m) = load();
+    let g = golden(&m, "fc");
+    let name = g.get("artifact").unwrap().as_str().unwrap();
+    let meta = m.artifact(name).unwrap();
+    let (mm, kk) = (meta.params[0][0], meta.params[0][1]);
+    let mut rng = cdc_dnn::rng::Pcg32::seeded(99);
+    let w = Tensor::randn(vec![mm, kk], &mut rng);
+    let b = Tensor::randn(vec![mm, 1], &mut rng);
+    let x = Tensor::randn(vec![kk, 1], &mut rng);
+    let via_artifact = rt.execute(&m, name, &[&w, &b, &x]).unwrap();
+    let exe = rt.build_gemm(mm, kk, 1, true, true).unwrap();
+    let via_builder = rt.run_built(&exe, &[&w, &x, &b]).unwrap();
+    assert!(via_artifact.max_abs_diff(&via_builder) < 1e-4);
+}
