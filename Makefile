@@ -1,0 +1,26 @@
+# Build entry points. `make artifacts` needs the python toolchain
+# (jax + the repo's compile package); everything rust-side builds and
+# tests offline without it (see DESIGN.md §3/§7).
+
+ARTIFACTS ?= rust/artifacts
+
+.PHONY: artifacts build test bench fmt clippy
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+	ln -sfn $(ARTIFACTS) artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy -- -D warnings

@@ -1,21 +1,22 @@
 //! END-TO-END serving driver (DESIGN.md §5): load the *trained* LeNet-5,
 //! deploy it across a six-device simulated IoT fleet (four data devices +
-//! CDC parity devices), and serve the entire held-out evaluation set as
-//! single-batch requests through the full stack — Pallas-authored AOT
-//! artifacts executed via PJRT on real threads, WiFi-jittered timing,
-//! an intermittently failing device, and straggler mitigation on.
+//! CDC parity devices), and serve the entire held-out evaluation set
+//! through the **pipelined serving engine** — many requests in flight at
+//! once across the distributed stages, Pallas-authored AOT artifacts
+//! executed on real threads, WiFi-jittered timing, an intermittently
+//! failing device, and straggler mitigation on.
 //!
 //! Reports: classification accuracy (must match the clean model — CDC
-//! recovery is exact), simulated latency distribution, recovery counts,
-//! lost requests (must be zero), and harness wall-clock throughput.
+//! recovery is exact), measured pipelined throughput (rps), end-to-end
+//! latency percentiles, per-stage utilization, recovery counts, lost
+//! requests (must be zero), and harness wall-clock throughput.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serving
 //! ```
 
-use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec};
+use cdc_dnn::coordinator::{Pipeline, Session, SessionConfig, SplitSpec, Workload};
 use cdc_dnn::fleet::FailurePlan;
-use cdc_dnn::metrics::Series;
 use cdc_dnn::model::load_eval_set;
 use cdc_dnn::runtime::Manifest;
 
@@ -36,7 +37,6 @@ fn main() -> cdc_dnn::Result<()> {
     cfg.placement.insert("conv2".into(), vec![1]);
     cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
     cfg.placement.insert("fc2".into(), vec![2, 3]);
-    cfg.placement.insert("fc3".into(), vec![0]);
     cfg.threshold_factor = 1.5; // straggler mitigation
     let mut session = Session::start(artifacts, cfg)?;
     println!(
@@ -49,36 +49,31 @@ fn main() -> cdc_dnn::Result<()> {
     // Device 3 drops 20% of its replies (intermittent IoT failure).
     session.set_failure(3, FailurePlan::Intermittent(0.2))?;
 
-    let mut lat = Series::new();
-    let mut correct = 0usize;
-    let mut recovered = 0usize;
-    let mut lost = 0usize;
+    // Serve the whole eval set through the pipeline: closed loop with one
+    // request per distributed stage keeps every stage busy.
+    let workload = Workload::closed(images.clone(), session.saturating_concurrency());
     let t0 = std::time::Instant::now();
-    for (img, &label) in images.iter().zip(&labels) {
-        match session.infer(img) {
-            Ok(trace) => {
-                lat.record(trace.total_ms);
-                if trace.output.argmax() == label as usize {
-                    correct += 1;
-                }
-                if trace.any_recovery {
-                    recovered += 1;
-                }
-            }
-            Err(_) => {
-                lost += 1;
-                session.drain();
-            }
-        }
-    }
+    let report = Pipeline::new(&mut session).run(&workload)?;
     let wall = t0.elapsed().as_secs_f64();
-    let n = images.len();
-    let s = lat.summary();
 
-    println!("\n=== end-to-end serving report ===");
-    println!("requests served:     {n}");
-    println!("lost requests:       {lost}  (paper claim: never loses a request)");
-    println!("CDC recoveries:      {recovered}");
+    let n = images.len();
+    // Match traces to labels by request id (this session is fresh, so
+    // req == eval-set index) — a positional zip would misalign every
+    // pair after a lost request.
+    let correct = report
+        .traces
+        .iter()
+        .filter(|t| t.output.argmax() == labels[t.req as usize] as usize)
+        .count();
+    let s = report.latency.summary();
+
+    println!("\n=== end-to-end pipelined serving report ===");
+    println!("requests served:     {}", report.throughput.completed);
+    println!(
+        "lost requests:       {}  (paper claim: never loses a request)",
+        report.failures.len()
+    );
+    println!("CDC recoveries:      {}", report.throughput.recovered);
     println!(
         "accuracy:            {:.2}% (trained clean accuracy ≈ {:.2}%)",
         100.0 * correct as f64 / n as f64,
@@ -90,15 +85,37 @@ fn main() -> cdc_dnn::Result<()> {
             .and_then(|v| v.as_f64())
             .unwrap_or(f64::NAN)
     );
-    println!("simulated latency:   {}", s.line());
-    println!("{}", lat.render_histogram(0.0, s.p99.max(100.0), 14, 36));
     println!(
-        "harness wall-clock:  {wall:.1}s → {:.1} req/s through real PJRT compute",
+        "pipelined throughput: {:.1} req/s over {:.0} ms of virtual time \
+         (peak {} in flight)",
+        report.rps(),
+        report.makespan_ms,
+        report.max_concurrent_requests
+    );
+    println!("e2e latency:         {}", s.line());
+    println!("queue wait:          {}", report.queue_wait.summary().line());
+    println!("{}", report.latency.render_histogram(0.0, s.p99.max(100.0), 14, 36));
+    println!("per-stage utilization:");
+    for st in &report.stages {
+        println!(
+            "  {:<8} served={:<4} busy={:>8.1}ms util={:>5.1}%",
+            st.layer,
+            st.served,
+            st.busy_ms,
+            100.0 * st.utilization
+        );
+    }
+    println!(
+        "harness wall-clock:  {wall:.1}s → {:.1} req/s through real compute",
         n as f64 / wall
     );
 
-    assert_eq!(lost, 0, "CDC system must not lose requests");
-    assert!(recovered > 0, "failure injection must exercise recovery");
+    assert_eq!(report.failures.len(), 0, "CDC system must not lose requests");
+    assert!(report.throughput.recovered > 0, "failure injection must exercise recovery");
+    assert!(
+        report.max_concurrent_requests >= 2,
+        "pipeline must keep multiple requests in flight"
+    );
     println!("e2e_serving OK");
     Ok(())
 }

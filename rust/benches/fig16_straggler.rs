@@ -33,6 +33,9 @@ fn mean_latency(d: usize, threshold: f64, reqs: usize) -> f64 {
 }
 
 fn main() {
+    if !cdc_dnn::testkit::artifacts_available(std::path::Path::new("artifacts")) {
+        return;
+    }
     let reqs = 150;
 
     // Fig. 16 series: improvement vs device count.

@@ -10,6 +10,9 @@ use cdc_dnn::runtime::{Manifest, Runtime};
 use cdc_dnn::tensor::Tensor;
 
 fn main() {
+    if !cdc_dnn::testkit::artifacts_available(std::path::Path::new("artifacts")) {
+        return;
+    }
     let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
     let runtime = Runtime::new().expect("pjrt");
     let mut rng = Pcg32::seeded(1);

@@ -1,0 +1,93 @@
+//! Bench target for the pipelined serving engine: wall-clock scheduler
+//! overhead (virtual-time bookkeeping + dispatch/gather/resolve rounds)
+//! at d=4, CDC on and off.
+//!
+//! Runs entirely on the synthetic artifact set (`testkit::synth`) — no
+//! python/AOT build step — so it measures the *engine*, not XLA. Writes a
+//! baseline record in the bench JSON format to
+//! `results/bench_serving_throughput.json`.
+//!
+//! Run with `cargo bench --bench serving_throughput`.
+
+use cdc_dnn::bench::Bench;
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec, Workload};
+use cdc_dnn::fleet::NetConfig;
+use cdc_dnn::json::{obj, Value};
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::synth;
+
+const REQUESTS: usize = 64;
+const CONCURRENCY: usize = 4;
+
+fn session(root: &std::path::Path, cdc: bool) -> Session {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::ideal();
+    cfg.splits.insert(
+        "fc1".into(),
+        if cdc { SplitSpec::cdc(4) } else { SplitSpec::plain(4) },
+    );
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    cfg.placement.insert("fc2".into(), vec![0]);
+    Session::start(root, cfg).expect("synthetic session")
+}
+
+fn main() {
+    let synth = synth::build(42).expect("synthetic artifacts");
+    let mut rng = Pcg32::seeded(9);
+    let inputs: Vec<Tensor> = (0..REQUESTS)
+        .map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng))
+        .collect();
+    let workload = Workload::closed(inputs, CONCURRENCY);
+
+    let mut results = Vec::new();
+    for cdc in [false, true] {
+        let mut s = session(&synth.root, cdc);
+        let label = if cdc { "cdc" } else { "plain" };
+        // Sanity pass: the pipeline must overlap requests and lose none.
+        let report = s.serve(&workload).expect("pipeline run");
+        assert_eq!(report.throughput.completed as usize, REQUESTS);
+        assert!(report.max_concurrent_requests >= 2);
+        println!("serve[{label}]: {}", report.line());
+
+        let summary = Bench::new(&format!(
+            "serve/pipeline_d4_{label} ({REQUESTS} reqs, c={CONCURRENCY})"
+        ))
+        .iters(2, 10)
+        .run(|| {
+            s.serve(&workload).expect("pipeline run");
+        });
+        let per_request_us = summary.mean * 1000.0 / REQUESTS as f64;
+        let wall_rps = REQUESTS as f64 / (summary.mean / 1000.0);
+        println!(
+            "  scheduler overhead: {per_request_us:.1} µs/request \
+             ({wall_rps:.0} req/s wall-clock)"
+        );
+        results.push(obj(vec![
+            ("bench", Value::Str(format!("serve_pipeline_d4_{label}"))),
+            ("requests", Value::Num(REQUESTS as f64)),
+            ("concurrency", Value::Num(CONCURRENCY as f64)),
+            ("cdc", Value::Bool(cdc)),
+            ("mean_ms_per_run", Value::Num(summary.mean)),
+            ("p95_ms_per_run", Value::Num(summary.p95)),
+            ("per_request_us", Value::Num(per_request_us)),
+            ("wall_rps", Value::Num(wall_rps)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("experiment", Value::Str("bench_serving_throughput".into())),
+        (
+            "backend",
+            Value::Str(
+                if cfg!(feature = "pjrt") { "pjrt" } else { "interpreter" }.into(),
+            ),
+        ),
+        ("baselines", Value::Arr(results)),
+    ]);
+    std::fs::create_dir_all("results").expect("results dir");
+    let path = "results/bench_serving_throughput.json";
+    std::fs::write(path, doc.to_string_pretty()).expect("write baseline");
+    println!("[result] wrote {path}");
+}

@@ -1,9 +1,22 @@
 //! The L3 coordinator: deploys a model across the fleet per an assignment
-//! plan, drives single-batch inference requests through it, merges shard
-//! outputs, and applies the paper's robustness machinery (CDC parity,
-//! straggler substitution, 2MR, failover).
+//! plan, drives inference requests through it, merges shard outputs, and
+//! applies the paper's robustness machinery (CDC parity, straggler
+//! substitution, 2MR, failover).
+//!
+//! The coordinator is layered (DESIGN.md §4-5):
+//!
+//! * [`policy`] — pure gather-resolution semantics (when/how a layer
+//!   completes), property-tested in isolation;
+//! * [`stage`] — the per-layer execution unit: dispatch → policy →
+//!   CDC/2MR recovery → merge, free of any notion of "current request";
+//! * [`serve`] — the pipelined multi-request engine that schedules many
+//!   requests across stages in virtual time;
+//! * [`Session`] — deployment + the thin single-request `infer` wrapper
+//!   over the serving engine.
 
 pub mod policy;
+pub mod serve;
+pub mod stage;
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -11,13 +24,16 @@ use std::sync::Arc;
 
 use crate::cdc;
 use crate::error::{Error, Result};
-use crate::fleet::{Completion, Device, DeviceConfig, NetConfig, TaskDef, WorkOrder};
+use crate::fleet::{Completion, Device, DeviceConfig, NetConfig, TaskDef};
 use crate::model::{shard_io_bytes, shard_macs, Weights};
 use crate::partition::LayerPlan;
-use crate::runtime::manifest::{LayerManifest, Manifest, ModelManifest};
+use crate::runtime::manifest::{Manifest, ModelManifest};
 use crate::runtime::server::{ComputeHandle, ComputeServer};
 use crate::tensor::Tensor;
 pub use policy::Outcome;
+pub use serve::{Arrivals, Pipeline, ServeReport, StageStats, Workload};
+pub use stage::Stage;
+use stage::{DistStage, StageKind};
 
 /// Redundancy mode of one distributed layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,30 +111,6 @@ impl SessionConfig {
     }
 }
 
-/// How one layer executes.
-enum Exec {
-    /// Merge-point op (pool/flatten/gap) — negligible cost.
-    Local(usize),
-    /// Distributed (possibly d=1) weighted layer.
-    Shards {
-        layer_idx: usize,
-        /// The split plan (kept for introspection/ablations).
-        #[allow(dead_code)]
-        plan: LayerPlan,
-        /// (device, task id) per data shard.
-        data: Vec<(usize, u64)>,
-        /// CDC parity devices: (device, task id, covered shard indices).
-        parities: Vec<(usize, u64, Vec<usize>)>,
-        /// 2MR replicas: (device, task id) aligned with `data`.
-        replicas: Vec<(usize, u64)>,
-        /// Fused-activation artifact in use (non-CDC fast path)?
-        fused_relu: bool,
-        /// Expected service time (ms) for the threshold gate.
-        expected_ms: f64,
-        request_bytes: u64,
-    },
-}
-
 /// Per-layer trace of one request.
 #[derive(Debug, Clone)]
 pub struct LayerTrace {
@@ -138,7 +130,13 @@ pub struct LayerTrace {
 pub struct RequestTrace {
     pub req: u64,
     pub output: Tensor,
+    /// End-to-end latency: arrival → completion (equals completion time
+    /// for a single-shot `infer`, whose request arrives at t=0).
     pub total_ms: f64,
+    /// Virtual arrival instant on the serving timeline.
+    pub t_arrival_ms: f64,
+    /// Virtual completion instant on the serving timeline.
+    pub t_done_ms: f64,
     pub layers: Vec<LayerTrace>,
     /// True if any layer used CDC substitution.
     pub any_recovery: bool,
@@ -149,7 +147,9 @@ impl RequestTrace {
     /// steady-state serving the request *rate* is bottleneck-limited, so
     /// the paper's Case-Study-I "2.4x slowdown" manifests as this
     /// stage time doubling when a failed device's shard is re-assigned
-    /// serially onto its neighbour.
+    /// serially onto its neighbour. `coordinator::serve` measures the
+    /// pipelined rate directly; this remains the analytic cross-check
+    /// (`exp::case1` asserts the two agree).
     pub fn bottleneck_ms(&self) -> f64 {
         self.layers
             .iter()
@@ -163,7 +163,8 @@ pub struct Session {
     cfg: SessionConfig,
     model: ModelManifest,
     devices: Vec<Device>,
-    exec: Vec<Exec>,
+    /// Per-layer pipeline stages, in model order.
+    stages: Vec<Stage>,
     /// Task definitions kept for failover re-deployment.
     task_defs: BTreeMap<u64, TaskDef>,
     /// task id → owning device (mutated by failover).
@@ -210,7 +211,7 @@ impl Session {
         let weights = Weights::load(&manifest, &model)?;
 
         // ---- build the execution plan --------------------------------
-        let mut exec = Vec::new();
+        let mut stages = Vec::new();
         let mut next_task = 0u64;
         let mut next_data_dev = 0usize;
         let mut extra = 0usize;
@@ -224,7 +225,7 @@ impl Session {
 
         for (layer_idx, layer) in model.layers.iter().enumerate() {
             if !layer.is_weighted() {
-                exec.push(Exec::Local(layer_idx));
+                stages.push(Stage { kind: StageKind::Local { layer_idx } });
                 continue;
             }
             let spec = cfg
@@ -345,7 +346,7 @@ impl Session {
                     }
                 }
                 Redundancy::TwoMr => {
-                    for (i, (w, b)) in shard_wb.iter().enumerate() {
+                    for (w, b) in shard_wb.iter() {
                         let task = next_task;
                         next_task += 1;
                         let device = cfg.n_devices + extra;
@@ -362,7 +363,6 @@ impl Session {
                                 reply_bytes,
                             },
                         });
-                        let _ = i;
                         replicas.push((device, task));
                     }
                 }
@@ -372,15 +372,18 @@ impl Session {
                 + ((req_bytes + reply_bytes) as f64 * 8.0)
                     / (cfg.net.bandwidth_mbps * 1000.0);
             let expected_ms = macs as f64 / cfg.device_rate + net_ms;
-            exec.push(Exec::Shards {
-                layer_idx,
-                plan,
-                data,
-                parities,
-                replicas,
-                fused_relu,
-                expected_ms,
-                request_bytes: req_bytes,
+            stages.push(Stage {
+                kind: StageKind::Dist(DistStage {
+                    layer_idx,
+                    plan,
+                    data,
+                    parities,
+                    replicas,
+                    fused_relu,
+                    expected_ms,
+                    request_bytes: req_bytes,
+                    macs,
+                }),
             });
         }
 
@@ -425,7 +428,7 @@ impl Session {
             cfg,
             model,
             devices,
-            exec,
+            stages,
             task_defs,
             task_owner,
             completions: crx,
@@ -445,6 +448,43 @@ impl Session {
     /// The model served by this session.
     pub fn model(&self) -> &ModelManifest {
         &self.model
+    }
+
+    /// The session's pipeline stages, in model order.
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Number of distributed (occupancy-holding) stages.
+    pub fn distributed_stage_count(&self) -> usize {
+        self.stages.iter().filter(|s| s.is_distributed()).count()
+    }
+
+    /// Closed-loop concurrency that saturates the pipeline: one request
+    /// per distributed stage (at least 2 so overlap is possible).
+    pub fn saturating_concurrency(&self) -> usize {
+        self.distributed_stage_count().max(2)
+    }
+
+    /// Split-plan introspection: (layer name, plan) for every distributed
+    /// stage, in pipeline order — the ablation experiments and deployment
+    /// tooling read these instead of re-deriving plans.
+    pub fn layer_plans(&self) -> Vec<(&str, &LayerPlan)> {
+        self.stages
+            .iter()
+            .filter_map(|s| match &s.kind {
+                StageKind::Dist(d) => Some((
+                    self.model.layers[d.layer_idx].name.as_str(),
+                    &d.plan,
+                )),
+                StageKind::Local { .. } => None,
+            })
+            .collect()
+    }
+
+    /// Devices the coordinator has failed over away from.
+    pub fn known_failed(&self) -> &[usize] {
+        &self.known_failed
     }
 
     /// Inject a failure plan into a device (experiments flip this).
@@ -476,21 +516,21 @@ impl Session {
         for t in &moved {
             self.task_owner.insert(*t, target);
         }
-        for e in &mut self.exec {
-            if let Exec::Shards { data, parities, replicas, .. } = e {
-                for (d, t) in data.iter_mut() {
+        for st in &mut self.stages {
+            if let StageKind::Dist(d) = &mut st.kind {
+                for (dev, t) in d.data.iter_mut() {
                     if moved.contains(t) {
-                        *d = target;
+                        *dev = target;
                     }
                 }
-                for (d, t, _) in parities.iter_mut() {
+                for (dev, t, _) in d.parities.iter_mut() {
                     if moved.contains(t) {
-                        *d = target;
+                        *dev = target;
                     }
                 }
-                for (d, t) in replicas.iter_mut() {
+                for (dev, t) in d.replicas.iter_mut() {
                     if moved.contains(t) {
-                        *d = target;
+                        *dev = target;
                     }
                 }
             }
@@ -499,235 +539,24 @@ impl Session {
         Ok(moved.len())
     }
 
-    /// Run one single-batch inference through the distributed model.
+    /// Run one single-batch inference through the distributed model —
+    /// the single-request special case of [`Session::serve`].
     pub fn infer(&mut self, input: &Tensor) -> Result<RequestTrace> {
-        let req = self.next_req;
-        self.next_req += 1;
-        let mut t_now = 0.0f64;
-        let mut traces = Vec::new();
-        let mut any_recovery = false;
-
-        let mut cur = if self.model.input_shape.len() == 1 {
-            input.clone().reshape(vec![input.len(), 1])?
-        } else {
-            input.clone()
-        };
-
-        // Local clones to avoid borrowing `self` across the loop.
-        for ei in 0..self.exec.len() {
-            match &self.exec[ei] {
-                Exec::Local(layer_idx) => {
-                    let layer = &self.model.layers[*layer_idx];
-                    cur = apply_local(layer, cur)?;
-                }
-                Exec::Shards {
-                    layer_idx,
-                    plan: _,
-                    data,
-                    parities,
-                    replicas,
-                    fused_relu,
-                    expected_ms,
-                    request_bytes,
-                } => {
-                    let layer = &self.model.layers[*layer_idx];
-                    let t_start = t_now;
-
-                    // ---- dispatch: group tasks per device (a device with
-                    // several tasks — e.g. after failover — runs serially).
-                    let mut orders: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
-                    let all_tasks = data
-                        .iter()
-                        .copied()
-                        .chain(parities.iter().map(|(d, t, _)| (*d, *t)))
-                        .chain(replicas.iter().copied());
-                    for (dev, task) in all_tasks {
-                        orders.entry(dev).or_default().push(task);
-                    }
-                    let n_expected: usize =
-                        orders.values().map(|v| v.len()).sum();
-                    let shared_input = Arc::new(cur.clone());
-                    for (dev, tasks) in &orders {
-                        self.devices[*dev].dispatch(WorkOrder {
-                            req,
-                            tasks: tasks.clone(),
-                            input: shared_input.clone(),
-                            request_bytes: *request_bytes,
-                            t_dispatch_ms: t_now,
-                        })?;
-                    }
-
-                    // ---- gather all completions for this layer.
-                    let mut by_task: BTreeMap<u64, Completion> = BTreeMap::new();
-                    while by_task.len() < n_expected {
-                        let c = self.completions.recv().map_err(|_| {
-                            Error::Fleet("completion channel closed".into())
-                        })?;
-                        if c.req == req {
-                            by_task.insert(c.task, c);
-                        }
-                    }
-
-                    // ---- resolve the outcome via the pure policy layer.
-                    let data_t: Vec<f64> = data
-                        .iter()
-                        .map(|(_, t)| by_task[t].t_arrival_ms)
-                        .collect();
-                    let threshold = if self.cfg.threshold_factor.is_finite() {
-                        t_now + self.cfg.threshold_factor * expected_ms
-                    } else {
-                        f64::INFINITY
-                    };
-                    // Normalise every redundancy mode into (t_ms, missing
-                    // data-shard indices to reconstruct, trace kind).
-                    let lost = |layer: &LayerManifest| {
-                        Error::Fleet(format!(
-                            "request {req} lost at layer {} (unrecoverable)",
-                            layer.name
-                        ))
-                    };
-                    let (t_ms, missing, kind) = if !replicas.is_empty() {
-                        let rep_t: Vec<f64> = replicas
-                            .iter()
-                            .map(|(_, t)| by_task[t].t_arrival_ms)
-                            .collect();
-                        match policy::resolve_2mr(&data_t, &rep_t) {
-                            policy::Outcome::Lost => return Err(lost(layer)),
-                            o => (o.t_ms(), Vec::new(), "all_data"),
-                        }
-                    } else if !parities.is_empty() {
-                        let par_t: Vec<f64> = parities
-                            .iter()
-                            .map(|(_, t, _)| by_task[t].t_arrival_ms)
-                            .collect();
-                        let groups: Vec<Vec<usize>> =
-                            parities.iter().map(|(_, _, g)| g.clone()).collect();
-                        match policy::resolve_grouped(&data_t, &par_t, &groups, threshold)
-                        {
-                            policy::GroupedOutcome::Lost => return Err(lost(layer)),
-                            policy::GroupedOutcome::Ok { t_ms, missing } => {
-                                let kind =
-                                    if missing.is_empty() { "all_data" } else { "recovered" };
-                                (t_ms, missing, kind)
-                            }
-                        }
-                    } else {
-                        match policy::resolve(&data_t, None, f64::INFINITY) {
-                            policy::Outcome::Lost => return Err(lost(layer)),
-                            o => (o.t_ms(), Vec::new(), "all_data"),
-                        }
-                    };
-                    if !missing.is_empty() {
-                        any_recovery = true;
-                    }
-
-                    // ---- materialise shard outputs (decode the missing
-                    // ones from their parity group: parity − Σ received —
-                    // the paper's close-to-zero-latency subtraction).
-                    let mut parts: Vec<Option<Tensor>> = data
-                        .iter()
-                        .map(|(_, t)| by_task[t].result.clone())
-                        .collect();
-                    // 2MR: fill from the replica when the primary is lost.
-                    for (i, (_, rt)) in replicas.iter().enumerate() {
-                        if parts[i].is_none() {
-                            parts[i] = by_task[rt].result.clone();
-                        }
-                    }
-                    for &mi in &missing {
-                        let (_, ptask, cover) = parities
-                            .iter()
-                            .find(|(_, _, g)| g.contains(&mi))
-                            .expect("recovered shard must be covered");
-                        let parity_out = by_task[ptask]
-                            .result
-                            .clone()
-                            .ok_or_else(|| Error::Fleet("parity result lost".into()))?;
-                        let received: Vec<Tensor> = cover
-                            .iter()
-                            .filter(|&&i| i != mi)
-                            .map(|&i| {
-                                parts[i].clone().ok_or_else(|| {
-                                    Error::Fleet("covered shard lost".into())
-                                })
-                            })
-                            .collect::<Result<Vec<_>>>()?;
-                        let refs: Vec<&Tensor> = received.iter().collect();
-                        parts[mi] = Some(cdc::decode(&parity_out, &refs)?);
-                    }
-                    let out: Vec<Tensor> = parts
-                        .into_iter()
-                        .enumerate()
-                        .map(|(i, p)| {
-                            p.ok_or_else(|| {
-                                Error::Fleet(format!("shard {i} unexpectedly lost"))
-                            })
-                        })
-                        .collect::<Result<Vec<_>>>()?;
-                    t_now = t_ms;
-                    let missing_first = missing.first().copied();
-
-                    // Merge: concat + trim padding + deferred epilogue.
-                    let refs: Vec<&Tensor> = out.iter().collect();
-                    let mut merged = if layer.kind == "fc" {
-                        Tensor::concat0(&refs)?.take_rows(layer.m)?
-                    } else {
-                        let cat = Tensor::concat_channels(&refs)?;
-                        cat.take_channels(0, layer.k)?
-                    };
-                    if layer.relu && !fused_relu {
-                        merged.relu();
-                    }
-                    if layer.kind == "conv" && layer.pool > 0 {
-                        merged = merged.maxpool(layer.pool, layer.pool)?;
-                    }
-                    cur = merged;
-
-                    traces.push(LayerTrace {
-                        layer: layer.name.clone(),
-                        t_start_ms: t_start,
-                        t_done_ms: t_now,
-                        outcome: kind,
-                        recovered_shard: missing_first,
-                        data_arrivals_ms: data_t.clone(),
-                        aux_arrivals_ms: parities
-                            .iter()
-                            .map(|(_, t, _)| by_task[t].t_arrival_ms)
-                            .chain(replicas.iter().map(|(_, t)| by_task[t].t_arrival_ms))
-                            .collect(),
-                    });
-                }
-            }
+        let report = self.serve(&Workload::single(input.clone()))?;
+        if let Some((req, layer)) = report.failures.first() {
+            return Err(Error::Fleet(format!(
+                "request {req} lost at layer {layer} (unrecoverable)"
+            )));
         }
-
-        Ok(RequestTrace {
-            req,
-            output: cur,
-            total_ms: t_now,
-            layers: traces,
-            any_recovery,
-        })
+        report
+            .traces
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Fleet("pipeline produced no trace".into()))
     }
 
     /// Drain stale completions (lost requests leave orphans behind).
     pub fn drain(&mut self) {
         while self.completions.try_recv().is_ok() {}
-    }
-}
-
-fn apply_local(layer: &LayerManifest, cur: Tensor) -> Result<Tensor> {
-    match layer.kind.as_str() {
-        "maxpool" => cur.maxpool(layer.pool, layer.pool),
-        "flatten" => Ok(cur.flatten_col()),
-        "gap" => cur.gap(),
-        other => Err(Error::Config(format!("unexpected local layer {other}"))),
-    }
-}
-
-impl Manifest {
-    /// Cheap logical clone for sessions sharing a compute server: re-reads
-    /// the manifest from disk (the JSON is small).
-    pub fn clone_shallow(&self) -> Result<Manifest> {
-        Manifest::load(&self.root)
     }
 }

@@ -1,0 +1,564 @@
+//! Pipelined multi-request serving engine (DESIGN.md §5).
+//!
+//! The paper frames its robustness results in terms of *pipelined
+//! steady-state serving*: each distributed stage holds one request at a
+//! time, so with S stages up to S requests are in flight and the request
+//! rate is limited by the slowest stage — which is exactly why Case Study
+//! I's failover (one device running two fc6 shards serially) manifests as
+//! a ~2.4× throughput hit. This module makes that pipeline real instead
+//! of proxying it through `RequestTrace::bottleneck_ms`.
+//!
+//! ## Model
+//!
+//! An event-driven scheduler over **virtual time**: requests are admitted
+//! from a [`Workload`] (open-loop Poisson/uniform arrivals or a
+//! closed-loop concurrency window), queue FIFO in front of each
+//! distributed [`Stage`](super::stage::Stage), and occupy a stage
+//! exclusively from dispatch to resolution. Back-pressure is structural —
+//! a request cannot enter stage *s* while its predecessor holds it, so
+//! head-of-line blocking propagates upstream into the admission queue
+//! (whose depth an optional `admission_cap` bounds by balking arrivals).
+//! Devices shared by several stages serialise their compute through the
+//! per-device occupancy ledger (`fleet::WorkOrder::not_before_ms`).
+//!
+//! Scheduling decisions depend only on virtual timestamps, never on
+//! wall-clock arrival order of thread completions, so a seed + workload
+//! determines the whole [`ServeReport`] bit-for-bit. Real PJRT (or
+//! interpreter) compute still runs for every shard of every request —
+//! outputs are exact, only time is simulated.
+//!
+//! One approximation: when two stages share a device, the ledger orders
+//! their compute by dispatch order (sorted by virtual entry time within a
+//! scheduling round); dispatches from different rounds can be ledger-
+//! ordered against virtual-time order by at most one stage service.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::fleet::Completion;
+use crate::metrics::{self, Intervals, Series, Throughput};
+use crate::rng::Pcg32;
+use crate::runtime::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+use super::stage::{Stage, StageKind, StageOutcome};
+use super::{RequestTrace, Session};
+
+/// Arrival process of a workload.
+#[derive(Debug, Clone)]
+pub enum Arrivals {
+    /// Open loop: i.i.d. exponential inter-arrival times at `rate_rps`
+    /// requests/second (the classic Poisson arrival stream).
+    Poisson { rate_rps: f64 },
+    /// Open loop: fixed inter-arrival gap in ms (0 = all at t=0).
+    Uniform { gap_ms: f64 },
+    /// Closed loop: `concurrency` requests outstanding; each completion
+    /// (or loss) admits the next.
+    Closed { concurrency: usize },
+}
+
+/// A serving workload: inputs plus how they arrive.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub inputs: Vec<Tensor>,
+    pub arrivals: Arrivals,
+    /// Seed for the arrival process (open-loop Poisson).
+    pub seed: u64,
+    /// Open-loop only: max requests waiting for the entry stage; an
+    /// arrival finding the queue full balks (is dropped), bounding
+    /// queueing delay under overload.
+    pub admission_cap: Option<usize>,
+}
+
+impl Workload {
+    /// Closed-loop workload with a fixed concurrency window.
+    pub fn closed(inputs: Vec<Tensor>, concurrency: usize) -> Workload {
+        Workload {
+            inputs,
+            arrivals: Arrivals::Closed { concurrency: concurrency.max(1) },
+            seed: 0,
+            admission_cap: None,
+        }
+    }
+
+    /// Open-loop Poisson workload at `rate_rps` requests/second.
+    pub fn poisson(inputs: Vec<Tensor>, rate_rps: f64, seed: u64) -> Workload {
+        Workload {
+            inputs,
+            arrivals: Arrivals::Poisson { rate_rps },
+            seed,
+            admission_cap: None,
+        }
+    }
+
+    /// Open-loop workload with fixed inter-arrival gap (ms).
+    pub fn uniform(inputs: Vec<Tensor>, gap_ms: f64) -> Workload {
+        Workload {
+            inputs,
+            arrivals: Arrivals::Uniform { gap_ms },
+            seed: 0,
+            admission_cap: None,
+        }
+    }
+
+    /// One request, admitted at t=0 — `Session::infer`'s workload.
+    pub fn single(input: Tensor) -> Workload {
+        Workload::closed(vec![input], 1)
+    }
+
+    /// Bound the entry-stage queue (open loop).
+    pub fn with_admission_cap(mut self, cap: usize) -> Workload {
+        self.admission_cap = Some(cap);
+        self
+    }
+}
+
+/// Per-stage serving statistics.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub layer: String,
+    /// Requests this stage served to completion.
+    pub served: usize,
+    /// Total virtual time the stage was occupied.
+    pub busy_ms: f64,
+    /// busy_ms / makespan.
+    pub utilization: f64,
+    /// The raw occupancy trace (one interval per request held).
+    pub occupancy: Intervals,
+}
+
+/// Everything a pipeline run measured.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Completed requests in completion order (outputs are exact).
+    pub traces: Vec<RequestTrace>,
+    /// Lost requests: (request id, layer it was lost at).
+    pub failures: Vec<(u64, String)>,
+    /// Open-loop arrivals that balked at a full admission queue.
+    pub dropped: u64,
+    /// End-to-end latency per completed request (arrival → done).
+    pub latency: Series,
+    /// Service latency (first dispatch → done, excludes queue wait).
+    pub service: Series,
+    /// Admission-queue wait (arrival → first dispatch).
+    pub queue_wait: Series,
+    /// completed/failed/recovered counters over the makespan.
+    pub throughput: Throughput,
+    /// Virtual time from t=0 to the last completion/give-up.
+    pub makespan_ms: f64,
+    /// Per-distributed-stage statistics, in pipeline order.
+    pub stages: Vec<StageStats>,
+    /// Peak number of requests simultaneously holding stages.
+    pub max_concurrent_requests: usize,
+    /// Peak number of simultaneously-busy stages.
+    pub max_concurrent_stages: usize,
+}
+
+impl ServeReport {
+    /// Measured steady-state throughput (requests/second of virtual time).
+    pub fn rps(&self) -> f64 {
+        self.throughput.rps()
+    }
+
+    /// One-line summary for experiment logs.
+    pub fn line(&self) -> String {
+        format!(
+            "served={} failed={} dropped={} recovered={} rps={:.2} \
+             makespan={:.0}ms max_in_flight={}",
+            self.throughput.completed,
+            self.throughput.failed,
+            self.dropped,
+            self.throughput.recovered,
+            self.rps(),
+            self.makespan_ms,
+            self.max_concurrent_requests,
+        )
+    }
+}
+
+/// Handle for driving a session's serving pipeline.
+pub struct Pipeline<'a> {
+    session: &'a mut Session,
+}
+
+impl<'a> Pipeline<'a> {
+    /// Wrap a deployed session.
+    pub fn new(session: &'a mut Session) -> Pipeline<'a> {
+        Pipeline { session }
+    }
+
+    /// Run a workload through the pipeline; see [`Session::serve`].
+    pub fn run(&mut self, workload: &Workload) -> Result<ServeReport> {
+        self.session.serve(workload)
+    }
+}
+
+/// One request's progress through the pipeline.
+struct InFlight {
+    req: u64,
+    t_arrival: f64,
+    /// NaN until the first distributed dispatch.
+    t_first_start: f64,
+    t_ready: f64,
+    stage_idx: usize,
+    cur: Tensor,
+    layers: Vec<super::LayerTrace>,
+    any_recovery: bool,
+}
+
+/// A dispatched (stage, request) pair awaiting completions.
+struct BusyStage {
+    infl: usize,
+    t_enter: f64,
+    n_expected: usize,
+    got: BTreeMap<u64, Completion>,
+}
+
+fn reshape_input(model: &ModelManifest, input: &Tensor) -> Result<Tensor> {
+    if model.input_shape.len() == 1 {
+        input.clone().reshape(vec![input.len(), 1])
+    } else {
+        Ok(input.clone())
+    }
+}
+
+/// Run `fl` through consecutive local (free) stages; true when the
+/// request ran off the end of the pipeline (finished).
+fn advance_locals(
+    stages: &[Stage],
+    model: &ModelManifest,
+    fl: &mut InFlight,
+) -> Result<bool> {
+    while fl.stage_idx < stages.len() {
+        match &stages[fl.stage_idx].kind {
+            StageKind::Local { layer_idx } => {
+                let layer = &model.layers[*layer_idx];
+                let cur = std::mem::replace(&mut fl.cur, Tensor::zeros(vec![0]));
+                fl.cur = super::stage::apply_local(layer, cur)?;
+                fl.stage_idx += 1;
+            }
+            StageKind::Dist(_) => return Ok(false),
+        }
+    }
+    Ok(true)
+}
+
+impl Session {
+    /// Drive a whole workload through the distributed model with many
+    /// requests in flight; returns measured throughput, latency
+    /// percentiles, and per-stage occupancy. `Session::infer` is the
+    /// single-request special case of this engine.
+    pub fn serve(&mut self, workload: &Workload) -> Result<ServeReport> {
+        let total = workload.inputs.len();
+        let n_stages = self.stages.len();
+        let first_dist = self.stages.iter().position(|s| s.is_distributed());
+
+        let first_req = self.next_req;
+        self.next_req += total as u64;
+
+        // Open-loop arrival schedule (closed loop assigns arrivals at
+        // admission time).
+        let open_arrivals: Vec<f64> = match workload.arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                let mut rng = Pcg32::new(workload.seed, 0x4a1);
+                let per_ms = (rate_rps / 1000.0).max(1e-12);
+                let mut t = 0.0;
+                (0..total)
+                    .map(|_| {
+                        t += rng.exponential(per_ms);
+                        t
+                    })
+                    .collect()
+            }
+            Arrivals::Uniform { gap_ms } => {
+                (0..total).map(|i| i as f64 * gap_ms).collect()
+            }
+            Arrivals::Closed { .. } => Vec::new(),
+        };
+        let closed_c = match workload.arrivals {
+            Arrivals::Closed { concurrency } => Some(concurrency.max(1)),
+            _ => None,
+        };
+
+        // ---- scheduler state -----------------------------------------
+        let mut inflight: Vec<InFlight> = Vec::with_capacity(total);
+        let mut stage_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_stages];
+        let mut stage_free = vec![0.0f64; n_stages];
+        let mut stage_busy: Vec<Option<BusyStage>> =
+            (0..n_stages).map(|_| None).collect();
+        let mut req_to_stage: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut device_free = vec![0.0f64; self.devices.len()];
+        // (arrival, first-start) of started requests, admission-cap rule.
+        let mut starts: Vec<(f64, f64)> = Vec::new();
+
+        // ---- report accumulators -------------------------------------
+        let mut traces: Vec<RequestTrace> = Vec::new();
+        let mut failures: Vec<(u64, String)> = Vec::new();
+        let mut dropped = 0u64;
+        let mut latency = Series::new();
+        let mut service = Series::new();
+        let mut queue_wait = Series::new();
+        let mut tp = Throughput::default();
+        let mut occupancy: Vec<Intervals> = vec![Intervals::new(); n_stages];
+        let mut served = vec![0usize; n_stages];
+        let mut req_intervals = Intervals::new();
+        let mut makespan = 0.0f64;
+
+        // ---- admissions ----------------------------------------------
+        let mut pending_admissions: VecDeque<(usize, f64)> = VecDeque::new();
+        let mut next_admit;
+        match closed_c {
+            Some(c) => {
+                let initial = c.min(total);
+                for idx in 0..initial {
+                    pending_admissions.push_back((idx, 0.0));
+                }
+                next_admit = initial;
+            }
+            None => {
+                for (idx, &a) in open_arrivals.iter().enumerate() {
+                    pending_admissions.push_back((idx, a));
+                }
+                next_admit = total;
+            }
+        }
+
+        loop {
+            // ---- admit -----------------------------------------------
+            while let Some((idx, arrival)) = pending_admissions.pop_front() {
+                let cur = reshape_input(&self.model, &workload.inputs[idx])?;
+                let mut fl = InFlight {
+                    req: first_req + idx as u64,
+                    t_arrival: arrival,
+                    t_first_start: f64::NAN,
+                    t_ready: arrival,
+                    stage_idx: 0,
+                    cur,
+                    layers: Vec::new(),
+                    any_recovery: false,
+                };
+                if advance_locals(&self.stages, &self.model, &mut fl)? {
+                    // Degenerate model with no distributed stage:
+                    // completes at its arrival instant.
+                    let trace = RequestTrace {
+                        req: fl.req,
+                        output: fl.cur,
+                        total_ms: 0.0,
+                        t_arrival_ms: arrival,
+                        t_done_ms: arrival,
+                        layers: fl.layers,
+                        any_recovery: false,
+                    };
+                    latency.record(0.0);
+                    service.record(0.0);
+                    queue_wait.record(0.0);
+                    makespan = makespan.max(arrival);
+                    tp.completed += 1;
+                    traces.push(trace);
+                    if closed_c.is_some() && next_admit < total {
+                        pending_admissions.push_back((next_admit, arrival));
+                        next_admit += 1;
+                    }
+                    continue;
+                }
+                let s = fl.stage_idx;
+                let i = inflight.len();
+                inflight.push(fl);
+                stage_queue[s].push_back(i);
+            }
+
+            // ---- dispatch every free stage with a waiting request ----
+            let mut cands: Vec<(f64, usize, usize)> = Vec::new();
+            for s in 0..n_stages {
+                if stage_busy[s].is_some() || !self.stages[s].is_distributed() {
+                    continue;
+                }
+                while let Some(&i) = stage_queue[s].front() {
+                    // Balk rule: an open-loop arrival that found the
+                    // entry queue at the cap never enters the system.
+                    if Some(s) == first_dist && closed_c.is_none() {
+                        if let Some(cap) = workload.admission_cap {
+                            let arr = inflight[i].t_arrival;
+                            let depth = starts
+                                .iter()
+                                .rev()
+                                .take_while(|(_, st)| *st > arr)
+                                .count();
+                            if depth >= cap {
+                                stage_queue[s].pop_front();
+                                dropped += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    stage_queue[s].pop_front();
+                    let t_enter = inflight[i].t_ready.max(stage_free[s]);
+                    cands.push((t_enter, s, i));
+                    break;
+                }
+            }
+            // Dispatch in virtual-entry-time order so the device ledger
+            // serialises shared devices causally (ties: later stages —
+            // i.e. older requests — first).
+            cands.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.1.cmp(&a.1))
+            });
+            for (t_enter, s, i) in cands {
+                let StageKind::Dist(ds) = &self.stages[s].kind else {
+                    unreachable!("only distributed stages are dispatched")
+                };
+                let input = Arc::new(inflight[i].cur.clone());
+                let pending = ds.dispatch(
+                    &self.devices,
+                    &self.cfg.net,
+                    self.cfg.device_rate,
+                    inflight[i].req,
+                    input,
+                    t_enter,
+                    &mut device_free,
+                )?;
+                if inflight[i].t_first_start.is_nan() {
+                    inflight[i].t_first_start = t_enter;
+                    starts.push((inflight[i].t_arrival, t_enter));
+                }
+                req_to_stage.insert(inflight[i].req, s);
+                stage_busy[s] = Some(BusyStage {
+                    infl: i,
+                    t_enter,
+                    n_expected: pending.n_expected,
+                    got: BTreeMap::new(),
+                });
+            }
+
+            // ---- done? ----------------------------------------------
+            if stage_busy.iter().all(|b| b.is_none()) {
+                break;
+            }
+
+            // ---- gather all outstanding completions ------------------
+            let mut remaining: usize = stage_busy
+                .iter()
+                .flatten()
+                .map(|b| b.n_expected - b.got.len())
+                .sum();
+            while remaining > 0 {
+                let c = self.completions.recv().map_err(|_| {
+                    Error::Fleet("completion channel closed".into())
+                })?;
+                if let Some(&s) = req_to_stage.get(&c.req) {
+                    if let Some(b) = stage_busy[s].as_mut() {
+                        if b.got.insert(c.task, c).is_none() {
+                            remaining -= 1;
+                        }
+                    }
+                }
+                // Unknown request ids are orphans of previously-lost
+                // requests; ignore them like `drain` does.
+            }
+
+            // ---- resolve every completed stage -----------------------
+            for s in 0..n_stages {
+                let Some(b) = stage_busy[s].take() else { continue };
+                let StageKind::Dist(ds) = &self.stages[s].kind else {
+                    unreachable!("only distributed stages hold work")
+                };
+                let layer = &self.model.layers[ds.layer_idx];
+                req_to_stage.remove(&inflight[b.infl].req);
+                match ds.resolve(layer, &b.got, b.t_enter, self.cfg.threshold_factor)? {
+                    StageOutcome::Done { t_done, output, trace } => {
+                        stage_free[s] = t_done;
+                        occupancy[s].push(b.t_enter, t_done);
+                        served[s] += 1;
+                        let fl = &mut inflight[b.infl];
+                        fl.any_recovery |= trace.outcome == "recovered";
+                        fl.layers.push(trace);
+                        fl.cur = output;
+                        fl.t_ready = t_done;
+                        fl.stage_idx = s + 1;
+                        if advance_locals(&self.stages, &self.model, fl)? {
+                            let done_t = fl.t_ready;
+                            let trace = RequestTrace {
+                                req: fl.req,
+                                output: std::mem::replace(
+                                    &mut fl.cur,
+                                    Tensor::zeros(vec![0]),
+                                ),
+                                total_ms: done_t - fl.t_arrival,
+                                t_arrival_ms: fl.t_arrival,
+                                t_done_ms: done_t,
+                                layers: std::mem::take(&mut fl.layers),
+                                any_recovery: fl.any_recovery,
+                            };
+                            latency.record(trace.total_ms);
+                            service.record(done_t - fl.t_first_start);
+                            queue_wait.record(fl.t_first_start - fl.t_arrival);
+                            req_intervals.push(fl.t_first_start, done_t);
+                            makespan = makespan.max(done_t);
+                            tp.completed += 1;
+                            if trace.any_recovery {
+                                tp.recovered += 1;
+                            }
+                            traces.push(trace);
+                            if closed_c.is_some() && next_admit < total {
+                                pending_admissions.push_back((next_admit, done_t));
+                                next_admit += 1;
+                            }
+                        } else {
+                            stage_queue[fl.stage_idx].push_back(b.infl);
+                        }
+                    }
+                    StageOutcome::Lost => {
+                        // The coordinator notices the loss only after the
+                        // failure-detection window; the stage is blocked
+                        // until then (the paper's "tens of seconds").
+                        let t_free = b.t_enter + self.cfg.detection_ms;
+                        stage_free[s] = t_free;
+                        occupancy[s].push(b.t_enter, t_free);
+                        makespan = makespan.max(t_free);
+                        failures.push((inflight[b.infl].req, layer.name.clone()));
+                        tp.failed += 1;
+                        if closed_c.is_some() && next_admit < total {
+                            pending_admissions.push_back((next_admit, t_free));
+                            next_admit += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- report ---------------------------------------------------
+        tp.total_ms = makespan;
+        let stages: Vec<StageStats> = self
+            .stages
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.is_distributed())
+            .map(|(s, st)| StageStats {
+                layer: self.model.layers[st.layer_idx()].name.clone(),
+                served: served[s],
+                busy_ms: occupancy[s].busy_ms(),
+                utilization: occupancy[s].utilization(makespan),
+                occupancy: occupancy[s].clone(),
+            })
+            .collect();
+        let occ_refs: Vec<&Intervals> = occupancy.iter().collect();
+        let max_concurrent_stages = metrics::max_overlap(&occ_refs);
+        let max_concurrent_requests = metrics::max_overlap(&[&req_intervals]);
+        Ok(ServeReport {
+            traces,
+            failures,
+            dropped,
+            latency,
+            service,
+            queue_wait,
+            throughput: tp,
+            makespan_ms: makespan,
+            stages,
+            max_concurrent_requests,
+            max_concurrent_stages,
+        })
+    }
+}

@@ -1,0 +1,288 @@
+//! The reusable per-layer execution unit of the coordinator.
+//!
+//! A [`Stage`] is the static plan of one model layer: either a local
+//! merge-point op (pool/flatten/gap — negligible cost, no occupancy) or a
+//! distributed weighted layer with its shard→device assignment, CDC
+//! parity / 2MR replica tasks, and cost model. Both the single-shot
+//! `Session::infer` and the pipelined `coordinator::serve` engine drive
+//! requests through the same stages: **dispatch** (fan the input out to
+//! the stage's devices, updating the device-occupancy ledger) and
+//! **resolve** (gathered completions → arrival policy → CDC/2MR recovery
+//! → merge). Keeping dispatch/resolve free of any notion of "the current
+//! request" is what lets many requests occupy different stages at once.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cdc;
+use crate::error::{Error, Result};
+use crate::fleet::{Completion, Device, NetConfig, WorkOrder};
+use crate::partition::LayerPlan;
+use crate::runtime::manifest::LayerManifest;
+use crate::tensor::Tensor;
+
+use super::policy;
+use super::LayerTrace;
+
+/// One pipeline stage: the static execution plan of one model layer.
+pub struct Stage {
+    pub(crate) kind: StageKind,
+}
+
+/// How the stage's layer executes.
+pub(crate) enum StageKind {
+    /// Merge-point op (pool/flatten/gap) — negligible cost.
+    Local { layer_idx: usize },
+    /// Distributed (possibly d=1) weighted layer.
+    Dist(DistStage),
+}
+
+impl Stage {
+    /// True for distributed (occupancy-holding) stages.
+    pub fn is_distributed(&self) -> bool {
+        matches!(self.kind, StageKind::Dist(_))
+    }
+
+    /// Index of the layer this stage executes.
+    pub fn layer_idx(&self) -> usize {
+        match &self.kind {
+            StageKind::Local { layer_idx } => *layer_idx,
+            StageKind::Dist(d) => d.layer_idx,
+        }
+    }
+}
+
+/// A distributed stage's plan and cost model.
+pub(crate) struct DistStage {
+    pub layer_idx: usize,
+    /// The split plan (exposed via `Session::layer_plans`).
+    pub plan: LayerPlan,
+    /// (device, task id) per data shard.
+    pub data: Vec<(usize, u64)>,
+    /// CDC parity devices: (device, task id, covered shard indices).
+    pub parities: Vec<(usize, u64, Vec<usize>)>,
+    /// 2MR replicas: (device, task id) aligned with `data`.
+    pub replicas: Vec<(usize, u64)>,
+    /// Fused-activation artifact in use (non-CDC fast path)?
+    pub fused_relu: bool,
+    /// Expected service time (ms) for the threshold gate.
+    pub expected_ms: f64,
+    pub request_bytes: u64,
+    /// Per-task compute cost (uniform across a layer's shards) — drives
+    /// the device-occupancy ledger.
+    pub macs: u64,
+}
+
+/// Bookkeeping for one dispatched (stage, request) pair.
+pub(crate) struct PendingStage {
+    /// Completions to gather before the stage can resolve.
+    pub n_expected: usize,
+}
+
+/// Outcome of resolving one stage for one request.
+pub(crate) enum StageOutcome {
+    /// Stage completed; the merged activation moves to the next stage.
+    Done {
+        t_done: f64,
+        output: Tensor,
+        trace: LayerTrace,
+    },
+    /// Unrecoverable shard loss — the request is lost at this layer.
+    Lost,
+}
+
+impl DistStage {
+    /// Group this stage's tasks per device (a device with several tasks —
+    /// e.g. after failover — runs them serially within one order).
+    fn orders(&self) -> BTreeMap<usize, Vec<u64>> {
+        let mut orders: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        let all_tasks = self
+            .data
+            .iter()
+            .copied()
+            .chain(self.parities.iter().map(|(d, t, _)| (*d, *t)))
+            .chain(self.replicas.iter().copied());
+        for (dev, task) in all_tasks {
+            orders.entry(dev).or_default().push(task);
+        }
+        orders
+    }
+
+    /// Fan one request's input out to the stage's devices at virtual time
+    /// `t_enter`, serialising compute through the per-device occupancy
+    /// ledger `device_free` (busy-until, ms).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn dispatch(
+        &self,
+        devices: &[Device],
+        net: &NetConfig,
+        rate_macs_per_ms: f64,
+        req: u64,
+        input: Arc<Tensor>,
+        t_enter: f64,
+        device_free: &mut [f64],
+    ) -> Result<PendingStage> {
+        let orders = self.orders();
+        let n_expected: usize = orders.values().map(|v| v.len()).sum();
+        for (dev, tasks) in &orders {
+            let not_before = device_free[*dev];
+            // Mirror the device's own arithmetic: compute starts at
+            // max(t_enter + request leg, not_before) and runs the order's
+            // tasks back to back.
+            let req_net = net.sample_request(self.request_bytes);
+            let start = (t_enter + req_net).max(not_before);
+            device_free[*dev] =
+                start + (tasks.len() as u64 * self.macs) as f64 / rate_macs_per_ms;
+            devices[*dev].dispatch(WorkOrder {
+                req,
+                tasks: tasks.clone(),
+                input: input.clone(),
+                request_bytes: self.request_bytes,
+                t_dispatch_ms: t_enter,
+                not_before_ms: not_before,
+            })?;
+        }
+        Ok(PendingStage { n_expected })
+    }
+
+    /// Resolve a fully-gathered stage: decide *when* the layer completed
+    /// and *how* (pure policy layer), reconstruct any missing shard from
+    /// its parity group, and merge shard outputs into the layer output.
+    pub(crate) fn resolve(
+        &self,
+        layer: &LayerManifest,
+        by_task: &BTreeMap<u64, Completion>,
+        t_enter: f64,
+        threshold_factor: f64,
+    ) -> Result<StageOutcome> {
+        let data_t: Vec<f64> = self
+            .data
+            .iter()
+            .map(|(_, t)| by_task[t].t_arrival_ms)
+            .collect();
+        let threshold = if threshold_factor.is_finite() {
+            t_enter + threshold_factor * self.expected_ms
+        } else {
+            f64::INFINITY
+        };
+
+        // Normalise every redundancy mode into (t_ms, missing data-shard
+        // indices to reconstruct, trace kind).
+        let (t_ms, missing, kind) = if !self.replicas.is_empty() {
+            let rep_t: Vec<f64> = self
+                .replicas
+                .iter()
+                .map(|(_, t)| by_task[t].t_arrival_ms)
+                .collect();
+            match policy::resolve_2mr(&data_t, &rep_t) {
+                policy::Outcome::Lost => return Ok(StageOutcome::Lost),
+                o => (o.t_ms(), Vec::new(), "all_data"),
+            }
+        } else if !self.parities.is_empty() {
+            let par_t: Vec<f64> = self
+                .parities
+                .iter()
+                .map(|(_, t, _)| by_task[t].t_arrival_ms)
+                .collect();
+            let groups: Vec<Vec<usize>> =
+                self.parities.iter().map(|(_, _, g)| g.clone()).collect();
+            match policy::resolve_grouped(&data_t, &par_t, &groups, threshold) {
+                policy::GroupedOutcome::Lost => return Ok(StageOutcome::Lost),
+                policy::GroupedOutcome::Ok { t_ms, missing } => {
+                    let kind = if missing.is_empty() { "all_data" } else { "recovered" };
+                    (t_ms, missing, kind)
+                }
+            }
+        } else {
+            match policy::resolve(&data_t, None, f64::INFINITY) {
+                policy::Outcome::Lost => return Ok(StageOutcome::Lost),
+                o => (o.t_ms(), Vec::new(), "all_data"),
+            }
+        };
+
+        // Materialise shard outputs (decode the missing ones from their
+        // parity group: parity − Σ received — the paper's
+        // close-to-zero-latency subtraction).
+        let mut parts: Vec<Option<Tensor>> = self
+            .data
+            .iter()
+            .map(|(_, t)| by_task[t].result.clone())
+            .collect();
+        // 2MR: fill from the replica when the primary is lost.
+        for (i, (_, rt)) in self.replicas.iter().enumerate() {
+            if parts[i].is_none() {
+                parts[i] = by_task[rt].result.clone();
+            }
+        }
+        for &mi in &missing {
+            let (_, ptask, cover) = self
+                .parities
+                .iter()
+                .find(|(_, _, g)| g.contains(&mi))
+                .expect("recovered shard must be covered");
+            let parity_out = by_task[ptask]
+                .result
+                .clone()
+                .ok_or_else(|| Error::Fleet("parity result lost".into()))?;
+            let received: Vec<Tensor> = cover
+                .iter()
+                .filter(|&&i| i != mi)
+                .map(|&i| {
+                    parts[i]
+                        .clone()
+                        .ok_or_else(|| Error::Fleet("covered shard lost".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&Tensor> = received.iter().collect();
+            parts[mi] = Some(cdc::decode(&parity_out, &refs)?);
+        }
+        let out: Vec<Tensor> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                p.ok_or_else(|| Error::Fleet(format!("shard {i} unexpectedly lost")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // Merge: concat + trim padding + deferred epilogue.
+        let refs: Vec<&Tensor> = out.iter().collect();
+        let mut merged = if layer.kind == "fc" {
+            Tensor::concat0(&refs)?.take_rows(layer.m)?
+        } else {
+            let cat = Tensor::concat_channels(&refs)?;
+            cat.take_channels(0, layer.k)?
+        };
+        if layer.relu && !self.fused_relu {
+            merged.relu();
+        }
+        if layer.kind == "conv" && layer.pool > 0 {
+            merged = merged.maxpool(layer.pool, layer.pool)?;
+        }
+
+        let trace = LayerTrace {
+            layer: layer.name.clone(),
+            t_start_ms: t_enter,
+            t_done_ms: t_ms,
+            outcome: kind,
+            recovered_shard: missing.first().copied(),
+            data_arrivals_ms: data_t,
+            aux_arrivals_ms: self
+                .parities
+                .iter()
+                .map(|(_, t, _)| by_task[t].t_arrival_ms)
+                .chain(self.replicas.iter().map(|(_, t)| by_task[t].t_arrival_ms))
+                .collect(),
+        };
+        Ok(StageOutcome::Done { t_done: t_ms, output: merged, trace })
+    }
+}
+
+/// Apply a merge-point (local) layer — free in the timing model.
+pub(crate) fn apply_local(layer: &LayerManifest, cur: Tensor) -> Result<Tensor> {
+    match layer.kind.as_str() {
+        "maxpool" => cur.maxpool(layer.pool, layer.pool),
+        "flatten" => Ok(cur.flatten_col()),
+        "gap" => cur.gap(),
+        other => Err(Error::Config(format!("unexpected local layer {other}"))),
+    }
+}

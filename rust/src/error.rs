@@ -1,35 +1,51 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: the crate builds offline with no
+//! external dependencies, so no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the cdc-dnn library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or missing artifact manifest / weights / goldens.
-    #[error("artifact error: {0}")]
     Artifact(String),
     /// JSON parse error (line/col best-effort).
-    #[error("json error: {0}")]
     Json(String),
     /// Shape mismatch in tensor ops or executor inputs.
-    #[error("shape error: {0}")]
     Shape(String),
-    /// Underlying XLA/PJRT failure.
-    #[error("xla error: {0}")]
+    /// Underlying XLA/PJRT (or interpreter-backend) failure.
     Xla(String),
     /// Invalid deployment / partition configuration.
-    #[error("config error: {0}")]
     Config(String),
     /// Fleet communication failure (device hung up, channel closed).
-    #[error("fleet error: {0}")]
     Fleet(String),
     /// IO error with path context.
-    #[error("io error: {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Fleet(m) => write!(f, "fleet error: {m}"),
+            Error::Io { path, source } => write!(f, "io error: {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -39,6 +55,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -92,6 +92,26 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     let mut plain = Session::start(&ctx.artifacts, fc_cfg(ctx, Redundancy::None, f64::INFINITY))?;
     let mut coded =
         Session::start(&ctx.artifacts, fc_cfg(ctx, Redundancy::Cdc, f64::INFINITY))?;
+
+    // Split-plan introspection (Session::layer_plans): show what the
+    // coded deployment actually placed, and sanity-check the balanced-
+    // assignment invariant the plans are built on.
+    println!("\ndeployed split plans (coded session):");
+    let mut plan_rows = Vec::new();
+    for (layer, plan) in coded.layer_plans() {
+        plan_rows.push(vec![
+            layer.to_string(),
+            plan.method.name().to_string(),
+            format!("{}", plan.d),
+            format!("{}", plan.shards.first().map(|s| s.height).unwrap_or(0)),
+            format!("{}", plan.covered_rows()),
+            plan.artifact_lin.clone(),
+        ]);
+    }
+    print_table(
+        &["layer", "method", "d", "shard height", "rows covered", "artifact"],
+        &plan_rows,
+    );
     let mut s_plain = Series::new();
     let mut s_coded = Series::new();
     let mut xrng = Pcg32::seeded(ctx.seed ^ 0xab1a);

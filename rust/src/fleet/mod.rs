@@ -8,9 +8,17 @@
 //! the completion with a **simulated** arrival time:
 //!
 //! ```text
-//! arrival = t_dispatch + net(request bytes) + Σ compute(tasks) + net(reply)
+//! start   = max(t_dispatch + net(request bytes), not_before)
+//! arrival = start + Σ compute(tasks) + net(reply)
 //! compute(task) = task.macs / rate_macs_per_ms     (RPi-calibrated)
 //! ```
+//!
+//! `not_before` is the coordinator-side device-occupancy ledger (see
+//! `coordinator::serve`): with many requests in flight a device may hold
+//! work for several of them at once, and its compute must serialise in
+//! *virtual* time too. Single-shot inference always dispatches a stage
+//! after the previous one completed, so the ledger never clamps there and
+//! the classic formula is unchanged.
 //!
 //! Failures (permanent or intermittent) null the result; in virtual-time
 //! mode the completion is still delivered with `t_arrival = ∞` so the
@@ -104,6 +112,9 @@ pub struct WorkOrder {
     pub request_bytes: u64,
     /// Simulated dispatch timestamp (ms).
     pub t_dispatch_ms: f64,
+    /// Virtual instant the device's compute becomes free (coordinator
+    /// occupancy ledger); compute starts no earlier. 0.0 = idle device.
+    pub not_before_ms: f64,
 }
 
 /// A task completion event.
@@ -221,7 +232,11 @@ fn device_main(
                 let dropped = failure.drops(order.req, &mut rng);
                 // Request transfer happens once per order (deterministic
                 // leg; congestion jitter is on the replies — see net.rs).
-                let mut cum_ms = net.sample_request(order.request_bytes);
+                // Compute cannot start before the ledger says the device
+                // is free (work held for other in-flight requests).
+                let mut cum_ms = net
+                    .sample_request(order.request_bytes)
+                    .max(order.not_before_ms - order.t_dispatch_ms);
                 for task_id in &order.tasks {
                     let task = match tasks.get(task_id) {
                         Some(t) => t,

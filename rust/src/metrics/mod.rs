@@ -161,6 +161,87 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Busy intervals on the virtual timeline — per-stage occupancy traces of
+/// the pipelined serving engine (DESIGN.md §5). Each `(start, end)` pair
+/// records one request occupying one stage.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Intervals {
+    items: Vec<(f64, f64)>,
+}
+
+impl Intervals {
+    /// Empty interval set.
+    pub fn new() -> Intervals {
+        Intervals::default()
+    }
+
+    /// Record one `[start, end)` busy interval (clamps inverted input).
+    pub fn push(&mut self, start: f64, end: f64) {
+        self.items.push((start, end.max(start)));
+    }
+
+    /// Number of intervals.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True if no intervals recorded.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Raw intervals in insertion order.
+    pub fn items(&self) -> &[(f64, f64)] {
+        &self.items
+    }
+
+    /// Total busy time (intervals within one stage never overlap, so a
+    /// plain sum is exact there; overlapping sets give summed duration).
+    pub fn busy_ms(&self) -> f64 {
+        self.items.iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Fraction of a horizon spent busy.
+    pub fn utilization(&self, horizon_ms: f64) -> f64 {
+        if horizon_ms <= 0.0 {
+            0.0
+        } else {
+            self.busy_ms() / horizon_ms
+        }
+    }
+}
+
+/// Maximum number of simultaneously-active intervals across all sets
+/// (sweep line; an interval ending exactly when another starts does not
+/// overlap it). This is how "≥ 2 requests in flight" is asserted from
+/// stage-occupancy traces.
+pub fn max_overlap(sets: &[&Intervals]) -> usize {
+    // Event: (time, +1 start / -1 end); ends sort before starts at ties.
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for set in sets {
+        for &(s, e) in set.items() {
+            if e > s {
+                events.push((s, 1));
+                events.push((e, -1));
+            }
+        }
+    }
+    events.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let mut cur = 0i32;
+    let mut max = 0i32;
+    for (_, d) in events {
+        cur += d;
+        if cur > max {
+            max = cur;
+        }
+    }
+    max.max(0) as usize
+}
+
 /// Throughput counter over simulated or wall time.
 #[derive(Debug, Default, Clone)]
 pub struct Throughput {
@@ -224,6 +305,32 @@ mod tests {
         assert_eq!(s.summary().count, 0);
         assert_eq!(s.cdf_at(1.0), 0.0);
         assert_eq!(s.histogram(0.0, 1.0, 4), vec![0; 4]);
+    }
+
+    #[test]
+    fn intervals_busy_and_utilization() {
+        let mut iv = Intervals::new();
+        iv.push(0.0, 10.0);
+        iv.push(20.0, 25.0);
+        assert_eq!(iv.len(), 2);
+        assert!((iv.busy_ms() - 15.0).abs() < 1e-12);
+        assert!((iv.utilization(30.0) - 0.5).abs() < 1e-12);
+        assert_eq!(iv.utilization(0.0), 0.0);
+    }
+
+    #[test]
+    fn max_overlap_counts_concurrency() {
+        let mut a = Intervals::new();
+        a.push(0.0, 10.0);
+        a.push(10.0, 20.0); // back-to-back: no self-overlap
+        let mut b = Intervals::new();
+        b.push(5.0, 15.0);
+        assert_eq!(max_overlap(&[&a]), 1);
+        assert_eq!(max_overlap(&[&a, &b]), 2);
+        let mut c = Intervals::new();
+        c.push(9.0, 11.0);
+        assert_eq!(max_overlap(&[&a, &b, &c]), 3);
+        assert_eq!(max_overlap(&[&Intervals::new()]), 0);
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Interpreter compute backend: executes shard artifacts directly from
+//! their manifest metadata with the in-tree [`Tensor`] ops.
+//!
+//! The AOT artifacts implement exactly two program shapes (see
+//! `python/compile/model.py`):
+//!
+//! * `fc_shard`:  `(w (m,k), b (m,1), x (k,n)) → w@x + b [relu]`
+//! * `conv_shard`: `(w (k_s, f²c), b (k_s,1), x (h,w,c)) →
+//!   gemm(w, im2col(x)) + b [relu]` reshaped to `(oh, ow, k_s)`
+//!
+//! so a faithful CPU interpreter needs only a GEMM and an `im2col` that
+//! mirror `python/compile/kernels/ref.py` (same padding arithmetic, same
+//! patch unroll order). This backend keeps every test, example, and
+//! experiment runnable on a machine with no XLA/PJRT installation; the
+//! `pjrt` feature swaps in the compiled path with identical semantics.
+
+use std::cell::Cell;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
+use crate::runtime::GemmExec;
+use crate::tensor::Tensor;
+
+/// Stateless-ish interpreter (only an exec counter).
+pub struct InterpRuntime {
+    execs: Cell<u64>,
+}
+
+impl Default for InterpRuntime {
+    fn default() -> Self {
+        InterpRuntime::new()
+    }
+}
+
+impl InterpRuntime {
+    /// Create an interpreter backend.
+    pub fn new() -> InterpRuntime {
+        InterpRuntime { execs: Cell::new(0) }
+    }
+
+    /// Total execute() calls served.
+    pub fn exec_count(&self) -> u64 {
+        self.execs.get()
+    }
+
+    /// Execute an artifact by metadata. Inputs are pre-validated against
+    /// `meta.params` by the facade.
+    pub fn execute(&self, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.execs.set(self.execs.get() + 1);
+        match meta.kind {
+            ArtifactKind::Fc => fc_shard(inputs[0], inputs[1], inputs[2], meta.relu),
+            ArtifactKind::Conv => {
+                let geom = meta.geom.as_ref().ok_or_else(|| {
+                    Error::Artifact(format!(
+                        "conv artifact {} carries no geometry (f/s/padding); \
+                         rebuild artifacts with compile/aot.py or use the \
+                         pjrt backend",
+                        meta.name
+                    ))
+                })?;
+                conv_shard(
+                    inputs[0],
+                    inputs[1],
+                    inputs[2],
+                    geom.f,
+                    geom.s,
+                    &geom.padding,
+                    meta.relu,
+                )
+            }
+        }
+    }
+
+    /// Execute a built GEMM spec `(w, x[, b])`, counting the execution.
+    pub fn run_gemm(&self, spec: &GemmExec, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.execs.set(self.execs.get() + 1);
+        InterpRuntime::run_gemm_spec(spec, inputs)
+    }
+
+    /// Execute a built GEMM spec without touching any backend state.
+    pub fn run_gemm_spec(spec: &GemmExec, inputs: &[&Tensor]) -> Result<Tensor> {
+        let want = if spec.bias { 3 } else { 2 };
+        if inputs.len() != want {
+            return Err(Error::Shape(format!(
+                "gemm fallback: expected {want} inputs, got {}",
+                inputs.len()
+            )));
+        }
+        let (w, x) = (inputs[0], inputs[1]);
+        if w.shape() != [spec.m, spec.k] || x.shape() != [spec.k, spec.n] {
+            return Err(Error::Shape(format!(
+                "gemm fallback: w {:?} x {:?} vs spec ({},{})x({},{})",
+                w.shape(),
+                x.shape(),
+                spec.m,
+                spec.k,
+                spec.k,
+                spec.n
+            )));
+        }
+        let mut out = w.matmul(x)?;
+        if spec.bias {
+            add_bias_rows(&mut out, inputs[2])?;
+        }
+        if spec.relu {
+            out.relu();
+        }
+        Ok(out)
+    }
+}
+
+/// fc shard: `w@x + b [relu]` with the bias column broadcast over n.
+fn fc_shard(w: &Tensor, b: &Tensor, x: &Tensor, relu: bool) -> Result<Tensor> {
+    let mut out = w.matmul(x)?;
+    add_bias_rows(&mut out, b)?;
+    if relu {
+        out.relu();
+    }
+    Ok(out)
+}
+
+/// Add a (m,1) bias column to every column of a (m,n) matrix in place.
+fn add_bias_rows(out: &mut Tensor, b: &Tensor) -> Result<()> {
+    let (m, n) = match out.shape()[..] {
+        [m, n] => (m, n),
+        _ => return Err(Error::Shape(format!("bias add on {:?}", out.shape()))),
+    };
+    if b.shape() != [m, 1] {
+        return Err(Error::Shape(format!(
+            "bias shape {:?} vs output rows {m}",
+            b.shape()
+        )));
+    }
+    let bd = b.data().to_vec();
+    for (i, row) in out.data_mut().chunks_mut(n).enumerate() {
+        let bv = bd[i];
+        for v in row {
+            *v += bv;
+        }
+    }
+    Ok(())
+}
+
+/// conv shard: im2col + GEMM + reshape/transpose to `(oh, ow, k_s)`,
+/// mirroring `conv_shard_fn` in `python/compile/model.py`.
+fn conv_shard(
+    w: &Tensor,
+    b: &Tensor,
+    x: &Tensor,
+    f: usize,
+    stride: usize,
+    padding: &str,
+    relu: bool,
+) -> Result<Tensor> {
+    let (cols, oh, ow) = im2col(x, f, stride, padding)?;
+    let mut out = w.matmul(&cols)?; // (k_s, oh*ow)
+    add_bias_rows(&mut out, b)?;
+    if relu {
+        out.relu();
+    }
+    // (k_s, oh*ow) row-major → (oh, ow, k_s) row-major.
+    let ks = out.shape()[0];
+    let od = out.data();
+    let mut data = vec![0.0f32; oh * ow * ks];
+    for c in 0..ks {
+        let src = &od[c * (oh * ow)..(c + 1) * (oh * ow)];
+        for (p, &v) in src.iter().enumerate() {
+            data[p * ks + c] = v;
+        }
+    }
+    Tensor::new(vec![oh, ow, ks], data)
+}
+
+/// Patch unroll (paper Fig. 4): `(H, W, C) → (F²C, OH·OW)`. Column `j`
+/// holds the receptive field of output pixel `j`, flattened in
+/// `(di, dj, channel)` order; SAME padding splits `floor/ceil` like
+/// `jnp.pad` in the reference (`ph/2` on top, the remainder below).
+pub fn im2col(x: &Tensor, f: usize, stride: usize, padding: &str) -> Result<(Tensor, usize, usize)> {
+    if stride == 0 || f == 0 {
+        return Err(Error::Shape("im2col: zero filter/stride".into()));
+    }
+    let (h, w, c) = match x.shape()[..] {
+        [h, w, c] => (h, w, c),
+        _ => return Err(Error::Shape(format!("im2col of {:?}", x.shape()))),
+    };
+    let (oh, ow, pad_top, pad_left) = match padding {
+        "SAME" => {
+            let oh = h.div_ceil(stride);
+            let ow = w.div_ceil(stride);
+            let ph = ((oh - 1) * stride + f).saturating_sub(h);
+            let pw = ((ow - 1) * stride + f).saturating_sub(w);
+            (oh, ow, ph / 2, pw / 2)
+        }
+        "VALID" => {
+            if h < f || w < f {
+                return Err(Error::Shape(format!(
+                    "im2col VALID: input {h}x{w} smaller than filter {f}"
+                )));
+            }
+            ((h - f) / stride + 1, (w - f) / stride + 1, 0, 0)
+        }
+        other => return Err(Error::Config(format!("unknown padding {other:?}"))),
+    };
+    let rows = f * f * c;
+    let n_cols = oh * ow;
+    let mut data = vec![0.0f32; rows * n_cols];
+    let xd = x.data();
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let p = oy * ow + ox;
+            for di in 0..f {
+                let iy = (oy * stride + di) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue; // zero padding
+                }
+                for dj in 0..f {
+                    let ix = (ox * stride + dj) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = (iy as usize * w + ix as usize) * c;
+                    let rbase = (di * f + dj) * c;
+                    for ch in 0..c {
+                        data[(rbase + ch) * n_cols + p] = xd[src + ch];
+                    }
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(vec![rows, n_cols], data)?, oh, ow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    /// Direct (naive) convolution oracle for the im2col+GEMM path.
+    fn conv_naive(
+        x: &Tensor,
+        wmat: &Tensor, // (k, f*f*c)
+        b: &Tensor,
+        f: usize,
+        stride: usize,
+        same: bool,
+    ) -> Tensor {
+        let (h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let k = wmat.shape()[0];
+        let (oh, ow, pt, pl) = if same {
+            let oh = h.div_ceil(stride);
+            let ow = w.div_ceil(stride);
+            let ph = ((oh - 1) * stride + f).saturating_sub(h);
+            let pw = ((ow - 1) * stride + f).saturating_sub(w);
+            (oh, ow, ph / 2, pw / 2)
+        } else {
+            ((h - f) / stride + 1, (w - f) / stride + 1, 0, 0)
+        };
+        let mut out = vec![0.0f32; oh * ow * k];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for kk in 0..k {
+                    let mut acc = b.data()[kk];
+                    for di in 0..f {
+                        for dj in 0..f {
+                            let iy = (oy * stride + di) as isize - pt as isize;
+                            let ix = (ox * stride + dj) as isize - pl as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                                continue;
+                            }
+                            for ch in 0..c {
+                                let xv = x.data()[(iy as usize * w + ix as usize) * c + ch];
+                                let wv = wmat.data()[kk * (f * f * c) + (di * f + dj) * c + ch];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * k + kk] = acc;
+                }
+            }
+        }
+        Tensor::new(vec![oh, ow, k], out).unwrap()
+    }
+
+    #[test]
+    fn im2col_identity_filter() {
+        // f=1, stride=1: columns are just the pixels.
+        let x = Tensor::new(vec![2, 2, 1], vec![1., 2., 3., 4.]).unwrap();
+        let (cols, oh, ow) = im2col(&x, 1, 1, "SAME").unwrap();
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(cols.shape(), &[1, 4]);
+        assert_eq!(cols.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn conv_matches_naive_same_and_valid() {
+        let mut rng = Pcg32::seeded(21);
+        for (h, w, c, k, f, s, same) in [
+            (5usize, 5usize, 2usize, 3usize, 3usize, 1usize, true),
+            (6, 6, 1, 2, 3, 2, true),
+            (6, 5, 2, 2, 2, 1, false),
+            (7, 7, 3, 4, 5, 2, true),
+        ] {
+            let x = Tensor::randn(vec![h, w, c], &mut rng);
+            let wm = Tensor::randn(vec![k, f * f * c], &mut rng);
+            let b = Tensor::randn(vec![k, 1], &mut rng);
+            let got =
+                conv_shard(&wm, &b, &x, f, s, if same { "SAME" } else { "VALID" }, false)
+                    .unwrap();
+            let want = conv_naive(&x, &wm, &b, f, s, same);
+            assert_eq!(got.shape(), want.shape(), "h{h}w{w}c{c}k{k}f{f}s{s}");
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "h{h}w{w}c{c}k{k}f{f}s{s}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn fc_shard_bias_and_relu() {
+        let w = Tensor::new(vec![2, 2], vec![1., 0., 0., -1.]).unwrap();
+        let b = Tensor::new(vec![2, 1], vec![0.5, 0.5]).unwrap();
+        let x = Tensor::new(vec![2, 1], vec![1., 2.]).unwrap();
+        let lin = fc_shard(&w, &b, &x, false).unwrap();
+        assert_eq!(lin.data(), &[1.5, -1.5]);
+        let act = fc_shard(&w, &b, &x, true).unwrap();
+        assert_eq!(act.data(), &[1.5, 0.0]);
+    }
+
+    #[test]
+    fn gemm_spec_validates_shapes() {
+        let spec = GemmExec {
+            m: 2,
+            k: 3,
+            n: 1,
+            bias: false,
+            relu: false,
+            #[cfg(feature = "pjrt")]
+            exe: None,
+        };
+        let w = Tensor::zeros(vec![2, 3]);
+        let x = Tensor::zeros(vec![3, 1]);
+        assert!(InterpRuntime::run_gemm_spec(&spec, &[&w, &x]).is_ok());
+        let bad = Tensor::zeros(vec![4, 1]);
+        assert!(InterpRuntime::run_gemm_spec(&spec, &[&w, &bad]).is_err());
+    }
+}

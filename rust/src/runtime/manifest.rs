@@ -16,6 +16,19 @@ pub enum ArtifactKind {
     Conv,
 }
 
+/// Convolution geometry of a conv shard artifact — enough for the
+/// interpreter backend to reproduce the program without its HLO file
+/// (`compile/aot.py` records these alongside the shapes).
+#[derive(Debug, Clone)]
+pub struct ConvGeom {
+    /// Square filter size.
+    pub f: usize,
+    /// Stride.
+    pub s: usize,
+    /// "SAME" | "VALID".
+    pub padding: String,
+}
+
 /// One AOT-compiled HLO program.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -25,6 +38,9 @@ pub struct ArtifactMeta {
     pub relu: bool,
     /// Parameter shapes in call order (weights, bias, input).
     pub params: Vec<Vec<usize>>,
+    /// Conv-only geometry (None for fc artifacts or pre-geometry
+    /// manifests, which then require the pjrt backend).
+    pub geom: Option<ConvGeom>,
 }
 
 /// The two epilogue flavors an (layer, split-degree) pair may ship with.
@@ -130,6 +146,18 @@ impl Manifest {
                 .iter()
                 .map(|p| p.as_usize_vec())
                 .collect::<Result<Vec<_>>>()?;
+            let geom = if kind == ArtifactKind::Conv {
+                match (a.opt("f"), a.opt("s"), a.opt("padding")) {
+                    (Some(f), Some(s), Some(p)) => Some(ConvGeom {
+                        f: f.as_usize()?,
+                        s: s.as_usize()?,
+                        padding: p.as_str()?.to_string(),
+                    }),
+                    _ => None,
+                }
+            } else {
+                None
+            };
             artifacts.insert(
                 name.clone(),
                 ArtifactMeta {
@@ -138,6 +166,7 @@ impl Manifest {
                     kind,
                     relu: a.get("relu")?.as_bool()?,
                     params,
+                    geom,
                 },
             );
         }
@@ -204,6 +233,12 @@ impl Manifest {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    /// Cheap logical clone for sessions sharing a compute server: re-reads
+    /// the manifest from disk (the JSON is small).
+    pub fn clone_shallow(&self) -> Result<Manifest> {
+        Manifest::load(&self.root)
     }
 
     /// Read a raw little-endian i32 file (labels).

@@ -1,75 +1,111 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Artifact runtime: load the AOT artifact manifest and execute shard
+//! programs through one of two interchangeable compute backends.
 //!
-//! Adapts the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos with 64-bit instruction ids).
+//! * **interpreter** (default, always available): executes fc/conv shard
+//!   semantics directly from the manifest's [`ArtifactMeta`] with the
+//!   in-tree [`Tensor`] ops — no native dependencies, bit-compatible with
+//!   the reference math in `python/compile/kernels/ref.py`. This keeps the
+//!   whole repo buildable and testable offline (see DESIGN.md §3).
+//! * **PJRT** (`--features pjrt`): the original path — load AOT HLO-text
+//!   artifacts, compile once via `PjRtClient::cpu()`, execute many. Needs
+//!   the vendored `xla` crate (`xla_extension` 0.5.1) added to Cargo.toml.
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`), so all PJRT state lives on one
-//! thread; the [`server`] submodule exposes a channel-based compute server
-//! that the multi-threaded fleet simulator calls into.
+//! Both backends sit behind the channel-based [`server`] (PJRT state is
+//! not `Send`, and the fleet simulator is multi-threaded), so the rest of
+//! the system is backend-agnostic.
 
+pub mod interp;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod server;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
-pub use manifest::{ArtifactKind, ArtifactMeta, Manifest, ModelManifest};
+pub use manifest::{ArtifactKind, ArtifactMeta, ConvGeom, Manifest, ModelManifest};
 
-/// A compiled-executable cache over the artifact set.
+/// A compiled (or interpreted) plain GEMM `w@x [+b] [relu]` — fallback
+/// used by tests and by shapes outside the artifact set. Input order for
+/// [`Runtime::run_built`] is `(w, x[, b])`.
+pub struct GemmExec {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub bias: bool,
+    pub relu: bool,
+    #[cfg(feature = "pjrt")]
+    exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+enum Backend {
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtRuntime),
+    Interp(interp::InterpRuntime),
+}
+
+/// Backend-dispatching executable cache over the artifact set.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative PJRT execute invocations (perf accounting).
-    execs: std::cell::Cell<u64>,
+    backend: Backend,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a runtime on the preferred backend (PJRT when the feature
+    /// is enabled, the interpreter otherwise).
     pub fn new() -> Result<Runtime> {
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-            cache: RefCell::new(HashMap::new()),
-            execs: std::cell::Cell::new(0),
-        })
+        #[cfg(feature = "pjrt")]
+        {
+            Ok(Runtime { backend: Backend::Pjrt(pjrt::PjrtRuntime::new()?) })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Runtime { backend: Backend::Interp(interp::InterpRuntime::new()) })
+        }
     }
 
-    /// Number of PJRT devices (CPU: 1).
+    /// Force the interpreter backend (useful for cross-checks under the
+    /// `pjrt` feature; identical to `new()` without it).
+    pub fn new_interpreter() -> Runtime {
+        Runtime { backend: Backend::Interp(interp::InterpRuntime::new()) }
+    }
+
+    /// Human-readable backend name.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Interp(_) => "interpreter",
+        }
+    }
+
+    /// Number of compute devices (PJRT CPU: 1; interpreter: 1).
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.device_count(),
+            Backend::Interp(_) => 1,
+        }
     }
 
     /// Total execute() calls issued so far.
     pub fn exec_count(&self) -> u64 {
-        self.execs.get()
-    }
-
-    /// Load + compile an HLO-text file, memoised under `key`.
-    pub fn load_hlo_file(
-        &self,
-        key: &str,
-        path: &std::path::Path,
-    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(key) {
-            return Ok(exe.clone());
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.exec_count(),
+            Backend::Interp(rt) => rt.exec_count(),
         }
-        let path_str = path.to_string_lossy().to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path_str)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Pre-compile an artifact by name (warm-up path).
+    /// Pre-compile an artifact by name (deploy-time warm-up, keeps
+    /// compile time out of latency measurements). The interpreter only
+    /// validates that the artifact exists.
     pub fn preload(&self, manifest: &Manifest, name: &str) -> Result<()> {
-        let meta = manifest.artifact(name)?;
-        self.load_hlo_file(name, &manifest.path(&meta.file))?;
-        Ok(())
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.preload(manifest, name),
+            Backend::Interp(_) => manifest.artifact(name).map(|_| ()),
+        }
     }
 
     /// Execute an artifact on tensor inputs; returns the single output.
@@ -82,70 +118,30 @@ impl Runtime {
         inputs: &[&Tensor],
     ) -> Result<Tensor> {
         let meta = manifest.artifact(name)?;
-        if inputs.len() != meta.params.len() {
-            return Err(Error::Shape(format!(
-                "{name}: expected {} inputs, got {}",
-                meta.params.len(),
-                inputs.len()
-            )));
+        check_inputs(meta, inputs)?;
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.execute(manifest, meta, inputs),
+            Backend::Interp(rt) => rt.execute(meta, inputs),
         }
-        for (i, (t, spec)) in inputs.iter().zip(&meta.params).enumerate() {
-            if t.shape() != &spec[..] {
-                return Err(Error::Shape(format!(
-                    "{name}: input {i} shape {:?} != artifact spec {:?}",
-                    t.shape(),
-                    spec
-                )));
-            }
-        }
-        let exe = self.load_hlo_file(name, &manifest.path(&meta.file))?;
-        self.run(&exe, inputs)
     }
 
-    /// Execute with wall-clock timing (perf harness).
+    /// Execute with wall-clock timing (perf harness). Warm-up (compile)
+    /// happens outside the timed section.
     pub fn execute_timed(
         &self,
         manifest: &Manifest,
         name: &str,
         inputs: &[&Tensor],
     ) -> Result<(Tensor, Duration)> {
-        // Warm the cache outside the timed section.
-        let meta = manifest.artifact(name)?;
-        let exe = self.load_hlo_file(name, &manifest.path(&meta.file))?;
+        self.preload(manifest, name)?;
         let t0 = Instant::now();
-        let out = self.run(&exe, inputs)?;
+        let out = self.execute(manifest, name, inputs)?;
         Ok((out, t0.elapsed()))
     }
 
-    fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[&Tensor],
-    ) -> Result<Tensor> {
-        // Use execute_b over buffers we own: the crate's literal-taking
-        // `execute` shim leaks the input device buffers it creates
-        // (xla_rs.cc releases them into Execute and never frees them —
-        // ≈ 32 MiB/request for an fc6 shard; see EXPERIMENTS.md §Perf).
-        // Buffers created here are PjRtBuffer wrappers with a real Drop.
-        let buffers: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|t| {
-                self.client
-                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
-                    .map_err(Error::from)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-        self.execs.set(self.execs.get() + 1);
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = lit.to_tuple1()?;
-        from_literal(&out)
-    }
-
-    /// Build a plain GEMM `w@x [+b] [relu]` via XlaBuilder — fallback used
-    /// by tests and by shapes outside the artifact set. The *model* shards
-    /// always come from AOT artifacts; see DESIGN.md §3 runtime.
+    /// Build a plain GEMM `w@x [+b] [relu]`. The *model* shards always
+    /// come from AOT artifacts; see DESIGN.md §3.
     pub fn build_gemm(
         &self,
         m: usize,
@@ -153,61 +149,61 @@ impl Runtime {
         n: usize,
         bias: bool,
         relu: bool,
-    ) -> Result<xla::PjRtLoadedExecutable> {
-        let b = xla::XlaBuilder::new("gemm_fallback");
-        let wp = b.parameter_s(0, &xla::Shape::array::<f32>(vec![m as i64, k as i64]), "w")?;
-        let xp = b.parameter_s(1, &xla::Shape::array::<f32>(vec![k as i64, n as i64]), "x")?;
-        let mut out = wp.dot(&xp)?;
-        if bias {
-            let bp =
-                b.parameter_s(2, &xla::Shape::array::<f32>(vec![m as i64, 1i64]), "b")?;
-            // Broadcast (m,1) across columns.
-            let bb = if n == 1 {
-                bp
-            } else {
-                bp.broadcast_in_dim(&[m as i64, n as i64], &[0, 1])?
-            };
-            out = out.add_(&bb)?;
+    ) -> Result<GemmExec> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => Ok(GemmExec {
+                m,
+                k,
+                n,
+                bias,
+                relu,
+                exe: Some(rt.build_gemm(m, k, n, bias, relu)?),
+            }),
+            Backend::Interp(_) => Ok(GemmExec {
+                m,
+                k,
+                n,
+                bias,
+                relu,
+                #[cfg(feature = "pjrt")]
+                exe: None,
+            }),
         }
-        if relu {
-            let zero = b.c0(0f32)?.broadcast_in_dim(&[m as i64, n as i64], &[])?;
-            out = out.max(&zero)?;
-        }
-        let comp = out.build()?;
-        Ok(self.client.compile(&comp)?)
     }
 
-    /// Execute a built (non-artifact) executable on tensors.
-    pub fn run_built(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[&Tensor],
-    ) -> Result<Tensor> {
-        let buffers: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|t| {
-                self.client
-                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
-                    .map_err(Error::from)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-        self.execs.set(self.execs.get() + 1);
-        let lit = result[0][0].to_literal_sync()?;
-        from_literal(&lit)
+    /// Execute a built (non-artifact) GEMM on tensors `(w, x[, b])`.
+    pub fn run_built(&self, exe: &GemmExec, inputs: &[&Tensor]) -> Result<Tensor> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => match &exe.exe {
+                Some(e) => rt.run_built(e, inputs),
+                None => interp::InterpRuntime::run_gemm_spec(exe, inputs),
+            },
+            Backend::Interp(rt) => rt.run_gemm(exe, inputs),
+        }
     }
 }
 
-/// Tensor → XLA literal (f32, row-major).
-pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
-}
-
-/// XLA literal → Tensor (must be f32 array).
-pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit.to_vec::<f32>()?;
-    Tensor::new(dims, data)
+/// Validate tensor inputs against an artifact's parameter spec.
+fn check_inputs(meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != meta.params.len() {
+        return Err(Error::Shape(format!(
+            "{}: expected {} inputs, got {}",
+            meta.name,
+            meta.params.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (t, spec)) in inputs.iter().zip(&meta.params).enumerate() {
+        if t.shape() != &spec[..] {
+            return Err(Error::Shape(format!(
+                "{}: input {i} shape {:?} != artifact spec {:?}",
+                meta.name,
+                t.shape(),
+                spec
+            )));
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,175 @@
+//! PJRT compute backend: load AOT HLO-text artifacts, compile once,
+//! execute many. Only compiled under `--features pjrt` (requires the
+//! vendored `xla` crate).
+//!
+//! Adapts the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos with 64-bit instruction ids).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so all PJRT state lives on one
+//! thread; the [`super::server`] submodule exposes a channel-based compute
+//! server that the multi-threaded fleet simulator calls into.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::tensor::Tensor;
+
+/// A compiled-executable cache over the artifact set.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT execute invocations (perf accounting).
+    execs: std::cell::Cell<u64>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+            execs: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Number of PJRT devices (CPU: 1).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Total execute() calls issued so far.
+    pub fn exec_count(&self) -> u64 {
+        self.execs.get()
+    }
+
+    /// Load + compile an HLO-text file, memoised under `key`.
+    pub fn load_hlo_file(
+        &self,
+        key: &str,
+        path: &std::path::Path,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let path_str = path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact by name (warm-up path).
+    pub fn preload(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        let meta = manifest.artifact(name)?;
+        self.load_hlo_file(name, &manifest.path(&meta.file))?;
+        Ok(())
+    }
+
+    /// Execute an artifact on (facade-validated) tensor inputs.
+    pub fn execute(
+        &self,
+        manifest: &Manifest,
+        meta: &ArtifactMeta,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        let exe = self.load_hlo_file(&meta.name, &manifest.path(&meta.file))?;
+        self.run(&exe, inputs)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        // Use execute_b over buffers we own: the crate's literal-taking
+        // `execute` shim leaks the input device buffers it creates
+        // (xla_rs.cc releases them into Execute and never frees them —
+        // ≈ 32 MiB/request for an fc6 shard; see EXPERIMENTS.md §Perf).
+        // Buffers created here are PjRtBuffer wrappers with a real Drop.
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                    .map_err(Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        self.execs.set(self.execs.get() + 1);
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1()?;
+        from_literal(&out)
+    }
+
+    /// Build a plain GEMM `w@x [+b] [relu]` via XlaBuilder.
+    pub fn build_gemm(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        bias: bool,
+        relu: bool,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let b = xla::XlaBuilder::new("gemm_fallback");
+        let wp = b.parameter_s(0, &xla::Shape::array::<f32>(vec![m as i64, k as i64]), "w")?;
+        let xp = b.parameter_s(1, &xla::Shape::array::<f32>(vec![k as i64, n as i64]), "x")?;
+        let mut out = wp.dot(&xp)?;
+        if bias {
+            let bp =
+                b.parameter_s(2, &xla::Shape::array::<f32>(vec![m as i64, 1i64]), "b")?;
+            // Broadcast (m,1) across columns.
+            let bb = if n == 1 {
+                bp
+            } else {
+                bp.broadcast_in_dim(&[m as i64, n as i64], &[0, 1])?
+            };
+            out = out.add_(&bb)?;
+        }
+        if relu {
+            let zero = b.c0(0f32)?.broadcast_in_dim(&[m as i64, n as i64], &[])?;
+            out = out.max(&zero)?;
+        }
+        let comp = out.build()?;
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Execute a built (non-artifact) executable on tensors.
+    pub fn run_built(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                    .map_err(Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        self.execs.set(self.execs.get() + 1);
+        let lit = result[0][0].to_literal_sync()?;
+        from_literal(&lit)
+    }
+}
+
+/// Tensor → XLA literal (f32, row-major).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// XLA literal → Tensor (must be f32 array).
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}

@@ -27,6 +27,218 @@ pub fn forall<T: std::fmt::Debug>(
     }
 }
 
+/// True when a python-built artifact set exists at `root`; prints the
+/// standard skip note otherwise. Artifact-gated tests and benches share
+/// this so the skip rule lives in one place.
+pub fn artifacts_available(root: &std::path::Path) -> bool {
+    let ok = root.join("manifest.json").exists();
+    if !ok {
+        eprintln!(
+            "skipping: no artifacts at {} (build with `make artifacts`)",
+            root.display()
+        );
+    }
+    ok
+}
+
+/// Synthetic artifact sets: a complete on-disk manifest (model + weights
+/// + eval set) built from a seed, with **no** python/AOT build step.
+///
+/// The manifest describes a small fc-only MLP whose artifacts the
+/// interpreter backend executes straight from their metadata, so
+/// integration tests, benches, and CI exercise the full coordinator stack
+/// (deploy → dispatch → CDC recovery → merge → serve pipeline) offline.
+/// The referenced HLO files are not written — running a synthetic set on
+/// the `pjrt` backend is not supported.
+pub mod synth {
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use crate::error::{Error, Result};
+    use crate::json::{obj, Value};
+    use crate::rng::Pcg32;
+
+    /// Name of the synthetic model.
+    pub const MODEL: &str = "mlp";
+    /// fc1: 18×12 with relu, split degrees {1, 2, 4}.
+    pub const FC1_M: usize = 18;
+    pub const FC1_K: usize = 12;
+    /// fc2: 10×18 logits (no relu), split degrees {1, 2}.
+    pub const FC2_M: usize = 10;
+    /// Eval-set size.
+    pub const EVAL_COUNT: usize = 4;
+
+    /// A materialised synthetic artifact directory.
+    #[derive(Debug)]
+    pub struct SynthArtifacts {
+        pub root: PathBuf,
+    }
+
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+    fn usize_arr(v: &[usize]) -> Value {
+        Value::Arr(v.iter().map(|&x| Value::Num(x as f64)).collect())
+    }
+
+    fn fc_artifact(m_s: usize, k: usize, relu: bool) -> (String, Value) {
+        let name = format!("fc_m{m_s}_k{k}_{}", if relu { "relu" } else { "lin" });
+        let v = obj(vec![
+            ("name", Value::Str(name.clone())),
+            ("file", Value::Str(format!("hlo/{name}.hlo.txt"))),
+            ("kind", Value::Str("fc".into())),
+            ("relu", Value::Bool(relu)),
+            (
+                "params",
+                Value::Arr(vec![
+                    usize_arr(&[m_s, k]),
+                    usize_arr(&[m_s, 1]),
+                    usize_arr(&[k, 1]),
+                ]),
+            ),
+        ]);
+        (name, v)
+    }
+
+    fn fc_layer(
+        name: &str,
+        m: usize,
+        k: usize,
+        relu: bool,
+        w_offset: usize,
+        b_offset: usize,
+        degrees: &[usize],
+    ) -> Value {
+        let splits: BTreeMap<String, Value> = degrees
+            .iter()
+            .map(|&d| {
+                let m_s = m.div_ceil(d);
+                let mut pair = BTreeMap::new();
+                if relu {
+                    pair.insert(
+                        "relu".to_string(),
+                        Value::Str(format!("fc_m{m_s}_k{k}_relu")),
+                    );
+                }
+                pair.insert("lin".to_string(), Value::Str(format!("fc_m{m_s}_k{k}_lin")));
+                (d.to_string(), Value::Obj(pair))
+            })
+            .collect();
+        obj(vec![
+            ("name", Value::Str(name.into())),
+            ("kind", Value::Str("fc".into())),
+            ("k", Value::Num(0.0)),
+            ("f", Value::Num(0.0)),
+            ("s", Value::Num(1.0)),
+            ("m", Value::Num(m as f64)),
+            ("relu", Value::Bool(relu)),
+            ("padding", Value::Str("SAME".into())),
+            ("pool", Value::Num(0.0)),
+            ("input_shape", usize_arr(&[k])),
+            ("output_shape", usize_arr(&[m])),
+            ("w_offset", Value::Num(w_offset as f64)),
+            ("b_offset", Value::Num(b_offset as f64)),
+            ("w_shape", usize_arr(&[m, k])),
+            ("splits", Value::Obj(splits)),
+        ])
+    }
+
+    fn write_file(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+        std::fs::write(path, bytes)
+            .map_err(|e| Error::io(path.display().to_string(), e))
+    }
+
+    fn f32_bytes(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    /// Build a synthetic artifact set under a fresh temp directory.
+    ///
+    /// Layout mirrors `compile/aot.py`: `manifest.json`,
+    /// `weights/mlp.bin`, `eval/images.bin`, `eval/labels.bin`. Weights
+    /// and eval data are deterministic in `seed`.
+    pub fn build(seed: u64) -> Result<SynthArtifacts> {
+        let root = std::env::temp_dir().join(format!(
+            "cdc-dnn-synth-{}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            seed
+        ));
+        for sub in ["", "weights", "eval"] {
+            let dir = root.join(sub);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        }
+
+        // ---- weights: fc1 (w, b) then fc2 (w, b), f32 LE -------------
+        let mut rng = Pcg32::new(seed, 0x5e1f);
+        let mut blob: Vec<f32> = Vec::new();
+        let fc1_w_off = blob.len() * 4;
+        blob.extend((0..FC1_M * FC1_K).map(|_| rng.normal() as f32 * 0.5));
+        let fc1_b_off = blob.len() * 4;
+        blob.extend((0..FC1_M).map(|_| rng.normal() as f32 * 0.1));
+        let fc2_w_off = blob.len() * 4;
+        blob.extend((0..FC2_M * FC1_M).map(|_| rng.normal() as f32 * 0.5));
+        let fc2_b_off = blob.len() * 4;
+        blob.extend((0..FC2_M).map(|_| rng.normal() as f32 * 0.1));
+        write_file(&root.join("weights/mlp.bin"), &f32_bytes(&blob))?;
+
+        // ---- eval set ------------------------------------------------
+        let mut images: Vec<f32> = Vec::new();
+        let mut labels: Vec<u8> = Vec::new();
+        for i in 0..EVAL_COUNT {
+            images.extend((0..FC1_K).map(|_| rng.normal() as f32));
+            labels.extend(((i % FC2_M) as i32).to_le_bytes());
+        }
+        write_file(&root.join("eval/images.bin"), &f32_bytes(&images))?;
+        write_file(&root.join("eval/labels.bin"), &labels)?;
+
+        // ---- manifest ------------------------------------------------
+        let mut artifacts = Vec::new();
+        for d in [1usize, 2, 4] {
+            for relu in [true, false] {
+                artifacts.push(fc_artifact(FC1_M.div_ceil(d), FC1_K, relu).1);
+            }
+        }
+        for d in [1usize, 2] {
+            artifacts.push(fc_artifact(FC2_M.div_ceil(d), FC1_M, false).1);
+        }
+        let model = obj(vec![
+            ("name", Value::Str(MODEL.into())),
+            ("input_shape", usize_arr(&[FC1_K])),
+            ("classes", Value::Num(FC2_M as f64)),
+            ("trained", Value::Bool(false)),
+            ("weights_file", Value::Str("weights/mlp.bin".into())),
+            (
+                "layers",
+                Value::Arr(vec![
+                    fc_layer("fc1", FC1_M, FC1_K, true, fc1_w_off, fc1_b_off, &[1, 2, 4]),
+                    fc_layer("fc2", FC2_M, FC1_M, false, fc2_w_off, fc2_b_off, &[1, 2]),
+                ]),
+            ),
+        ]);
+        let manifest = obj(vec![
+            ("artifacts", Value::Arr(artifacts)),
+            ("models", Value::Arr(vec![model])),
+            (
+                "eval_set",
+                obj(vec![
+                    ("images", Value::Str("eval/images.bin".into())),
+                    ("labels", Value::Str("eval/labels.bin".into())),
+                    ("count", Value::Num(EVAL_COUNT as f64)),
+                    ("image_shape", usize_arr(&[FC1_K])),
+                ]),
+            ),
+            ("goldens", Value::Arr(Vec::new())),
+        ]);
+        write_file(
+            &root.join("manifest.json"),
+            manifest.to_string_pretty().as_bytes(),
+        )?;
+        Ok(SynthArtifacts { root })
+    }
+}
+
 /// Generator helpers.
 pub mod gen {
     use crate::rng::Pcg32;

@@ -1,0 +1,226 @@
+//! Integration tests for the pipelined serving engine, runnable with NO
+//! python-built artifacts: they deploy the synthetic fc-only model from
+//! `testkit::synth` and drive it through the full stack (fleet threads +
+//! interpreter compute + policy + CDC recovery + virtual-time scheduler).
+
+use cdc_dnn::coordinator::{
+    Pipeline, Session, SessionConfig, SplitSpec, Workload,
+};
+use cdc_dnn::fleet::{FailurePlan, NetConfig};
+use cdc_dnn::metrics::max_overlap;
+use cdc_dnn::model::Weights;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::Manifest;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::synth;
+
+/// mlp on 3 devices: fc1 split over {0,1}, fc2 whole on {2}.
+fn two_stage_cfg() -> SessionConfig {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 3;
+    cfg.net = NetConfig::ideal();
+    cfg.splits.insert("fc1".into(), SplitSpec::plain(2));
+    cfg.placement.insert("fc1".into(), vec![0, 1]);
+    cfg.placement.insert("fc2".into(), vec![2]);
+    cfg
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng)).collect()
+}
+
+/// Reference forward pass for the synthetic model.
+fn oracle(root: &std::path::Path, x: &Tensor) -> Tensor {
+    let m = Manifest::load(root).unwrap();
+    let model = m.model(synth::MODEL).unwrap();
+    let w = Weights::load(&m, model).unwrap();
+    let xc = x.clone().reshape(vec![x.len(), 1]).unwrap();
+    let mut h = w.w("fc1").unwrap().matmul(&xc).unwrap();
+    h.add_assign(w.b("fc1").unwrap()).unwrap();
+    h.relu();
+    let mut out = w.w("fc2").unwrap().matmul(&h).unwrap();
+    out.add_assign(w.b("fc2").unwrap()).unwrap();
+    out
+}
+
+#[test]
+fn pipeline_sustains_concurrent_requests() {
+    let synth = synth::build(1).unwrap();
+    let mut s = Session::start(&synth.root, two_stage_cfg()).unwrap();
+    let report = Pipeline::new(&mut s)
+        .run(&Workload::closed(inputs(8, 11), 4))
+        .unwrap();
+
+    assert_eq!(report.throughput.completed, 8);
+    assert!(report.failures.is_empty());
+    assert_eq!(report.traces.len(), 8);
+    assert_eq!(report.stages.len(), 2, "fc1 + fc2 distributed stages");
+    for st in &report.stages {
+        assert_eq!(st.served, 8, "stage {} served all requests", st.layer);
+        assert_eq!(st.occupancy.len(), 8);
+        assert!(st.busy_ms > 0.0);
+    }
+    // The acceptance assertion: ≥ 2 requests in flight, read off the raw
+    // stage-occupancy traces (stage intervals overlapping in time belong
+    // to different requests — a stage holds one request at a time).
+    let occ: Vec<_> = report.stages.iter().map(|s| &s.occupancy).collect();
+    assert!(
+        max_overlap(&occ) >= 2,
+        "pipeline must overlap stages: {}",
+        report.line()
+    );
+    assert!(report.max_concurrent_requests >= 2, "{}", report.line());
+    assert!(report.rps() > 0.0);
+    // Pipelining beats serial execution: makespan under the sum of
+    // end-to-end latencies.
+    let serial: f64 = report.latency.samples().iter().sum();
+    assert!(report.makespan_ms < serial, "no overlap achieved");
+}
+
+#[test]
+fn single_request_pipeline_matches_sequential_infer() {
+    let synth = synth::build(2).unwrap();
+    let xs = inputs(3, 22);
+
+    // A: three separate single-shot infer calls.
+    let mut a = Session::start(&synth.root, {
+        let mut c = two_stage_cfg();
+        c.net = NetConfig::moderate();
+        c
+    })
+    .unwrap();
+    let a_traces: Vec<_> = xs.iter().map(|x| a.infer(x).unwrap()).collect();
+
+    // B: the same inputs as one concurrency-1 closed-loop workload.
+    let mut b = Session::start(&synth.root, {
+        let mut c = two_stage_cfg();
+        c.net = NetConfig::moderate();
+        c
+    })
+    .unwrap();
+    let report = b.serve(&Workload::closed(xs.clone(), 1)).unwrap();
+
+    assert_eq!(report.traces.len(), 3);
+    assert_eq!(report.max_concurrent_requests, 1);
+    for (ta, tb) in a_traces.iter().zip(&report.traces) {
+        // Identical outputs (the compute path is shared)...
+        assert_eq!(ta.output, tb.output);
+        // ...and identical per-request timing: a concurrency-1 pipeline
+        // degenerates exactly to sequential inference.
+        assert!(
+            (ta.total_ms - tb.total_ms).abs() < 1e-9,
+            "infer {} vs pipeline {}",
+            ta.total_ms,
+            tb.total_ms
+        );
+        assert_eq!(ta.layers.len(), tb.layers.len());
+        for (la, lb) in ta.layers.iter().zip(&tb.layers) {
+            let da = la.t_done_ms - la.t_start_ms;
+            let db = lb.t_done_ms - lb.t_start_ms;
+            assert!((da - db).abs() < 1e-9, "{}: {da} vs {db}", la.layer);
+        }
+    }
+}
+
+#[test]
+fn cdc_recovery_under_load_is_exact_and_lossless() {
+    let synth = synth::build(3).unwrap();
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::moderate();
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    cfg.placement.insert("fc2".into(), vec![0, 1]);
+    let mut s = Session::start(&synth.root, cfg).unwrap();
+    assert_eq!(s.total_devices(), 6, "4 data + 2 parity");
+
+    // Device 2 dies before the first request: every request must recover
+    // fc1's shard 2 from the parity device, under pipelined load.
+    s.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+
+    let xs = inputs(9, 33);
+    let report = s.serve(&Workload::closed(xs.clone(), 3)).unwrap();
+    assert_eq!(report.throughput.completed, 9, "{}", report.line());
+    assert!(report.failures.is_empty(), "CDC must not lose requests");
+    assert_eq!(report.throughput.recovered, 9, "every request recovers");
+    for (x, t) in xs.iter().zip(&report.traces) {
+        assert!(t.any_recovery);
+        let want = oracle(&synth.root, x);
+        let diff = t.output.max_abs_diff(&want);
+        assert!(diff < 1e-4, "recovered logits diverge: {diff}");
+    }
+}
+
+#[test]
+fn serve_report_is_deterministic_in_seed_and_workload() {
+    let run = || {
+        let synth = synth::build(4).unwrap();
+        let mut cfg = two_stage_cfg();
+        cfg.net = NetConfig::moderate();
+        cfg.splits.insert("fc1".into(), SplitSpec::cdc(2));
+        cfg.threshold_factor = 2.0;
+        let mut s = Session::start(&synth.root, cfg).unwrap();
+        // An intermittently-failing device exercises the stochastic
+        // recovery path.
+        s.set_failure(1, FailurePlan::Intermittent(0.3)).unwrap();
+        s.serve(&Workload::poisson(inputs(20, 44), 2000.0, 7)).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.latency.samples(), b.latency.samples());
+    assert_eq!(a.queue_wait.samples(), b.queue_wait.samples());
+    assert_eq!(a.makespan_ms, b.makespan_ms);
+    assert_eq!(a.throughput.completed, b.throughput.completed);
+    assert_eq!(a.throughput.recovered, b.throughput.recovered);
+    assert_eq!(a.max_concurrent_requests, b.max_concurrent_requests);
+    assert_eq!(a.stages.len(), b.stages.len());
+    for (sa, sb) in a.stages.iter().zip(&b.stages) {
+        assert_eq!(sa.occupancy, sb.occupancy, "stage {}", sa.layer);
+    }
+    for (ta, tb) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(ta.output, tb.output);
+        assert_eq!(ta.t_done_ms, tb.t_done_ms);
+    }
+}
+
+#[test]
+fn admission_cap_bounds_the_entry_queue() {
+    let synth = synth::build(5).unwrap();
+    let mut s = Session::start(&synth.root, two_stage_cfg()).unwrap();
+    // Five simultaneous arrivals, entry queue capped at 2: the first is
+    // dispatched immediately, two wait, two balk.
+    let wl = Workload::uniform(inputs(5, 55), 0.0).with_admission_cap(2);
+    let report = s.serve(&wl).unwrap();
+    assert_eq!(report.dropped, 2, "{}", report.line());
+    assert_eq!(report.throughput.completed, 3);
+    assert!(report.failures.is_empty());
+    // Queue waits grow for the waiting requests.
+    let qw = report.queue_wait.samples();
+    assert_eq!(qw.len(), 3);
+    assert!(qw[0] < 1e-12);
+    assert!(qw[1] > 0.0 && qw[2] > qw[1]);
+}
+
+#[test]
+fn layer_plans_expose_split_introspection() {
+    let synth = synth::build(6).unwrap();
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::ideal();
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    let s = Session::start(&synth.root, cfg).unwrap();
+    let plans = s.layer_plans();
+    assert_eq!(plans.len(), 2);
+    let (name, p1) = &plans[0];
+    assert_eq!(*name, "fc1");
+    assert_eq!(p1.d, 4);
+    // Balanced-assignment invariant: shards cover the layer exactly.
+    assert_eq!(p1.covered_rows(), synth::FC1_M);
+    // Uniform (padded) shard height.
+    assert!(p1.shards.iter().all(|sh| sh.height == synth::FC1_M.div_ceil(4)));
+    let (name2, p2) = &plans[1];
+    assert_eq!(*name2, "fc2");
+    assert_eq!(p2.d, 1);
+}
