@@ -4,7 +4,7 @@
 
 ARTIFACTS ?= rust/artifacts
 
-.PHONY: artifacts build test bench fmt clippy
+.PHONY: artifacts build test bench bench-gemm bench-gemm-smoke fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -18,6 +18,14 @@ test:
 
 bench:
 	cargo bench
+
+# Kernel sweep: writes the BENCH_gemm.json baseline (naive vs tiled vs
+# threaded GFLOP/s). The smoke flavor is the CI kernel-regression guard.
+bench-gemm:
+	cargo bench --bench gemm_runtime
+
+bench-gemm-smoke:
+	GEMM_BENCH_SMOKE=1 GEMM_BENCH_ENFORCE=1 cargo bench --bench gemm_runtime
 
 fmt:
 	cargo fmt --check

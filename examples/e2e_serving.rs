@@ -41,9 +41,10 @@ fn main() -> cdc_dnn::Result<()> {
     let mut session = Session::start(artifacts, cfg)?;
     println!(
         "fleet: {} devices ({} parity), WiFi-jitter timing model, \
-         straggler threshold 1.5×",
+         straggler threshold 1.5×, compute backend: {}",
         session.total_devices(),
-        session.extra_devices
+        session.extra_devices,
+        cdc_dnn::runtime::backend_label()
     );
 
     // Device 3 drops 20% of its replies (intermittent IoT failure).

@@ -39,9 +39,15 @@ fn alexnet_cfg(cdc_on: bool) -> SessionConfig {
 }
 
 fn main() {
+    let backend = cdc_dnn::runtime::backend_label();
     if !cdc_dnn::testkit::artifacts_available(std::path::Path::new("artifacts")) {
+        println!(
+            "[skip] fig12_recovery: AOT artifacts absent (would run on \
+             backend: {backend})"
+        );
         return;
     }
+    println!("fig12_recovery: compute backend = {backend}");
     let mut rng = Pcg32::seeded(5);
     let x = Tensor::randn(vec![32, 32, 3], &mut rng);
 

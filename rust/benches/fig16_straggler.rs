@@ -33,9 +33,15 @@ fn mean_latency(d: usize, threshold: f64, reqs: usize) -> f64 {
 }
 
 fn main() {
+    let backend = cdc_dnn::runtime::backend_label();
     if !cdc_dnn::testkit::artifacts_available(std::path::Path::new("artifacts")) {
+        println!(
+            "[skip] fig16_straggler: AOT artifacts absent (would run on \
+             backend: {backend})"
+        );
         return;
     }
+    println!("fig16_straggler: compute backend = {backend}");
     let reqs = 150;
 
     // Fig. 16 series: improvement vs device count.

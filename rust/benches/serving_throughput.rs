@@ -34,6 +34,10 @@ fn session(root: &std::path::Path, cdc: bool) -> Session {
 }
 
 fn main() {
+    println!(
+        "serving_throughput: compute backend = {}",
+        cdc_dnn::runtime::backend_label()
+    );
     let synth = synth::build(42).expect("synthetic artifacts");
     let mut rng = Pcg32::seeded(9);
     let inputs: Vec<Tensor> = (0..REQUESTS)
@@ -78,12 +82,7 @@ fn main() {
 
     let doc = obj(vec![
         ("experiment", Value::Str("bench_serving_throughput".into())),
-        (
-            "backend",
-            Value::Str(
-                if cfg!(feature = "pjrt") { "pjrt" } else { "interpreter" }.into(),
-            ),
-        ),
+        ("backend", Value::Str(cdc_dnn::runtime::backend_label().into())),
         ("baselines", Value::Arr(results)),
     ]);
     std::fs::create_dir_all("results").expect("results dir");

@@ -4,6 +4,7 @@
 pub mod coverage;
 
 use crate::error::{Error, Result};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 /// Parity weights for a set of uniform-height shards (paper Eq. 11):
@@ -21,14 +22,74 @@ pub fn parity_weights(shards: &[(Tensor, Tensor)]) -> Result<(Tensor, Tensor)> {
     Ok((pw, pb))
 }
 
+/// Fused CDC encode (DESIGN.md §8): run ONE tiled GEMM over the
+/// vertically stacked shard weights `w_stacked (d·h, k)` and fold the
+/// parity output out of the result with the row-block checksum epilogue —
+/// the checksum shard costs one extra pass over the output panel, not a
+/// separate full parity-weight multiply. Returns the `d` pre-activation
+/// shard outputs `(h, n)` and the parity output, which equals
+/// `parity_weights(shards).0 @ x + Σ b` exactly (the invariant the
+/// decode subtraction relies on; summation happens pre-activation).
+pub fn fused_shard_outputs(
+    w_stacked: &Tensor,
+    b_stacked: &Tensor,
+    x: &Tensor,
+    d: usize,
+) -> Result<(Vec<Tensor>, Tensor)> {
+    let (mt, k) = match w_stacked.shape()[..] {
+        [m, k] => (m, k),
+        _ => {
+            return Err(Error::Shape(format!(
+                "fused encode weights {:?}",
+                w_stacked.shape()
+            )))
+        }
+    };
+    let (k2, n) = match x.shape()[..] {
+        [k2, n] => (k2, n),
+        _ => return Err(Error::Shape(format!("fused encode input {:?}", x.shape()))),
+    };
+    if k != k2 {
+        return Err(Error::Shape(format!("fused encode {mt}x{k} @ {k2}x{n}")));
+    }
+    if d == 0 || mt % d != 0 {
+        return Err(Error::Config(format!(
+            "fused encode: {d} shards must divide {mt} rows uniformly"
+        )));
+    }
+    if b_stacked.shape() != [mt, 1] {
+        return Err(Error::Shape(format!(
+            "fused encode bias {:?} vs rows {mt}",
+            b_stacked.shape()
+        )));
+    }
+    let h = mt / d;
+    let mut out = vec![0.0f32; mt * n];
+    kernels::with_scratch(|sc| {
+        kernels::gemm_auto(w_stacked.data(), x.data(), &mut out, mt, k, n, sc)
+    });
+    kernels::bias_relu(&mut out, mt, n, Some(b_stacked.data()), false);
+    let mut parity = vec![0.0f32; h * n];
+    kernels::row_block_checksum(&out, mt, n, h, &mut parity);
+    let shards = (0..d)
+        .map(|i| Tensor::new(vec![h, n], out[i * h * n..(i + 1) * h * n].to_vec()))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((shards, Tensor::new(vec![h, n], parity)?))
+}
+
 /// Recover the single missing shard output: parity − Σ received (§5.2).
 /// `received` are the surviving data-shard outputs covered by this parity.
 pub fn decode(parity_out: &Tensor, received: &[&Tensor]) -> Result<Tensor> {
-    let mut out = parity_out.clone();
+    decode_owned(parity_out.clone(), received)
+}
+
+/// [`decode`] that consumes the parity output in place of cloning it —
+/// the serve hot path's allocation-free recovery subtraction.
+pub fn decode_owned(mut parity_out: Tensor, received: &[&Tensor]) -> Result<Tensor> {
     for r in received {
-        out.sub_assign(r)?;
+        parity_out.sub_assign(r)?;
     }
-    Ok(out)
+    Ok(parity_out)
 }
 
 /// Fig. 18 multi-failure scheme: parity *groups*. Each parity device sums
@@ -96,6 +157,51 @@ mod tests {
         let received: Vec<&Tensor> = [&outs[0], &outs[1], &outs[3]].to_vec();
         let rec = decode(&parity_out, &received).unwrap();
         assert!(rec.max_abs_diff(&outs[2]) < 1e-4);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_parity_gemm() {
+        // The fused checksum epilogue must produce bit-for-bit the same
+        // recovery algebra as the offline parity-weight multiply (within
+        // f32 reassociation noise).
+        let mut rng = Pcg32::seeded(17);
+        let (d, h, k, n) = (4usize, 16usize, 40usize, 3usize);
+        let shards: Vec<(Tensor, Tensor)> = (0..d)
+            .map(|_| {
+                (
+                    Tensor::randn(vec![h, k], &mut rng),
+                    Tensor::randn(vec![h, 1], &mut rng),
+                )
+            })
+            .collect();
+        let x = Tensor::randn(vec![k, n], &mut rng);
+        let wrefs: Vec<&Tensor> = shards.iter().map(|(w, _)| w).collect();
+        let brefs: Vec<&Tensor> = shards.iter().map(|(_, b)| b).collect();
+        let w_stacked = Tensor::concat0(&wrefs).unwrap();
+        let b_stacked = Tensor::concat0(&brefs).unwrap();
+
+        let (outs, parity_fused) =
+            fused_shard_outputs(&w_stacked, &b_stacked, &x, d).unwrap();
+
+        let (pw, pb) = parity_weights(&shards).unwrap();
+        let mut parity_sep = pw.matmul(&x).unwrap();
+        for (i, row) in parity_sep.data_mut().chunks_mut(n).enumerate() {
+            for v in row.iter_mut() {
+                *v += pb.data()[i];
+            }
+        }
+        assert!(parity_fused.max_abs_diff(&parity_sep) < 1e-4);
+
+        // Shard outputs are the plain per-shard GEMMs, and the checksum
+        // decodes a missing one.
+        for (i, (w, b)) in shards.iter().enumerate() {
+            let mut y = w.matmul(&x).unwrap();
+            y.add_assign(b).unwrap();
+            assert!(outs[i].max_abs_diff(&y) < 1e-4, "shard {i}");
+        }
+        let received: Vec<&Tensor> = [&outs[0], &outs[2], &outs[3]].to_vec();
+        let rec = decode(&parity_fused, &received).unwrap();
+        assert!(rec.max_abs_diff(&outs[1]) < 1e-3);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::sync::Arc;
 use crate::cdc;
 use crate::error::{Error, Result};
 use crate::fleet::{Completion, Device, DeviceConfig, NetConfig, TaskDef};
+use crate::kernels::Scratch;
 use crate::model::{shard_io_bytes, shard_macs, Weights};
 use crate::partition::LayerPlan;
 use crate::runtime::manifest::{Manifest, ModelManifest};
@@ -176,6 +177,9 @@ pub struct Session {
     known_failed: Vec<usize>,
     /// Extra devices allocated beyond cfg.n_devices (parity/replicas).
     pub extra_devices: usize,
+    /// Serve-path buffer arena: merge/pool/decode buffers are reused
+    /// across requests, so steady-state resolution allocates nothing.
+    scratch: Scratch,
     _server: Option<ComputeServer>,
 }
 
@@ -436,6 +440,7 @@ impl Session {
             next_req: 0,
             known_failed: Vec::new(),
             extra_devices: extra,
+            scratch: Scratch::new(),
             _server: server,
         })
     }

@@ -202,9 +202,19 @@ struct InFlight {
     t_first_start: f64,
     t_ready: f64,
     stage_idx: usize,
-    cur: Tensor,
+    /// Current activation, `Arc`-shared with in-flight device work so a
+    /// stage dispatch never copies the tensor payload.
+    cur: Arc<Tensor>,
     layers: Vec<super::LayerTrace>,
     any_recovery: bool,
+}
+
+/// Take the activation out of its `Arc` without copying when uniquely
+/// owned — the common case, since device threads drop their handle as
+/// soon as the shard executes.
+fn take_owned(cur: &mut Arc<Tensor>) -> Tensor {
+    let arc = std::mem::replace(cur, Arc::new(Tensor::zeros(vec![0])));
+    Arc::try_unwrap(arc).unwrap_or_else(|shared| shared.as_ref().clone())
 }
 
 /// A dispatched (stage, request) pair awaiting completions.
@@ -229,13 +239,14 @@ fn advance_locals(
     stages: &[Stage],
     model: &ModelManifest,
     fl: &mut InFlight,
+    scratch: &mut crate::kernels::Scratch,
 ) -> Result<bool> {
     while fl.stage_idx < stages.len() {
         match &stages[fl.stage_idx].kind {
             StageKind::Local { layer_idx } => {
                 let layer = &model.layers[*layer_idx];
-                let cur = std::mem::replace(&mut fl.cur, Tensor::zeros(vec![0]));
-                fl.cur = super::stage::apply_local(layer, cur)?;
+                let cur = take_owned(&mut fl.cur);
+                fl.cur = Arc::new(super::stage::apply_local(layer, cur, scratch)?);
                 fl.stage_idx += 1;
             }
             StageKind::Dist(_) => return Ok(false),
@@ -250,6 +261,20 @@ impl Session {
     /// percentiles, and per-stage occupancy. `Session::infer` is the
     /// single-request special case of this engine.
     pub fn serve(&mut self, workload: &Workload) -> Result<ServeReport> {
+        // Detach the serve-path arena from `self` so stage resolution can
+        // borrow it mutably alongside `self.stages`; restore it on every
+        // exit path (an error mid-run must not drop the warmed pool).
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let result = self.serve_inner(workload, &mut scratch);
+        self.scratch = scratch;
+        result
+    }
+
+    fn serve_inner(
+        &mut self,
+        workload: &Workload,
+        scratch: &mut crate::kernels::Scratch,
+    ) -> Result<ServeReport> {
         let total = workload.inputs.len();
         let n_stages = self.stages.len();
         let first_dist = self.stages.iter().position(|s| s.is_distributed());
@@ -327,7 +352,7 @@ impl Session {
         loop {
             // ---- admit -----------------------------------------------
             while let Some((idx, arrival)) = pending_admissions.pop_front() {
-                let cur = reshape_input(&self.model, &workload.inputs[idx])?;
+                let cur = Arc::new(reshape_input(&self.model, &workload.inputs[idx])?);
                 let mut fl = InFlight {
                     req: first_req + idx as u64,
                     t_arrival: arrival,
@@ -338,12 +363,12 @@ impl Session {
                     layers: Vec::new(),
                     any_recovery: false,
                 };
-                if advance_locals(&self.stages, &self.model, &mut fl)? {
+                if advance_locals(&self.stages, &self.model, &mut fl, scratch)? {
                     // Degenerate model with no distributed stage:
                     // completes at its arrival instant.
                     let trace = RequestTrace {
                         req: fl.req,
-                        output: fl.cur,
+                        output: take_owned(&mut fl.cur),
                         total_ms: 0.0,
                         t_arrival_ms: arrival,
                         t_done_ms: arrival,
@@ -410,7 +435,7 @@ impl Session {
                 let StageKind::Dist(ds) = &self.stages[s].kind else {
                     unreachable!("only distributed stages are dispatched")
                 };
-                let input = Arc::new(inflight[i].cur.clone());
+                let input = inflight[i].cur.clone();
                 let pending = ds.dispatch(
                     &self.devices,
                     &self.cfg.net,
@@ -467,7 +492,14 @@ impl Session {
                 };
                 let layer = &self.model.layers[ds.layer_idx];
                 req_to_stage.remove(&inflight[b.infl].req);
-                match ds.resolve(layer, &b.got, b.t_enter, self.cfg.threshold_factor)? {
+                let resolved = ds.resolve(
+                    layer,
+                    b.got,
+                    b.t_enter,
+                    self.cfg.threshold_factor,
+                    scratch,
+                )?;
+                match resolved {
                     StageOutcome::Done { t_done, output, trace } => {
                         stage_free[s] = t_done;
                         occupancy[s].push(b.t_enter, t_done);
@@ -475,17 +507,19 @@ impl Session {
                         let fl = &mut inflight[b.infl];
                         fl.any_recovery |= trace.outcome == "recovered";
                         fl.layers.push(trace);
-                        fl.cur = output;
+                        // Recycle the consumed activation into the arena
+                        // (unique once the devices dropped their handles).
+                        let old = std::mem::replace(&mut fl.cur, Arc::new(output));
+                        if let Ok(t) = Arc::try_unwrap(old) {
+                            scratch.put(t.into_data());
+                        }
                         fl.t_ready = t_done;
                         fl.stage_idx = s + 1;
-                        if advance_locals(&self.stages, &self.model, fl)? {
+                        if advance_locals(&self.stages, &self.model, fl, scratch)? {
                             let done_t = fl.t_ready;
                             let trace = RequestTrace {
                                 req: fl.req,
-                                output: std::mem::replace(
-                                    &mut fl.cur,
-                                    Tensor::zeros(vec![0]),
-                                ),
+                                output: take_owned(&mut fl.cur),
                                 total_ms: done_t - fl.t_arrival,
                                 t_arrival_ms: fl.t_arrival,
                                 t_done_ms: done_t,

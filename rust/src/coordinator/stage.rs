@@ -17,6 +17,7 @@ use std::sync::Arc;
 use crate::cdc;
 use crate::error::{Error, Result};
 use crate::fleet::{Completion, Device, NetConfig, WorkOrder};
+use crate::kernels::Scratch;
 use crate::partition::LayerPlan;
 use crate::runtime::manifest::LayerManifest;
 use crate::tensor::Tensor;
@@ -148,12 +149,18 @@ impl DistStage {
     /// Resolve a fully-gathered stage: decide *when* the layer completed
     /// and *how* (pure policy layer), reconstruct any missing shard from
     /// its parity group, and merge shard outputs into the layer output.
+    ///
+    /// Takes the gathered completions by value so shard outputs are
+    /// *moved* into the merge (no per-shard tensor clones), and `scratch`
+    /// backs the merge/pool buffers — the steady-state resolve path
+    /// performs no fresh heap allocations.
     pub(crate) fn resolve(
         &self,
         layer: &LayerManifest,
-        by_task: &BTreeMap<u64, Completion>,
+        mut by_task: BTreeMap<u64, Completion>,
         t_enter: f64,
         threshold_factor: f64,
+        scratch: &mut Scratch,
     ) -> Result<StageOutcome> {
         let data_t: Vec<f64> = self
             .data
@@ -200,18 +207,26 @@ impl DistStage {
             }
         };
 
-        // Materialise shard outputs (decode the missing ones from their
-        // parity group: parity − Σ received — the paper's
-        // close-to-zero-latency subtraction).
+        // Trace bookkeeping before shard outputs are moved out below.
+        let aux_arrivals_ms: Vec<f64> = self
+            .parities
+            .iter()
+            .map(|(_, t, _)| by_task[t].t_arrival_ms)
+            .chain(self.replicas.iter().map(|(_, t)| by_task[t].t_arrival_ms))
+            .collect();
+
+        // Materialise shard outputs by *moving* them out of the gathered
+        // completions (decode the missing ones from their parity group:
+        // parity − Σ received — the paper's close-to-zero subtraction).
         let mut parts: Vec<Option<Tensor>> = self
             .data
             .iter()
-            .map(|(_, t)| by_task[t].result.clone())
+            .map(|(_, t)| by_task.get_mut(t).and_then(|c| c.result.take()))
             .collect();
         // 2MR: fill from the replica when the primary is lost.
         for (i, (_, rt)) in self.replicas.iter().enumerate() {
             if parts[i].is_none() {
-                parts[i] = by_task[rt].result.clone();
+                parts[i] = by_task.get_mut(rt).and_then(|c| c.result.take());
             }
         }
         for &mi in &missing {
@@ -220,21 +235,21 @@ impl DistStage {
                 .iter()
                 .find(|(_, _, g)| g.contains(&mi))
                 .expect("recovered shard must be covered");
-            let parity_out = by_task[ptask]
-                .result
-                .clone()
+            let parity_out = by_task
+                .get_mut(ptask)
+                .and_then(|c| c.result.take())
                 .ok_or_else(|| Error::Fleet("parity result lost".into()))?;
-            let received: Vec<Tensor> = cover
+            let received: Vec<&Tensor> = cover
                 .iter()
                 .filter(|&&i| i != mi)
                 .map(|&i| {
                     parts[i]
-                        .clone()
+                        .as_ref()
                         .ok_or_else(|| Error::Fleet("covered shard lost".into()))
                 })
                 .collect::<Result<Vec<_>>>()?;
-            let refs: Vec<&Tensor> = received.iter().collect();
-            parts[mi] = Some(cdc::decode(&parity_out, &refs)?);
+            let recovered = cdc::decode_owned(parity_out, &received)?;
+            parts[mi] = Some(recovered);
         }
         let out: Vec<Tensor> = parts
             .into_iter()
@@ -244,19 +259,25 @@ impl DistStage {
             })
             .collect::<Result<Vec<_>>>()?;
 
-        // Merge: concat + trim padding + deferred epilogue.
-        let refs: Vec<&Tensor> = out.iter().collect();
+        // Merge: concat with the CDC padding trim fused in, deferred
+        // epilogue, pool — all on scratch-arena buffers; the consumed
+        // shard outputs are recycled into the arena.
         let mut merged = if layer.kind == "fc" {
-            Tensor::concat0(&refs)?.take_rows(layer.m)?
+            merge_rows(&out, layer.m, scratch)?
         } else {
-            let cat = Tensor::concat_channels(&refs)?;
-            cat.take_channels(0, layer.k)?
+            merge_channels(&out, layer.k, scratch)?
         };
+        for p in out {
+            scratch.put(p.into_data());
+        }
         if layer.relu && !self.fused_relu {
             merged.relu();
         }
         if layer.kind == "conv" && layer.pool > 0 {
-            merged = merged.maxpool(layer.pool, layer.pool)?;
+            let mut buf = scratch.take(merged.maxpool_len(layer.pool, layer.pool)?);
+            let shape = merged.maxpool_into(layer.pool, layer.pool, &mut buf)?;
+            let pooled = Tensor::new(shape, buf)?;
+            scratch.put(std::mem::replace(&mut merged, pooled).into_data());
         }
 
         let trace = LayerTrace {
@@ -266,23 +287,128 @@ impl DistStage {
             outcome: kind,
             recovered_shard: missing.first().copied(),
             data_arrivals_ms: data_t,
-            aux_arrivals_ms: self
-                .parities
-                .iter()
-                .map(|(_, t, _)| by_task[t].t_arrival_ms)
-                .chain(self.replicas.iter().map(|(_, t)| by_task[t].t_arrival_ms))
-                .collect(),
+            aux_arrivals_ms,
         };
         Ok(StageOutcome::Done { t_done: t_ms, output: merged, trace })
     }
 }
 
-/// Apply a merge-point (local) layer — free in the timing model.
-pub(crate) fn apply_local(layer: &LayerManifest, cur: Tensor) -> Result<Tensor> {
+/// Concatenate fc shard outputs along axis 0, keeping only the first
+/// `m_keep` rows (the CDC padding trim fused into the copy), into a
+/// scratch-arena buffer. Mirrors `Tensor::concat0` + `take_rows`.
+fn merge_rows(parts: &[Tensor], m_keep: usize, scratch: &mut Scratch) -> Result<Tensor> {
+    let first = parts
+        .first()
+        .ok_or_else(|| Error::Shape("merge of zero shards".into()))?;
+    let tail = &first.shape()[1..];
+    let stride: usize = tail.iter().product();
+    let mut total = 0;
+    for p in parts {
+        if &p.shape()[1..] != tail {
+            return Err(Error::Shape(format!(
+                "merge tail mismatch: {:?} vs {:?}",
+                first.shape(),
+                p.shape()
+            )));
+        }
+        total += p.shape()[0];
+    }
+    if total < m_keep {
+        return Err(Error::Shape(format!(
+            "merge of {total} rows cannot keep {m_keep}"
+        )));
+    }
+    let mut buf = scratch.take(m_keep * stride);
+    let mut row = 0;
+    for p in parts {
+        if row >= m_keep {
+            break;
+        }
+        let rows = p.shape()[0].min(m_keep - row);
+        buf[row * stride..(row + rows) * stride]
+            .copy_from_slice(&p.data()[..rows * stride]);
+        row += rows;
+    }
+    let mut shape = vec![m_keep];
+    shape.extend_from_slice(tail);
+    Tensor::new(shape, buf)
+}
+
+/// Concatenate (H, W, C_i) conv shard outputs along the channel axis,
+/// keeping only the first `c_keep` channels (CDC padding trim fused in),
+/// into a scratch-arena buffer. Mirrors `Tensor::concat_channels` +
+/// `take_channels`.
+fn merge_channels(parts: &[Tensor], c_keep: usize, scratch: &mut Scratch) -> Result<Tensor> {
+    let first = parts
+        .first()
+        .ok_or_else(|| Error::Shape("merge of zero shards".into()))?;
+    let (h, w) = match first.shape()[..] {
+        [h, w, _] => (h, w),
+        _ => {
+            return Err(Error::Shape(format!(
+                "channel merge wants rank-3, got {:?}",
+                first.shape()
+            )))
+        }
+    };
+    let mut c_total = 0;
+    for p in parts {
+        match p.shape()[..] {
+            [ph, pw, pc] if ph == h && pw == w => c_total += pc,
+            _ => {
+                return Err(Error::Shape(format!(
+                    "channel merge mismatch: {:?} vs {:?}",
+                    first.shape(),
+                    p.shape()
+                )))
+            }
+        }
+    }
+    if c_total < c_keep {
+        return Err(Error::Shape(format!(
+            "merge of {c_total} channels cannot keep {c_keep}"
+        )));
+    }
+    let mut buf = scratch.take(h * w * c_keep);
+    if c_keep > 0 {
+        for (y, px) in buf.chunks_exact_mut(c_keep).enumerate() {
+            let mut off = 0;
+            for p in parts {
+                if off >= c_keep {
+                    break;
+                }
+                let pc = p.shape()[2];
+                let take = pc.min(c_keep - off);
+                px[off..off + take].copy_from_slice(&p.data()[y * pc..y * pc + take]);
+                off += take;
+            }
+        }
+    }
+    Tensor::new(vec![h, w, c_keep], buf)
+}
+
+/// Apply a merge-point (local) layer — free in the timing model. The
+/// consumed activation's buffer is recycled into the scratch arena
+/// (flatten is a pure reshape and keeps its storage).
+pub(crate) fn apply_local(
+    layer: &LayerManifest,
+    cur: Tensor,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     match layer.kind.as_str() {
-        "maxpool" => cur.maxpool(layer.pool, layer.pool),
+        "maxpool" => {
+            let mut buf = scratch.take(cur.maxpool_len(layer.pool, layer.pool)?);
+            let shape = cur.maxpool_into(layer.pool, layer.pool, &mut buf)?;
+            let out = Tensor::new(shape, buf)?;
+            scratch.put(cur.into_data());
+            Ok(out)
+        }
         "flatten" => Ok(cur.flatten_col()),
-        "gap" => cur.gap(),
+        "gap" => {
+            let out = cur.gap()?;
+            scratch.put(cur.into_data());
+            Ok(out)
+        }
         other => Err(Error::Config(format!("unexpected local layer {other}"))),
     }
 }

@@ -1,0 +1,393 @@
+//! Cache-blocked, register-tiled f32 GEMM with a multi-threaded row
+//! driver — the one hot kernel every fc and (via im2col) conv shard runs
+//! on (DESIGN.md §8).
+//!
+//! Structure is the classic three-level blocking (the decomposition the
+//! paper's cost model assumes): the operand matrices are cut into
+//! `MC × KC` panels of A and `KC × NC` panels of B, packed into
+//! contiguous micro-panel strips, and multiplied by an `MR × NR`
+//! register-tiled micro-kernel that keeps the C accumulator in registers
+//! across the whole KC depth. Threading partitions C's rows across
+//! `std::thread::scope` workers (zero external deps); each worker packs
+//! its own panels, so no synchronisation happens inside a multiply.
+//!
+//! All functions take row-major slices and *overwrite* `c`. Shared
+//! epilogues ([`bias_relu`], [`row_block_checksum`]) run as one extra
+//! pass over C — the CDC parity checksum costs a panel pass, not a
+//! separate full multiply.
+
+use super::scratch::{with_scratch, Scratch};
+
+/// Rows of A per packed panel (multiple of [`MR`]).
+pub const MC: usize = 64;
+/// Shared (depth) dimension per packed panel.
+pub const KC: usize = 256;
+/// Columns of B per packed panel (multiple of [`NR`]).
+pub const NC: usize = 512;
+/// Micro-kernel rows (register tile height).
+pub const MR: usize = 4;
+/// Micro-kernel columns (register tile width, one/two SIMD lanes).
+pub const NR: usize = 8;
+
+/// Below this FLOP count (2mkn) the packed kernel's setup overhead
+/// dominates and the naive loop wins.
+const TILED_MIN_FLOPS: f64 = 2.0 * 48.0 * 48.0 * 48.0;
+/// Above this FLOP count row-partitioned threading pays for the spawn.
+const THREADED_MIN_FLOPS: f64 = 2.0 * 176.0 * 176.0 * 176.0;
+
+fn check_dims(a: &[f32], b: &[f32], c: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm: lhs length vs ({m},{k})");
+    assert_eq!(b.len(), k * n, "gemm: rhs length vs ({k},{n})");
+    assert_eq!(c.len(), m * n, "gemm: out length vs ({m},{n})");
+}
+
+/// Branch-free naive reference GEMM: `c = a (m,k) @ b (k,n)`, row-major.
+/// The oracle the tiled/threaded kernels are property-tested against and
+/// the baseline `BENCH_gemm.json` speedups are measured from.
+pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    check_dims(a, b, c, m, k, n);
+    c.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    for (arow, crow) in a.chunks_exact(k.max(1)).zip(c.chunks_exact_mut(n)).take(m) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Heuristic entry point: naive for tiny/degenerate shapes (the serving
+/// GEMV case), single-thread tiled in the mid range, row-threaded above
+/// [`THREADED_MIN_FLOPS`]. `scratch` feeds the packing panels.
+pub fn gemm_auto(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut Scratch,
+) {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if n < NR || flops < TILED_MIN_FLOPS {
+        gemm_naive(a, b, c, m, k, n);
+    } else if flops >= THREADED_MIN_FLOPS && auto_threads() > 1 {
+        gemm_threaded(a, b, c, m, k, n, auto_threads());
+    } else {
+        gemm_tiled(a, b, c, m, k, n, scratch);
+    }
+}
+
+/// Cached hardware parallelism for [`gemm_auto`] (capped at 8: the row
+/// driver targets small-core edge hosts, not NUMA servers).
+pub fn auto_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+/// Single-threaded blocked GEMM: `c = a @ b` with MC/KC/NC panel
+/// blocking, packed micro-panels, and the [`MR`]`×`[`NR`] register
+/// micro-kernel. Packing buffers come from `scratch` (zero steady-state
+/// allocations).
+pub fn gemm_tiled(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut Scratch,
+) {
+    check_dims(a, b, c, m, k, n);
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut apack = scratch.take(MC * KC);
+    let mut bpack = scratch.take(KC * NC);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, &mut bpack, pc, jc, kc, nc, n);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                pack_a(a, &mut apack, ic, pc, mc, kc, k);
+                macro_kernel(&apack, &bpack, c, ic, jc, mc, nc, kc, n);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+    scratch.put(bpack);
+    scratch.put(apack);
+}
+
+/// Multi-threaded blocked GEMM: C's rows are partitioned into up to
+/// `threads` contiguous MR-aligned bands, each computed by a scoped
+/// worker running [`gemm_tiled`] on its slice of A and C (B is shared
+/// read-only; workers never synchronise mid-multiply).
+pub fn gemm_threaded(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    check_dims(a, b, c, m, k, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let t = threads.max(1).min(m.div_ceil(MR));
+    if t <= 1 {
+        with_scratch(|sc| gemm_tiled(a, b, c, m, k, n, sc));
+        return;
+    }
+    let rows_per = m.div_ceil(t).div_ceil(MR) * MR;
+    std::thread::scope(|s| {
+        for (ci, cband) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = cband.len() / n;
+            let aband = &a[ci * rows_per * k..ci * rows_per * k + rows * k];
+            s.spawn(move || {
+                let mut sc = Scratch::new();
+                gemm_tiled(aband, b, cband, rows, k, n, &mut sc);
+            });
+        }
+    });
+}
+
+/// Pack an `mc × kc` block of A (at `(ic, pc)`, leading dim `lda`) into
+/// MR-row strips: strip `s` stores rows `[s·MR, s·MR+MR)` interleaved by
+/// depth (`apack[s·MR·kc + kk·MR + i]`), zero-padded past `mc` so the
+/// micro-kernel always runs the full register tile.
+fn pack_a(a: &[f32], apack: &mut [f32], ic: usize, pc: usize, mc: usize, kc: usize, lda: usize) {
+    for strip in 0..mc.div_ceil(MR) {
+        let base = strip * MR * kc;
+        for kk in 0..kc {
+            let col = pc + kk;
+            for i in 0..MR {
+                let row = strip * MR + i;
+                apack[base + kk * MR + i] = if row < mc {
+                    a[(ic + row) * lda + col]
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nc` block of B (at `(pc, jc)`, leading dim `ldb`) into
+/// NR-column strips: strip `t` stores columns `[t·NR, t·NR+NR)` row by
+/// row (`bpack[t·NR·kc + kk·NR + j]`), zero-padded past `nc`.
+fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
+    for strip in 0..nc.div_ceil(NR) {
+        let base = strip * NR * kc;
+        if (strip + 1) * NR <= nc {
+            for kk in 0..kc {
+                let src = (pc + kk) * ldb + jc + strip * NR;
+                bpack[base + kk * NR..base + (kk + 1) * NR]
+                    .copy_from_slice(&b[src..src + NR]);
+            }
+        } else {
+            for kk in 0..kc {
+                let src = (pc + kk) * ldb + jc + strip * NR;
+                for j in 0..NR {
+                    let col = strip * NR + j;
+                    bpack[base + kk * NR + j] = if col < nc { b[src + j] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// Multiply one packed A panel by one packed B panel into the C block at
+/// `(ic, jc)`, micro-tile by micro-tile.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    apack: &[f32],
+    bpack: &[f32],
+    c: &mut [f32],
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    ldc: usize,
+) {
+    for jstrip in 0..nc.div_ceil(NR) {
+        let jr = jstrip * NR;
+        let nr = NR.min(nc - jr);
+        let bstrip = &bpack[jstrip * NR * kc..(jstrip + 1) * NR * kc];
+        for istrip in 0..mc.div_ceil(MR) {
+            let ir = istrip * MR;
+            let mr = MR.min(mc - ir);
+            let astrip = &apack[istrip * MR * kc..(istrip + 1) * MR * kc];
+            let coff = (ic + ir) * ldc + jc + jr;
+            micro_kernel(kc, astrip, bstrip, &mut c[coff..], ldc, mr, nr);
+        }
+    }
+}
+
+/// The register tile: accumulate `MR × NR` elements of C across the full
+/// `kc` depth in local accumulators, then add the live `mr × nr` corner
+/// into C. Packed strips are zero-padded, so the accumulation loop has no
+/// edge branches and vectorises cleanly.
+#[inline(always)]
+fn micro_kernel(
+    kc: usize,
+    astrip: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    let astrip = &astrip[..kc * MR];
+    let bstrip = &bstrip[..kc * NR];
+    for (av, bv) in astrip.chunks_exact(MR).zip(bstrip.chunks_exact(NR)) {
+        for (accrow, &ai) in acc.iter_mut().zip(av) {
+            for (cv, &bj) in accrow.iter_mut().zip(bv) {
+                *cv += ai * bj;
+            }
+        }
+    }
+    for (i, accrow) in acc.iter().enumerate().take(mr) {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (cv, &av) in crow.iter_mut().zip(accrow) {
+            *cv += av;
+        }
+    }
+}
+
+/// Shared GEMM epilogue: add a per-row bias column (`bias[i]` to every
+/// element of row `i`) and/or clamp at zero, in one pass over C.
+pub fn bias_relu(c: &mut [f32], m: usize, n: usize, bias: Option<&[f32]>, relu: bool) {
+    assert_eq!(c.len(), m * n, "bias_relu: out length vs ({m},{n})");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), m, "bias_relu: bias length vs rows {m}");
+        for (row, &bv) in c.chunks_exact_mut(n).zip(bias) {
+            for v in row {
+                *v += bv;
+            }
+        }
+    }
+    if relu {
+        for v in c.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Fused CDC parity epilogue (DESIGN.md §8): fold the `m × n` result of a
+/// stacked-shard GEMM into an `h × n` checksum, `out[r] = Σ_g c[g·h + r]`
+/// over the `m / h` uniform row blocks. One extra pass over C replaces
+/// the separate parity-weight multiply; the invariant
+/// `checksum(W_stacked @ x + b_stacked) == parity_weights(W) @ x + Σb`
+/// holds exactly because summation is pre-activation.
+pub fn row_block_checksum(c: &[f32], m: usize, n: usize, h: usize, out: &mut [f32]) {
+    assert!(h > 0 && m % h == 0, "checksum rows {h} must divide m {m}");
+    assert_eq!(c.len(), m * n, "checksum: in length vs ({m},{n})");
+    assert_eq!(out.len(), h * n, "checksum: out length vs ({h},{n})");
+    out.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    for block in c.chunks_exact(h * n) {
+        for (o, &v) in out.iter_mut().zip(block) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn tiled_matches_naive_mixed_shapes() {
+        let mut rng = Pcg32::seeded(3);
+        let mut sc = Scratch::new();
+        for &(m, k, n) in &[(1, 1, 1), (4, 8, 8), (65, 67, 63), (128, 40, 96)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut c0 = vec![0.0; m * n];
+            let mut c1 = vec![0.0; m * n];
+            gemm_naive(&a, &b, &mut c0, m, k, n);
+            gemm_tiled(&a, &b, &mut c1, m, k, n, &mut sc);
+            assert!(diff(&c0, &c1) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_overwrites_stale_output() {
+        let mut sc = Scratch::new();
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        let mut c = vec![99.0];
+        gemm_tiled(&a, &b, &mut c, 1, 2, 1, &mut sc);
+        assert_eq!(c, vec![11.0]);
+        gemm_naive(&a, &b, &mut c, 1, 2, 1);
+        assert_eq!(c, vec![11.0]);
+    }
+
+    #[test]
+    fn zero_depth_yields_zero_output() {
+        let mut sc = Scratch::new();
+        let mut c = vec![5.0; 6];
+        gemm_tiled(&[], &[], &mut c, 2, 0, 3, &mut sc);
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut c2 = vec![5.0; 6];
+        gemm_threaded(&[], &[], &mut c2, 2, 0, 3, 4);
+        assert!(c2.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bias_relu_epilogue() {
+        let mut c = vec![1.0, -2.0, 3.0, -4.0];
+        bias_relu(&mut c, 2, 2, Some(&[0.5, -0.5]), true);
+        assert_eq!(c, vec![1.5, 0.0, 2.5, 0.0]);
+    }
+
+    #[test]
+    fn checksum_sums_row_blocks() {
+        // 4 rows, h=2: out row r = c row r + c row r+2.
+        let c = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let mut out = vec![0.0; 4];
+        row_block_checksum(&c, 4, 2, 2, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+}

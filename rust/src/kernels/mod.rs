@@ -1,0 +1,22 @@
+//! High-performance compute kernel layer (DESIGN.md §8).
+//!
+//! The paper's CDC overhead claims are all *ratios against a GEMM*: the
+//! parity encode, the recovery subtraction, and the straggler gate only
+//! read as "close to zero" when the underlying matrix multiply is as
+//! fast as the host allows. This module is that baseline: a cache-blocked,
+//! register-tiled f32 [`gemm`] with a scoped-thread row driver, the
+//! shared epilogues (bias/ReLU and the fused CDC parity checksum), and
+//! the [`Scratch`] buffer arena that makes the steady-state serving
+//! compute path allocation-free. The interpreter backend
+//! (`runtime::interp`), `Tensor::matmul`, and the coordinator's merge
+//! path are all lowered onto it; later SIMD/PJRT backends plug in at the
+//! same seam.
+
+pub mod gemm;
+pub mod scratch;
+
+pub use gemm::{
+    auto_threads, bias_relu, gemm_auto, gemm_naive, gemm_threaded, gemm_tiled,
+    row_block_checksum, KC, MC, MR, NC, NR,
+};
+pub use scratch::{with_scratch, Scratch};

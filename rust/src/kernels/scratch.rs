@@ -1,0 +1,183 @@
+//! Reusable buffer arena for the kernel layer and the serve hot path.
+//!
+//! A [`Scratch`] is a free-list of `Vec<f32>` buffers: `take(len)` hands
+//! out a zeroed buffer of exactly `len` elements, reusing the smallest
+//! pooled allocation whose capacity fits, and `put` returns a buffer to
+//! the pool. After a short warm-up every packing panel, im2col unroll,
+//! merge target, and pooled activation in steady-state serving is served
+//! from the pool — the compute path performs no per-request heap
+//! allocations (DESIGN.md §8 lifetime rules).
+//!
+//! Ownership rules:
+//!
+//! * `take` transfers ownership out of the arena; the caller either
+//!   `put`s the buffer back or lets it escape (e.g. as a [`Tensor`]'s
+//!   backing storage — recycle it later with `put(tensor.into_data())`).
+//! * The pool is bounded ([`Scratch::MAX_POOLED`] buffers); `put` beyond
+//!   the bound evicts the smallest pooled buffer so the hottest (largest)
+//!   sizes survive.
+//! * A `Scratch` is not `Sync`; each thread owns its own arena. The
+//!   kernel entry points use a thread-local arena via [`with_scratch`].
+//!
+//! [`Tensor`]: crate::tensor::Tensor
+
+use std::cell::RefCell;
+
+/// A bounded free-list of reusable `f32` buffers.
+#[derive(Debug)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+    takes: u64,
+    reuses: u64,
+}
+
+impl Scratch {
+    /// Upper bound on pooled buffers (beyond it the smallest is evicted).
+    pub const MAX_POOLED: usize = 16;
+
+    /// Empty arena.
+    pub fn new() -> Scratch {
+        Scratch { pool: Vec::new(), takes: 0, reuses: 0 }
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing the best-fit
+    /// pooled allocation when one exists.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.is_none_or(|(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        // No pooled buffer fits: reuse the largest anyway (it grows once
+        // and then serves this size forever) rather than allocating fresh.
+        if best.is_none() {
+            best = self
+                .pool
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| b.capacity())
+                .map(|(i, b)| (i, b.capacity()));
+        }
+        let mut buf = match best {
+            Some((i, _)) => {
+                self.reuses += 1;
+                self.pool.swap_remove(i)
+            }
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse. A full pool keeps its
+    /// largest buffers: the incoming buffer is dropped unless it beats
+    /// the smallest pooled one (which is then evicted).
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.pool.len() >= Scratch::MAX_POOLED {
+            let smallest = (0..self.pool.len())
+                .min_by_key(|&i| self.pool[i].capacity())
+                .expect("pool is non-empty");
+            if self.pool[smallest].capacity() >= buf.capacity() {
+                return;
+            }
+            self.pool.swap_remove(smallest);
+        }
+        self.pool.push(buf);
+    }
+
+    /// Total `take` calls served.
+    pub fn take_count(&self) -> u64 {
+        self.takes
+    }
+
+    /// `take` calls served from the pool (no fresh allocation).
+    pub fn reuse_count(&self) -> u64 {
+        self.reuses
+    }
+
+    /// Buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Scratch {
+        Scratch::new()
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's persistent kernel arena. Nested calls (a
+/// kernel invoked from inside another `with_scratch` closure) fall back
+/// to a fresh arena instead of panicking on the `RefCell`.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    THREAD_SCRATCH.with(|s| match s.try_borrow_mut() {
+        Ok(mut sc) => f(&mut sc),
+        Err(_) => f(&mut Scratch::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reused() {
+        let mut s = Scratch::new();
+        let mut b = s.take(1024);
+        assert_eq!(b.len(), 1024);
+        assert!(b.iter().all(|&v| v == 0.0));
+        b[0] = 7.0;
+        s.put(b);
+        let b2 = s.take(512);
+        assert_eq!(b2.len(), 512);
+        assert!(b2.capacity() >= 1024, "must reuse the pooled allocation");
+        assert!(b2.iter().all(|&v| v == 0.0), "reused buffer must be zeroed");
+        assert_eq!(s.reuse_count(), 1);
+        assert_eq!(s.take_count(), 2);
+    }
+
+    #[test]
+    fn undersized_pool_buffer_is_grown_not_leaked() {
+        let mut s = Scratch::new();
+        let b = s.take(8);
+        s.put(b);
+        let big = s.take(4096);
+        assert_eq!(big.len(), 4096);
+        assert_eq!(s.reuse_count(), 1, "small buffer is grown in place");
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut s = Scratch::new();
+        for i in 0..(Scratch::MAX_POOLED + 8) {
+            s.put(vec![0.0; i + 1]);
+        }
+        assert!(s.pooled() <= Scratch::MAX_POOLED);
+        // Eviction keeps the largest buffers.
+        assert!(s.pool.iter().all(|b| b.capacity() > 8));
+    }
+
+    #[test]
+    fn with_scratch_nests_without_panic() {
+        let n = with_scratch(|a| {
+            let outer = a.take(16);
+            let inner = with_scratch(|b| b.take(16).len());
+            a.put(outer);
+            inner
+        });
+        assert_eq!(n, 16);
+    }
+}

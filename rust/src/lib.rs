@@ -20,6 +20,7 @@ pub mod error;
 pub mod exp;
 pub mod fleet;
 pub mod json;
+pub mod kernels;
 pub mod model;
 pub mod partition;
 pub mod metrics;

@@ -1,5 +1,5 @@
 //! Interpreter compute backend: executes shard artifacts directly from
-//! their manifest metadata with the in-tree [`Tensor`] ops.
+//! their manifest metadata with the in-tree kernel layer.
 //!
 //! The AOT artifacts implement exactly two program shapes (see
 //! `python/compile/model.py`):
@@ -10,13 +10,20 @@
 //!
 //! so a faithful CPU interpreter needs only a GEMM and an `im2col` that
 //! mirror `python/compile/kernels/ref.py` (same padding arithmetic, same
-//! patch unroll order). This backend keeps every test, example, and
-//! experiment runnable on a machine with no XLA/PJRT installation; the
-//! `pjrt` feature swaps in the compiled path with identical semantics.
+//! patch unroll order). Both program shapes are lowered onto the shared
+//! tiled GEMM of `crate::kernels` (DESIGN.md §8): conv becomes
+//! im2col + the same hot kernel fc uses, with bias/ReLU applied as a
+//! fused epilogue pass, and every intermediate (the im2col unroll, the
+//! pre-transpose GEMM output, the packing panels) lives in the compute
+//! thread's persistent [`Scratch`](crate::kernels::Scratch) arena — the
+//! steady-state serving compute path allocates only the escaping output
+//! tensor. The `pjrt` feature swaps in the compiled path with identical
+//! semantics.
 
 use std::cell::Cell;
 
 use crate::error::{Error, Result};
+use crate::kernels;
 use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
 use crate::runtime::GemmExec;
 use crate::tensor::Tensor;
@@ -98,51 +105,58 @@ impl InterpRuntime {
                 spec.n
             )));
         }
-        let mut out = w.matmul(x)?;
+        let mut out = vec![0.0f32; spec.m * spec.n];
+        kernels::with_scratch(|sc| {
+            kernels::gemm_auto(w.data(), x.data(), &mut out, spec.m, spec.k, spec.n, sc)
+        });
         if spec.bias {
-            add_bias_rows(&mut out, inputs[2])?;
+            let b = inputs[2];
+            if b.shape() != [spec.m, 1] {
+                return Err(Error::Shape(format!(
+                    "gemm fallback: bias {:?} vs spec rows {}",
+                    b.shape(),
+                    spec.m
+                )));
+            }
+            kernels::bias_relu(&mut out, spec.m, spec.n, Some(b.data()), spec.relu);
+        } else {
+            kernels::bias_relu(&mut out, spec.m, spec.n, None, spec.relu);
         }
-        if spec.relu {
-            out.relu();
-        }
-        Ok(out)
+        Tensor::new(vec![spec.m, spec.n], out)
     }
 }
 
 /// fc shard: `w@x + b [relu]` with the bias column broadcast over n.
 fn fc_shard(w: &Tensor, b: &Tensor, x: &Tensor, relu: bool) -> Result<Tensor> {
-    let mut out = w.matmul(x)?;
-    add_bias_rows(&mut out, b)?;
-    if relu {
-        out.relu();
+    let (m, k) = dims2(w, "fc weights")?;
+    let (k2, n) = dims2(x, "fc input")?;
+    if k != k2 {
+        return Err(Error::Shape(format!("fc shard {m}x{k} @ {k2}x{n}")));
     }
-    Ok(out)
-}
-
-/// Add a (m,1) bias column to every column of a (m,n) matrix in place.
-fn add_bias_rows(out: &mut Tensor, b: &Tensor) -> Result<()> {
-    let (m, n) = match out.shape()[..] {
-        [m, n] => (m, n),
-        _ => return Err(Error::Shape(format!("bias add on {:?}", out.shape()))),
-    };
     if b.shape() != [m, 1] {
         return Err(Error::Shape(format!(
             "bias shape {:?} vs output rows {m}",
             b.shape()
         )));
     }
-    let bd = b.data().to_vec();
-    for (i, row) in out.data_mut().chunks_mut(n).enumerate() {
-        let bv = bd[i];
-        for v in row {
-            *v += bv;
-        }
-    }
-    Ok(())
+    let mut out = vec![0.0f32; m * n];
+    kernels::with_scratch(|sc| {
+        kernels::gemm_auto(w.data(), x.data(), &mut out, m, k, n, sc)
+    });
+    kernels::bias_relu(&mut out, m, n, Some(b.data()), relu);
+    Tensor::new(vec![m, n], out)
 }
 
-/// conv shard: im2col + GEMM + reshape/transpose to `(oh, ow, k_s)`,
-/// mirroring `conv_shard_fn` in `python/compile/model.py`.
+fn dims2(t: &Tensor, what: &str) -> Result<(usize, usize)> {
+    match t.shape()[..] {
+        [a, b] => Ok((a, b)),
+        _ => Err(Error::Shape(format!("{what}: want rank-2, got {:?}", t.shape()))),
+    }
+}
+
+/// conv shard: im2col + the shared tiled GEMM + reshape/transpose to
+/// `(oh, ow, k_s)`, mirroring `conv_shard_fn` in `python/compile/model.py`.
+/// All intermediates come from the thread's scratch arena.
 fn conv_shard(
     w: &Tensor,
     b: &Tensor,
@@ -152,44 +166,64 @@ fn conv_shard(
     padding: &str,
     relu: bool,
 ) -> Result<Tensor> {
-    let (cols, oh, ow) = im2col(x, f, stride, padding)?;
-    let mut out = w.matmul(&cols)?; // (k_s, oh*ow)
-    add_bias_rows(&mut out, b)?;
-    if relu {
-        out.relu();
+    let (ks, wk) = dims2(w, "conv weights")?;
+    let (h, wid, c) = match x.shape()[..] {
+        [h, wid, c] => (h, wid, c),
+        _ => return Err(Error::Shape(format!("conv input {:?}", x.shape()))),
+    };
+    if wk != f * f * c {
+        return Err(Error::Shape(format!(
+            "conv weights {ks}x{wk} vs filter {f}²·{c}"
+        )));
     }
-    // (k_s, oh*ow) row-major → (oh, ow, k_s) row-major.
-    let ks = out.shape()[0];
-    let od = out.data();
-    let mut data = vec![0.0f32; oh * ow * ks];
-    for c in 0..ks {
-        let src = &od[c * (oh * ow)..(c + 1) * (oh * ow)];
-        for (p, &v) in src.iter().enumerate() {
-            data[p * ks + c] = v;
+    if b.shape() != [ks, 1] {
+        return Err(Error::Shape(format!(
+            "bias shape {:?} vs output channels {ks}",
+            b.shape()
+        )));
+    }
+    let (oh, ow, pad_top, pad_left) = conv_geom(h, wid, f, stride, padding)?;
+    let rows = f * f * c;
+    let n_cols = oh * ow;
+    kernels::with_scratch(|sc| {
+        let mut cols = sc.take(rows * n_cols);
+        fill_im2col(x.data(), h, wid, c, f, stride, pad_top, pad_left, oh, ow, &mut cols);
+        let mut out = sc.take(ks * n_cols);
+        kernels::gemm_auto(w.data(), &cols, &mut out, ks, rows, n_cols, sc);
+        kernels::bias_relu(&mut out, ks, n_cols, Some(b.data()), relu);
+        // (k_s, oh*ow) row-major → (oh, ow, k_s) row-major.
+        let mut data = vec![0.0f32; n_cols * ks];
+        for (ch, src) in out.chunks_exact(n_cols.max(1)).enumerate().take(ks) {
+            for (p, &v) in src.iter().enumerate() {
+                data[p * ks + ch] = v;
+            }
         }
-    }
-    Tensor::new(vec![oh, ow, ks], data)
+        sc.put(out);
+        sc.put(cols);
+        Tensor::new(vec![oh, ow, ks], data)
+    })
 }
 
-/// Patch unroll (paper Fig. 4): `(H, W, C) → (F²C, OH·OW)`. Column `j`
-/// holds the receptive field of output pixel `j`, flattened in
-/// `(di, dj, channel)` order; SAME padding splits `floor/ceil` like
-/// `jnp.pad` in the reference (`ph/2` on top, the remainder below).
-pub fn im2col(x: &Tensor, f: usize, stride: usize, padding: &str) -> Result<(Tensor, usize, usize)> {
+/// Output geometry of a conv shard: `(oh, ow, pad_top, pad_left)`. SAME
+/// padding splits `floor/ceil` like `jnp.pad` in the reference (`ph/2`
+/// on top, the remainder below).
+fn conv_geom(
+    h: usize,
+    w: usize,
+    f: usize,
+    stride: usize,
+    padding: &str,
+) -> Result<(usize, usize, usize, usize)> {
     if stride == 0 || f == 0 {
         return Err(Error::Shape("im2col: zero filter/stride".into()));
     }
-    let (h, w, c) = match x.shape()[..] {
-        [h, w, c] => (h, w, c),
-        _ => return Err(Error::Shape(format!("im2col of {:?}", x.shape()))),
-    };
-    let (oh, ow, pad_top, pad_left) = match padding {
+    match padding {
         "SAME" => {
             let oh = h.div_ceil(stride);
             let ow = w.div_ceil(stride);
             let ph = ((oh - 1) * stride + f).saturating_sub(h);
             let pw = ((ow - 1) * stride + f).saturating_sub(w);
-            (oh, ow, ph / 2, pw / 2)
+            Ok((oh, ow, ph / 2, pw / 2))
         }
         "VALID" => {
             if h < f || w < f {
@@ -197,14 +231,30 @@ pub fn im2col(x: &Tensor, f: usize, stride: usize, padding: &str) -> Result<(Ten
                     "im2col VALID: input {h}x{w} smaller than filter {f}"
                 )));
             }
-            ((h - f) / stride + 1, (w - f) / stride + 1, 0, 0)
+            Ok(((h - f) / stride + 1, (w - f) / stride + 1, 0, 0))
         }
-        other => return Err(Error::Config(format!("unknown padding {other:?}"))),
-    };
-    let rows = f * f * c;
+        other => Err(Error::Config(format!("unknown padding {other:?}"))),
+    }
+}
+
+/// Patch-unroll inner loop: write the `(F²C, OH·OW)` im2col matrix into a
+/// pre-zeroed buffer. Column `j` holds the receptive field of output
+/// pixel `j`, flattened in `(di, dj, channel)` order.
+#[allow(clippy::too_many_arguments)]
+fn fill_im2col(
+    xd: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    f: usize,
+    stride: usize,
+    pad_top: usize,
+    pad_left: usize,
+    oh: usize,
+    ow: usize,
+    data: &mut [f32],
+) {
     let n_cols = oh * ow;
-    let mut data = vec![0.0f32; rows * n_cols];
-    let xd = x.data();
     for oy in 0..oh {
         for ox in 0..ow {
             let p = oy * ow + ox;
@@ -227,6 +277,26 @@ pub fn im2col(x: &Tensor, f: usize, stride: usize, padding: &str) -> Result<(Ten
             }
         }
     }
+}
+
+/// Patch unroll (paper Fig. 4): `(H, W, C) → (F²C, OH·OW)` as a fresh
+/// tensor — the allocation-free serving path uses [`fill_im2col`] through
+/// `conv_shard`; this wrapper serves tests and tooling.
+pub fn im2col(
+    x: &Tensor,
+    f: usize,
+    stride: usize,
+    padding: &str,
+) -> Result<(Tensor, usize, usize)> {
+    let (h, w, c) = match x.shape()[..] {
+        [h, w, c] => (h, w, c),
+        _ => return Err(Error::Shape(format!("im2col of {:?}", x.shape()))),
+    };
+    let (oh, ow, pad_top, pad_left) = conv_geom(h, w, f, stride, padding)?;
+    let rows = f * f * c;
+    let n_cols = oh * ow;
+    let mut data = vec![0.0f32; rows * n_cols];
+    fill_im2col(x.data(), h, w, c, f, stride, pad_top, pad_left, oh, ow, &mut data);
     Ok((Tensor::new(vec![rows, n_cols], data)?, oh, ow))
 }
 
@@ -325,6 +395,24 @@ mod tests {
         assert_eq!(lin.data(), &[1.5, -1.5]);
         let act = fc_shard(&w, &b, &x, true).unwrap();
         assert_eq!(act.data(), &[1.5, 0.0]);
+    }
+
+    #[test]
+    fn fc_shard_matches_tensor_matmul_large() {
+        // The lowered kernel path must agree with the reference math on a
+        // shard big enough to exercise tiling.
+        let mut rng = Pcg32::seeded(33);
+        let w = Tensor::randn(vec![96, 130], &mut rng);
+        let b = Tensor::randn(vec![96, 1], &mut rng);
+        let x = Tensor::randn(vec![130, 9], &mut rng);
+        let got = fc_shard(&w, &b, &x, true).unwrap();
+        let mut want = w.matmul_naive(&x).unwrap();
+        for (i, row) in want.data_mut().chunks_mut(9).enumerate() {
+            for v in row.iter_mut() {
+                *v = (*v + b.data()[i]).max(0.0);
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-4);
     }
 
     #[test]

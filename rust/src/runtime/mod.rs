@@ -45,6 +45,18 @@ enum Backend {
     Interp(interp::InterpRuntime),
 }
 
+/// Short label naming the default compute backend + kernel flavor, for
+/// baseline attribution in benches/examples (`BENCH_*.json` records must
+/// say which backend produced their numbers). The interpreter runs on
+/// the tiled kernel layer since DESIGN.md §8.
+pub fn backend_label() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "interp-tiled"
+    }
+}
+
 /// Backend-dispatching executable cache over the artifact set.
 pub struct Runtime {
     backend: Backend,

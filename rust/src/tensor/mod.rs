@@ -227,13 +227,37 @@ impl Tensor {
     /// Max-pool (H, W, C) with square window/stride, VALID padding —
     /// the merge-side pool for CDC conv layers.
     pub fn maxpool(&self, size: usize, stride: usize) -> Result<Tensor> {
+        let mut out = Vec::new();
+        let shape = self.maxpool_into(size, stride, &mut out)?;
+        Tensor::new(shape, out)
+    }
+
+    /// Output element count of [`Tensor::maxpool`] — lets scratch-arena
+    /// callers take a right-sized buffer up front instead of growing one.
+    pub fn maxpool_len(&self, size: usize, stride: usize) -> Result<usize> {
+        let (h, w, c) = match self.shape[..] {
+            [h, w, c] => (h, w, c),
+            _ => return Err(Error::Shape(format!("maxpool of {:?}", self.shape))),
+        };
+        Ok(((h - size) / stride + 1) * ((w - size) / stride + 1) * c)
+    }
+
+    /// Max-pool into a caller-provided buffer (scratch-arena serving hot
+    /// path); returns the output shape. `out` is cleared and resized.
+    pub fn maxpool_into(
+        &self,
+        size: usize,
+        stride: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<Vec<usize>> {
         let (h, w, c) = match self.shape[..] {
             [h, w, c] => (h, w, c),
             _ => return Err(Error::Shape(format!("maxpool of {:?}", self.shape))),
         };
         let oh = (h - size) / stride + 1;
         let ow = (w - size) / stride + 1;
-        let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+        out.clear();
+        out.resize(oh * ow * c, f32::NEG_INFINITY);
         for oy in 0..oh {
             for ox in 0..ow {
                 for dy in 0..size {
@@ -251,7 +275,7 @@ impl Tensor {
                 }
             }
         }
-        Tensor::new(vec![oh, ow, c], out)
+        Ok(vec![oh, ow, c])
     }
 
     /// Global average pool: (H, W, C) → (C, 1).
@@ -314,9 +338,30 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// Reference CPU GEMM: self (m,k) × rhs (k,n) — used only by tests and
-    /// the XlaBuilder-fallback cross-checks, never on the serving path.
+    /// CPU GEMM: self (m,k) × rhs (k,n), lowered onto the tiled/threaded
+    /// kernel layer (`kernels::gemm_auto`) — the shared hot kernel of the
+    /// interpreter backend and the coordinator's fallback paths.
     pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (m, k, n) = self.matmul_dims(rhs)?;
+        let mut out = vec![0.0f32; m * n];
+        crate::kernels::with_scratch(|sc| {
+            crate::kernels::gemm_auto(&self.data, &rhs.data, &mut out, m, k, n, sc)
+        });
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Branch-free naive reference GEMM — the oracle the kernel layer is
+    /// property-tested against; never on a hot path. (The old `a == 0.0`
+    /// skip was removed: it mispredicts on dense data and skewed every
+    /// naive-vs-tiled comparison; no caller relies on sparsity-awareness.)
+    pub fn matmul_naive(&self, rhs: &Tensor) -> Result<Tensor> {
+        let (m, k, n) = self.matmul_dims(rhs)?;
+        let mut out = vec![0.0f32; m * n];
+        crate::kernels::gemm_naive(&self.data, &rhs.data, &mut out, m, k, n);
+        Tensor::new(vec![m, n], out)
+    }
+
+    fn matmul_dims(&self, rhs: &Tensor) -> Result<(usize, usize, usize)> {
         let (m, k) = match self.shape[..] {
             [m, k] => (m, k),
             _ => return Err(Error::Shape(format!("matmul lhs {:?}", self.shape))),
@@ -328,21 +373,7 @@ impl Tensor {
         if k != k2 {
             return Err(Error::Shape(format!("matmul {m}x{k} @ {k2}x{n}")));
         }
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &rhs.data[kk * n..(kk + 1) * n];
-                let dst = &mut out[i * n..(i + 1) * n];
-                for (d, r) in dst.iter_mut().zip(row) {
-                    *d += a * r;
-                }
-            }
-        }
-        Tensor::new(vec![m, n], out)
+        Ok((m, k, n))
     }
 }
 
@@ -442,6 +473,18 @@ mod tests {
         let b = t(&[3, 2], &[7., 8., 9., 10., 11., 12.]);
         let c = a.matmul(&b).unwrap();
         assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_agrees_with_naive_reference() {
+        let mut rng = Pcg32::seeded(8);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (33, 65, 17), (70, 130, 90)] {
+            let a = Tensor::randn(vec![m, k], &mut rng);
+            let b = Tensor::randn(vec![k, n], &mut rng);
+            let fast = a.matmul(&b).unwrap();
+            let slow = a.matmul_naive(&b).unwrap();
+            assert!(fast.max_abs_diff(&slow) < 1e-4, "({m},{k},{n})");
+        }
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Kernel-layer correctness: property-style parity of the tiled and
+//! threaded GEMMs (and the im2col conv lowering) against the branch-free
+//! naive reference, over edge shapes — unit dimensions, primes, sizes
+//! not divisible by the register tile — and thread counts 1–4.
+
+use cdc_dnn::kernels::{self, Scratch};
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::interp;
+use cdc_dnn::tensor::Tensor;
+
+/// m/k/n of 1, primes, off-tile sizes, and a tall/skinny serving shape.
+const EDGE_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (7, 1, 3),
+    (1, 64, 9),
+    (13, 17, 11),
+    (31, 31, 31),
+    (64, 64, 64),
+    (65, 67, 63),
+    (129, 96, 33),
+    (4, 256, 8),
+    (257, 19, 130),
+    (3, 300, 2),
+];
+
+fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn tiled_matches_naive_on_edge_shapes() {
+    let mut rng = Pcg32::seeded(101);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in EDGE_SHAPES {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_naive(&a, &b, &mut want, m, k, n);
+        kernels::gemm_tiled(&a, &b, &mut got, m, k, n, &mut sc);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-4, "tiled ({m},{k},{n}): diff {d}");
+    }
+}
+
+#[test]
+fn threaded_matches_naive_across_thread_counts() {
+    let mut rng = Pcg32::seeded(102);
+    for threads in 1..=4usize {
+        for &(m, k, n) in EDGE_SHAPES {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            kernels::gemm_naive(&a, &b, &mut want, m, k, n);
+            kernels::gemm_threaded(&a, &b, &mut got, m, k, n, threads);
+            let d = max_abs_diff(&got, &want);
+            assert!(d < 1e-4, "threaded t={threads} ({m},{k},{n}): diff {d}");
+        }
+    }
+}
+
+#[test]
+fn auto_dispatch_matches_naive() {
+    // gemm_auto crosses all three dispatch regimes; results must agree.
+    let mut rng = Pcg32::seeded(103);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in &[(3usize, 5usize, 2usize), (64, 64, 64), (200, 180, 190)] {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_naive(&a, &b, &mut want, m, k, n);
+        kernels::gemm_auto(&a, &b, &mut got, m, k, n, &mut sc);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-3, "auto ({m},{k},{n}): diff {d}");
+    }
+}
+
+#[test]
+fn zero_depth_and_degenerate_shapes() {
+    let mut sc = Scratch::new();
+    // k = 0: a well-formed empty contraction, output must be all zeros.
+    let mut c = vec![9.0f32; 6];
+    kernels::gemm_tiled(&[], &[], &mut c, 2, 0, 3, &mut sc);
+    assert!(c.iter().all(|&v| v == 0.0));
+    let mut c = vec![9.0f32; 6];
+    kernels::gemm_threaded(&[], &[], &mut c, 2, 0, 3, 4);
+    assert!(c.iter().all(|&v| v == 0.0));
+    // m = 0 / n = 0: empty outputs, no panic.
+    let mut empty: Vec<f32> = Vec::new();
+    kernels::gemm_tiled(&[], &[1.0, 2.0], &mut empty, 0, 2, 1, &mut sc);
+    kernels::gemm_tiled(&[1.0, 2.0], &[], &mut empty, 1, 2, 0, &mut sc);
+}
+
+#[test]
+fn im2col_conv_lowering_matches_direct_convolution() {
+    // The interpreter's conv path is im2col + the shared GEMM; check the
+    // whole lowering against direct convolution over edge geometries
+    // (prime spatial sizes, stride > filter, SAME and VALID).
+    let mut rng = Pcg32::seeded(104);
+    for &(h, w, c, k, f, s, same) in &[
+        (5usize, 7usize, 3usize, 2usize, 3usize, 1usize, true),
+        (11, 11, 1, 5, 3, 2, true),
+        (9, 6, 2, 3, 2, 2, false),
+        (13, 13, 4, 7, 5, 3, true),
+    ] {
+        let x = Tensor::randn(vec![h, w, c], &mut rng);
+        let wm = Tensor::randn(vec![k, f * f * c], &mut rng);
+        let padding = if same { "SAME" } else { "VALID" };
+        let (cols, oh, ow) = interp::im2col(&x, f, s, padding).unwrap();
+        let y = wm.matmul(&cols).unwrap();
+        let yref = wm.matmul_naive(&cols).unwrap();
+        assert_eq!(y.shape(), &[k, oh * ow]);
+        assert!(
+            y.max_abs_diff(&yref) < 1e-4,
+            "conv gemm h{h}w{w}c{c}k{k}f{f}s{s}"
+        );
+        // Direct convolution oracle on a single output pixel (center).
+        let (oy, ox) = (oh / 2, ow / 2);
+        let col = oy * ow + ox;
+        for kk in 0..k {
+            let mut acc = 0.0f32;
+            for r in 0..f * f * c {
+                acc += wm.data()[kk * f * f * c + r] * cols.data()[r * (oh * ow) + col];
+            }
+            let got = y.data()[kk * (oh * ow) + col];
+            assert!(
+                (got - acc).abs() < 1e-3,
+                "pixel oracle h{h}w{w} kk{kk}: {got} vs {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_checksum_equals_stacked_row_sum() {
+    let mut rng = Pcg32::seeded(105);
+    let (m, n, h) = (24usize, 5usize, 6usize);
+    let c = randv(m * n, &mut rng);
+    let mut out = vec![0.0f32; h * n];
+    kernels::row_block_checksum(&c, m, n, h, &mut out);
+    for r in 0..h {
+        for j in 0..n {
+            let mut want = 0.0f32;
+            let mut g = 0;
+            while g < m / h {
+                want += c[(g * h + r) * n + j];
+                g += 1;
+            }
+            assert!((out[r * n + j] - want).abs() < 1e-5, "({r},{j})");
+        }
+    }
+}
+
+#[test]
+fn scratch_arena_reuses_buffers_across_takes() {
+    let mut sc = Scratch::new();
+    // Simulate the steady-state serve loop: take/put the same sizes.
+    for round in 0..8 {
+        let a = sc.take(4096);
+        let b = sc.take(1024);
+        sc.put(a);
+        sc.put(b);
+        if round > 0 {
+            // After warm-up every take must be served from the pool.
+            assert_eq!(
+                sc.take_count() - sc.reuse_count(),
+                2,
+                "steady state must not allocate (round {round})"
+            );
+        }
+    }
+    assert!(sc.reuse_count() >= 14);
+}
+
+#[test]
+fn tensor_matmul_is_kernel_backed_and_consistent() {
+    let mut rng = Pcg32::seeded(106);
+    let a = Tensor::randn(vec![97, 53], &mut rng);
+    let b = Tensor::randn(vec![53, 41], &mut rng);
+    let fast = a.matmul(&b).unwrap();
+    let slow = a.matmul_naive(&b).unwrap();
+    assert_eq!(fast.shape(), &[97, 41]);
+    assert!(fast.max_abs_diff(&slow) < 1e-4);
+}
