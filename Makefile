@@ -4,7 +4,8 @@
 
 ARTIFACTS ?= rust/artifacts
 
-.PHONY: artifacts build test bench bench-gemm bench-gemm-smoke fmt clippy
+.PHONY: artifacts build test bench bench-gemm bench-gemm-smoke \
+        bench-scenarios bench-scenarios-smoke doc fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -26,6 +27,19 @@ bench-gemm:
 
 bench-gemm-smoke:
 	GEMM_BENCH_SMOKE=1 GEMM_BENCH_ENFORCE=1 cargo bench --bench gemm_runtime
+
+# Fleet-chaos scenario suite: writes the BENCH_scenarios.json baseline
+# (per-scenario rps/p50/p99 for the none/2mr/cdc arms). The smoke flavor
+# is the CI robustness-regression guard.
+bench-scenarios:
+	cargo bench --bench scenario_suite
+
+bench-scenarios-smoke:
+	SCENARIO_BENCH_SMOKE=1 cargo bench --bench scenario_suite
+
+# Rustdoc for the whole crate; CI runs this with -D warnings.
+doc:
+	cargo doc --no-deps
 
 fmt:
 	cargo fmt --check

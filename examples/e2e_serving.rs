@@ -14,6 +14,11 @@
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serving
 //! ```
+//!
+//! This flow is smoke-tested on every `cargo test` (no artifacts
+//! needed): `rust/tests/examples_smoke.rs::
+//! e2e_serving_flow_pipelines_with_recovery` runs the same deployment
+//! shape on the synthetic model — the documented flow cannot rot.
 
 use cdc_dnn::coordinator::{Pipeline, Session, SessionConfig, SplitSpec, Workload};
 use cdc_dnn::fleet::FailurePlan;

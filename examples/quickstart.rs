@@ -6,6 +6,11 @@
 //! make artifacts                     # once: build AOT artifacts
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! This flow is doctested: the crate-level rustdoc (`rust/src/lib.rs`)
+//! carries the same sequence on the synthetic artifact set, and
+//! `rust/tests/examples_smoke.rs::quickstart_flow_survives_device_loss`
+//! runs it on every `cargo test` — the documented commands cannot rot.
 
 use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec};
 use cdc_dnn::fleet::FailurePlan;

@@ -1,0 +1,80 @@
+//! Scenario-suite bench: runs the `exp::scenarios` driver (every named
+//! fleet-chaos scenario × the three redundancy arms, on the synthetic
+//! artifact set — no python/AOT build) and records the per-scenario
+//! virtual-time serving quality — rps, p50, p99, loss/recovery counts —
+//! to repo-root `BENCH_scenarios.json`, so the robustness trajectory is
+//! tracked across PRs alongside `BENCH_gemm.json`. The suite loop itself
+//! lives in `exp::scenarios::run` (single source of truth; the CLI's
+//! `cdc-dnn scenarios` command runs the same code).
+//!
+//! `SCENARIO_BENCH_SMOKE=1` runs the driver in quick mode (scaled
+//! horizons) for CI. The CDC no-lost-request invariant is enforced on
+//! every run — the bench doubles as a regression guard.
+//!
+//! Run with `cargo bench --bench scenario_suite`.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use cdc_dnn::exp::scenarios::{self, Arm};
+use cdc_dnn::exp::ExpCtx;
+use cdc_dnn::json::{obj, Value};
+
+fn bench_out_path() -> PathBuf {
+    // Benches run with cwd = the `rust` package; the baseline lives at
+    // the repo root next to ROADMAP.md.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_scenarios.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_scenarios.json"))
+}
+
+fn main() {
+    let smoke = std::env::var("SCENARIO_BENCH_SMOKE").is_ok();
+    println!(
+        "scenario_suite: compute backend = {}, smoke = {smoke}",
+        cdc_dnn::runtime::backend_label()
+    );
+
+    let mut ctx = ExpCtx::new("artifacts");
+    ctx.quick = smoke;
+    let t0 = Instant::now();
+    let points = scenarios::run(&ctx).expect("scenario suite");
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    let mut rows = Vec::new();
+    for p in &points {
+        if p.arm == Arm::Cdc {
+            assert_eq!(
+                p.report.failed, 0,
+                "CDC arm lost requests in {}: {}",
+                p.scenario,
+                p.report.line()
+            );
+        }
+        let s = p.report.latency.summary();
+        rows.push(obj(vec![
+            ("scenario", Value::Str(p.scenario.clone())),
+            ("arm", Value::Str(p.arm.label().into())),
+            ("completed", Value::Num(p.report.completed as f64)),
+            ("failed", Value::Num(p.report.failed as f64)),
+            ("recovered", Value::Num(p.report.recovered as f64)),
+            ("rps", Value::Num(p.report.rps())),
+            ("p50_ms", Value::Num(s.p50)),
+            ("p99_ms", Value::Num(s.p99)),
+            ("makespan_ms", Value::Num(p.report.makespan_ms)),
+            ("rebuilds", Value::Num(p.report.rebuilds as f64)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("experiment", Value::Str("bench_scenario_suite".into())),
+        ("backend", Value::Str(cdc_dnn::runtime::backend_label().into())),
+        ("smoke", Value::Bool(smoke)),
+        ("suite_wall_ms", Value::Num(wall_ms)),
+        ("scenarios", Value::Arr(rows)),
+    ]);
+    let out = bench_out_path();
+    std::fs::write(&out, doc.to_string_pretty()).expect("write BENCH_scenarios.json");
+    println!("[result] wrote {}", out.display());
+}

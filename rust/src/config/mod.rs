@@ -61,6 +61,11 @@ pub fn deployment_from_json(v: &Value) -> Result<SessionConfig> {
     if let Some(r) = v.opt("device_rate_macs_per_ms") {
         cfg.device_rate = r.as_f64()?;
     }
+    if let Some(a) = v.opt("adaptive") {
+        if a.as_bool()? {
+            cfg.adaptive = Some(crate::coordinator::AdaptiveConfig::default());
+        }
+    }
     if let Some(n) = v.opt("net") {
         let mut net = NetConfig::default();
         if n.as_str().ok() == Some("ideal") {
@@ -134,6 +139,7 @@ pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
         ("seed", Value::Num(cfg.seed as f64)),
         ("detection_ms", Value::Num(cfg.detection_ms)),
         ("device_rate_macs_per_ms", Value::Num(cfg.device_rate)),
+        ("adaptive", Value::Bool(cfg.adaptive.is_some())),
         ("splits", Value::Obj(splits)),
         ("placement", Value::Obj(placement)),
     ])

@@ -31,7 +31,7 @@ use crate::partition::LayerPlan;
 use crate::runtime::manifest::{Manifest, ModelManifest};
 use crate::runtime::server::{ComputeHandle, ComputeServer};
 use crate::tensor::Tensor;
-pub use policy::Outcome;
+pub use policy::{AdaptiveConfig, AdaptivePolicy, Outcome, PolicyReport};
 pub use serve::{Arrivals, Pipeline, ServeReport, StageStats, Workload};
 pub use stage::Stage;
 use stage::{DistStage, StageKind};
@@ -93,6 +93,11 @@ pub struct SessionConfig {
     /// Fig. 11/13): layer name → data-shard devices (length must equal the
     /// layer's split degree). Unplaced layers are assigned round-robin.
     pub placement: BTreeMap<String, Vec<usize>>,
+    /// Adaptive CDC policy (DESIGN.md §9): when set, the straggler gate is
+    /// tuned online from observed per-device completion latencies and the
+    /// parity-vs-replication trade-off is surfaced in `ServeReport::
+    /// policy`; `threshold_factor` above only seeds the initial gate.
+    pub adaptive: Option<policy::AdaptiveConfig>,
 }
 
 impl SessionConfig {
@@ -108,6 +113,7 @@ impl SessionConfig {
             seed: 2021,
             detection_ms: 20_000.0,
             placement: BTreeMap::new(),
+            adaptive: None,
         }
     }
 }
@@ -175,6 +181,12 @@ pub struct Session {
     next_req: u64,
     /// Devices currently considered failed by the *coordinator*.
     known_failed: Vec<usize>,
+    /// Per-device effective compute rate (MACs/ms) — the dispatch-side
+    /// mirror of the fleet's rates, kept in sync by `set_device_rate` so
+    /// the occupancy ledger stays honest under heterogeneous fleets.
+    rates: Vec<f64>,
+    /// Adaptive CDC policy state (present when `cfg.adaptive` is set).
+    adaptive: Option<policy::AdaptivePolicy>,
     /// Extra devices allocated beyond cfg.n_devices (parity/replicas).
     pub extra_devices: usize,
     /// Serve-path buffer arena: merge/pool/decode buffers are reused
@@ -428,6 +440,15 @@ impl Session {
             devices[dev].deploy(defs)?;
         }
 
+        let rates = vec![cfg.device_rate; n_total];
+        let adaptive = cfg.adaptive.clone().map(|mut a| {
+            // The static gate seeds the adaptive one until the window
+            // has samples (∞ = "no static gate" keeps the default).
+            if cfg.threshold_factor.is_finite() {
+                a.initial_factor = cfg.threshold_factor;
+            }
+            policy::AdaptivePolicy::new(a, n_total)
+        });
         Ok(Session {
             cfg,
             model,
@@ -439,6 +460,8 @@ impl Session {
             _completions_tx: ctx,
             next_req: 0,
             known_failed: Vec::new(),
+            rates,
+            adaptive,
             extra_devices: extra,
             scratch: Scratch::new(),
             _server: server,
@@ -498,6 +521,53 @@ impl Session {
             .get(device)
             .ok_or_else(|| Error::Config(format!("no device {device}")))?
             .set_failure(plan)
+    }
+
+    /// Re-rate one device's compute (MACs/ms) mid-session — heterogeneous
+    /// RPi3/RPi4 mixes and the scenario engine's slowdown events. The
+    /// device thread and the coordinator's occupancy-ledger mirror are
+    /// updated together so dispatch-time estimates stay consistent with
+    /// simulated completions.
+    pub fn set_device_rate(&mut self, device: usize, macs_per_ms: f64) -> Result<()> {
+        if macs_per_ms.is_nan() || macs_per_ms <= 0.0 {
+            return Err(Error::Config(format!(
+                "device rate must be positive, got {macs_per_ms}"
+            )));
+        }
+        self.devices
+            .get(device)
+            .ok_or_else(|| Error::Config(format!("no device {device}")))?
+            .set_rate(macs_per_ms)?;
+        self.rates[device] = macs_per_ms;
+        Ok(())
+    }
+
+    /// Per-device effective compute rates (MACs/ms), in device order.
+    pub fn device_rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Swap the fleet-wide network profile mid-session (the scenario
+    /// engine's `ideal → moderate → congested` WLAN regime events).
+    /// Affects orders dispatched after the call; stage `expected_ms`
+    /// estimates keep their deployment-time values — the adaptive policy
+    /// exists precisely to absorb that drift.
+    pub fn set_net(&mut self, net: NetConfig) -> Result<()> {
+        for d in &self.devices {
+            d.set_net(net.clone())?;
+        }
+        self.cfg.net = net;
+        Ok(())
+    }
+
+    /// The session's configuration (read-only).
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Latest adaptive-policy snapshot (None when adaptive mode is off).
+    pub fn policy_snapshot(&self) -> Option<policy::PolicyReport> {
+        self.adaptive.as_ref().map(|a| a.snapshot())
     }
 
     /// Coordinator-side failover (the paper's non-CDC recovery): reassign

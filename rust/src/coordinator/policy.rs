@@ -2,6 +2,21 @@
 //! layer's shards, decide *when* the layer completes and *how* (all data,
 //! CDC substitution, or lost). Keeping this logic pure makes the paper's
 //! latency semantics property-testable independent of threads and PJRT.
+//!
+//! The module also hosts the **adaptive CDC policy** ([`AdaptivePolicy`],
+//! DESIGN.md §9): an online tuner that watches the per-device completion
+//! latencies the serving engine observes, trails the straggler-gate
+//! factor just above the typical-latency quantile, and recommends
+//! parity-coded vs replicated redundancy from the observed reply-loss
+//! rate. It is deliberately *state over pure functions*: the resolution
+//! semantics above stay pure, the tuner only chooses their `threshold`
+//! argument.
+
+use std::collections::VecDeque;
+
+use crate::metrics::{percentile_sorted, Intervals};
+
+use super::Redundancy;
 
 /// How a distributed layer completed.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -142,6 +157,245 @@ pub fn resolve_grouped(
     GroupedOutcome::Ok { t_ms: t, missing }
 }
 
+// ---------------------------------------------------------------------
+// Adaptive CDC policy (DESIGN.md §9)
+// ---------------------------------------------------------------------
+
+/// Tuning knobs of the [`AdaptivePolicy`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Sliding-window length (completions kept per device and globally).
+    pub window: usize,
+    /// Lower clamp of the straggler-gate factor (never substitute below
+    /// this multiple of the expected service time).
+    pub min_factor: f64,
+    /// Upper clamp of the straggler-gate factor.
+    pub max_factor: f64,
+    /// Latency quantile the gate trails: with `q = 0.75` the gate sits
+    /// just above the fastest three quarters of recent completions, so a
+    /// persistently slow minority (a straggling device) falls outside it
+    /// and gets substituted.
+    pub quantile: f64,
+    /// Safety margin multiplied onto the tracked quantile.
+    pub margin: f64,
+    /// Observed reply-loss rate above which replication (2MR) is
+    /// recommended over single-parity CDC: one parity masks one loss per
+    /// group, so a lossy fleet wants per-shard replicas despite the d×
+    /// hardware cost.
+    pub replication_drop_rate: f64,
+    /// Gate factor used before the window has any samples.
+    pub initial_factor: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> AdaptiveConfig {
+        AdaptiveConfig {
+            window: 64,
+            min_factor: 1.2,
+            max_factor: 8.0,
+            quantile: 0.75,
+            margin: 1.5,
+            replication_drop_rate: 0.15,
+            initial_factor: 2.0,
+        }
+    }
+}
+
+/// Online straggler-gate tuner + redundancy chooser.
+///
+/// The serving engine feeds it one observation per shard completion —
+/// `(device, dispatch time, arrival time, expected service time)` — and
+/// reads back [`AdaptivePolicy::threshold_factor`] before each stage
+/// resolution. Internally it keeps per-device sliding windows of
+/// `(dispatch, arrival)` intervals (exposed as [`Intervals`] in the
+/// [`PolicyReport`]) plus a global window of expected-normalised
+/// latencies from which the gate factor is re-tuned after every
+/// observation. Lost replies (`arrival = ∞`) feed the drop-rate estimate
+/// behind [`AdaptivePolicy::recommend`].
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    cfg: AdaptiveConfig,
+    /// Per-device sliding window of (dispatch, arrival) pairs.
+    device_windows: Vec<VecDeque<(f64, f64)>>,
+    /// Global sliding window of expected-normalised latencies (FIFO).
+    norm: VecDeque<f64>,
+    /// The same multiset as `norm`, kept sorted incrementally so
+    /// re-tuning is a binary search + `O(window)` shift per observation
+    /// with no allocation at steady state (the serve hot path stays
+    /// allocation-free once the windows are warm).
+    sorted: Vec<f64>,
+    /// Sliding window of reply outcomes (true = lost) — the drop-rate
+    /// estimate must *recover* after a transient lossy phase, so it
+    /// slides like the latency windows do.
+    outcomes: VecDeque<bool>,
+    /// Lost replies currently inside `outcomes`.
+    window_drops: usize,
+    observed: u64,
+    drops: u64,
+    stragglers: u64,
+    factor: f64,
+}
+
+impl AdaptivePolicy {
+    /// Fresh policy over `n_devices` devices (data + redundancy).
+    pub fn new(cfg: AdaptiveConfig, n_devices: usize) -> AdaptivePolicy {
+        let factor = cfg.initial_factor;
+        AdaptivePolicy {
+            device_windows: vec![VecDeque::new(); n_devices],
+            norm: VecDeque::new(),
+            sorted: Vec::new(),
+            outcomes: VecDeque::new(),
+            window_drops: 0,
+            observed: 0,
+            drops: 0,
+            stragglers: 0,
+            factor,
+            cfg,
+        }
+    }
+
+    /// Feed one shard completion: `t_arrival_ms = ∞` records a lost
+    /// reply; finite arrivals update the latency windows and re-tune the
+    /// gate.
+    pub fn observe(
+        &mut self,
+        device: usize,
+        t_start_ms: f64,
+        t_arrival_ms: f64,
+        expected_ms: f64,
+    ) {
+        self.observed += 1;
+        let lost = !t_arrival_ms.is_finite();
+        if self.outcomes.len() >= self.cfg.window {
+            if let Some(old) = self.outcomes.pop_front() {
+                if old {
+                    self.window_drops -= 1;
+                }
+            }
+        }
+        self.outcomes.push_back(lost);
+        if lost {
+            self.window_drops += 1;
+            self.drops += 1;
+            return;
+        }
+        let lat = (t_arrival_ms - t_start_ms).max(0.0);
+        if let Some(w) = self.device_windows.get_mut(device) {
+            if w.len() >= self.cfg.window {
+                w.pop_front();
+            }
+            w.push_back((t_start_ms, t_arrival_ms));
+        }
+        let normalised = if expected_ms > 0.0 { lat / expected_ms } else { lat };
+        if normalised > self.factor {
+            self.stragglers += 1;
+        }
+        if self.norm.len() >= self.cfg.window {
+            if let Some(old) = self.norm.pop_front() {
+                // The evicted value is a bit-exact copy of a `sorted`
+                // entry, so the partition point lands on it directly.
+                let i = self.sorted.partition_point(|&x| x < old);
+                if i < self.sorted.len() {
+                    let _ = self.sorted.remove(i);
+                }
+            }
+        }
+        self.norm.push_back(normalised);
+        let i = self.sorted.partition_point(|&x| x < normalised);
+        self.sorted.insert(i, normalised);
+        self.retune();
+    }
+
+    fn retune(&mut self) {
+        if self.sorted.is_empty() {
+            return;
+        }
+        let q = percentile_sorted(&self.sorted, self.cfg.quantile);
+        self.factor = (q * self.cfg.margin).clamp(self.cfg.min_factor, self.cfg.max_factor);
+    }
+
+    /// The current straggler-gate factor (multiple of a stage's expected
+    /// service time), replacing the static `SessionConfig::
+    /// threshold_factor` while adaptive mode is on.
+    pub fn threshold_factor(&self) -> f64 {
+        self.factor
+    }
+
+    /// Fraction of replies lost within the sliding outcome window (so
+    /// the estimate — and the recommendation built on it — recovers
+    /// once a lossy phase ends).
+    pub fn drop_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            0.0
+        } else {
+            self.window_drops as f64 / self.outcomes.len() as f64
+        }
+    }
+
+    /// Redundancy the observed failure regime calls for: parity-coded CDC
+    /// (one extra device, masks one loss per group) on a mostly-healthy
+    /// fleet, replication (2MR — d extra devices, masks one loss *per
+    /// shard*) once losses are frequent enough that a second concurrent
+    /// loss per group becomes likely.
+    pub fn recommend(&self) -> Redundancy {
+        if self.drop_rate() > self.cfg.replication_drop_rate {
+            Redundancy::TwoMr
+        } else {
+            Redundancy::Cdc
+        }
+    }
+
+    /// One device's sliding window of (dispatch → arrival) completion
+    /// intervals.
+    pub fn device_window(&self, device: usize) -> Intervals {
+        let mut iv = Intervals::new();
+        if let Some(w) = self.device_windows.get(device) {
+            for &(s, e) in w {
+                iv.push(s, e);
+            }
+        }
+        iv
+    }
+
+    /// Snapshot for `ServeReport::policy`.
+    pub fn snapshot(&self) -> PolicyReport {
+        PolicyReport {
+            threshold_factor: self.factor,
+            observed: self.observed,
+            drops: self.drops,
+            drop_rate: self.drop_rate(),
+            stragglers: self.stragglers,
+            recommended: self.recommend(),
+            device_windows: (0..self.device_windows.len())
+                .map(|d| self.device_window(d))
+                .collect(),
+        }
+    }
+}
+
+/// What the adaptive policy learned over a serve run — surfaced as
+/// `ServeReport::policy` so the straggler-gate/redundancy trade-off is
+/// visible per run.
+#[derive(Debug, Clone)]
+pub struct PolicyReport {
+    /// Gate factor in effect at the end of the run.
+    pub threshold_factor: f64,
+    /// Total shard completions observed over the run (incl. lost
+    /// replies; lifetime counter).
+    pub observed: u64,
+    /// Lost replies observed over the run (lifetime counter).
+    pub drops: u64,
+    /// Lost fraction within the sliding outcome window (recovers after
+    /// a transient lossy phase — this drives `recommended`).
+    pub drop_rate: f64,
+    /// Completions that exceeded the gate in effect when they arrived.
+    pub stragglers: u64,
+    /// Redundancy mode the observed regime calls for.
+    pub recommended: Redundancy,
+    /// Per-device sliding windows of (dispatch → arrival) intervals.
+    pub device_windows: Vec<Intervals>,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +465,72 @@ mod tests {
         let o = resolve_2mr(&[100.0, 30.0], &[20.0, INF]);
         assert_eq!(o, Outcome::AllData { t_ms: 30.0 });
         assert_eq!(resolve_2mr(&[INF, 30.0], &[INF, 10.0]), Outcome::Lost);
+    }
+
+    #[test]
+    fn adaptive_gate_trails_typical_latency_and_flags_stragglers() {
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::default(), 4);
+        assert_eq!(p.threshold_factor(), 2.0, "initial factor before samples");
+        // Three fast devices at ~1× expected, one persistent 4× straggler.
+        for round in 0..32 {
+            let t0 = round as f64 * 100.0;
+            for dev in 0..3 {
+                p.observe(dev, t0, t0 + 10.0, 10.0);
+            }
+            p.observe(3, t0, t0 + 40.0, 10.0);
+        }
+        // Gate sits above the fast mode but well under the straggler: the
+        // p75 of {1,1,1,4} traffic is ~1, × margin 1.5.
+        let f = p.threshold_factor();
+        assert!(f >= 1.2 && f < 4.0, "factor {f} should cut the 4× straggler");
+        assert!(p.stragglers > 0, "persistent straggler must be flagged");
+        assert_eq!(p.recommend(), Redundancy::Cdc, "no drops → parity suffices");
+        let snap = p.snapshot();
+        assert_eq!(snap.device_windows.len(), 4);
+        assert_eq!(snap.device_windows[0].len(), 32);
+        assert!((snap.threshold_factor - f).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_windows_slide_and_recover() {
+        let cfg = AdaptiveConfig { window: 8, ..AdaptiveConfig::default() };
+        let mut p = AdaptivePolicy::new(cfg, 1);
+        // A slow early phase...
+        for i in 0..8 {
+            p.observe(0, i as f64, i as f64 + 60.0, 10.0); // 6× expected
+        }
+        let slow = p.threshold_factor();
+        assert!(slow > 5.0, "gate chased the slow phase: {slow}");
+        // ...then the device recovers; the window forgets the slow phase.
+        for i in 8..16 {
+            p.observe(0, i as f64, i as f64 + 10.0, 10.0);
+        }
+        let fast = p.threshold_factor();
+        assert!(fast < slow, "gate must relax after recovery: {fast} vs {slow}");
+        assert_eq!(p.device_window(0).len(), 8, "window is bounded");
+    }
+
+    #[test]
+    fn adaptive_recommends_replication_under_heavy_loss() {
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::default(), 2);
+        for i in 0..20 {
+            p.observe(0, i as f64, i as f64 + 10.0, 10.0);
+            // Device 1 loses 50% of its replies.
+            let arr = if i % 2 == 0 { INF } else { i as f64 + 12.0 };
+            p.observe(1, i as f64, arr, 10.0);
+        }
+        assert!(p.drop_rate() > 0.2, "drop rate {}", p.drop_rate());
+        assert_eq!(p.recommend(), Redundancy::TwoMr);
+        assert_eq!(p.snapshot().drops, 10);
+        // The lossy phase ends: the windowed estimate recovers and the
+        // recommendation reverts to the cheaper parity scheme.
+        for i in 20..120 {
+            p.observe(0, i as f64, i as f64 + 10.0, 10.0);
+            p.observe(1, i as f64, i as f64 + 12.0, 10.0);
+        }
+        assert!(p.drop_rate() < 0.05, "windowed rate {}", p.drop_rate());
+        assert_eq!(p.recommend(), Redundancy::Cdc);
+        assert_eq!(p.snapshot().drops, 10, "lifetime counter keeps the history");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! ## Model
 //!
 //! An event-driven scheduler over **virtual time**: requests are admitted
-//! from a [`Workload`] (open-loop Poisson/uniform arrivals or a
+//! from a [`Workload`] (open-loop Poisson/uniform/explicit arrivals or a
 //! closed-loop concurrency window), queue FIFO in front of each
 //! distributed [`Stage`](super::stage::Stage), and occupy a stage
 //! exclusively from dispatch to resolution. Back-pressure is structural —
@@ -53,6 +53,10 @@ pub enum Arrivals {
     Poisson { rate_rps: f64 },
     /// Open loop: fixed inter-arrival gap in ms (0 = all at t=0).
     Uniform { gap_ms: f64 },
+    /// Open loop: explicit arrival instants (ms), one per input in
+    /// non-decreasing order — the scenario engine's segment streams
+    /// (Poisson tails with burst spikes spliced in).
+    Explicit { at_ms: Vec<f64> },
     /// Closed loop: `concurrency` requests outstanding; each completion
     /// (or loss) admits the next.
     Closed { concurrency: usize },
@@ -107,6 +111,18 @@ impl Workload {
         Workload::closed(vec![input], 1)
     }
 
+    /// Open-loop workload with explicit arrival instants (ms), one per
+    /// input. Instants should be non-decreasing: admission order is input
+    /// order.
+    pub fn explicit(inputs: Vec<Tensor>, at_ms: Vec<f64>) -> Workload {
+        Workload {
+            inputs,
+            arrivals: Arrivals::Explicit { at_ms },
+            seed: 0,
+            admission_cap: None,
+        }
+    }
+
     /// Bound the entry-stage queue (open loop).
     pub fn with_admission_cap(mut self, cap: usize) -> Workload {
         self.admission_cap = Some(cap);
@@ -153,6 +169,10 @@ pub struct ServeReport {
     pub max_concurrent_requests: usize,
     /// Peak number of simultaneously-busy stages.
     pub max_concurrent_stages: usize,
+    /// Adaptive-policy snapshot at the end of the run (None when the
+    /// session runs the static straggler gate) — the tuned gate factor,
+    /// observed drop rate, and the parity-vs-replication recommendation.
+    pub policy: Option<super::policy::PolicyReport>,
 }
 
 impl ServeReport {
@@ -299,6 +319,16 @@ impl Session {
             Arrivals::Uniform { gap_ms } => {
                 (0..total).map(|i| i as f64 * gap_ms).collect()
             }
+            Arrivals::Explicit { ref at_ms } => {
+                if at_ms.len() != total {
+                    return Err(Error::Config(format!(
+                        "explicit arrivals: {} instants for {} inputs",
+                        at_ms.len(),
+                        total
+                    )));
+                }
+                at_ms.clone()
+            }
             Arrivals::Closed { .. } => Vec::new(),
         };
         let closed_c = match workload.arrivals {
@@ -439,7 +469,7 @@ impl Session {
                 let pending = ds.dispatch(
                     &self.devices,
                     &self.cfg.net,
-                    self.cfg.device_rate,
+                    &self.rates,
                     inflight[i].req,
                     input,
                     t_enter,
@@ -492,11 +522,28 @@ impl Session {
                 };
                 let layer = &self.model.layers[ds.layer_idx];
                 req_to_stage.remove(&inflight[b.infl].req);
+                // Adaptive mode replaces the static straggler gate with
+                // the policy's current (latency-tracked) factor.
+                let threshold_factor = self
+                    .adaptive
+                    .as_ref()
+                    .map(|a| a.threshold_factor())
+                    .unwrap_or(self.cfg.threshold_factor);
+                let expected_ms = ds.expected_ms;
+                // Feed every gathered completion (∞ = lost reply) into
+                // the adaptive policy *before* resolution, so Lost stages
+                // — the double-loss regime the parity-vs-replication
+                // chooser exists for — feed the drop-rate estimate too.
+                if let Some(a) = self.adaptive.as_mut() {
+                    for c in b.got.values() {
+                        a.observe(c.device, b.t_enter, c.t_arrival_ms, expected_ms);
+                    }
+                }
                 let resolved = ds.resolve(
                     layer,
                     b.got,
                     b.t_enter,
-                    self.cfg.threshold_factor,
+                    threshold_factor,
                     scratch,
                 )?;
                 match resolved {
@@ -593,6 +640,7 @@ impl Session {
             stages,
             max_concurrent_requests,
             max_concurrent_stages,
+            policy: self.adaptive.as_ref().map(|a| a.snapshot()),
         })
     }
 }

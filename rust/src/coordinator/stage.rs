@@ -111,13 +111,15 @@ impl DistStage {
 
     /// Fan one request's input out to the stage's devices at virtual time
     /// `t_enter`, serialising compute through the per-device occupancy
-    /// ledger `device_free` (busy-until, ms).
+    /// ledger `device_free` (busy-until, ms). `rates` is the per-device
+    /// compute-rate mirror (MACs/ms) so heterogeneous fleets keep the
+    /// ledger consistent with the devices' own arithmetic.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn dispatch(
         &self,
         devices: &[Device],
         net: &NetConfig,
-        rate_macs_per_ms: f64,
+        rates: &[f64],
         req: u64,
         input: Arc<Tensor>,
         t_enter: f64,
@@ -133,7 +135,7 @@ impl DistStage {
             let req_net = net.sample_request(self.request_bytes);
             let start = (t_enter + req_net).max(not_before);
             device_free[*dev] =
-                start + (tasks.len() as u64 * self.macs) as f64 / rate_macs_per_ms;
+                start + (tasks.len() as u64 * self.macs) as f64 / rates[*dev];
             devices[*dev].dispatch(WorkOrder {
                 req,
                 tasks: tasks.clone(),

@@ -1,7 +1,8 @@
 //! Experiment drivers — one per table/figure of the paper's evaluation
-//! (see DESIGN.md §4 for the index). Each driver prints the figure's
-//! rows/series to stdout and writes a machine-readable JSON record under
-//! the results directory for EXPERIMENTS.md.
+//! plus the scenario suite (see DESIGN.md §4 for the index and
+//! `docs/EXPERIMENTS.md` for the full experiment book). Each driver
+//! prints its figure's rows/series to stdout and writes a
+//! machine-readable JSON record under the results directory.
 
 pub mod ablate;
 pub mod calibrate;
@@ -12,6 +13,7 @@ pub mod fig16;
 pub mod fig17;
 pub mod fig18;
 pub mod fig2;
+pub mod scenarios;
 pub mod table1;
 
 use std::path::PathBuf;

@@ -1,0 +1,253 @@
+//! Scenario suite — scripted fleet-chaos runs over the serving pipeline
+//! (DESIGN.md §9, ROADMAP "handles as many scenarios as you can
+//! imagine").
+//!
+//! Six named scenarios cover the paper's §2 failure taxonomy as
+//! *time-varying* regimes: `steady` (control), `crash-storm` (staggered
+//! permanent failures + an intermittent phase), `churn` (devices
+//! leave/join with re-partitioning), `congested-wlan` (Fig. 1's WLAN
+//! regime sweeping in and out), `hetero-fleet` (RPi3/RPi4-style rate
+//! mixes that turn devices into persistent stragglers), and `burst`
+//! (arrival spikes on top of the Poisson stream). Every scenario runs
+//! across three redundancy **arms** — no redundancy, replication (2MR),
+//! and parity-coded CDC with the adaptive policy — and the driver
+//! records per-arm rps/p50/p99 to `results/scenarios.json`.
+//!
+//! The suite deploys the synthetic `testkit::synth` model, so — unlike
+//! the figure reproductions — it needs no AOT artifact build: it
+//! measures the serving engine, the recovery machinery, and the adaptive
+//! policy, not XLA. The paper-invariant ("coded serving never loses a
+//! request, p99 degrades gracefully") is asserted for every scenario by
+//! `rust/tests/scenario_engine.rs` and re-checked by
+//! `benches/scenario_suite.rs`.
+
+use crate::coordinator::{AdaptiveConfig, Redundancy, SessionConfig, SplitSpec};
+use crate::error::Result;
+use crate::json::{obj, Value};
+use crate::scenario::{Action, NetProfile, Scenario, ScenarioEngine, ScenarioReport};
+use crate::testkit::synth;
+
+use super::{print_table, ExpCtx};
+
+/// A redundancy arm of the suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arm {
+    /// No redundancy: a failed shard loses the request.
+    None,
+    /// Replication (2MR): every shard duplicated.
+    Replication,
+    /// Parity-coded CDC with the adaptive policy on.
+    Cdc,
+}
+
+impl Arm {
+    /// All arms, table order.
+    pub const ALL: [Arm; 3] = [Arm::None, Arm::Replication, Arm::Cdc];
+
+    /// Tag used in tables and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Arm::None => "none",
+            Arm::Replication => "2mr",
+            Arm::Cdc => "cdc",
+        }
+    }
+
+    fn redundancy(self) -> Redundancy {
+        match self {
+            Arm::None => Redundancy::None,
+            Arm::Replication => Redundancy::TwoMr,
+            Arm::Cdc => Redundancy::Cdc,
+        }
+    }
+}
+
+/// The deployment template one (scenario, arm) pair runs on: the
+/// synthetic MLP, fc1 target-split 4 ways and fc2 2 ways over four data
+/// devices, redundancy per the arm, a fast failure-detection window (the
+/// chaos scripts flip failures every few hundred virtual ms), and the
+/// adaptive policy on the CDC arm.
+pub fn arm_cfg(sc: &Scenario, arm: Arm) -> SessionConfig {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.seed = sc.seed;
+    cfg.net = sc.initial_net.config();
+    if let Some(r) = sc.device_rate {
+        cfg.device_rate = r;
+    }
+    cfg.detection_ms = 250.0;
+    cfg.threshold_factor = 2.0;
+    cfg.splits
+        .insert("fc1".into(), SplitSpec { d: 4, redundancy: arm.redundancy() });
+    cfg.splits
+        .insert("fc2".into(), SplitSpec { d: 2, redundancy: arm.redundancy() });
+    if arm == Arm::Cdc {
+        cfg.adaptive = Some(AdaptiveConfig::default());
+    }
+    cfg
+}
+
+/// Control run: no events, moderate WLAN.
+pub fn steady(seed: u64) -> Scenario {
+    Scenario::new("steady", 800.0, 50.0, seed)
+}
+
+/// Staggered permanent failures with recovery windows, then an
+/// intermittent (flaky-reply) phase. At most one fc1 device is unhealthy
+/// at a time — the single-parity tolerance the paper's scheme promises
+/// to mask.
+pub fn crash_storm(seed: u64) -> Scenario {
+    Scenario::new("crash-storm", 1000.0, 50.0, seed)
+        .at(200.0, Action::Crash { device: 2 })
+        .at(400.0, Action::Recover { device: 2 })
+        .at(450.0, Action::Crash { device: 3 })
+        .at(650.0, Action::Recover { device: 3 })
+        .at(700.0, Action::Flaky { device: 1, p: 0.3 })
+        .at(900.0, Action::Recover { device: 1 })
+}
+
+/// Fleet churn: two devices leave (splits re-partition 4 → 2 via the
+/// partition planner), then rejoin (back to 4).
+pub fn churn(seed: u64) -> Scenario {
+    Scenario::new("churn", 900.0, 40.0, seed)
+        .at(300.0, Action::Leave { n: 2 })
+        .at(600.0, Action::Join { n: 2 })
+}
+
+/// WLAN regime sweep: the Fig.-1 congested profile rolls in over a
+/// moderate network and clears again.
+pub fn congested_wlan(seed: u64) -> Scenario {
+    Scenario::new("congested-wlan", 900.0, 40.0, seed)
+        .at(250.0, Action::Net { profile: NetProfile::Congested })
+        .at(600.0, Action::Net { profile: NetProfile::Moderate })
+}
+
+/// Heterogeneous fleet on an ideal network with compute slowed so rate
+/// differences dominate: one device drops to 0.4×, later another to
+/// 0.25× — persistent stragglers the gate + parity substitution absorb.
+pub fn hetero_fleet(seed: u64) -> Scenario {
+    Scenario::new("hetero-fleet", 800.0, 40.0, seed)
+        .with_net(NetProfile::Ideal)
+        .with_device_rate(3.0) // fc1 shard ≈ 20 ms: compute dominates
+        .at(1.0, Action::Slowdown { device: 1, factor: 0.4 })
+        .at(400.0, Action::Slowdown { device: 3, factor: 0.25 })
+}
+
+/// Arrival-spike scenario: two 25-request bursts on a 30 rps base
+/// stream, plus a rate step in between.
+pub fn burst(seed: u64) -> Scenario {
+    Scenario::new("burst", 900.0, 30.0, seed)
+        .at(300.0, Action::Burst { n: 25 })
+        .at(450.0, Action::Rate { rps: 60.0 })
+        .at(600.0, Action::Burst { n: 25 })
+        .at(650.0, Action::Rate { rps: 30.0 })
+}
+
+/// Every named scenario, suite order.
+pub fn catalog(seed: u64) -> Vec<Scenario> {
+    vec![
+        steady(seed),
+        crash_storm(seed),
+        churn(seed),
+        congested_wlan(seed),
+        hetero_fleet(seed),
+        burst(seed),
+    ]
+}
+
+/// One (scenario, arm) measurement.
+#[derive(Debug)]
+pub struct SuitePoint {
+    /// Scenario name.
+    pub scenario: String,
+    /// Redundancy arm.
+    pub arm: Arm,
+    /// The merged scenario report.
+    pub report: ScenarioReport,
+}
+
+/// Run the full suite; prints the per-arm table, writes
+/// `results/scenarios.json`, and returns the points for tests.
+pub fn run(ctx: &ExpCtx) -> Result<Vec<SuitePoint>> {
+    let arts = synth::build(ctx.seed)?;
+    let scale = if ctx.quick { 0.5 } else { 1.0 };
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+
+    println!("\n=== Scenario suite (synthetic model, virtual time) ===");
+    for sc in catalog(ctx.seed) {
+        let sc = sc.scaled(scale);
+        for arm in Arm::ALL {
+            let mut engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, arm))?;
+            let report = engine.run(&sc)?;
+            let s = report.latency.summary();
+            rows.push(vec![
+                sc.name.clone(),
+                arm.label().into(),
+                format!("{}", report.completed),
+                format!("{}", report.failed),
+                format!("{}", report.recovered),
+                format!("{:.1}", report.rps()),
+                format!("{:.1}", s.p50),
+                format!("{:.1}", s.p99),
+            ]);
+            let mut fields = vec![
+                ("scenario", Value::Str(sc.name.clone())),
+                ("arm", Value::Str(arm.label().into())),
+                ("completed", Value::Num(report.completed as f64)),
+                ("failed", Value::Num(report.failed as f64)),
+                ("recovered", Value::Num(report.recovered as f64)),
+                ("dropped", Value::Num(report.dropped as f64)),
+                ("rps", Value::Num(report.rps())),
+                ("p50_ms", Value::Num(s.p50)),
+                ("p99_ms", Value::Num(s.p99)),
+                ("makespan_ms", Value::Num(report.makespan_ms)),
+                ("rebuilds", Value::Num(report.rebuilds as f64)),
+            ];
+            if let Some(p) = &report.policy {
+                fields.push((
+                    "policy",
+                    obj(vec![
+                        ("threshold_factor", Value::Num(p.threshold_factor)),
+                        ("drop_rate", Value::Num(p.drop_rate)),
+                        ("stragglers", Value::Num(p.stragglers as f64)),
+                        (
+                            "recommended",
+                            Value::Str(
+                                match p.recommended {
+                                    Redundancy::TwoMr => "2mr",
+                                    _ => "cdc",
+                                }
+                                .into(),
+                            ),
+                        ),
+                    ]),
+                ));
+            }
+            json_rows.push(obj(fields));
+            points.push(SuitePoint { scenario: sc.name.clone(), arm, report });
+        }
+    }
+
+    print_table(
+        &["scenario", "arm", "served", "lost", "recovered", "rps", "p50 ms", "p99 ms"],
+        &rows,
+    );
+    println!(
+        "(CDC arm: adaptive straggler gate + parity substitution — the\n\
+         no-lost-request invariant across every scenario is asserted by\n\
+         `cargo test -q scenario`)"
+    );
+
+    ctx.write_result(
+        "scenarios",
+        &obj(vec![
+            ("experiment", Value::Str("scenario_suite".into())),
+            ("backend", Value::Str(crate::runtime::backend_label().into())),
+            ("scale", Value::Num(scale)),
+            ("points", Value::Arr(json_rows)),
+        ]),
+    )?;
+    Ok(points)
+}

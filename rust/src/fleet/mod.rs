@@ -25,6 +25,27 @@
 //! coordinator's policy layer sees the full arrival picture and stays
 //! deterministic. This keeps the *code path* identical to a lossy network
 //! while making every experiment reproducible from a seed.
+//!
+//! ## Content-addressed randomness
+//!
+//! Every stochastic draw a device makes for one [`WorkOrder`] — the
+//! intermittent-failure drop decision and the per-reply WiFi jitter —
+//! comes from a stream that is a pure function of `(session seed, device
+//! id, first task id, input activation bits)`. No draw state survives
+//! between orders, so a repeated `Pipeline::run` of the same workload
+//! replays the same drop/jitter pattern bit-for-bit, and a sequence of
+//! single-shot `infer` calls is draw-for-draw identical to the same
+//! inputs served as one concurrency-1 workload (the activations feeding
+//! each stage are the same bits either way). `FailurePlan::PermanentAt`
+//! intentionally keys on the *global* request counter instead, so
+//! "device dies at the k-th request of this session" keeps its meaning
+//! across runs.
+//!
+//! The flip side of content addressing: two orders with *bit-identical*
+//! inputs draw identically — `Intermittent(p)` then drops both replies
+//! or neither, not independently. Feed distinct inputs (every workload
+//! generator and experiment in this repo does) when statistical
+//! independence across requests matters.
 
 pub mod net;
 
@@ -57,7 +78,9 @@ pub enum FailurePlan {
 }
 
 impl FailurePlan {
-    /// Does this device drop the reply for request `req`?
+    /// Does this device drop the reply for request `req`? `rng` is the
+    /// order's content-addressed stream (see the module docs), so the
+    /// intermittent draw never depends on how many orders ran before.
     pub fn drops(&self, req: u64, rng: &mut Pcg32) -> bool {
         match self {
             FailurePlan::None => false,
@@ -134,6 +157,8 @@ enum ToDevice {
     Undeploy(Vec<u64>),
     Work(WorkOrder),
     SetFailure(FailurePlan),
+    SetNet(NetConfig),
+    SetRate(f64),
 }
 
 /// Handle to a running device thread.
@@ -186,6 +211,18 @@ impl Device {
         self.send(ToDevice::SetFailure(plan))
     }
 
+    /// Swap the device's network timing model mid-experiment (the
+    /// scenario engine's WLAN-regime events). Applies to later orders.
+    pub fn set_net(&self, net: NetConfig) -> Result<()> {
+        self.send(ToDevice::SetNet(net))
+    }
+
+    /// Change the device's compute rate (MACs/ms) mid-experiment —
+    /// heterogeneous fleets and scenario slowdown events.
+    pub fn set_rate(&self, rate_macs_per_ms: f64) -> Result<()> {
+        self.send(ToDevice::SetRate(rate_macs_per_ms))
+    }
+
     fn send(&self, msg: ToDevice) -> Result<()> {
         self.tx
             .send(msg)
@@ -204,6 +241,23 @@ impl Drop for Device {
     }
 }
 
+/// FNV-1a mix of the order identity a device's stochastic draws key on:
+/// `(device, first task, input bits)`. See the module docs ("content-
+/// addressed randomness") for why this replaces a persistent RNG stream.
+fn order_stream(device: usize, order: &WorkOrder) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(device as u64);
+    mix(order.tasks.first().copied().unwrap_or(u64::MAX));
+    for &x in order.input.data() {
+        mix(x.to_bits() as u64);
+    }
+    h
+}
+
 fn device_main(
     cfg: DeviceConfig,
     net: NetConfig,
@@ -213,8 +267,9 @@ fn device_main(
     completions: Sender<Completion>,
 ) {
     let mut tasks: std::collections::HashMap<u64, TaskDef> = Default::default();
-    let mut rng = Pcg32::new(seed, cfg.id as u64 + 1000);
     let mut failure = cfg.failure.clone();
+    let mut net = net;
+    let mut rate = cfg.rate_macs_per_ms;
     while let Ok(msg) = rx.recv() {
         match msg {
             ToDevice::Deploy(ts) => {
@@ -228,7 +283,10 @@ fn device_main(
                 }
             }
             ToDevice::SetFailure(plan) => failure = plan,
+            ToDevice::SetNet(n) => net = n,
+            ToDevice::SetRate(r) => rate = r,
             ToDevice::Work(order) => {
+                let mut rng = Pcg32::new(seed, order_stream(cfg.id, &order));
                 let dropped = failure.drops(order.req, &mut rng);
                 // Request transfer happens once per order (deterministic
                 // leg; congestion jitter is on the replies — see net.rs).
@@ -260,7 +318,7 @@ fn device_main(
                             order.input.clone(),
                         ])
                         .ok();
-                    cum_ms += task.macs as f64 / cfg.rate_macs_per_ms;
+                    cum_ms += task.macs as f64 / rate;
                     let reply_ms = net.sample(task.reply_bytes, &mut rng);
                     let (result, t_arrival_ms) = if dropped || result.is_none() {
                         (None, f64::INFINITY)

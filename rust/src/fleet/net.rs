@@ -75,6 +75,13 @@ impl NetConfig {
         }
     }
 
+    /// The congested worst-case WLAN of Fig. 1 — an explicit name for
+    /// [`NetConfig::default`], used by the scenario engine's regime-swap
+    /// events (`ideal → moderate → congested`).
+    pub fn congested() -> NetConfig {
+        NetConfig::default()
+    }
+
     /// An (unrealistically) ideal network — isolates compute effects in
     /// ablation benches.
     pub fn ideal() -> NetConfig {
@@ -158,6 +165,81 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(cfg.sample(1 << 20, &mut rng), 0.0);
         }
+    }
+
+    /// Empirical CDF of `n` reply-leg draws at a grid of horizons.
+    fn cdf_grid(cfg: &NetConfig, seed: u64, n: usize, grid: &[f64]) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut s = Series::new();
+        for _ in 0..n {
+            s.record(cfg.sample(2 * 1024, &mut rng));
+        }
+        grid.iter().map(|&x| s.cdf_at(x)).collect()
+    }
+
+    /// Property: the profile ladder is stochastically ordered — at every
+    /// horizon, `ideal` delivers at least as often as `moderate`, which
+    /// delivers at least as often as the congested `default`. (The lighter
+    /// profiles are *dominated* by default's delay distribution.)
+    #[test]
+    fn profile_ladder_is_stochastically_ordered() {
+        let grid = [1.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 3000.0];
+        let n = 20_000;
+        let congested = cdf_grid(&NetConfig::congested(), 21, n, &grid);
+        let moderate = cdf_grid(&NetConfig::moderate(), 22, n, &grid);
+        let ideal = cdf_grid(&NetConfig::ideal(), 23, n, &grid);
+        for (i, &x) in grid.iter().enumerate() {
+            assert!(
+                moderate[i] + 0.02 >= congested[i],
+                "moderate CDF({x}ms)={} < default {}",
+                moderate[i],
+                congested[i]
+            );
+            assert!(
+                ideal[i] + 1e-12 >= moderate[i],
+                "ideal CDF({x}ms)={} < moderate {}",
+                ideal[i],
+                moderate[i]
+            );
+        }
+        // ideal is degenerate at 0 — dominated by everything, dominating
+        // nothing.
+        assert!(ideal.iter().all(|&c| c == 1.0));
+    }
+
+    /// Property: `max_ms` caps every draw, across random configurations
+    /// with deliberately heavy tails and random payloads.
+    #[test]
+    fn max_ms_caps_every_draw() {
+        crate::testkit::forall(
+            31,
+            200,
+            |rng| {
+                let mut cfg = NetConfig::default();
+                cfg.p_fast = rng.f64();
+                cfg.lognorm_mu = rng.range(0.0, 8.0); // e^8 ≈ 3 s jitter
+                cfg.lognorm_sigma = rng.range(0.0, 2.0);
+                cfg.pareto_xm = rng.range(1.0, 500.0);
+                cfg.pareto_alpha = rng.range(0.8, 2.0);
+                cfg.max_ms = rng.range(0.5, 50.0);
+                let bytes = rng.below(1 << 22) as u64;
+                (cfg, bytes, rng.next_u64())
+            },
+            |(cfg, bytes, seed)| {
+                let mut rng = Pcg32::seeded(*seed);
+                for _ in 0..100 {
+                    let d = cfg.sample(*bytes, &mut rng);
+                    if d > cfg.max_ms {
+                        return Err(format!("draw {d} exceeds max_ms {}", cfg.max_ms));
+                    }
+                    let r = cfg.sample_request(*bytes);
+                    if r > cfg.max_ms {
+                        return Err(format!("request leg {r} exceeds max_ms {}", cfg.max_ms));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

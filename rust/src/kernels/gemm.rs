@@ -33,7 +33,7 @@ pub const NR: usize = 8;
 /// dominates and the naive loop wins.
 const TILED_MIN_FLOPS: f64 = 2.0 * 48.0 * 48.0 * 48.0;
 /// Above this FLOP count row-partitioned threading pays for the spawn.
-const THREADED_MIN_FLOPS: f64 = 2.0 * 176.0 * 176.0 * 176.0;
+pub const THREADED_MIN_FLOPS: f64 = 2.0 * 176.0 * 176.0 * 176.0;
 
 fn check_dims(a: &[f32], b: &[f32], c: &[f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k, "gemm: lhs length vs ({m},{k})");

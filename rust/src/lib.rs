@@ -11,6 +11,42 @@
 //! one extra *coded* device per layer whose weights are the offline sum of
 //! the data shards — recovery is a local subtraction, cost is constant in
 //! fleet size.
+//!
+//! ## Quickstart (doctested)
+//!
+//! The flow documented in `examples/quickstart.rs`, here on the
+//! synthetic artifact set so `cargo test` runs it with no AOT build —
+//! deploy with a CDC parity device, kill a device, and the request
+//! survives with an *identical* answer:
+//!
+//! ```
+//! use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec};
+//! use cdc_dnn::fleet::FailurePlan;
+//! use cdc_dnn::testkit::synth;
+//!
+//! # fn main() -> cdc_dnn::Result<()> {
+//! let artifacts = synth::build(7)?;           // or `make artifacts` + "artifacts/"
+//! let mut cfg = SessionConfig::new(synth::MODEL);
+//! cfg.n_devices = 2;
+//! cfg.splits.insert("fc1".into(), SplitSpec::cdc(2));
+//! let mut session = Session::start(&artifacts.root, cfg)?;
+//!
+//! let x = cdc_dnn::Tensor::randn(vec![synth::FC1_K], &mut cdc_dnn::rng::Pcg32::seeded(1));
+//! let healthy = session.infer(&x)?;
+//! session.set_failure(1, FailurePlan::PermanentAt(0))?;   // device dies
+//! let recovered = session.infer(&x)?;
+//! assert!(recovered.any_recovery);
+//! // Recovery is a local subtraction — same prediction, no lost request.
+//! assert_eq!(healthy.output.argmax(), recovered.output.argmax());
+//! assert!(healthy.output.max_abs_diff(&recovered.output) < 1e-4);
+//! # Ok(()) }
+//! ```
+//!
+//! Pipelined serving (`examples/e2e_serving.rs`) drives a whole
+//! [`coordinator::Workload`] through the same session —
+//! `session.serve(&Workload::closed(inputs, 4))` — and the scenario
+//! engine ([`scenario`]) scripts time-varying fleet chaos on top; see
+//! `docs/EXPERIMENTS.md` for the full experiment book.
 
 pub mod cdc;
 pub mod coordinator;
@@ -26,6 +62,7 @@ pub mod partition;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod testkit;
 pub mod tensor;
 

@@ -14,6 +14,7 @@
 //!   fig17       coverage: 2MR vs CDC+2MR (Fig. 17)
 //!   fig18       multi-failure parity groups (Fig. 18)
 //!   calibrate   simulator-vs-paper anchor table
+//!   scenarios   fleet-chaos scenario suite (synthetic model, no artifacts)
 //!   serve       serve a deployment file (see --deployment)
 //!   all         every experiment in order
 //!
@@ -42,7 +43,7 @@ fn usage() -> ! {
 const HELP: &str = "cdc-dnn — robust distributed DNN inference with CDC\n\n\
 usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
        [--seed S] [--quick] [--deployment FILE]\n\n\
-commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          serve all\n";
+commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios serve all\n";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -110,6 +111,7 @@ fn main() {
         "fig18" => exp::fig18::run(&ctx).map(|_| ()),
         "calibrate" => exp::calibrate::run(&ctx),
         "ablate" => exp::ablate::run(&ctx),
+        "scenarios" => exp::scenarios::run(&ctx).map(|_| ()),
         "serve" => serve(&ctx, deployment.as_deref()),
         "all" => run_all(&ctx),
         _ => {
@@ -134,6 +136,7 @@ fn run_all(ctx: &ExpCtx) -> cdc_dnn::Result<()> {
     exp::fig17::run(ctx)?;
     exp::fig18::run(ctx)?;
     exp::ablate::run(ctx)?;
+    exp::scenarios::run(ctx)?;
     Ok(())
 }
 

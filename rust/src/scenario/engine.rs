@@ -1,0 +1,317 @@
+//! The scenario executor: segments a script at its event boundaries,
+//! serves the inter-event arrivals through the pipelined engine, and
+//! applies each event to the live fleet (re-deploying through the
+//! `partition` planner on churn). See the module docs and DESIGN.md §9
+//! for the event-ordering rules.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::coordinator::{Session, SessionConfig, SplitSpec, Workload};
+use crate::error::{Error, Result};
+use crate::fleet::FailurePlan;
+use crate::rng::Pcg32;
+use crate::runtime::manifest::{Manifest, ModelManifest};
+use crate::tensor::Tensor;
+
+use super::{Action, Scenario, ScenarioReport, SegmentReport};
+
+/// Drives [`Scenario`] scripts over a live [`Session`].
+///
+/// The engine owns the session plus the deployment *template* it was
+/// built from; churn events rebuild the session from the template with
+/// split degrees re-clamped to what the manifest and the new fleet size
+/// support (the re-partitioning path — `partition::LayerPlan` — is the
+/// same one `Session::start` always uses).
+pub struct ScenarioEngine {
+    artifacts: PathBuf,
+    model: ModelManifest,
+    /// Deployment template; `n_devices` and `net` track the live fleet.
+    template: SessionConfig,
+    /// Desired split degrees — the ceiling churn re-partitions toward.
+    target_splits: BTreeMap<String, SplitSpec>,
+    session: Session,
+    input_shape: Vec<usize>,
+}
+
+/// Template + fleet size → a deployable config: every target split is
+/// clamped to the largest manifest-available degree that fits both the
+/// target and the fleet.
+fn effective_cfg(
+    model: &ModelManifest,
+    template: &SessionConfig,
+    target_splits: &BTreeMap<String, SplitSpec>,
+    n_devices: usize,
+) -> Result<SessionConfig> {
+    let mut cfg = template.clone();
+    cfg.n_devices = n_devices;
+    cfg.splits.clear();
+    for (name, spec) in target_splits {
+        let layer = model
+            .layers
+            .iter()
+            .find(|l| l.name == *name)
+            .ok_or_else(|| Error::Config(format!("no layer {name} in model")))?;
+        let cap = spec.d.min(n_devices);
+        let d = layer
+            .splits
+            .keys()
+            .copied()
+            .filter(|&d| d <= cap)
+            .max()
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "layer {name} has no split degree ≤ {cap} (available: {:?})",
+                    layer.splits.keys().collect::<Vec<_>>()
+                ))
+            })?;
+        cfg.splits
+            .insert(name.clone(), SplitSpec { d, redundancy: spec.redundancy });
+    }
+    Ok(cfg)
+}
+
+impl ScenarioEngine {
+    /// Deploy `cfg` over the artifact set at `artifacts` and wrap it for
+    /// scenario execution. `cfg.splits` records the *target* degrees that
+    /// churn events re-partition toward.
+    pub fn new(artifacts: impl Into<PathBuf>, cfg: SessionConfig) -> Result<ScenarioEngine> {
+        let artifacts = artifacts.into();
+        let manifest = Manifest::load(&artifacts)?;
+        let model = manifest.model(&cfg.model)?.clone();
+        let target_splits = cfg.splits.clone();
+        let template = cfg;
+        let deploy = effective_cfg(&model, &template, &target_splits, template.n_devices)?;
+        let session = Session::start(&artifacts, deploy)?;
+        let input_shape = model.input_shape.clone();
+        Ok(ScenarioEngine {
+            artifacts,
+            model,
+            template,
+            target_splits,
+            session,
+            input_shape,
+        })
+    }
+
+    /// The live serving session.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Current number of data devices (redundancy devices come on top).
+    pub fn fleet_size(&self) -> usize {
+        self.template.n_devices
+    }
+
+    /// Execute one scenario to quiescence and return the merged report.
+    ///
+    /// Event ordering (DESIGN.md §9): events apply in `at_ms` order (ties
+    /// broken by script order); each inter-event segment's arrivals are
+    /// generated from the scenario seed and served until every request
+    /// resolves *before* the next event applies — an event therefore
+    /// never interrupts a request mid-stage, it changes the regime for
+    /// the requests that arrive after it. When a segment drains *past*
+    /// the next scheduled boundary, the following segment starts at the
+    /// drain instant (the event's effective application point is the
+    /// earliest quiescent instant ≥ its scheduled time), so segment
+    /// timelines never overlap and `ScenarioReport::rps` is measured
+    /// against the true serialized span.
+    pub fn run(&mut self, sc: &Scenario) -> Result<ScenarioReport> {
+        let mut order: Vec<usize> = (0..sc.events.len()).collect();
+        order.sort_by(|&a, &b| {
+            sc.events[a]
+                .at_ms
+                .partial_cmp(&sc.events[b].at_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+
+        let mut report = ScenarioReport {
+            scenario: sc.name.clone(),
+            completed: 0,
+            failed: 0,
+            recovered: 0,
+            dropped: 0,
+            latency: crate::metrics::Series::new(),
+            makespan_ms: 0.0,
+            segments: Vec::new(),
+            rebuilds: 0,
+            policy: None,
+        };
+        // Apply the scenario's declared starting regime to the live
+        // fleet (a no-op when the deployment template already matches,
+        // as `exp::scenarios::arm_cfg` arranges). Stage `expected_ms`
+        // estimates keep their deployment-time values — the adaptive
+        // policy absorbs the drift (DESIGN.md §9).
+        self.template.net = sc.initial_net.config();
+        self.session.set_net(sc.initial_net.config())?;
+        if let Some(r) = sc.device_rate {
+            self.template.device_rate = r;
+            for d in 0..self.session.total_devices() {
+                self.session.set_device_rate(d, r)?;
+            }
+        }
+
+        let mut rng = Pcg32::new(sc.seed, 0x5ce0);
+        let mut rate = sc.base_rate_rps;
+        let mut burst = 0usize;
+        // Scheduled boundary (drives arrival-span generation) vs the
+        // effective timeline instant (pushed forward when a segment
+        // drains past its boundary — segments never overlap).
+        let mut t0 = 0.0f64;
+        let mut drain = 0.0f64;
+
+        for &ei in &order {
+            let ev = &sc.events[ei];
+            let t1 = ev.at_ms.clamp(t0, sc.duration_ms);
+            drain = self.run_segment(
+                &mut report,
+                &mut rng,
+                t0.max(drain),
+                t1 - t0,
+                rate,
+                std::mem::take(&mut burst),
+                Some(ev.action.label()),
+            )?;
+            self.apply(&ev.action, &mut rate, &mut burst, &mut report)?;
+            t0 = t1;
+        }
+        // Final segment: from the last event to the horizon.
+        self.run_segment(
+            &mut report,
+            &mut rng,
+            t0.max(drain),
+            sc.duration_ms - t0,
+            rate,
+            std::mem::take(&mut burst),
+            None,
+        )?;
+        report.policy = self.session.policy_snapshot();
+        Ok(report)
+    }
+
+    /// Serve one inter-event segment: `span` ms of arrivals, admitted on
+    /// the scenario timeline starting at the effective instant `t0`.
+    /// Returns the instant the segment drained (`t0` if it was empty).
+    #[allow(clippy::too_many_arguments)]
+    fn run_segment(
+        &mut self,
+        report: &mut ScenarioReport,
+        rng: &mut Pcg32,
+        t0: f64,
+        span: f64,
+        rate_rps: f64,
+        burst: usize,
+        event: Option<String>,
+    ) -> Result<f64> {
+        let span = span.max(0.0);
+        // Burst arrivals land at the segment's first instant; the Poisson
+        // stream fills the rest of the span at the current rate.
+        let mut at: Vec<f64> = vec![0.0; burst];
+        if rate_rps > 0.0 && span > 0.0 {
+            let per_ms = rate_rps / 1000.0;
+            let mut t = rng.exponential(per_ms);
+            while t < span {
+                at.push(t);
+                t += rng.exponential(per_ms);
+            }
+        }
+        at.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let arrivals = at.len();
+        let mut seg = SegmentReport {
+            t_start_ms: t0,
+            arrivals,
+            completed: 0,
+            failed: 0,
+            recovered: 0,
+            dropped: 0,
+            p99_ms: 0.0,
+            event,
+        };
+        let mut drained = t0;
+        if arrivals > 0 {
+            let inputs: Vec<Tensor> = (0..arrivals)
+                .map(|_| Tensor::randn(self.input_shape.clone(), rng))
+                .collect();
+            let r = self.session.serve(&Workload::explicit(inputs, at))?;
+            seg.completed = r.throughput.completed;
+            seg.failed = r.throughput.failed;
+            seg.recovered = r.throughput.recovered;
+            seg.dropped = r.dropped;
+            seg.p99_ms = r.latency.summary().p99;
+            report.completed += r.throughput.completed;
+            report.failed += r.throughput.failed;
+            report.recovered += r.throughput.recovered;
+            report.dropped += r.dropped;
+            for &s in r.latency.samples() {
+                report.latency.record(s);
+            }
+            drained = t0 + r.makespan_ms;
+            report.makespan_ms = report.makespan_ms.max(drained);
+        }
+        report.segments.push(seg);
+        Ok(drained)
+    }
+
+    /// Apply one event to the live fleet/workload state.
+    fn apply(
+        &mut self,
+        action: &Action,
+        rate: &mut f64,
+        burst: &mut usize,
+        report: &mut ScenarioReport,
+    ) -> Result<()> {
+        match action {
+            Action::Crash { device } => {
+                self.session.set_failure(*device, FailurePlan::PermanentAt(0))
+            }
+            Action::Recover { device } => {
+                self.session.set_failure(*device, FailurePlan::None)
+            }
+            Action::Flaky { device, p } => {
+                self.session.set_failure(*device, FailurePlan::Intermittent(*p))
+            }
+            Action::Net { profile } => {
+                self.template.net = profile.config();
+                self.session.set_net(profile.config())
+            }
+            Action::Slowdown { device, factor } => {
+                let slowed = self.template.device_rate * factor;
+                self.session.set_device_rate(*device, slowed)
+            }
+            Action::Rate { rps } => {
+                *rate = *rps;
+                Ok(())
+            }
+            Action::Burst { n } => {
+                *burst += n;
+                Ok(())
+            }
+            Action::Join { n } => self.rebuild(self.template.n_devices + n, report),
+            Action::Leave { n } => {
+                let cur = self.template.n_devices;
+                if *n >= cur {
+                    return Err(Error::Config(format!(
+                        "cannot shrink a {cur}-device fleet by {n}"
+                    )));
+                }
+                self.rebuild(cur - n, report)
+            }
+        }
+    }
+
+    /// Churn re-deployment: re-partition every split layer for the new
+    /// fleet size and start a fresh session from the template. Transient
+    /// fleet state (failure plans, slowdowns, adaptive-policy windows)
+    /// resets — a re-provisioned fleet starts clean; the WLAN regime is
+    /// part of the template and survives.
+    fn rebuild(&mut self, n_devices: usize, report: &mut ScenarioReport) -> Result<()> {
+        // Explicit placements are only meaningful for the original fleet.
+        self.template.placement.clear();
+        self.template.n_devices = n_devices;
+        let cfg = effective_cfg(&self.model, &self.template, &self.target_splits, n_devices)?;
+        self.session = Session::start(&self.artifacts, cfg)?;
+        report.rebuilds += 1;
+        Ok(())
+    }
+}

@@ -1,0 +1,310 @@
+//! Deterministic virtual-time **scenario engine** for fleet chaos
+//! (DESIGN.md §9).
+//!
+//! The paper's headline claim — close-to-zero recovery latency under the
+//! *common* IoT failure modes — only means something when those modes are
+//! exercised as *time-varying* regimes, not a fixed `FailurePlan` per
+//! run: devices crash and come back, fleets churn, WLANs congest and
+//! clear, heterogeneous devices straggle, and traffic arrives in bursts.
+//! A [`Scenario`] scripts exactly that: a list of timed [`Event`]s over a
+//! virtual-time horizon, plus the arrival process that feeds the
+//! pipelined serving engine (`coordinator::serve`) between them.
+//!
+//! The [`engine::ScenarioEngine`] executes the script **segment by
+//! segment**: arrivals between two consecutive events are generated from
+//! the scenario seed (Poisson at the current rate, plus any pending burst
+//! spike at the segment start), served to quiescence through
+//! `Session::serve` with explicit arrival instants, and then the
+//! segment-ending event is applied to the fleet. Everything is seeded —
+//! the same scenario replays bit-for-bit (asserted by the integration
+//! tests).
+//!
+//! Churn events (`Join`/`Leave`) re-partition the deployment through the
+//! existing `partition` planner: split degrees are re-clamped to the
+//! largest manifest-available degree that fits the new fleet and the
+//! model is re-deployed. See DESIGN.md §9 for the exact event-ordering
+//! rules.
+//!
+//! ```
+//! use cdc_dnn::exp::scenarios::{arm_cfg, steady, Arm};
+//! use cdc_dnn::scenario::ScenarioEngine;
+//! use cdc_dnn::testkit::synth;
+//!
+//! # fn main() -> cdc_dnn::Result<()> {
+//! let artifacts = synth::build(7)?;
+//! let sc = steady(7).scaled(0.25); // short steady run
+//! let mut engine = ScenarioEngine::new(&artifacts.root, arm_cfg(&sc, Arm::Cdc))?;
+//! let report = engine.run(&sc)?;
+//! assert_eq!(report.failed, 0, "coded serving never loses a request");
+//! # Ok(()) }
+//! ```
+#![deny(missing_docs)]
+
+pub mod engine;
+
+use crate::fleet::NetConfig;
+use crate::metrics::Series;
+
+pub use engine::ScenarioEngine;
+
+/// A WLAN regime tag, mapping onto the calibrated [`NetConfig`] presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetProfile {
+    /// Zero-delay network — isolates compute effects.
+    Ideal,
+    /// The case-study testbed: mostly-fast local WLAN.
+    Moderate,
+    /// Fig. 1's congested worst case (the default profile).
+    Congested,
+}
+
+impl NetProfile {
+    /// The concrete network model for this regime.
+    pub fn config(&self) -> NetConfig {
+        match self {
+            NetProfile::Ideal => NetConfig::ideal(),
+            NetProfile::Moderate => NetConfig::moderate(),
+            NetProfile::Congested => NetConfig::congested(),
+        }
+    }
+
+    /// Human-readable tag.
+    pub fn label(&self) -> &'static str {
+        match self {
+            NetProfile::Ideal => "ideal",
+            NetProfile::Moderate => "moderate",
+            NetProfile::Congested => "congested",
+        }
+    }
+}
+
+/// A fleet/workload mutation the engine can inject at a virtual instant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// The device dies permanently (until a `Recover`).
+    Crash {
+        /// Device index (data or redundancy device).
+        device: usize,
+    },
+    /// A previously crashed/flaky device returns healthy.
+    Recover {
+        /// Device index.
+        device: usize,
+    },
+    /// The device drops each reply independently with probability `p`.
+    Flaky {
+        /// Device index.
+        device: usize,
+        /// Per-reply drop probability.
+        p: f64,
+    },
+    /// Churn: `n` devices join the fleet; split layers re-partition up to
+    /// their target degree and the model is re-deployed.
+    Join {
+        /// Devices joining.
+        n: usize,
+    },
+    /// Churn: `n` devices leave the fleet; split layers re-partition down
+    /// to the largest degree the shrunken fleet supports.
+    Leave {
+        /// Devices leaving.
+        n: usize,
+    },
+    /// Swap the fleet-wide WLAN regime.
+    Net {
+        /// The new regime.
+        profile: NetProfile,
+    },
+    /// Scale one device's compute rate (0.5 ≈ an RPi3 in an RPi4 fleet).
+    Slowdown {
+        /// Device index.
+        device: usize,
+        /// Multiplier on the scenario's base device rate.
+        factor: f64,
+    },
+    /// Change the open-loop arrival rate for subsequent segments.
+    Rate {
+        /// New arrival rate (requests/second).
+        rps: f64,
+    },
+    /// Burst spike: `n` extra requests arrive at this instant, on top of
+    /// the Poisson stream.
+    Burst {
+        /// Burst size (requests).
+        n: usize,
+    },
+}
+
+impl Action {
+    /// Short label for tables and segment traces.
+    pub fn label(&self) -> String {
+        match self {
+            Action::Crash { device } => format!("crash(d{device})"),
+            Action::Recover { device } => format!("recover(d{device})"),
+            Action::Flaky { device, p } => format!("flaky(d{device},p={p})"),
+            Action::Join { n } => format!("join({n})"),
+            Action::Leave { n } => format!("leave({n})"),
+            Action::Net { profile } => format!("net({})", profile.label()),
+            Action::Slowdown { device, factor } => {
+                format!("slowdown(d{device},x{factor})")
+            }
+            Action::Rate { rps } => format!("rate({rps}rps)"),
+            Action::Burst { n } => format!("burst({n})"),
+        }
+    }
+}
+
+/// One timed event of a scenario script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Virtual instant (ms from scenario start) the event applies at.
+    pub at_ms: f64,
+    /// What happens.
+    pub action: Action,
+}
+
+/// A scripted, fully-seeded fleet-chaos scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (the catalog's key).
+    pub name: String,
+    /// Virtual-time horizon over which arrivals are generated (ms);
+    /// serving runs past it until the last request drains.
+    pub duration_ms: f64,
+    /// Initial open-loop arrival rate (requests/second).
+    pub base_rate_rps: f64,
+    /// Seed for arrival times and request inputs.
+    pub seed: u64,
+    /// Timed events, applied in `at_ms` order (ties: script order).
+    pub events: Vec<Event>,
+    /// WLAN regime the fleet starts in.
+    pub initial_net: NetProfile,
+    /// Override of the per-device compute rate (MACs/ms) — `None` keeps
+    /// the session default. Heterogeneity scenarios slow compute down so
+    /// rate factors matter relative to the network.
+    pub device_rate: Option<f64>,
+}
+
+impl Scenario {
+    /// A scenario with no events (extend with [`Scenario::at`]).
+    pub fn new(name: &str, duration_ms: f64, base_rate_rps: f64, seed: u64) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            duration_ms,
+            base_rate_rps,
+            seed,
+            events: Vec::new(),
+            initial_net: NetProfile::Moderate,
+            device_rate: None,
+        }
+    }
+
+    /// Append a timed event (builder style).
+    pub fn at(mut self, at_ms: f64, action: Action) -> Scenario {
+        self.events.push(Event { at_ms, action });
+        self
+    }
+
+    /// Set the initial WLAN regime (builder style).
+    pub fn with_net(mut self, profile: NetProfile) -> Scenario {
+        self.initial_net = profile;
+        self
+    }
+
+    /// Override the per-device compute rate (builder style).
+    pub fn with_device_rate(mut self, macs_per_ms: f64) -> Scenario {
+        self.device_rate = Some(macs_per_ms);
+        self
+    }
+
+    /// Scale the horizon and every event time by `f` (quick/smoke runs).
+    pub fn scaled(mut self, f: f64) -> Scenario {
+        self.duration_ms *= f;
+        for e in &mut self.events {
+            e.at_ms *= f;
+        }
+        self
+    }
+}
+
+/// Per-segment summary of a scenario run (one segment per inter-event
+/// span).
+#[derive(Debug, Clone)]
+pub struct SegmentReport {
+    /// Effective segment start on the scenario timeline (ms) — pushed
+    /// past the scheduled event boundary when the previous segment
+    /// drained late (segments never overlap).
+    pub t_start_ms: f64,
+    /// Requests that arrived in the segment.
+    pub arrivals: usize,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests lost (unrecoverable shard loss).
+    pub failed: u64,
+    /// Requests that used CDC/replica recovery.
+    pub recovered: u64,
+    /// Arrivals balked by an admission cap.
+    pub dropped: u64,
+    /// p99 end-to-end latency within the segment (ms; 0 if empty).
+    pub p99_ms: f64,
+    /// Label of the event applied at the segment's end (None for the
+    /// final segment).
+    pub event: Option<String>,
+}
+
+/// Everything a scenario run measured, merged across segments.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Requests completed across all segments.
+    pub completed: u64,
+    /// Requests lost across all segments.
+    pub failed: u64,
+    /// Requests recovered via parity/replica substitution.
+    pub recovered: u64,
+    /// Arrivals balked by an admission cap.
+    pub dropped: u64,
+    /// End-to-end latency of every completed request (ms).
+    pub latency: Series,
+    /// Scenario-timeline instant the last request drained (ms).
+    pub makespan_ms: f64,
+    /// Per-segment summaries, in order.
+    pub segments: Vec<SegmentReport>,
+    /// Fleet re-deployments triggered by churn events.
+    pub rebuilds: usize,
+    /// Adaptive-policy snapshot at the end of the run (None when the
+    /// session runs the static straggler gate).
+    pub policy: Option<crate::coordinator::PolicyReport>,
+}
+
+impl ScenarioReport {
+    /// Steady-state throughput over the whole run (requests/second of
+    /// virtual time).
+    pub fn rps(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.makespan_ms / 1000.0)
+        }
+    }
+
+    /// One-line summary for experiment logs.
+    pub fn line(&self) -> String {
+        let s = self.latency.summary();
+        format!(
+            "{}: served={} failed={} recovered={} dropped={} rps={:.1} \
+             p50={:.1}ms p99={:.1}ms makespan={:.0}ms rebuilds={}",
+            self.scenario,
+            self.completed,
+            self.failed,
+            self.recovered,
+            self.dropped,
+            self.rps(),
+            s.p50,
+            s.p99,
+            self.makespan_ms,
+            self.rebuilds,
+        )
+    }
+}

@@ -1,0 +1,78 @@
+//! Smoke twins of the documented examples (`examples/quickstart.rs`,
+//! `examples/e2e_serving.rs`): the same API flow each example header
+//! documents, run here on the synthetic artifact set so CI exercises it
+//! on every `cargo test` with no `make artifacts` step — the documented
+//! flows can never rot. (The crate-level rustdoc carries a doctested
+//! copy of the quickstart as well; the real examples additionally
+//! compile on every test run via Cargo's example targets.)
+
+use cdc_dnn::coordinator::{Pipeline, Session, SessionConfig, SplitSpec, Workload};
+use cdc_dnn::fleet::{FailurePlan, NetConfig};
+use cdc_dnn::model::load_eval_set;
+use cdc_dnn::runtime::Manifest;
+use cdc_dnn::testkit::synth;
+
+/// `examples/quickstart.rs` flow: deploy with a CDC parity device, run an
+/// inference, kill a device, and watch the request survive with an
+/// *identical* answer.
+#[test]
+fn quickstart_flow_survives_device_loss() {
+    let artifacts = synth::build(90).unwrap();
+
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::moderate();
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    cfg.placement.insert("fc2".into(), vec![0]);
+    let mut session = Session::start(&artifacts.root, cfg).unwrap();
+    assert_eq!(session.total_devices(), 5, "4 data + 1 parity");
+
+    let manifest = Manifest::load(&artifacts.root).unwrap();
+    let (images, _labels) = load_eval_set(&manifest).unwrap();
+    let healthy = session.infer(&images[0]).unwrap();
+
+    session.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+    let recovered = session.infer(&images[0]).unwrap();
+    assert!(recovered.any_recovery, "parity must substitute");
+    assert_eq!(
+        healthy.output.argmax(),
+        recovered.output.argmax(),
+        "recovery must not change the answer"
+    );
+}
+
+/// `examples/e2e_serving.rs` flow: serve the whole eval set through the
+/// pipelined engine with a failing device — no lost requests, recoveries
+/// observed, multiple requests in flight.
+#[test]
+fn e2e_serving_flow_pipelines_with_recovery() {
+    let artifacts = synth::build(91).unwrap();
+
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::moderate();
+    cfg.threshold_factor = 1.5;
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    cfg.placement.insert("fc2".into(), vec![2, 3]);
+    let mut session = Session::start(&artifacts.root, cfg).unwrap();
+
+    session.set_failure(3, FailurePlan::PermanentAt(0)).unwrap();
+
+    let manifest = Manifest::load(&artifacts.root).unwrap();
+    let (images, _labels) = load_eval_set(&manifest).unwrap();
+    let n = images.len();
+    let workload = Workload::closed(images, session.saturating_concurrency());
+    let report = Pipeline::new(&mut session).run(&workload).unwrap();
+
+    assert_eq!(report.failures.len(), 0, "CDC system must not lose requests");
+    assert_eq!(report.throughput.completed as usize, n);
+    assert!(report.throughput.recovered > 0, "failure must exercise recovery");
+    assert!(
+        report.max_concurrent_requests >= 2,
+        "pipeline must keep multiple requests in flight: {}",
+        report.line()
+    );
+}

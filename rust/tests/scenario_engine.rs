@@ -1,0 +1,154 @@
+//! Integration tests for the scenario engine (DESIGN.md §9), runnable
+//! with NO python-built artifacts: every named chaos scenario runs over
+//! the synthetic `testkit::synth` model across the redundancy arms, and
+//! the paper's core serving invariant is asserted for each —
+//!
+//! * **coded serving never loses a request**, whatever the script throws
+//!   at the fleet (staggered crashes, churn re-partitioning, WLAN regime
+//!   swaps, persistent stragglers, arrival bursts);
+//! * **p99 degrades gracefully**: bounded within a constant factor of
+//!   the no-redundancy baseline's p99 over the *same* script.
+
+use cdc_dnn::exp::scenarios::{
+    arm_cfg, catalog, churn, crash_storm, hetero_fleet, steady, Arm,
+};
+use cdc_dnn::scenario::ScenarioEngine;
+use cdc_dnn::testkit::synth;
+
+/// The tentpole invariant, across every named scenario.
+#[test]
+fn scenario_suite_cdc_never_loses_and_p99_stays_bounded() {
+    let arts = synth::build(77).unwrap();
+    for sc in catalog(2021) {
+        let mut base_engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::None)).unwrap();
+        let base = base_engine.run(&sc).unwrap();
+        let mut cdc_engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Cdc)).unwrap();
+        let cdc = cdc_engine.run(&sc).unwrap();
+
+        assert!(cdc.completed > 0, "{}: empty run", sc.name);
+        assert_eq!(
+            cdc.failed, 0,
+            "{}: CDC lost requests — {}",
+            sc.name,
+            cdc.line()
+        );
+        // Every arrival is accounted for: completed + failed == arrivals.
+        let arrivals: usize = cdc.segments.iter().map(|s| s.arrivals).sum();
+        assert_eq!(cdc.completed as usize, arrivals, "{}", sc.name);
+
+        // Graceful degradation: CDC's p99 stays within a constant factor
+        // of the no-redundancy baseline's p99 over the same script. (The
+        // baseline's p99 covers only the requests it managed to serve —
+        // under crash windows it silently sheds the hard ones, so the
+        // bound is deliberately generous.)
+        let b99 = base.latency.summary().p99;
+        let c99 = cdc.latency.summary().p99;
+        assert!(
+            c99 <= 10.0 * b99 + 500.0,
+            "{}: CDC p99 {c99:.1}ms vs baseline p99 {b99:.1}ms — not bounded",
+            sc.name
+        );
+    }
+}
+
+/// Replication (2MR) also masks the crash storm — at twice the hardware.
+#[test]
+fn scenario_replication_arm_survives_crash_storm() {
+    let arts = synth::build(78).unwrap();
+    let sc = crash_storm(31);
+    let mut engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Replication)).unwrap();
+    let rep = engine.run(&sc).unwrap();
+    assert_eq!(rep.failed, 0, "2MR lost requests: {}", rep.line());
+    assert!(rep.completed > 0);
+    // The no-redundancy arm, by contrast, must lose requests while a
+    // device is down — that contrast *is* the case-study story.
+    let mut none_engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::None)).unwrap();
+    let none = none_engine.run(&sc).unwrap();
+    assert!(
+        none.failed > 0,
+        "crash-storm without redundancy should lose requests: {}",
+        none.line()
+    );
+}
+
+/// A scenario is a pure function of its script and seed.
+#[test]
+fn scenario_runs_are_deterministic() {
+    let arts = synth::build(79).unwrap();
+    let sc = crash_storm(55);
+    let run = || {
+        ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Cdc))
+            .unwrap()
+            .run(&sc)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.failed, b.failed);
+    assert_eq!(a.recovered, b.recovered);
+    assert_eq!(a.latency.samples(), b.latency.samples());
+    assert_eq!(a.makespan_ms, b.makespan_ms);
+    assert_eq!(a.segments.len(), b.segments.len());
+    for (sa, sb) in a.segments.iter().zip(&b.segments) {
+        assert_eq!(sa.arrivals, sb.arrivals);
+        assert_eq!(sa.completed, sb.completed);
+        assert_eq!(sa.p99_ms, sb.p99_ms);
+    }
+}
+
+/// Churn re-partitions through the partition planner and recovers the
+/// original degree when the fleet grows back.
+#[test]
+fn scenario_churn_repartitions_and_rejoins() {
+    let arts = synth::build(80).unwrap();
+    let sc = churn(13);
+    let mut engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Cdc)).unwrap();
+    assert_eq!(engine.fleet_size(), 4);
+    let report = engine.run(&sc).unwrap();
+    assert_eq!(report.rebuilds, 2, "leave + join = two re-deployments");
+    assert_eq!(engine.fleet_size(), 4, "fleet grew back");
+    assert_eq!(report.failed, 0, "churn must not lose requests: {}", report.line());
+    // After the run the live session is back at the target degrees.
+    let plans = engine.session().layer_plans();
+    assert_eq!(plans[0].1.d, 4, "fc1 re-partitioned back to d=4");
+    assert_eq!(plans[1].1.d, 2, "fc2 back at d=2");
+}
+
+/// Slowdown events reach both the device threads and the coordinator's
+/// rate-ledger mirror, starting from the scenario's declared base rate.
+#[test]
+fn scenario_slowdown_updates_rate_mirror() {
+    let arts = synth::build(82).unwrap();
+    let sc = hetero_fleet(19);
+    let mut engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Cdc)).unwrap();
+    let report = engine.run(&sc).unwrap();
+    assert_eq!(report.failed, 0, "{}", report.line());
+    assert_eq!(engine.session().config().n_devices, 4);
+    let rates = engine.session().device_rates();
+    assert!((rates[1] - 3.0 * 0.4).abs() < 1e-12, "device 1 slowed: {rates:?}");
+    assert!((rates[3] - 3.0 * 0.25).abs() < 1e-12, "device 3 slowed: {rates:?}");
+    assert!((rates[0] - 3.0).abs() < 1e-12, "device 0 at the scenario base rate");
+}
+
+/// The adaptive policy surfaces its state on the CDC arm: the gate is
+/// tuned within its clamp range and the trade-off fields are populated.
+#[test]
+fn scenario_adaptive_policy_reports_state() {
+    let arts = synth::build(81).unwrap();
+    let sc = steady(17);
+    let mut engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::Cdc)).unwrap();
+    let report = engine.run(&sc).unwrap();
+    let p = report.policy.expect("CDC arm runs the adaptive policy");
+    assert!(p.observed > 0, "policy observed no completions");
+    assert!(
+        (1.2..=8.0).contains(&p.threshold_factor),
+        "tuned gate {} outside clamp range",
+        p.threshold_factor
+    );
+    assert!(!p.device_windows.is_empty());
+    assert!(p.device_windows.iter().any(|w| !w.is_empty()));
+    // Static arms carry no policy snapshot.
+    let mut none_engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::None)).unwrap();
+    assert!(none_engine.run(&sc).unwrap().policy.is_none());
+}
