@@ -5,7 +5,8 @@
 ARTIFACTS ?= rust/artifacts
 
 .PHONY: artifacts build test bench bench-gemm bench-gemm-smoke \
-        bench-scenarios bench-scenarios-smoke doc fmt clippy
+        bench-scenarios bench-scenarios-smoke bench-batching \
+        bench-batching-smoke doc fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -37,6 +38,16 @@ bench-scenarios:
 bench-scenarios-smoke:
 	SCENARIO_BENCH_SMOKE=1 cargo bench --bench scenario_suite
 
+# Cross-request micro-batching sweep (DESIGN.md §10): writes the
+# BENCH_batching.json baseline (rps per batch width x arrival rate over
+# the steady scenario) and fails if batch_max=4 stops beating the
+# unbatched engine.
+bench-batching:
+	cargo bench --bench batching
+
+bench-batching-smoke:
+	BATCHING_BENCH_SMOKE=1 cargo bench --bench batching
+
 # Rustdoc for the whole crate; CI runs this with -D warnings.
 doc:
 	cargo doc --no-deps
@@ -45,4 +56,4 @@ fmt:
 	cargo fmt --check
 
 clippy:
-	cargo clippy -- -D warnings
+	cargo clippy --all-targets -- -D warnings

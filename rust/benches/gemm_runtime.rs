@@ -158,6 +158,17 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
                  ({gn:.2} GF/s) on the 256^3 multiply"
             );
         }
+        // Perf-trajectory guard (CI): GFLOP/s on the acceptance shape vs
+        // the committed seed. Wall-clock metrics vary by host, so the
+        // seed is promoted from the same CI runner class's artifacts.
+        cdc_dnn::bench::guard_baseline(
+            "gemm",
+            &[
+                ("gemm256_tiled_gflops".to_string(), gt),
+                ("gemm256_threaded_gflops".to_string(), gth),
+                ("gemm256_tiled_speedup".to_string(), gt / gn),
+            ],
+        );
     }
 }
 

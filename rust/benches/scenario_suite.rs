@@ -43,11 +43,14 @@ fn main() {
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
 
     let mut rows = Vec::new();
+    let mut headline: Vec<(String, f64)> = Vec::new();
+    let mode = if smoke { "smoke" } else { "full" };
     for p in &points {
-        if p.arm == Arm::Cdc {
+        if p.arm.is_cdc() {
             assert_eq!(
                 p.report.failed, 0,
-                "CDC arm lost requests in {}: {}",
+                "{} arm lost requests in {}: {}",
+                p.arm.label(),
                 p.scenario,
                 p.report.line()
             );
@@ -64,7 +67,18 @@ fn main() {
             ("p99_ms", Value::Num(s.p99)),
             ("makespan_ms", Value::Num(p.report.makespan_ms)),
             ("rebuilds", Value::Num(p.report.rebuilds as f64)),
+            ("max_batch", Value::Num(p.report.max_batch as f64)),
         ]));
+        // CDC-arm rps per scenario is the robustness-throughput
+        // trajectory the baseline guard tracks (virtual time:
+        // deterministic in the seed, but horizon-scaled in smoke mode —
+        // the keys carry the mode so seeds compare like-for-like).
+        if p.arm.is_cdc() {
+            headline.push((
+                format!("{mode}_{}_{}_rps", p.scenario, p.arm.label()),
+                p.report.rps(),
+            ));
+        }
     }
 
     let doc = obj(vec![
@@ -77,4 +91,5 @@ fn main() {
     let out = bench_out_path();
     std::fs::write(&out, doc.to_string_pretty()).expect("write BENCH_scenarios.json");
     println!("[result] wrote {}", out.display());
+    cdc_dnn::bench::guard_baseline("scenarios", &headline);
 }

@@ -46,6 +46,7 @@ fn main() {
     let workload = Workload::closed(inputs, CONCURRENCY);
 
     let mut results = Vec::new();
+    let mut headline: Vec<(String, f64)> = Vec::new();
     for cdc in [false, true] {
         let mut s = session(&synth.root, cdc);
         let label = if cdc { "cdc" } else { "plain" };
@@ -64,6 +65,7 @@ fn main() {
         });
         let per_request_us = summary.mean * 1000.0 / REQUESTS as f64;
         let wall_rps = REQUESTS as f64 / (summary.mean / 1000.0);
+        headline.push((format!("wall_rps_{label}"), wall_rps));
         println!(
             "  scheduler overhead: {per_request_us:.1} µs/request \
              ({wall_rps:.0} req/s wall-clock)"
@@ -89,4 +91,7 @@ fn main() {
     let path = "results/bench_serving_throughput.json";
     std::fs::write(path, doc.to_string_pretty()).expect("write baseline");
     println!("[result] wrote {path}");
+    // Perf-trajectory guard (CI): wall-clock scheduler throughput vs the
+    // committed seed (promoted from the same CI runner class).
+    cdc_dnn::bench::guard_baseline("serving", &headline);
 }

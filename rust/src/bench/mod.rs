@@ -4,10 +4,96 @@
 //! hot paths (PJRT dispatch, CDC decode, merge) and the experiment drivers
 //! reuse [`Timer`] for coarse phase timing. Reports mean/p50/p95/p99 over
 //! a warmed-up sample set, criterion-style.
+//!
+//! [`guard_baseline`] is the CI perf-trajectory gate: every bench hands
+//! it its headline bigger-is-better metrics (rps, GFLOP/s), and it
+//! compares them against the committed seed under `rust/baselines/` —
+//! failing the run on a > [`BASELINE_TOLERANCE`] regression when
+//! `BENCH_BASELINE_ENFORCE` is set.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::json::{obj, Value};
 use crate::metrics::Summary;
+
+/// Allowed fractional regression vs the committed baseline before the
+/// guard fails the run (0.15 = a metric may drop to 85% of its seed).
+pub const BASELINE_TOLERANCE: f64 = 0.15;
+
+/// Path of the committed baseline seed for bench `name`
+/// (`rust/baselines/BENCH_<name>.json`, resolved from the crate root so
+/// benches can run from any cwd).
+pub fn baseline_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("baselines")
+        .join(format!("BENCH_{name}.json"))
+}
+
+/// Perf-trajectory guard (CI: the bench matrix runs every bench with
+/// `BENCH_BASELINE_ENFORCE=1`). `fresh` are this run's headline metrics,
+/// bigger-is-better (rps, GFLOP/s). Each is compared to the same key in
+/// the committed seed's `"metrics"` object:
+///
+/// * metric present in the baseline and fresh < (1 − tolerance) ×
+///   baseline → regression; panics when `BENCH_BASELINE_ENFORCE` is set,
+///   warns otherwise;
+/// * metric absent from the baseline → bootstrap mode: the value is
+///   printed in promotable JSON form and skipped (seeds are committed
+///   empty and promoted from CI artifact uploads, so the guard never
+///   fails on numbers nobody measured).
+pub fn guard_baseline(name: &str, fresh: &[(String, f64)]) {
+    let enforce = std::env::var("BENCH_BASELINE_ENFORCE").is_ok();
+    let path = baseline_path(name);
+    let text = std::fs::read_to_string(&path).ok();
+    let baseline = text.and_then(|s| Value::parse(&s).ok());
+    let mut fresh_map = std::collections::BTreeMap::new();
+    for (k, v) in fresh {
+        fresh_map.insert(k.clone(), Value::Num(*v));
+    }
+    let metrics_json = obj(vec![("metrics", Value::Obj(fresh_map))]);
+    println!(
+        "[baseline] {name}: fresh headline metrics (promote into {}):\n{}",
+        path.display(),
+        metrics_json.to_string_pretty()
+    );
+    let Some(baseline) = baseline else {
+        println!("[baseline] {name}: no committed seed — bootstrap, nothing enforced");
+        return;
+    };
+    let mut regressions = Vec::new();
+    for (key, value) in fresh {
+        let Some(seed) = baseline.opt("metrics").and_then(|m| m.opt(key)) else {
+            println!("[baseline] {name}/{key}: not in seed — bootstrap, skipped");
+            continue;
+        };
+        let seed = seed.as_f64().unwrap_or(f64::NAN);
+        if !seed.is_finite() || seed <= 0.0 {
+            println!("[baseline] {name}/{key}: unusable seed {seed} — skipped");
+        } else if *value < (1.0 - BASELINE_TOLERANCE) * seed {
+            regressions.push(format!(
+                "{key}: {value:.3} < {:.3} ({}% of seed {seed:.3})",
+                (1.0 - BASELINE_TOLERANCE) * seed,
+                (100.0 * (1.0 - BASELINE_TOLERANCE)) as u32,
+            ));
+        } else {
+            println!("[baseline] {name}/{key}: {value:.3} vs seed {seed:.3} — ok");
+        }
+    }
+    if regressions.is_empty() {
+        return;
+    }
+    let msg = format!(
+        "perf-trajectory regression vs {} (>{:.0}% drop):\n  {}",
+        path.display(),
+        100.0 * BASELINE_TOLERANCE,
+        regressions.join("\n  ")
+    );
+    if enforce {
+        panic!("{msg}");
+    }
+    println!("[baseline] WARNING (not enforced): {msg}");
+}
 
 /// One benchmark's configuration.
 pub struct Bench {
@@ -86,6 +172,22 @@ mod tests {
         });
         assert_eq!(s.count, 20);
         assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn baseline_path_is_rooted_in_crate() {
+        let p = baseline_path("gemm");
+        assert!(p.ends_with("baselines/BENCH_gemm.json"), "{}", p.display());
+    }
+
+    #[test]
+    fn guard_baseline_bootstraps_without_a_seed() {
+        // No committed seed for this name: the guard must report and
+        // return, never panic (bootstrap mode).
+        guard_baseline(
+            "no_such_bench_seed",
+            &[("rps".to_string(), 123.0)],
+        );
     }
 
     #[test]

@@ -79,6 +79,10 @@ pub fn fused_shard_outputs(
 
 /// Recover the single missing shard output: parity − Σ received (§5.2).
 /// `received` are the surviving data-shard outputs covered by this parity.
+/// Shapes are element-wise, so a batched `(h, B)` parity reconstructs the
+/// missing shard for **all** B batch members in the one subtraction —
+/// the per-batch recovery invariant the batched serving engine relies on
+/// (DESIGN.md §10).
 pub fn decode(parity_out: &Tensor, received: &[&Tensor]) -> Result<Tensor> {
     decode_owned(parity_out.clone(), received)
 }
@@ -202,6 +206,62 @@ mod tests {
         let received: Vec<&Tensor> = [&outs[0], &outs[2], &outs[3]].to_vec();
         let rec = decode(&parity_fused, &received).unwrap();
         assert!(rec.max_abs_diff(&outs[1]) < 1e-3);
+    }
+
+    #[test]
+    fn batched_parity_invariant_recovers_every_member() {
+        // The serving engine's batched orders run one GEMM over the
+        // column-concatenated member activations (k, B); the parity
+        // invariant must hold column-wise, and one decode subtraction
+        // must reconstruct the missing shard for ALL members at once.
+        let mut rng = Pcg32::seeded(23);
+        let (d, h, k, batch) = (4usize, 8usize, 12usize, 5usize);
+        let shards: Vec<(Tensor, Tensor)> = (0..d)
+            .map(|_| {
+                (
+                    Tensor::randn(vec![h, k], &mut rng),
+                    Tensor::randn(vec![h, 1], &mut rng),
+                )
+            })
+            .collect();
+        // Batched input = column concat of `batch` member columns.
+        let members: Vec<Tensor> =
+            (0..batch).map(|_| Tensor::randn(vec![k, 1], &mut rng)).collect();
+        let mut xb = vec![0.0f32; k * batch];
+        for (j, m) in members.iter().enumerate() {
+            for r in 0..k {
+                xb[r * batch + j] = m.data()[r];
+            }
+        }
+        let x = Tensor::new(vec![k, batch], xb).unwrap();
+
+        let wrefs: Vec<&Tensor> = shards.iter().map(|(w, _)| w).collect();
+        let brefs: Vec<&Tensor> = shards.iter().map(|(_, b)| b).collect();
+        let w_stacked = Tensor::concat0(&wrefs).unwrap();
+        let b_stacked = Tensor::concat0(&brefs).unwrap();
+        let (outs, parity) = fused_shard_outputs(&w_stacked, &b_stacked, &x, d).unwrap();
+
+        // Lose shard 1: the single batched subtraction recovers it.
+        let received: Vec<&Tensor> = [&outs[0], &outs[2], &outs[3]].to_vec();
+        let rec = decode(&parity, &received).unwrap();
+        assert_eq!(rec.shape(), &[h, batch]);
+        assert!(rec.max_abs_diff(&outs[1]) < 1e-3);
+
+        // Column j of every shard/recovered output equals the unbatched
+        // run on member j alone — batching changes layout, not values.
+        for (j, m) in members.iter().enumerate() {
+            let (solo, _) = fused_shard_outputs(&w_stacked, &b_stacked, m, d).unwrap();
+            for (si, s) in outs.iter().enumerate() {
+                for r in 0..h {
+                    let batched_v = s.data()[r * batch + j];
+                    let solo_v = solo[si].data()[r];
+                    assert!(
+                        (batched_v - solo_v).abs() < 1e-4,
+                        "shard {si} member {j} row {r}: {batched_v} vs {solo_v}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -66,6 +66,12 @@ pub fn deployment_from_json(v: &Value) -> Result<SessionConfig> {
             cfg.adaptive = Some(crate::coordinator::AdaptiveConfig::default());
         }
     }
+    if let Some(b) = v.opt("batch_max") {
+        cfg.batch_max = b.as_usize()?.max(1);
+    }
+    if let Some(w) = v.opt("batch_wait_ms") {
+        cfg.batch_wait_ms = w.as_f64()?.max(0.0);
+    }
     if let Some(n) = v.opt("net") {
         let mut net = NetConfig::default();
         if n.as_str().ok() == Some("ideal") {
@@ -140,6 +146,8 @@ pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
         ("detection_ms", Value::Num(cfg.detection_ms)),
         ("device_rate_macs_per_ms", Value::Num(cfg.device_rate)),
         ("adaptive", Value::Bool(cfg.adaptive.is_some())),
+        ("batch_max", Value::Num(cfg.batch_max as f64)),
+        ("batch_wait_ms", Value::Num(cfg.batch_wait_ms)),
         ("splits", Value::Obj(splits)),
         ("placement", Value::Obj(placement)),
     ])
@@ -159,10 +167,14 @@ mod tests {
             SplitSpec { d: 2, redundancy: Redundancy::CdcGrouped(1) },
         );
         cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+        cfg.batch_max = 4;
+        cfg.batch_wait_ms = 2.5;
         let json = deployment_to_json(&cfg);
         let back = deployment_from_json(&json).unwrap();
         assert_eq!(back.model, "lenet5");
         assert_eq!(back.n_devices, 4);
+        assert_eq!(back.batch_max, 4);
+        assert!((back.batch_wait_ms - 2.5).abs() < 1e-12);
         assert_eq!(back.splits["fc1"].d, 4);
         assert_eq!(back.splits["fc1"].redundancy, Redundancy::Cdc);
         assert_eq!(back.splits["fc2"].redundancy, Redundancy::CdcGrouped(1));

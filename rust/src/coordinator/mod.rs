@@ -98,6 +98,19 @@ pub struct SessionConfig {
     /// parity-vs-replication trade-off is surfaced in `ServeReport::
     /// policy`; `threshold_factor` above only seeds the initial gate.
     pub adaptive: Option<policy::AdaptiveConfig>,
+    /// Cross-request micro-batching (DESIGN.md §10): up to this many
+    /// requests waiting on the same fc stage coalesce into one batched
+    /// order whose input is the column concatenation of the member
+    /// activations — one wider GEMM, one parity pass, one network round
+    /// per batch. `1` (the default) disables coalescing and is bit-exact
+    /// with unbatched serving.
+    pub batch_max: usize,
+    /// How long (virtual ms) a free stage may hold its head request to
+    /// let a batch fill before dispatching (bounds the latency cost of
+    /// batching). `0.0` (the default) is pure pass-through: only
+    /// requests already waiting when the stage frees coalesce, and a
+    /// lone request is never delayed.
+    pub batch_wait_ms: f64,
 }
 
 impl SessionConfig {
@@ -114,6 +127,8 @@ impl SessionConfig {
             detection_ms: 20_000.0,
             placement: BTreeMap::new(),
             adaptive: None,
+            batch_max: 1,
+            batch_wait_ms: 0.0,
         }
     }
 }
@@ -223,6 +238,17 @@ impl Session {
         server: Option<ComputeServer>,
         cfg: SessionConfig,
     ) -> Result<Session> {
+        // AOT PJRT executables are compiled at batch width 1; only the
+        // (shape-polymorphic) interpreter can run the wider GEMMs that
+        // micro-batching forms, so reject the combination up front
+        // instead of feeding a (k, B) buffer to a (k, 1) executable.
+        if cfg.batch_max > 1 && cfg!(feature = "pjrt") {
+            return Err(Error::Config(format!(
+                "batch_max={} needs the interpreter backend; pjrt artifacts \
+                 are compiled at batch width 1 (DESIGN.md §10)",
+                cfg.batch_max
+            )));
+        }
         let model = manifest.model(&cfg.model)?.clone();
         let weights = Weights::load(&manifest, &model)?;
 
@@ -384,10 +410,14 @@ impl Session {
                 }
             }
 
-            let net_ms = 2.0 * cfg.net.base_ms
-                + ((req_bytes + reply_bytes) as f64 * 8.0)
-                    / (cfg.net.bandwidth_mbps * 1000.0);
-            let expected_ms = macs as f64 / cfg.device_rate + net_ms;
+            // Fixed per-order cost (network base latency, both legs) vs
+            // the payload-proportional part (compute + bytes on the
+            // wire): batching pays the former once per batch and the
+            // latter once per member.
+            let wire_ms =
+                ((req_bytes + reply_bytes) as f64 * 8.0) / (cfg.net.bandwidth_mbps * 1000.0);
+            let per_member_ms = macs as f64 / cfg.device_rate + wire_ms;
+            let expected_ms = per_member_ms + 2.0 * cfg.net.base_ms;
             stages.push(Stage {
                 kind: StageKind::Dist(DistStage {
                     layer_idx,
@@ -397,8 +427,10 @@ impl Session {
                     replicas,
                     fused_relu,
                     expected_ms,
+                    expected_extra_ms: per_member_ms,
                     request_bytes: req_bytes,
                     macs,
+                    batchable: layer.kind == "fc",
                 }),
             });
         }

@@ -306,6 +306,24 @@ impl AdaptivePolicy {
         self.retune();
     }
 
+    /// Feed one *batched* shard completion (DESIGN.md §10): the reply
+    /// carries `members` requests, so the window receives one
+    /// observation per member — each member really experienced that
+    /// latency — against the batch-scaled expected service time. With
+    /// `members == 1` this is exactly [`AdaptivePolicy::observe`].
+    pub fn observe_batch(
+        &mut self,
+        device: usize,
+        t_start_ms: f64,
+        t_arrival_ms: f64,
+        expected_ms: f64,
+        members: usize,
+    ) {
+        for _ in 0..members.max(1) {
+            self.observe(device, t_start_ms, t_arrival_ms, expected_ms);
+        }
+    }
+
     fn retune(&mut self) {
         if self.sorted.is_empty() {
             return;
@@ -508,6 +526,25 @@ mod tests {
         let fast = p.threshold_factor();
         assert!(fast < slow, "gate must relax after recovery: {fast} vs {slow}");
         assert_eq!(p.device_window(0).len(), 8, "window is bounded");
+    }
+
+    #[test]
+    fn observe_batch_feeds_one_observation_per_member() {
+        let cfg = AdaptiveConfig { window: 64, ..AdaptiveConfig::default() };
+        let mut a = AdaptivePolicy::new(cfg.clone(), 1);
+        let mut b = AdaptivePolicy::new(cfg, 1);
+        // One batched completion carrying 4 members ≡ the same
+        // completion observed 4 times: same windows, same gate.
+        a.observe_batch(0, 0.0, 12.0, 10.0, 4);
+        for _ in 0..4 {
+            b.observe(0, 0.0, 12.0, 10.0);
+        }
+        assert_eq!(a.observed, b.observed);
+        assert_eq!(a.device_window(0).len(), 4);
+        assert!((a.threshold_factor() - b.threshold_factor()).abs() < 1e-12);
+        // A lost batched reply counts every member toward the drop rate.
+        a.observe_batch(0, 0.0, f64::INFINITY, 10.0, 4);
+        assert_eq!(a.snapshot().drops, 4);
     }
 
     #[test]

@@ -31,12 +31,29 @@
 //! their compute by dispatch order (sorted by virtual entry time within a
 //! scheduling round); dispatches from different rounds can be ledger-
 //! ordered against virtual-time order by at most one stage service.
+//!
+//! ## Cross-request micro-batching (DESIGN.md §10)
+//!
+//! With `SessionConfig::batch_max > 1`, a free fc stage coalesces up to
+//! that many queued requests into **one** batched order: the input is
+//! the column concatenation of the member activations, every device
+//! runs one wider GEMM, and the CDC parity covers the whole batch in a
+//! single pass, so the per-order fixed costs (dispatch, request leg,
+//! reply base latency, parity resolution) amortise across the members.
+//! `batch_wait_ms` bounds how long a stage may hold its head request
+//! waiting for the batch to fill; `0` is pure pass-through. Batch
+//! membership is decided when the stage frees (round granularity) — a
+//! request that becomes ready inside another batch's window but after
+//! its formation waits for the next order. `batch_max = 1` is bit-exact
+//! with the unbatched engine, and a lost batched stage loses (and
+//! accounts) every member.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::fleet::Completion;
+use crate::kernels::Scratch;
 use crate::metrics::{self, Intervals, Series, Throughput};
 use crate::rng::Pcg32;
 use crate::runtime::manifest::ModelManifest;
@@ -136,11 +153,14 @@ pub struct StageStats {
     pub layer: String,
     /// Requests this stage served to completion.
     pub served: usize,
+    /// Batched orders this stage dispatched (== `served` when
+    /// micro-batching is off; smaller when batches formed).
+    pub batches: usize,
     /// Total virtual time the stage was occupied.
     pub busy_ms: f64,
     /// busy_ms / makespan.
     pub utilization: f64,
-    /// The raw occupancy trace (one interval per request held).
+    /// The raw occupancy trace (one interval per batched order held).
     pub occupancy: Intervals,
 }
 
@@ -169,6 +189,9 @@ pub struct ServeReport {
     pub max_concurrent_requests: usize,
     /// Peak number of simultaneously-busy stages.
     pub max_concurrent_stages: usize,
+    /// Widest cross-request micro-batch any stage dispatched (1 when
+    /// batching is off or never engaged — DESIGN.md §10).
+    pub max_batch: usize,
     /// Adaptive-policy snapshot at the end of the run (None when the
     /// session runs the static straggler gate) — the tuned gate factor,
     /// observed drop rate, and the parity-vs-replication recommendation.
@@ -237,12 +260,78 @@ fn take_owned(cur: &mut Arc<Tensor>) -> Tensor {
     Arc::try_unwrap(arc).unwrap_or_else(|shared| shared.as_ref().clone())
 }
 
-/// A dispatched (stage, request) pair awaiting completions.
+/// A dispatched (stage, batch) pair awaiting completions. `members`
+/// lists the in-flight requests riding the order, in queue order; the
+/// first is the batch leader whose request id completions route by.
 struct BusyStage {
-    infl: usize,
+    members: Vec<usize>,
+    /// The column-concatenated batch input (width > 1 only), kept so its
+    /// scratch buffer can be reclaimed at resolve time — by then the
+    /// devices have usually dropped their handles.
+    batched_input: Option<Arc<Tensor>>,
     t_enter: f64,
     n_expected: usize,
     got: BTreeMap<u64, Completion>,
+}
+
+/// Column-concatenate member activations into one batched GEMM input:
+/// `B` rank-2 `(k, 1)` columns become one row-major `(k, B)` matrix
+/// whose column `j` is member `j`. The buffer comes from the scratch
+/// arena and is reclaimed into it when the order resolves (best effort:
+/// a device thread still holding its handle lets the buffer free
+/// normally instead).
+fn concat_columns(members: &[&Tensor], scratch: &mut Scratch) -> Result<Tensor> {
+    let first = members
+        .first()
+        .ok_or_else(|| Error::Config("batch of zero members".into()))?;
+    let k = match first.shape()[..] {
+        [k, 1] => k,
+        _ => {
+            return Err(Error::Shape(format!(
+                "batch member must be a (k, 1) column, got {:?}",
+                first.shape()
+            )))
+        }
+    };
+    let b = members.len();
+    let mut buf = scratch.take(k * b);
+    for (j, m) in members.iter().enumerate() {
+        if m.shape() != [k, 1] {
+            return Err(Error::Shape(format!(
+                "batch member shape {:?} vs leader (k={k}, 1)",
+                m.shape()
+            )));
+        }
+        for (r, &v) in m.data().iter().enumerate() {
+            buf[r * b + j] = v;
+        }
+    }
+    Tensor::new(vec![k, b], buf)
+}
+
+/// Split a batched `(m, B)` stage output back into its `B` per-member
+/// `(m, 1)` columns (scratch-backed); the batched buffer is recycled.
+fn split_columns(batched: Tensor, b: usize, scratch: &mut Scratch) -> Result<Vec<Tensor>> {
+    let m = match batched.shape()[..] {
+        [m, bb] if bb == b => m,
+        _ => {
+            return Err(Error::Shape(format!(
+                "batched output {:?} vs batch width {b}",
+                batched.shape()
+            )))
+        }
+    };
+    let data = batched.data();
+    let mut out = Vec::with_capacity(b);
+    for j in 0..b {
+        let mut buf = scratch.take(m);
+        for (r, slot) in buf.iter_mut().enumerate() {
+            *slot = data[r * b + j];
+        }
+        out.push(Tensor::new(vec![m, 1], buf)?);
+    }
+    scratch.put(batched.into_data());
+    Ok(out)
 }
 
 fn reshape_input(model: &ModelManifest, input: &Tensor) -> Result<Tensor> {
@@ -259,7 +348,7 @@ fn advance_locals(
     stages: &[Stage],
     model: &ModelManifest,
     fl: &mut InFlight,
-    scratch: &mut crate::kernels::Scratch,
+    scratch: &mut Scratch,
 ) -> Result<bool> {
     while fl.stage_idx < stages.len() {
         match &stages[fl.stage_idx].kind {
@@ -293,7 +382,7 @@ impl Session {
     fn serve_inner(
         &mut self,
         workload: &Workload,
-        scratch: &mut crate::kernels::Scratch,
+        scratch: &mut Scratch,
     ) -> Result<ServeReport> {
         let total = workload.inputs.len();
         let n_stages = self.stages.len();
@@ -357,6 +446,8 @@ impl Session {
         let mut tp = Throughput::default();
         let mut occupancy: Vec<Intervals> = vec![Intervals::new(); n_stages];
         let mut served = vec![0usize; n_stages];
+        let mut batches = vec![0usize; n_stages];
+        let mut max_batch = 1usize;
         let mut req_intervals = Intervals::new();
         let mut makespan = 0.0f64;
 
@@ -423,35 +514,80 @@ impl Session {
                 stage_queue[s].push_back(i);
             }
 
-            // ---- dispatch every free stage with a waiting request ----
-            let mut cands: Vec<(f64, usize, usize)> = Vec::new();
+            // ---- dispatch every free stage with waiting request(s) ---
+            // Batch formation (DESIGN.md §10): a free fc stage coalesces
+            // up to `batch_max` queued requests into one order. The head
+            // request fixes the window start t0 = max(ready, stage_free);
+            // followers whose ready time falls within `batch_wait_ms` of
+            // t0 join (FIFO order, identical activation shape). A filled
+            // batch dispatches the instant its last member is ready; an
+            // unfilled one dispatches when the window timer expires (the
+            // coordinator cannot know no more arrivals are coming).
+            // batch_wait_ms = 0 is pass-through: only already-waiting
+            // backlog coalesces and a lone request is never delayed.
+            let batch_cap = self.cfg.batch_max.max(1);
+            let batch_wait = self.cfg.batch_wait_ms.max(0.0);
+            let mut cands: Vec<(f64, usize, Vec<usize>)> = Vec::new();
             for s in 0..n_stages {
-                if stage_busy[s].is_some() || !self.stages[s].is_distributed() {
+                if stage_busy[s].is_some() {
                     continue;
                 }
-                while let Some(&i) = stage_queue[s].front() {
-                    // Balk rule: an open-loop arrival that found the
-                    // entry queue at the cap never enters the system.
-                    if Some(s) == first_dist && closed_c.is_none() {
-                        if let Some(cap) = workload.admission_cap {
-                            let arr = inflight[i].t_arrival;
-                            let depth = starts
-                                .iter()
-                                .rev()
-                                .take_while(|(_, st)| *st > arr)
-                                .count();
-                            if depth >= cap {
-                                stage_queue[s].pop_front();
-                                dropped += 1;
-                                continue;
-                            }
-                        }
+                let StageKind::Dist(ds) = &self.stages[s].kind else {
+                    continue;
+                };
+                // Balk rule: an open-loop arrival that found the entry
+                // queue at the cap never enters the system. Applied as
+                // each queued request is considered, exactly as before
+                // batching existed.
+                let balks = |i: usize, starts: &[(f64, f64)]| {
+                    if Some(s) != first_dist || closed_c.is_some() {
+                        return false;
                     }
-                    stage_queue[s].pop_front();
-                    let t_enter = inflight[i].t_ready.max(stage_free[s]);
-                    cands.push((t_enter, s, i));
-                    break;
+                    let Some(cap) = workload.admission_cap else { return false };
+                    let arr = inflight[i].t_arrival;
+                    starts.iter().rev().take_while(|(_, st)| *st > arr).count() >= cap
+                };
+                let head = loop {
+                    let Some(&i) = stage_queue[s].front() else { break None };
+                    if balks(i, &starts) {
+                        stage_queue[s].pop_front();
+                        dropped += 1;
+                        continue;
+                    }
+                    break Some(i);
+                };
+                let Some(head) = head else { continue };
+                stage_queue[s].pop_front();
+                let t0 = inflight[head].t_ready.max(stage_free[s]);
+                let mut members = vec![head];
+                let mut t_enter = t0;
+                let cap = if ds.batchable { batch_cap } else { 1 };
+                if cap > 1 {
+                    let head_shape = inflight[head].cur.shape().to_vec();
+                    let batchable_shape = head_shape.len() == 2 && head_shape[1] == 1;
+                    let window = t0 + batch_wait;
+                    while batchable_shape && members.len() < cap {
+                        let Some(&j) = stage_queue[s].front() else { break };
+                        if balks(j, &starts) {
+                            stage_queue[s].pop_front();
+                            dropped += 1;
+                            continue;
+                        }
+                        if inflight[j].t_ready > window
+                            || inflight[j].cur.shape() != head_shape.as_slice()
+                        {
+                            break;
+                        }
+                        stage_queue[s].pop_front();
+                        t_enter = t_enter.max(inflight[j].t_ready);
+                        members.push(j);
+                    }
+                    if batchable_shape && members.len() < cap && batch_wait > 0.0 {
+                        // The timer was armed and expired unfilled.
+                        t_enter = window;
+                    }
                 }
+                cands.push((t_enter, s, members));
             }
             // Dispatch in virtual-entry-time order so the device ledger
             // serialises shared devices causally (ties: later stages —
@@ -461,27 +597,42 @@ impl Session {
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(b.1.cmp(&a.1))
             });
-            for (t_enter, s, i) in cands {
+            for (t_enter, s, members) in cands {
                 let StageKind::Dist(ds) = &self.stages[s].kind else {
                     unreachable!("only distributed stages are dispatched")
                 };
-                let input = inflight[i].cur.clone();
+                // Width 1 shares the member's activation Arc (no copy —
+                // the unbatched fast path is untouched); wider batches
+                // column-concatenate into a scratch-backed matrix.
+                let input = if members.len() == 1 {
+                    inflight[members[0]].cur.clone()
+                } else {
+                    let cols: Vec<&Tensor> =
+                        members.iter().map(|&i| inflight[i].cur.as_ref()).collect();
+                    Arc::new(concat_columns(&cols, scratch)?)
+                };
+                let leader = inflight[members[0]].req;
                 let pending = ds.dispatch(
                     &self.devices,
                     &self.cfg.net,
                     &self.rates,
-                    inflight[i].req,
-                    input,
+                    leader,
+                    input.clone(),
+                    members.len(),
                     t_enter,
                     &mut device_free,
                 )?;
-                if inflight[i].t_first_start.is_nan() {
-                    inflight[i].t_first_start = t_enter;
-                    starts.push((inflight[i].t_arrival, t_enter));
+                for &i in &members {
+                    if inflight[i].t_first_start.is_nan() {
+                        inflight[i].t_first_start = t_enter;
+                        starts.push((inflight[i].t_arrival, t_enter));
+                    }
                 }
-                req_to_stage.insert(inflight[i].req, s);
+                req_to_stage.insert(leader, s);
+                let batched_input = if members.len() > 1 { Some(input) } else { None };
                 stage_busy[s] = Some(BusyStage {
-                    infl: i,
+                    members,
+                    batched_input,
                     t_enter,
                     n_expected: pending.n_expected,
                     got: BTreeMap::new(),
@@ -521,7 +672,8 @@ impl Session {
                     unreachable!("only distributed stages hold work")
                 };
                 let layer = &self.model.layers[ds.layer_idx];
-                req_to_stage.remove(&inflight[b.infl].req);
+                let batch = b.members.len();
+                req_to_stage.remove(&inflight[b.members[0]].req);
                 // Adaptive mode replaces the static straggler gate with
                 // the policy's current (latency-tracked) factor.
                 let threshold_factor = self
@@ -529,81 +681,119 @@ impl Session {
                     .as_ref()
                     .map(|a| a.threshold_factor())
                     .unwrap_or(self.cfg.threshold_factor);
-                let expected_ms = ds.expected_ms;
+                let expected_ms = ds.expected_ms_for(batch);
                 // Feed every gathered completion (∞ = lost reply) into
                 // the adaptive policy *before* resolution, so Lost stages
                 // — the double-loss regime the parity-vs-replication
                 // chooser exists for — feed the drop-rate estimate too.
+                // A batched reply carries `batch` member latencies, so
+                // the windows receive one observation per member.
                 if let Some(a) = self.adaptive.as_mut() {
                     for c in b.got.values() {
-                        a.observe(c.device, b.t_enter, c.t_arrival_ms, expected_ms);
+                        a.observe_batch(
+                            c.device,
+                            b.t_enter,
+                            c.t_arrival_ms,
+                            expected_ms,
+                            batch,
+                        );
                     }
                 }
                 let resolved = ds.resolve(
                     layer,
                     b.got,
                     b.t_enter,
+                    batch,
                     threshold_factor,
                     scratch,
                 )?;
+                // Dispatch accounting is outcome-independent: a lost
+                // order was still a dispatched batch of this width.
+                batches[s] += 1;
+                max_batch = max_batch.max(batch);
+                // Reclaim the batched-input buffer now that every device
+                // reply is in (best effort — see BusyStage).
+                if let Some(arc) = b.batched_input {
+                    if let Ok(t) = Arc::try_unwrap(arc) {
+                        scratch.put(t.into_data());
+                    }
+                }
                 match resolved {
                     StageOutcome::Done { t_done, output, trace } => {
                         stage_free[s] = t_done;
                         occupancy[s].push(b.t_enter, t_done);
-                        served[s] += 1;
-                        let fl = &mut inflight[b.infl];
-                        fl.any_recovery |= trace.outcome == "recovered";
-                        fl.layers.push(trace);
-                        // Recycle the consumed activation into the arena
-                        // (unique once the devices dropped their handles).
-                        let old = std::mem::replace(&mut fl.cur, Arc::new(output));
-                        if let Ok(t) = Arc::try_unwrap(old) {
-                            scratch.put(t.into_data());
-                        }
-                        fl.t_ready = t_done;
-                        fl.stage_idx = s + 1;
-                        if advance_locals(&self.stages, &self.model, fl, scratch)? {
-                            let done_t = fl.t_ready;
-                            let trace = RequestTrace {
-                                req: fl.req,
-                                output: take_owned(&mut fl.cur),
-                                total_ms: done_t - fl.t_arrival,
-                                t_arrival_ms: fl.t_arrival,
-                                t_done_ms: done_t,
-                                layers: std::mem::take(&mut fl.layers),
-                                any_recovery: fl.any_recovery,
-                            };
-                            latency.record(trace.total_ms);
-                            service.record(done_t - fl.t_first_start);
-                            queue_wait.record(fl.t_first_start - fl.t_arrival);
-                            req_intervals.push(fl.t_first_start, done_t);
-                            makespan = makespan.max(done_t);
-                            tp.completed += 1;
-                            if trace.any_recovery {
-                                tp.recovered += 1;
-                            }
-                            traces.push(trace);
-                            if closed_c.is_some() && next_admit < total {
-                                pending_admissions.push_back((next_admit, done_t));
-                                next_admit += 1;
-                            }
+                        served[s] += batch;
+                        // A batched output is the column concatenation of
+                        // the member outputs; split it back so each
+                        // member advances independently (and may join a
+                        // different batch at the next stage).
+                        let outputs = if batch == 1 {
+                            vec![output]
                         } else {
-                            stage_queue[fl.stage_idx].push_back(b.infl);
+                            split_columns(output, batch, scratch)?
+                        };
+                        for (&mi, out_m) in b.members.iter().zip(outputs) {
+                            let fl = &mut inflight[mi];
+                            fl.any_recovery |= trace.outcome == "recovered";
+                            fl.layers.push(trace.clone());
+                            // Recycle the consumed activation into the
+                            // arena (unique once the devices dropped
+                            // their handles).
+                            let old = std::mem::replace(&mut fl.cur, Arc::new(out_m));
+                            if let Ok(t) = Arc::try_unwrap(old) {
+                                scratch.put(t.into_data());
+                            }
+                            fl.t_ready = t_done;
+                            fl.stage_idx = s + 1;
+                            if advance_locals(&self.stages, &self.model, fl, scratch)? {
+                                let done_t = fl.t_ready;
+                                let trace = RequestTrace {
+                                    req: fl.req,
+                                    output: take_owned(&mut fl.cur),
+                                    total_ms: done_t - fl.t_arrival,
+                                    t_arrival_ms: fl.t_arrival,
+                                    t_done_ms: done_t,
+                                    layers: std::mem::take(&mut fl.layers),
+                                    any_recovery: fl.any_recovery,
+                                };
+                                latency.record(trace.total_ms);
+                                service.record(done_t - fl.t_first_start);
+                                queue_wait.record(fl.t_first_start - fl.t_arrival);
+                                req_intervals.push(fl.t_first_start, done_t);
+                                makespan = makespan.max(done_t);
+                                tp.completed += 1;
+                                if trace.any_recovery {
+                                    tp.recovered += 1;
+                                }
+                                traces.push(trace);
+                                if closed_c.is_some() && next_admit < total {
+                                    pending_admissions.push_back((next_admit, done_t));
+                                    next_admit += 1;
+                                }
+                            } else {
+                                stage_queue[fl.stage_idx].push_back(mi);
+                            }
                         }
                     }
                     StageOutcome::Lost => {
                         // The coordinator notices the loss only after the
                         // failure-detection window; the stage is blocked
                         // until then (the paper's "tens of seconds").
+                        // Every member of a lost batch is lost — the
+                        // no-request-loss accounting must charge all of
+                        // them, and the closed loop re-admits one new
+                        // request per lost member.
                         let t_free = b.t_enter + self.cfg.detection_ms;
                         stage_free[s] = t_free;
                         occupancy[s].push(b.t_enter, t_free);
                         makespan = makespan.max(t_free);
-                        failures.push((inflight[b.infl].req, layer.name.clone()));
-                        tp.failed += 1;
-                        if closed_c.is_some() && next_admit < total {
-                            pending_admissions.push_back((next_admit, t_free));
-                            next_admit += 1;
+                        for &mi in &b.members {
+                            failures.push((inflight[mi].req, layer.name.clone()));
+                            tp.failed += 1;
+                            if closed_c.is_some() && next_admit < total {
+                                pending_admissions.push_back((next_admit, t_free));
+                                next_admit += 1;
+                            }
                         }
                     }
                 }
@@ -620,6 +810,7 @@ impl Session {
             .map(|(s, st)| StageStats {
                 layer: self.model.layers[st.layer_idx()].name.clone(),
                 served: served[s],
+                batches: batches[s],
                 busy_ms: occupancy[s].busy_ms(),
                 utilization: occupancy[s].utilization(makespan),
                 occupancy: occupancy[s].clone(),
@@ -640,6 +831,7 @@ impl Session {
             stages,
             max_concurrent_requests,
             max_concurrent_stages,
+            max_batch,
             policy: self.adaptive.as_ref().map(|a| a.snapshot()),
         })
     }

@@ -66,12 +66,23 @@ pub(crate) struct DistStage {
     pub replicas: Vec<(usize, u64)>,
     /// Fused-activation artifact in use (non-CDC fast path)?
     pub fused_relu: bool,
-    /// Expected service time (ms) for the threshold gate.
+    /// Expected service time (ms) for the threshold gate, at batch
+    /// width 1.
     pub expected_ms: f64,
+    /// Expected service-time increment (ms) per additional batch member:
+    /// the payload-proportional part of `expected_ms` (compute + bytes on
+    /// the wire), excluding the fixed per-order network base cost.
+    pub expected_extra_ms: f64,
+    /// Request-leg payload bytes per batch member.
     pub request_bytes: u64,
-    /// Per-task compute cost (uniform across a layer's shards) — drives
-    /// the device-occupancy ledger.
+    /// Per-task compute cost (uniform across a layer's shards) at batch
+    /// width 1 — drives the device-occupancy ledger.
     pub macs: u64,
+    /// Is this stage's layer eligible for cross-request micro-batching?
+    /// Only fc layers are: their activations are `(k, 1)` columns that
+    /// concatenate into one wider GEMM input. Conv stages always run at
+    /// batch width 1.
+    pub batchable: bool,
 }
 
 /// Bookkeeping for one dispatched (stage, request) pair.
@@ -93,6 +104,13 @@ pub(crate) enum StageOutcome {
 }
 
 impl DistStage {
+    /// Expected service time (ms) of one order at the given batch width:
+    /// the fixed per-order cost plus `batch ×` the payload-proportional
+    /// part. Width 1 is exactly [`DistStage::expected_ms`].
+    pub(crate) fn expected_ms_for(&self, batch: usize) -> f64 {
+        self.expected_ms + batch.saturating_sub(1) as f64 * self.expected_extra_ms
+    }
+
     /// Group this stage's tasks per device (a device with several tasks —
     /// e.g. after failover — runs them serially within one order).
     fn orders(&self) -> BTreeMap<usize, Vec<u64>> {
@@ -109,11 +127,16 @@ impl DistStage {
         orders
     }
 
-    /// Fan one request's input out to the stage's devices at virtual time
+    /// Fan one order's input out to the stage's devices at virtual time
     /// `t_enter`, serialising compute through the per-device occupancy
     /// ledger `device_free` (busy-until, ms). `rates` is the per-device
     /// compute-rate mirror (MACs/ms) so heterogeneous fleets keep the
     /// ledger consistent with the devices' own arithmetic.
+    ///
+    /// `batch` is the order's micro-batch width (DESIGN.md §10): `input`
+    /// carries that many column-concatenated member activations, and
+    /// compute/payload costs scale with it while the per-order fixed
+    /// costs are paid once. `req` is the batch leader's request id.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn dispatch(
         &self,
@@ -122,25 +145,28 @@ impl DistStage {
         rates: &[f64],
         req: u64,
         input: Arc<Tensor>,
+        batch: usize,
         t_enter: f64,
         device_free: &mut [f64],
     ) -> Result<PendingStage> {
         let orders = self.orders();
         let n_expected: usize = orders.values().map(|v| v.len()).sum();
+        let request_bytes = batch as u64 * self.request_bytes;
         for (dev, tasks) in &orders {
             let not_before = device_free[*dev];
             // Mirror the device's own arithmetic: compute starts at
             // max(t_enter + request leg, not_before) and runs the order's
             // tasks back to back.
-            let req_net = net.sample_request(self.request_bytes);
+            let req_net = net.sample_request(request_bytes);
             let start = (t_enter + req_net).max(not_before);
             device_free[*dev] =
-                start + (tasks.len() as u64 * self.macs) as f64 / rates[*dev];
+                start + (tasks.len() as u64 * batch as u64 * self.macs) as f64 / rates[*dev];
             devices[*dev].dispatch(WorkOrder {
                 req,
                 tasks: tasks.clone(),
                 input: input.clone(),
-                request_bytes: self.request_bytes,
+                request_bytes,
+                batch,
                 t_dispatch_ms: t_enter,
                 not_before_ms: not_before,
             })?;
@@ -152,6 +178,12 @@ impl DistStage {
     /// and *how* (pure policy layer), reconstruct any missing shard from
     /// its parity group, and merge shard outputs into the layer output.
     ///
+    /// For a batched stage (`batch > 1`) every shard output — and the
+    /// parity — is `(h, batch)`, so one decode subtraction reconstructs
+    /// the missing shard for **all** members at once and the merged
+    /// output is `(m, batch)`; the straggler gate scales its expected
+    /// service time to the batch width.
+    ///
     /// Takes the gathered completions by value so shard outputs are
     /// *moved* into the merge (no per-shard tensor clones), and `scratch`
     /// backs the merge/pool buffers — the steady-state resolve path
@@ -161,6 +193,7 @@ impl DistStage {
         layer: &LayerManifest,
         mut by_task: BTreeMap<u64, Completion>,
         t_enter: f64,
+        batch: usize,
         threshold_factor: f64,
         scratch: &mut Scratch,
     ) -> Result<StageOutcome> {
@@ -170,7 +203,7 @@ impl DistStage {
             .map(|(_, t)| by_task[t].t_arrival_ms)
             .collect();
         let threshold = if threshold_factor.is_finite() {
-            t_enter + threshold_factor * self.expected_ms
+            t_enter + threshold_factor * self.expected_ms_for(batch)
         } else {
             f64::INFINITY
         };

@@ -9,9 +9,10 @@
 //! regime sweeping in and out), `hetero-fleet` (RPi3/RPi4-style rate
 //! mixes that turn devices into persistent stragglers), and `burst`
 //! (arrival spikes on top of the Poisson stream). Every scenario runs
-//! across three redundancy **arms** — no redundancy, replication (2MR),
-//! and parity-coded CDC with the adaptive policy — and the driver
-//! records per-arm rps/p50/p99 to `results/scenarios.json`.
+//! across four redundancy **arms** — no redundancy, replication (2MR),
+//! parity-coded CDC with the adaptive policy, and CDC with
+//! cross-request micro-batching (`cdc-b4`, DESIGN.md §10) — and the
+//! driver records per-arm rps/p50/p99 to `results/scenarios.json`.
 //!
 //! The suite deploys the synthetic `testkit::synth` model, so — unlike
 //! the figure reproductions — it needs no AOT artifact build: it
@@ -38,11 +39,20 @@ pub enum Arm {
     Replication,
     /// Parity-coded CDC with the adaptive policy on.
     Cdc,
+    /// CDC + cross-request micro-batching (`batch_max` =
+    /// [`BATCHED_ARM_WIDTH`], DESIGN.md §10): the paper invariant must
+    /// survive a device failure killing a whole batch.
+    CdcBatched,
 }
+
+/// Micro-batch width of the [`Arm::CdcBatched`] arm.
+pub const BATCHED_ARM_WIDTH: usize = 4;
+/// Batch-formation window (virtual ms) of the [`Arm::CdcBatched`] arm.
+pub const BATCHED_ARM_WAIT_MS: f64 = 4.0;
 
 impl Arm {
     /// All arms, table order.
-    pub const ALL: [Arm; 3] = [Arm::None, Arm::Replication, Arm::Cdc];
+    pub const ALL: [Arm; 4] = [Arm::None, Arm::Replication, Arm::Cdc, Arm::CdcBatched];
 
     /// Tag used in tables and JSON.
     pub fn label(self) -> &'static str {
@@ -50,14 +60,21 @@ impl Arm {
             Arm::None => "none",
             Arm::Replication => "2mr",
             Arm::Cdc => "cdc",
+            Arm::CdcBatched => "cdc-b4",
         }
+    }
+
+    /// Arms that run parity-coded CDC — the no-lost-request invariant
+    /// applies to these.
+    pub fn is_cdc(self) -> bool {
+        matches!(self, Arm::Cdc | Arm::CdcBatched)
     }
 
     fn redundancy(self) -> Redundancy {
         match self {
             Arm::None => Redundancy::None,
             Arm::Replication => Redundancy::TwoMr,
-            Arm::Cdc => Redundancy::Cdc,
+            Arm::Cdc | Arm::CdcBatched => Redundancy::Cdc,
         }
     }
 }
@@ -65,8 +82,8 @@ impl Arm {
 /// The deployment template one (scenario, arm) pair runs on: the
 /// synthetic MLP, fc1 target-split 4 ways and fc2 2 ways over four data
 /// devices, redundancy per the arm, a fast failure-detection window (the
-/// chaos scripts flip failures every few hundred virtual ms), and the
-/// adaptive policy on the CDC arm.
+/// chaos scripts flip failures every few hundred virtual ms), the
+/// adaptive policy on the CDC arms, and micro-batching on `cdc-b4`.
 pub fn arm_cfg(sc: &Scenario, arm: Arm) -> SessionConfig {
     let mut cfg = SessionConfig::new(synth::MODEL);
     cfg.n_devices = 4;
@@ -81,8 +98,12 @@ pub fn arm_cfg(sc: &Scenario, arm: Arm) -> SessionConfig {
         .insert("fc1".into(), SplitSpec { d: 4, redundancy: arm.redundancy() });
     cfg.splits
         .insert("fc2".into(), SplitSpec { d: 2, redundancy: arm.redundancy() });
-    if arm == Arm::Cdc {
+    if arm.is_cdc() {
         cfg.adaptive = Some(AdaptiveConfig::default());
+    }
+    if arm == Arm::CdcBatched {
+        cfg.batch_max = BATCHED_ARM_WIDTH;
+        cfg.batch_wait_ms = BATCHED_ARM_WAIT_MS;
     }
     cfg
 }
@@ -204,6 +225,7 @@ pub fn run(ctx: &ExpCtx) -> Result<Vec<SuitePoint>> {
                 ("p99_ms", Value::Num(s.p99)),
                 ("makespan_ms", Value::Num(report.makespan_ms)),
                 ("rebuilds", Value::Num(report.rebuilds as f64)),
+                ("max_batch", Value::Num(report.max_batch as f64)),
             ];
             if let Some(p) = &report.policy {
                 fields.push((

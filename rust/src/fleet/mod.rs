@@ -10,8 +10,15 @@
 //! ```text
 //! start   = max(t_dispatch + net(request bytes), not_before)
 //! arrival = start + Σ compute(tasks) + net(reply)
-//! compute(task) = task.macs / rate_macs_per_ms     (RPi-calibrated)
+//! compute(task) = batch · task.macs / rate_macs_per_ms   (RPi-calibrated)
 //! ```
+//!
+//! `batch` is the order's cross-request micro-batch width (DESIGN.md
+//! §10): MACs and reply bytes scale linearly with the member count,
+//! while the per-order fixed costs — the request transfer leg and the
+//! reply's base latency/jitter draw — are paid once per *batch* instead
+//! of once per request. `batch = 1` reproduces the classic formula
+//! bit-for-bit.
 //!
 //! `not_before` is the coordinator-side device-occupancy ledger (see
 //! `coordinator::serve`): with many requests in flight a device may hold
@@ -128,11 +135,20 @@ pub struct TaskDef {
 /// paper's Case-Study-I slowdown mechanism).
 #[derive(Debug)]
 pub struct WorkOrder {
+    /// Leader request id: for a batched order, the first member's id.
+    /// Completions route and `FailurePlan::PermanentAt` keys on it.
     pub req: u64,
     /// Task ids to run, in order.
     pub tasks: Vec<u64>,
+    /// Activation input. For a batched order this is the column
+    /// concatenation of `batch` member activations, `(k, batch)`.
     pub input: Arc<Tensor>,
+    /// Request-leg payload bytes (already scaled by `batch`).
     pub request_bytes: u64,
+    /// Cross-request micro-batch width: how many member requests this
+    /// order's input columns carry. Compute and reply bytes scale
+    /// linearly with it; 1 = the classic unbatched order.
+    pub batch: usize,
     /// Simulated dispatch timestamp (ms).
     pub t_dispatch_ms: f64,
     /// Virtual instant the device's compute becomes free (coordinator
@@ -244,6 +260,14 @@ impl Drop for Device {
 /// FNV-1a mix of the order identity a device's stochastic draws key on:
 /// `(device, first task, input bits)`. See the module docs ("content-
 /// addressed randomness") for why this replaces a persistent RNG stream.
+///
+/// Batched orders mix their input bits **member-major** (member 0's
+/// column top to bottom, then member 1's, …) rather than in storage
+/// order (the column-concatenated input is row-major, i.e. member-
+/// interleaved). That keys the stream on the member contents in batch
+/// order independent of layout, and makes `batch == 1` bit-identical to
+/// the unbatched hash — failure replay of an unbatched session is
+/// unchanged by this field existing.
 fn order_stream(device: usize, order: &WorkOrder) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut mix = |v: u64| {
@@ -252,8 +276,13 @@ fn order_stream(device: usize, order: &WorkOrder) -> u64 {
     };
     mix(device as u64);
     mix(order.tasks.first().copied().unwrap_or(u64::MAX));
-    for &x in order.input.data() {
-        mix(x.to_bits() as u64);
+    let b = order.batch.max(1);
+    let data = order.input.data();
+    let rows = data.len() / b;
+    for m in 0..b {
+        for r in 0..rows {
+            mix(data[r * b + m].to_bits() as u64);
+        }
     }
     h
 }
@@ -310,7 +339,12 @@ fn device_main(
                         }
                     };
                     // REAL compute through PJRT (correctness), SIMULATED
-                    // service time (performance model).
+                    // service time (performance model). A batched order
+                    // runs one wider GEMM whose MACs and reply payload
+                    // scale linearly with the member count; the fixed
+                    // per-order costs (request leg, reply base latency)
+                    // are paid once — that amortisation is the whole
+                    // point of cross-request micro-batching.
                     let result = compute
                         .execute(&task.artifact, vec![
                             task.w.clone(),
@@ -318,8 +352,9 @@ fn device_main(
                             order.input.clone(),
                         ])
                         .ok();
-                    cum_ms += task.macs as f64 / rate;
-                    let reply_ms = net.sample(task.reply_bytes, &mut rng);
+                    let batch = order.batch.max(1) as u64;
+                    cum_ms += (batch * task.macs) as f64 / rate;
+                    let reply_ms = net.sample(batch * task.reply_bytes, &mut rng);
                     let (result, t_arrival_ms) = if dropped || result.is_none() {
                         (None, f64::INFINITY)
                     } else {

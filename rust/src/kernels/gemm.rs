@@ -308,7 +308,10 @@ pub fn bias_relu(c: &mut [f32], m: usize, n: usize, bias: Option<&[f32]>, relu: 
 /// over the `m / h` uniform row blocks. One extra pass over C replaces
 /// the separate parity-weight multiply; the invariant
 /// `checksum(W_stacked @ x + b_stacked) == parity_weights(W) @ x + Σb`
-/// holds exactly because summation is pre-activation.
+/// holds exactly because summation is pre-activation. The fold is
+/// column-wise, so with `x` a cross-request micro-batch (`n` = batch
+/// width, DESIGN.md §10) one pass yields the parity for every member —
+/// parity cost per batch, not per request.
 pub fn row_block_checksum(c: &[f32], m: usize, n: usize, h: usize, out: &mut [f32]) {
     assert!(h > 0 && m % h == 0, "checksum rows {h} must divide m {m}");
     assert_eq!(c.len(), m * n, "checksum: in length vs ({m},{n})");
@@ -389,5 +392,30 @@ mod tests {
         let mut out = vec![0.0; 4];
         row_block_checksum(&c, 4, 2, 2, &mut out);
         assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn checksum_is_columnwise_over_batched_outputs() {
+        // The batched-parity invariant (DESIGN.md §10): folding a
+        // (m, B) stacked output is column-for-column identical to
+        // folding each member column alone — one parity pass covers the
+        // whole micro-batch.
+        let mut rng = Pcg32::seeded(11);
+        let (m, h, b) = (12usize, 4usize, 6usize);
+        let c = randv(m * b, &mut rng);
+        let mut batched = vec![0.0; h * b];
+        row_block_checksum(&c, m, b, h, &mut batched);
+        for j in 0..b {
+            let col: Vec<f32> = (0..m).map(|r| c[r * b + j]).collect();
+            let mut solo = vec![0.0; h];
+            row_block_checksum(&col, m, 1, h, &mut solo);
+            for r in 0..h {
+                assert_eq!(
+                    batched[r * b + j],
+                    solo[r],
+                    "member {j} row {r}: batched fold must equal the solo fold"
+                );
+            }
+        }
     }
 }

@@ -15,6 +15,7 @@
 //!   fig18       multi-failure parity groups (Fig. 18)
 //!   calibrate   simulator-vs-paper anchor table
 //!   scenarios   fleet-chaos scenario suite (synthetic model, no artifacts)
+//!   synth       materialise the synthetic artifact set at --artifacts
 //!   serve       serve a deployment file (see --deployment)
 //!   all         every experiment in order
 //!
@@ -43,7 +44,7 @@ fn usage() -> ! {
 const HELP: &str = "cdc-dnn — robust distributed DNN inference with CDC\n\n\
 usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
        [--seed S] [--quick] [--deployment FILE]\n\n\
-commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios serve all\n";
+commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve all\n";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -112,6 +113,7 @@ fn main() {
         "calibrate" => exp::calibrate::run(&ctx),
         "ablate" => exp::ablate::run(&ctx),
         "scenarios" => exp::scenarios::run(&ctx).map(|_| ()),
+        "synth" => synth_artifacts(&ctx),
         "serve" => serve(&ctx, deployment.as_deref()),
         "all" => run_all(&ctx),
         _ => {
@@ -137,6 +139,20 @@ fn run_all(ctx: &ExpCtx) -> cdc_dnn::Result<()> {
     exp::fig18::run(ctx)?;
     exp::ablate::run(ctx)?;
     exp::scenarios::run(ctx)?;
+    Ok(())
+}
+
+/// Materialise the synthetic artifact set (manifest + weights + eval
+/// set, `testkit::synth`) at the `--artifacts` directory, so the binary
+/// entrypoints run fully offline — the CI CLI-smoke job drives `ablate`
+/// and `serve` against it.
+fn synth_artifacts(ctx: &ExpCtx) -> cdc_dnn::Result<()> {
+    let arts = cdc_dnn::testkit::synth::build_at(&ctx.artifacts, ctx.seed)?;
+    println!(
+        "wrote synthetic artifact set (model `{}`) to {}",
+        cdc_dnn::testkit::synth::MODEL,
+        arts.root.display()
+    );
     Ok(())
 }
 

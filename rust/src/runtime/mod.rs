@@ -198,6 +198,15 @@ impl Runtime {
 }
 
 /// Validate tensor inputs against an artifact's parameter spec.
+///
+/// fc shard programs are **column-polymorphic**: the activation input
+/// (the last parameter, spec `(k, 1)`) may carry any batch width `B ≥ 1`
+/// instead — the interpreter executes the wider GEMM `w @ (k, B)`
+/// directly, which is how cross-request micro-batching (DESIGN.md §10)
+/// runs one order for many requests. (AOT PJRT artifacts are compiled at
+/// width 1, so batched serving on the `pjrt` feature needs artifacts
+/// built at the batch width; the default interpreter backend has no such
+/// constraint.)
 fn check_inputs(meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<()> {
     if inputs.len() != meta.params.len() {
         return Err(Error::Shape(format!(
@@ -208,6 +217,16 @@ fn check_inputs(meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<()> {
         )));
     }
     for (i, (t, spec)) in inputs.iter().zip(&meta.params).enumerate() {
+        let fc_batched_activation = meta.kind == ArtifactKind::Fc
+            && i == meta.params.len() - 1
+            && spec.len() == 2
+            && spec[1] == 1
+            && t.shape().len() == 2
+            && t.shape()[0] == spec[0]
+            && t.shape()[1] >= 1;
+        if fc_batched_activation {
+            continue;
+        }
         if t.shape() != &spec[..] {
             return Err(Error::Shape(format!(
                 "{}: input {i} shape {:?} != artifact spec {:?}",

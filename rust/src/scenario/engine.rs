@@ -136,6 +136,7 @@ impl ScenarioEngine {
             makespan_ms: 0.0,
             segments: Vec::new(),
             rebuilds: 0,
+            max_batch: 1,
             policy: None,
         };
         // Apply the scenario's declared starting regime to the live
@@ -246,6 +247,7 @@ impl ScenarioEngine {
             for &s in r.latency.samples() {
                 report.latency.record(s);
             }
+            report.max_batch = report.max_batch.max(r.max_batch);
             drained = t0 + r.makespan_ms;
             report.makespan_ms = report.makespan_ms.max(drained);
         }

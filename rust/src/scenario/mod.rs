@@ -273,6 +273,9 @@ pub struct ScenarioReport {
     pub segments: Vec<SegmentReport>,
     /// Fleet re-deployments triggered by churn events.
     pub rebuilds: usize,
+    /// Widest cross-request micro-batch any segment's serving dispatched
+    /// (1 when batching is off or never engaged — DESIGN.md §10).
+    pub max_batch: usize,
     /// Adaptive-policy snapshot at the end of the run (None when the
     /// session runs the static straggler gate).
     pub policy: Option<crate::coordinator::PolicyReport>,

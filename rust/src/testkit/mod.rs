@@ -164,6 +164,14 @@ pub mod synth {
             COUNTER.fetch_add(1, Ordering::Relaxed),
             seed
         ));
+        build_at(root, seed)
+    }
+
+    /// Build the synthetic artifact set at an explicit directory — the
+    /// `cdc-dnn synth` CLI command, so binary entrypoints (serve,
+    /// ablate) can run offline against a durable artifact path.
+    pub fn build_at(root: impl Into<PathBuf>, seed: u64) -> Result<SynthArtifacts> {
+        let root = root.into();
         for sub in ["", "weights", "eval"] {
             let dir = root.join(sub);
             std::fs::create_dir_all(&dir)

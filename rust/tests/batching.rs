@@ -1,0 +1,195 @@
+//! Batch-boundary integration tests for cross-request micro-batching
+//! (DESIGN.md §10), runnable with NO python-built artifacts (synthetic
+//! `testkit::synth` model). The three edge cases ISSUE 4 names:
+//!
+//! * `batch_max = 1` is **bit-exact** with the unbatched (PR-3) serving
+//!   engine — same outputs, same virtual timings, same stochastic
+//!   draws;
+//! * a device crash mid-batch loses **zero** requests under the CDC
+//!   arm: the batched parity reconstructs every member at once;
+//! * `batch_wait_ms = 0` degenerates to pass-through — a lone request
+//!   is never delayed, only already-waiting backlog coalesces.
+
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec, Workload};
+use cdc_dnn::fleet::{FailurePlan, NetConfig};
+use cdc_dnn::model::Weights;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::Manifest;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::synth;
+
+/// mlp over 4 data devices: fc1 CDC split 4 ways, fc2 CDC split 2 ways.
+fn cdc_cfg() -> SessionConfig {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 4;
+    cfg.net = NetConfig::moderate();
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(4));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
+    cfg.placement.insert("fc2".into(), vec![0, 1]);
+    cfg
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng)).collect()
+}
+
+/// Reference forward pass for the synthetic model.
+fn oracle(root: &std::path::Path, x: &Tensor) -> Tensor {
+    let m = Manifest::load(root).unwrap();
+    let model = m.model(synth::MODEL).unwrap();
+    let w = Weights::load(&m, model).unwrap();
+    let xc = x.clone().reshape(vec![x.len(), 1]).unwrap();
+    let mut h = w.w("fc1").unwrap().matmul(&xc).unwrap();
+    h.add_assign(w.b("fc1").unwrap()).unwrap();
+    h.relu();
+    let mut out = w.w("fc2").unwrap().matmul(&h).unwrap();
+    out.add_assign(w.b("fc2").unwrap()).unwrap();
+    out
+}
+
+/// `batch_max = 1` must be bit-exact with the engine that predates
+/// batching: identical outputs, identical virtual timings, identical
+/// stochastic draws (the content-addressed order hash is unchanged at
+/// width 1), even with a non-zero formation window configured.
+#[test]
+fn batch_max_one_is_bit_exact_with_unbatched_serving() {
+    let synth = synth::build(91).unwrap();
+    let run = |batch_max: usize, batch_wait_ms: f64| {
+        let mut cfg = cdc_cfg();
+        cfg.batch_max = batch_max;
+        cfg.batch_wait_ms = batch_wait_ms;
+        let mut s = Session::start(&synth.root, cfg).unwrap();
+        // Intermittent drops exercise the content-addressed rng path:
+        // any change to the draw stream would show up as a different
+        // drop pattern.
+        s.set_failure(1, FailurePlan::Intermittent(0.4)).unwrap();
+        s.serve(&Workload::poisson(inputs(24, 19), 500.0, 5)).unwrap()
+    };
+    let unbatched = run(1, 0.0); // the PR-3 default configuration
+    let gated = run(1, 37.0); // width 1: the window must never arm
+    assert_eq!(unbatched.max_batch, 1);
+    assert_eq!(gated.max_batch, 1);
+    assert_eq!(unbatched.latency.samples(), gated.latency.samples());
+    assert_eq!(unbatched.queue_wait.samples(), gated.queue_wait.samples());
+    assert_eq!(unbatched.makespan_ms, gated.makespan_ms);
+    assert_eq!(
+        unbatched.throughput.recovered, gated.throughput.recovered,
+        "stochastic draw stream must be unchanged at width 1"
+    );
+    assert_eq!(unbatched.traces.len(), gated.traces.len());
+    for (ta, tb) in unbatched.traces.iter().zip(&gated.traces) {
+        assert_eq!(ta.output, tb.output);
+        assert_eq!(ta.t_done_ms, tb.t_done_ms);
+    }
+    for (sa, sb) in unbatched.stages.iter().zip(&gated.stages) {
+        assert_eq!(sa.occupancy, sb.occupancy, "stage {}", sa.layer);
+        assert_eq!(sa.served, sb.served);
+        assert_eq!(sa.batches, sb.served, "width 1: one order per request");
+    }
+}
+
+/// A device crash that kills whole batches loses zero requests under
+/// CDC: one `(h, B)` parity subtraction reconstructs the missing shard
+/// for every member, and the outputs stay exact.
+#[test]
+fn crashed_device_mid_batch_loses_zero_requests_under_cdc() {
+    let synth = synth::build(92).unwrap();
+    let mut cfg = cdc_cfg();
+    cfg.batch_max = 4;
+    cfg.batch_wait_ms = 5.0;
+    let mut s = Session::start(&synth.root, cfg).unwrap();
+    assert_eq!(s.total_devices(), 6, "4 data + fc1 parity + fc2 parity");
+
+    // Device 2 is dead before the first request: every fc1 order —
+    // batched or not — loses its shard-2 columns and must recover them
+    // from the batched parity.
+    s.set_failure(2, FailurePlan::PermanentAt(0)).unwrap();
+
+    // Simultaneous arrivals back the queue up so real batches form.
+    let xs = inputs(12, 29);
+    let report = s.serve(&Workload::uniform(xs.clone(), 0.0)).unwrap();
+    assert_eq!(report.throughput.completed, 12, "{}", report.line());
+    assert!(report.failures.is_empty(), "CDC lost a batched request");
+    assert_eq!(report.throughput.recovered, 12, "every request recovers");
+    assert!(
+        report.max_batch >= 2,
+        "no batch ever formed (max_batch={}) — the crash was never mid-batch",
+        report.max_batch
+    );
+    let fc1 = &report.stages[0];
+    assert!(
+        fc1.batches < fc1.served,
+        "fc1 dispatched {} orders for {} requests — batching never engaged",
+        fc1.batches,
+        fc1.served
+    );
+    for t in &report.traces {
+        let x = &xs[t.req as usize];
+        let want = oracle(&synth.root, x);
+        let diff = t.output.max_abs_diff(&want);
+        assert!(diff < 1e-4, "req {}: recovered logits diverge by {diff}", t.req);
+    }
+}
+
+/// `batch_wait_ms = 0` is pass-through: sparse arrivals are never held
+/// back (width stays 1 and the run is bit-exact with `batch_max = 1`),
+/// while simultaneous backlog still coalesces without delaying anyone.
+#[test]
+fn zero_wait_degenerates_to_pass_through() {
+    let synth = synth::build(93).unwrap();
+    let run = |batch_max: usize, gap_ms: f64| {
+        let mut cfg = cdc_cfg();
+        cfg.batch_max = batch_max;
+        cfg.batch_wait_ms = 0.0;
+        let mut s = Session::start(&synth.root, cfg).unwrap();
+        s.serve(&Workload::uniform(inputs(8, 39), gap_ms)).unwrap()
+    };
+
+    // Sparse stream (gap far above any service time): wide batch_max
+    // must change nothing at all.
+    let wide = run(8, 5_000.0);
+    let narrow = run(1, 5_000.0);
+    assert_eq!(wide.max_batch, 1, "a lone request must never wait");
+    assert_eq!(wide.latency.samples(), narrow.latency.samples());
+    assert_eq!(wide.makespan_ms, narrow.makespan_ms);
+    for (ta, tb) in wide.traces.iter().zip(&narrow.traces) {
+        assert_eq!(ta.output, tb.output);
+        assert_eq!(ta.t_done_ms, tb.t_done_ms);
+    }
+
+    // Backlog (all arrivals at t=0): zero wait still coalesces what is
+    // already queued — and the head is dispatched at its ready instant.
+    let burst = run(8, 0.0);
+    assert!(
+        burst.max_batch >= 2,
+        "backlog should coalesce even at zero wait (max_batch={})",
+        burst.max_batch
+    );
+    assert_eq!(burst.throughput.completed, 8);
+    assert!(burst.failures.is_empty());
+}
+
+/// Batched serving produces the same answers as sequential inference —
+/// batching changes layout and timing, never values.
+#[test]
+fn batched_outputs_match_sequential_inference() {
+    let synth = synth::build(94).unwrap();
+    let xs = inputs(10, 49);
+
+    let mut seq = Session::start(&synth.root, cdc_cfg()).unwrap();
+    let want: Vec<Tensor> = xs.iter().map(|x| seq.infer(x).unwrap().output).collect();
+
+    let mut cfg = cdc_cfg();
+    cfg.batch_max = 5;
+    cfg.batch_wait_ms = 10.0;
+    let mut batched = Session::start(&synth.root, cfg).unwrap();
+    let report = batched.serve(&Workload::uniform(xs, 0.0)).unwrap();
+    assert_eq!(report.throughput.completed, 10);
+    assert!(report.max_batch >= 2, "batching never engaged");
+    for t in &report.traces {
+        let diff = t.output.max_abs_diff(&want[t.req as usize]);
+        assert!(diff < 1e-5, "req {}: batched output diverges by {diff}", t.req);
+    }
+}

@@ -51,6 +51,47 @@ fn scenario_suite_cdc_never_loses_and_p99_stays_bounded() {
     }
 }
 
+/// ISSUE 4 acceptance: the paper invariant survives cross-request
+/// micro-batching for every named scenario — the batched CDC arm loses
+/// zero requests (a failure now kills whole batches, and the batched
+/// parity must reconstruct every member), its p99 stays bounded vs the
+/// no-redundancy baseline, and batching genuinely engages somewhere in
+/// the suite.
+#[test]
+fn scenario_suite_batched_cdc_never_loses_and_p99_stays_bounded() {
+    let arts = synth::build(83).unwrap();
+    let mut widest = 1usize;
+    for sc in catalog(2021) {
+        let mut base_engine = ScenarioEngine::new(&arts.root, arm_cfg(&sc, Arm::None)).unwrap();
+        let base = base_engine.run(&sc).unwrap();
+        let batched_cfg = arm_cfg(&sc, Arm::CdcBatched);
+        let mut engine = ScenarioEngine::new(&arts.root, batched_cfg).unwrap();
+        let batched = engine.run(&sc).unwrap();
+
+        assert!(batched.completed > 0, "{}: empty run", sc.name);
+        assert_eq!(
+            batched.failed, 0,
+            "{}: batched CDC lost requests — {}",
+            sc.name,
+            batched.line()
+        );
+        let arrivals: usize = batched.segments.iter().map(|s| s.arrivals).sum();
+        assert_eq!(batched.completed as usize, arrivals, "{}", sc.name);
+        let b99 = base.latency.summary().p99;
+        let c99 = batched.latency.summary().p99;
+        assert!(
+            c99 <= 10.0 * b99 + 500.0,
+            "{}: batched CDC p99 {c99:.1}ms vs baseline p99 {b99:.1}ms — not bounded",
+            sc.name
+        );
+        widest = widest.max(batched.max_batch);
+    }
+    assert!(
+        widest >= 2,
+        "micro-batching never engaged across the whole suite (max width {widest})"
+    );
+}
+
 /// Replication (2MR) also masks the crash storm — at twice the hardware.
 #[test]
 fn scenario_replication_arm_survives_crash_storm() {
