@@ -6,7 +6,8 @@ ARTIFACTS ?= rust/artifacts
 
 .PHONY: artifacts build test bench bench-gemm bench-gemm-smoke \
         bench-scenarios bench-scenarios-smoke bench-batching \
-        bench-batching-smoke doc fmt clippy
+        bench-batching-smoke bench-transport bench-transport-smoke \
+        worker-demo doc fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -47,6 +48,23 @@ bench-batching:
 
 bench-batching-smoke:
 	BATCHING_BENCH_SMOKE=1 cargo bench --bench batching
+
+# Real-TCP loopback serving (DESIGN.md §11): spawns worker child
+# processes, drives wall-clock CDC serving over real sockets, SIGKILLs
+# one worker mid-run, and writes BENCH_transport.json. The smoke flavor
+# is the CI robustness guard.
+bench-transport:
+	cargo bench --bench transport_loopback
+
+bench-transport-smoke:
+	TRANSPORT_BENCH_SMOKE=1 cargo bench --bench transport_loopback
+
+# Start one standalone TCP worker on a fixed port over the synthetic
+# artifact set — half of the README's two-terminal quickstart.
+worker-demo:
+	cargo build --release
+	./target/release/cdc-dnn synth --artifacts synth-arts --seed 7
+	./target/release/cdc-dnn worker --artifacts synth-arts --listen 127.0.0.1:7070
 
 # Rustdoc for the whole crate; CI runs this with -D warnings.
 doc:

@@ -12,6 +12,7 @@ use crate::coordinator::{Redundancy, SessionConfig, SplitSpec};
 use crate::error::{Error, Result};
 use crate::fleet::NetConfig;
 use crate::json::{obj, Value};
+use crate::transport::{TcpConfig, TransportSpec};
 
 /// Parse a redundancy tag ("none" | "cdc" | "cdc:<group>" | "2mr").
 pub fn parse_redundancy(s: &str) -> Result<Redundancy> {
@@ -110,7 +111,60 @@ pub fn deployment_from_json(v: &Value) -> Result<SessionConfig> {
             cfg.placement.insert(layer.clone(), devs.as_usize_vec()?);
         }
     }
+    if let Some(t) = v.opt("transport") {
+        cfg.transport = transport_from_json(t)?;
+    }
     Ok(cfg)
+}
+
+/// Parse the deployment file's `transport` section: the string `"sim"`,
+/// or an object `{"mode": "sim" | "tcp", "workers": [...], ...}`.
+pub fn transport_from_json(v: &Value) -> Result<TransportSpec> {
+    if v.as_str().ok() == Some("sim") {
+        return Ok(TransportSpec::Sim);
+    }
+    let mode = v.get("mode")?.as_str()?;
+    match mode {
+        "sim" => Ok(TransportSpec::Sim),
+        "tcp" => {
+            let mut tcp = TcpConfig::default();
+            if let Some(ws) = v.opt("workers") {
+                tcp.workers = ws
+                    .as_arr()?
+                    .iter()
+                    .map(|w| w.as_str().map(str::to_string))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(d) = v.opt("order_deadline_ms") {
+                tcp.order_deadline_ms = d.as_f64()?;
+            }
+            if let Some(c) = v.opt("connect_timeout_ms") {
+                tcp.connect_timeout_ms = c.as_usize()? as u64;
+            }
+            if let Some(t) = v.opt("reaper_tick_ms") {
+                tcp.reaper_tick_ms = t.as_usize()? as u64;
+            }
+            Ok(TransportSpec::Tcp(tcp))
+        }
+        other => Err(Error::Config(format!("unknown transport mode {other:?}"))),
+    }
+}
+
+/// Serialise a transport spec back to the deployment-file shape.
+pub fn transport_to_json(spec: &TransportSpec) -> Value {
+    match spec {
+        TransportSpec::Sim => obj(vec![("mode", Value::Str("sim".into()))]),
+        TransportSpec::Tcp(tcp) => obj(vec![
+            ("mode", Value::Str("tcp".into())),
+            (
+                "workers",
+                Value::Arr(tcp.workers.iter().map(|w| Value::Str(w.clone())).collect()),
+            ),
+            ("order_deadline_ms", Value::Num(tcp.order_deadline_ms)),
+            ("connect_timeout_ms", Value::Num(tcp.connect_timeout_ms as f64)),
+            ("reaper_tick_ms", Value::Num(tcp.reaper_tick_ms as f64)),
+        ]),
+    }
 }
 
 /// Serialise a SessionConfig back to the deployment-file JSON shape.
@@ -148,6 +202,7 @@ pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
         ("adaptive", Value::Bool(cfg.adaptive.is_some())),
         ("batch_max", Value::Num(cfg.batch_max as f64)),
         ("batch_wait_ms", Value::Num(cfg.batch_wait_ms)),
+        ("transport", transport_to_json(&cfg.transport)),
         ("splits", Value::Obj(splits)),
         ("placement", Value::Obj(placement)),
     ])
@@ -189,6 +244,45 @@ mod tests {
         assert_eq!(parse_redundancy("none").unwrap(), Redundancy::None);
         assert!(parse_redundancy("bogus").is_err());
         assert!(parse_redundancy("cdc:x").is_err());
+    }
+
+    #[test]
+    fn roundtrip_tcp_transport() {
+        let mut cfg = SessionConfig::new("mlp");
+        cfg.n_devices = 2;
+        cfg.transport = TransportSpec::Tcp(TcpConfig {
+            workers: vec!["127.0.0.1:7070".into(), "127.0.0.1:7071".into()],
+            order_deadline_ms: 750.0,
+            connect_timeout_ms: 1234,
+            reaper_tick_ms: 7,
+        });
+        let back = deployment_from_json(&deployment_to_json(&cfg)).unwrap();
+        match back.transport {
+            TransportSpec::Tcp(t) => {
+                assert_eq!(t.workers, vec!["127.0.0.1:7070", "127.0.0.1:7071"]);
+                assert!((t.order_deadline_ms - 750.0).abs() < 1e-12);
+                assert_eq!(t.connect_timeout_ms, 1234);
+                assert_eq!(t.reaper_tick_ms, 7);
+            }
+            other => panic!("expected tcp transport, got {other:?}"),
+        }
+        // The string shorthand and the default both mean sim.
+        let v = Value::parse(
+            r#"{"model":"mlp","n_devices":1,"transport":"sim"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            deployment_from_json(&v).unwrap().transport,
+            TransportSpec::Sim
+        ));
+        assert!(matches!(
+            deployment_from_json(
+                &Value::parse(r#"{"model":"mlp","n_devices":1}"#).unwrap()
+            )
+            .unwrap()
+            .transport,
+            TransportSpec::Sim
+        ));
     }
 
     #[test]

@@ -19,18 +19,19 @@ pub mod serve;
 pub mod stage;
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use crate::cdc;
 use crate::error::{Error, Result};
-use crate::fleet::{Completion, Device, DeviceConfig, NetConfig, TaskDef};
+use crate::fleet::{Device, DeviceConfig, NetConfig, TaskDef};
 use crate::kernels::Scratch;
 use crate::model::{shard_io_bytes, shard_macs, Weights};
 use crate::partition::LayerPlan;
 use crate::runtime::manifest::{Manifest, ModelManifest};
 use crate::runtime::server::{ComputeHandle, ComputeServer};
 use crate::tensor::Tensor;
+use crate::transport::{SimTransport, TcpTransport, Transport, TransportSpec};
 pub use policy::{AdaptiveConfig, AdaptivePolicy, Outcome, PolicyReport};
 pub use serve::{Arrivals, Pipeline, ServeReport, StageStats, Workload};
 pub use stage::Stage;
@@ -111,6 +112,11 @@ pub struct SessionConfig {
     /// requests already waiting when the stage frees coalesce, and a
     /// lone request is never delayed.
     pub batch_wait_ms: f64,
+    /// How the session reaches its devices (DESIGN.md §11): the
+    /// in-process virtual-time simulator (default, bit-identical to the
+    /// pre-transport engine) or real TCP worker processes with
+    /// wall-clock timing.
+    pub transport: TransportSpec,
 }
 
 impl SessionConfig {
@@ -129,7 +135,26 @@ impl SessionConfig {
             adaptive: None,
             batch_max: 1,
             batch_wait_ms: 0.0,
+            transport: TransportSpec::Sim,
         }
+    }
+
+    /// Upper bound on the devices this config will deploy (data devices
+    /// plus the redundancy devices its splits imply), assuming every
+    /// split entry names a layer of the model — the loopback harness
+    /// sizes its worker fleet with this before the session exists.
+    pub fn planned_devices(&self) -> usize {
+        let extra: usize = self
+            .splits
+            .values()
+            .map(|s| match s.redundancy {
+                Redundancy::None => 0,
+                Redundancy::Cdc => 1,
+                Redundancy::CdcGrouped(g) => s.d.div_ceil(g.max(1)),
+                Redundancy::TwoMr => s.d,
+            })
+            .sum();
+        self.n_devices + extra
     }
 }
 
@@ -180,19 +205,20 @@ impl RequestTrace {
     }
 }
 
-/// A deployed model serving session over a simulated fleet.
+/// A deployed model serving session over a fleet — simulated device
+/// threads or real TCP workers, per `SessionConfig::transport`.
 pub struct Session {
     cfg: SessionConfig,
     model: ModelManifest,
-    devices: Vec<Device>,
+    /// How orders reach devices and completions come back (DESIGN.md
+    /// §11) — the virtual-time simulator or the TCP worker fleet.
+    transport: Box<dyn Transport>,
     /// Per-layer pipeline stages, in model order.
     stages: Vec<Stage>,
     /// Task definitions kept for failover re-deployment.
     task_defs: BTreeMap<u64, TaskDef>,
     /// task id → owning device (mutated by failover).
     task_owner: BTreeMap<u64, usize>,
-    completions: Receiver<Completion>,
-    _completions_tx: Sender<Completion>,
     next_req: u64,
     /// Devices currently considered failed by the *coordinator*.
     known_failed: Vec<usize>,
@@ -435,26 +461,36 @@ impl Session {
             });
         }
 
-        // ---- spawn the fleet ------------------------------------------
+        // ---- connect the fleet transport ------------------------------
         let n_total = cfg.n_devices + extra;
-        let (ctx, crx) = channel();
-        let mut devices = Vec::with_capacity(n_total);
-        for id in 0..n_total {
-            let dcfg = DeviceConfig {
-                id,
-                rate_macs_per_ms: cfg.device_rate,
-                failure: Default::default(),
-            };
-            devices.push(Device::spawn(
-                dcfg,
-                cfg.net.clone(),
-                cfg.seed,
-                compute.clone(),
-                ctx.clone(),
-            )?);
-        }
+        let transport: Box<dyn Transport> = match &cfg.transport {
+            TransportSpec::Sim => {
+                let (ctx, crx) = channel();
+                let mut devices = Vec::with_capacity(n_total);
+                for id in 0..n_total {
+                    let dcfg = DeviceConfig {
+                        id,
+                        rate_macs_per_ms: cfg.device_rate,
+                        failure: Default::default(),
+                    };
+                    devices.push(Device::spawn(
+                        dcfg,
+                        cfg.net.clone(),
+                        cfg.seed,
+                        compute.clone(),
+                        ctx.clone(),
+                    )?);
+                }
+                Box::new(SimTransport::new(devices, crx, ctx))
+            }
+            TransportSpec::Tcp(tcp) => {
+                Box::new(TcpTransport::connect(tcp, n_total, cfg.seed)?)
+            }
+        };
 
-        // Warm the executable cache so compile time never pollutes latency.
+        // Warm the executable cache so compile time never pollutes
+        // latency (in tcp mode this validates the artifact set the
+        // coordinator planned against; workers hold their own runtime).
         preload.sort();
         preload.dedup();
         compute.preload(&preload)?;
@@ -469,7 +505,7 @@ impl Session {
             per_device.entry(p.device).or_default().push(p.def);
         }
         for (dev, defs) in per_device {
-            devices[dev].deploy(defs)?;
+            transport.deploy(dev, defs)?;
         }
 
         let rates = vec![cfg.device_rate; n_total];
@@ -484,12 +520,10 @@ impl Session {
         Ok(Session {
             cfg,
             model,
-            devices,
+            transport,
             stages,
             task_defs,
             task_owner,
-            completions: crx,
-            _completions_tx: ctx,
             next_req: 0,
             known_failed: Vec::new(),
             rates,
@@ -502,7 +536,12 @@ impl Session {
 
     /// Total devices in the fleet (data + redundancy).
     pub fn total_devices(&self) -> usize {
-        self.devices.len()
+        self.transport.n_devices()
+    }
+
+    /// Transport tag ("sim" | "tcp") — report attribution.
+    pub fn transport_label(&self) -> &'static str {
+        self.transport.label()
     }
 
     /// The model served by this session.
@@ -547,12 +586,14 @@ impl Session {
         &self.known_failed
     }
 
-    /// Inject a failure plan into a device (experiments flip this).
+    /// Inject a failure plan into a device (experiments flip this). In
+    /// tcp mode the worker emulates the drops by staying silent on the
+    /// affected replies.
     pub fn set_failure(&self, device: usize, plan: crate::fleet::FailurePlan) -> Result<()> {
-        self.devices
-            .get(device)
-            .ok_or_else(|| Error::Config(format!("no device {device}")))?
-            .set_failure(plan)
+        if device >= self.transport.n_devices() {
+            return Err(Error::Config(format!("no device {device}")));
+        }
+        self.transport.set_failure(device, plan)
     }
 
     /// Re-rate one device's compute (MACs/ms) mid-session — heterogeneous
@@ -566,10 +607,10 @@ impl Session {
                 "device rate must be positive, got {macs_per_ms}"
             )));
         }
-        self.devices
-            .get(device)
-            .ok_or_else(|| Error::Config(format!("no device {device}")))?
-            .set_rate(macs_per_ms)?;
+        if device >= self.transport.n_devices() {
+            return Err(Error::Config(format!("no device {device}")));
+        }
+        self.transport.set_rate(device, macs_per_ms)?;
         self.rates[device] = macs_per_ms;
         Ok(())
     }
@@ -585,8 +626,8 @@ impl Session {
     /// estimates keep their deployment-time values — the adaptive policy
     /// exists precisely to absorb that drift.
     pub fn set_net(&mut self, net: NetConfig) -> Result<()> {
-        for d in &self.devices {
-            d.set_net(net.clone())?;
+        for d in 0..self.transport.n_devices() {
+            self.transport.set_net(d, net.clone())?;
         }
         self.cfg.net = net;
         Ok(())
@@ -618,8 +659,8 @@ impl Session {
             .iter()
             .map(|t| self.task_defs[t].clone())
             .collect();
-        self.devices[failed].undeploy(moved.clone())?;
-        self.devices[target].deploy(defs)?;
+        self.transport.undeploy(failed, moved.clone())?;
+        self.transport.deploy(target, defs)?;
         for t in &moved {
             self.task_owner.insert(*t, target);
         }
@@ -664,6 +705,6 @@ impl Session {
 
     /// Drain stale completions (lost requests leave orphans behind).
     pub fn drain(&mut self) {
-        while self.completions.try_recv().is_ok() {}
+        while self.transport.try_recv().is_some() {}
     }
 }

@@ -47,6 +47,29 @@
 //! its formation waits for the next order. `batch_max = 1` is bit-exact
 //! with the unbatched engine, and a lost batched stage loses (and
 //! accounts) every member.
+//!
+//! ## Wall-clock transports (DESIGN.md §11)
+//!
+//! The same scheduler drives real TCP worker fleets. Three hooks — all
+//! no-ops on the simulator, so sim-mode scheduling stays bit-identical
+//! — adapt it to a clock that actually advances:
+//!
+//! * entry times are clamped to "not in the past" on the transport
+//!   clock (`Transport::clamp_ms`);
+//! * a dispatch whose entry time lies in the future (an open-loop
+//!   arrival not yet due, or an unfilled batch window) is **deferred**
+//!   while other stages hold work — the gather phase wakes at its due
+//!   time (`Transport::recv_deadline`) — and only **sleeps**
+//!   (`Transport::pace`) when nothing is in flight, so pacing never
+//!   head-of-line blocks resolution;
+//! * completions are gathered **eagerly**: the engine resolves a stage
+//!   as soon as *that stage's* completions are in, instead of waiting
+//!   for every busy stage (which is free in virtual time but would
+//!   lock-step a real pipeline).
+//!
+//! Losses need no special path: the transport synthesises `∞`-stamped
+//! completions for deadline-overrun or connection-death tasks, so the
+//! policy/CDC layers below see exactly the simulator's shapes.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
@@ -373,6 +396,7 @@ impl Session {
         // Detach the serve-path arena from `self` so stage resolution can
         // borrow it mutably alongside `self.stages`; restore it on every
         // exit path (an error mid-run must not drop the warmed pool).
+        self.transport.begin_serve();
         let mut scratch = std::mem::take(&mut self.scratch);
         let result = self.serve_inner(workload, &mut scratch);
         self.scratch = scratch;
@@ -387,6 +411,10 @@ impl Session {
         let total = workload.inputs.len();
         let n_stages = self.stages.len();
         let first_dist = self.stages.iter().position(|s| s.is_distributed());
+        // Wall-clock transports pace dispatches and gather eagerly; the
+        // simulator keeps its round-synchronous virtual-time gather
+        // (bit-identical to the pre-transport engine).
+        let wall = self.transport.wall_clock();
 
         let first_req = self.next_req;
         self.next_req += total as u64;
@@ -432,7 +460,7 @@ impl Session {
         let mut stage_busy: Vec<Option<BusyStage>> =
             (0..n_stages).map(|_| None).collect();
         let mut req_to_stage: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut device_free = vec![0.0f64; self.devices.len()];
+        let mut device_free = vec![0.0f64; self.transport.n_devices()];
         // (arrival, first-start) of started requests, admission-cap rule.
         let mut starts: Vec<(f64, f64)> = Vec::new();
 
@@ -558,7 +586,11 @@ impl Session {
                 };
                 let Some(head) = head else { continue };
                 stage_queue[s].pop_front();
-                let t0 = inflight[head].t_ready.max(stage_free[s]);
+                // Wall-clock: a stage resolved in the past still enters
+                // "now" at the earliest (clamp is identity on the sim).
+                let t0 = self
+                    .transport
+                    .clamp_ms(inflight[head].t_ready.max(stage_free[s]));
                 let mut members = vec![head];
                 let mut t_enter = t0;
                 let cap = if ds.batchable { batch_cap } else { 1 };
@@ -597,7 +629,25 @@ impl Session {
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(b.1.cmp(&a.1))
             });
+            // Wall clock only: dispatching a future-dated order (an
+            // arrival not yet due, an unfilled batch window) while other
+            // stages hold work would sleep *before* the gather phase and
+            // head-of-line block their resolution. Defer such orders to
+            // a later round instead; the gather below wakes at
+            // `next_due` to dispatch them on time. With nothing in
+            // flight, sleeping (pace) is the only thing left to do.
+            let mut next_due = f64::INFINITY;
             for (t_enter, s, members) in cands {
+                if wall
+                    && t_enter > self.transport.now_ms()
+                    && stage_busy.iter().any(|b| b.is_some())
+                {
+                    next_due = next_due.min(t_enter);
+                    for &m in members.iter().rev() {
+                        stage_queue[s].push_front(m);
+                    }
+                    continue;
+                }
                 let StageKind::Dist(ds) = &self.stages[s].kind else {
                     unreachable!("only distributed stages are dispatched")
                 };
@@ -612,8 +662,13 @@ impl Session {
                     Arc::new(concat_columns(&cols, scratch)?)
                 };
                 let leader = inflight[members[0]].req;
+                // Wall-clock: an order formed for a future instant (an
+                // arrival not yet due, or an expired-by-design batch
+                // window) really waits until then before hitting the
+                // wire. No-op on the simulator and for past instants.
+                self.transport.pace(t_enter);
                 let pending = ds.dispatch(
-                    &self.devices,
+                    self.transport.as_ref(),
                     &self.cfg.net,
                     &self.rates,
                     leader,
@@ -644,16 +699,37 @@ impl Session {
                 break;
             }
 
-            // ---- gather all outstanding completions ------------------
+            // ---- gather outstanding completions ----------------------
+            // Virtual time: gather *everything* before resolving (free —
+            // scheduling reads only the stamped timestamps; exactly the
+            // pre-transport behaviour). Wall clock: gather only until
+            // some stage is fully in, then resolve it — waiting for all
+            // busy stages would lock-step a real pipeline.
             let mut remaining: usize = stage_busy
                 .iter()
                 .flatten()
                 .map(|b| b.n_expected - b.got.len())
                 .sum();
             while remaining > 0 {
-                let c = self.completions.recv().map_err(|_| {
-                    Error::Fleet("completion channel closed".into())
-                })?;
+                if wall
+                    && stage_busy
+                        .iter()
+                        .flatten()
+                        .any(|b| b.got.len() >= b.n_expected)
+                {
+                    break;
+                }
+                let c = if wall && next_due.is_finite() {
+                    match self.transport.recv_deadline(next_due)? {
+                        Some(c) => c,
+                        // A deferred dispatch is due: break to the
+                        // resolve/dispatch phases (incomplete stages
+                        // stay busy and gather again next round).
+                        None => break,
+                    }
+                } else {
+                    self.transport.recv()?
+                };
                 if let Some(&s) = req_to_stage.get(&c.req) {
                     if let Some(b) = stage_busy[s].as_mut() {
                         if b.got.insert(c.task, c).is_none() {
@@ -665,9 +741,15 @@ impl Session {
                 // requests; ignore them like `drain` does.
             }
 
-            // ---- resolve every completed stage -----------------------
+            // ---- resolve every fully-gathered stage ------------------
             for s in 0..n_stages {
                 let Some(b) = stage_busy[s].take() else { continue };
+                if b.got.len() < b.n_expected {
+                    // Wall-clock eager gather: this stage is still
+                    // waiting on devices — leave it busy.
+                    stage_busy[s] = Some(b);
+                    continue;
+                }
                 let StageKind::Dist(ds) = &self.stages[s].kind else {
                     unreachable!("only distributed stages hold work")
                 };
@@ -675,12 +757,21 @@ impl Session {
                 let batch = b.members.len();
                 req_to_stage.remove(&inflight[b.members[0]].req);
                 // Adaptive mode replaces the static straggler gate with
-                // the policy's current (latency-tracked) factor.
-                let threshold_factor = self
-                    .adaptive
-                    .as_ref()
-                    .map(|a| a.threshold_factor())
-                    .unwrap_or(self.cfg.threshold_factor);
+                // the policy's current (latency-tracked) factor. On a
+                // wall-clock transport the resolve-time gate is disabled
+                // (∞): it would compare real arrival stamps against the
+                // *simulated* cost model and misclassify healthy replies
+                // as stragglers — there, the straggler gate is the
+                // transport's order deadline (reaped replies arrive as
+                // ∞; DESIGN.md §11).
+                let threshold_factor = if wall {
+                    f64::INFINITY
+                } else {
+                    self.adaptive
+                        .as_ref()
+                        .map(|a| a.threshold_factor())
+                        .unwrap_or(self.cfg.threshold_factor)
+                };
                 let expected_ms = ds.expected_ms_for(batch);
                 // Feed every gathered completion (∞ = lost reply) into
                 // the adaptive policy *before* resolution, so Lost stages
@@ -720,6 +811,12 @@ impl Session {
                 }
                 match resolved {
                     StageOutcome::Done { t_done, output, trace } => {
+                        // Wall clock: the stage is free *now* — a loss
+                        // learned from the deadline reaper (or the gap
+                        // between receipt and resolution) is real
+                        // elapsed time the pure timestamp policy cannot
+                        // see. Identity on the simulator.
+                        let t_done = self.transport.clamp_ms(t_done);
                         stage_free[s] = t_done;
                         occupancy[s].push(b.t_enter, t_done);
                         served[s] += batch;

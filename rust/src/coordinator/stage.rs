@@ -16,11 +16,12 @@ use std::sync::Arc;
 
 use crate::cdc;
 use crate::error::{Error, Result};
-use crate::fleet::{Completion, Device, NetConfig, WorkOrder};
+use crate::fleet::{Completion, NetConfig, WorkOrder};
 use crate::kernels::Scratch;
 use crate::partition::LayerPlan;
 use crate::runtime::manifest::LayerManifest;
 use crate::tensor::Tensor;
+use crate::transport::Transport;
 
 use super::policy;
 use super::LayerTrace;
@@ -127,11 +128,15 @@ impl DistStage {
         orders
     }
 
-    /// Fan one order's input out to the stage's devices at virtual time
-    /// `t_enter`, serialising compute through the per-device occupancy
-    /// ledger `device_free` (busy-until, ms). `rates` is the per-device
-    /// compute-rate mirror (MACs/ms) so heterogeneous fleets keep the
-    /// ledger consistent with the devices' own arithmetic.
+    /// Fan one order's input out to the stage's devices at entry time
+    /// `t_enter` (virtual ms on the simulator, wall ms since the serve
+    /// epoch over TCP), serialising compute through the per-device
+    /// occupancy ledger `device_free` (busy-until, ms). `rates` is the
+    /// per-device compute-rate mirror (MACs/ms) so heterogeneous fleets
+    /// keep the ledger consistent with the devices' own arithmetic (the
+    /// ledger/net maths only drives the *simulated* timing model; a
+    /// wall-clock transport carries the fields as telemetry and lets
+    /// the real devices serialise themselves).
     ///
     /// `batch` is the order's micro-batch width (DESIGN.md §10): `input`
     /// carries that many column-concatenated member activations, and
@@ -140,7 +145,7 @@ impl DistStage {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn dispatch(
         &self,
-        devices: &[Device],
+        transport: &dyn Transport,
         net: &NetConfig,
         rates: &[f64],
         req: u64,
@@ -161,7 +166,7 @@ impl DistStage {
             let start = (t_enter + req_net).max(not_before);
             device_free[*dev] =
                 start + (tasks.len() as u64 * batch as u64 * self.macs) as f64 / rates[*dev];
-            devices[*dev].dispatch(WorkOrder {
+            transport.dispatch(*dev, WorkOrder {
                 req,
                 tasks: tasks.clone(),
                 input: input.clone(),

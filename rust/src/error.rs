@@ -18,6 +18,9 @@ pub enum Error {
     Config(String),
     /// Fleet communication failure (device hung up, channel closed).
     Fleet(String),
+    /// Transport wire-protocol failure (malformed frame, socket error,
+    /// handshake mismatch) — see `transport::wire`.
+    Wire(String),
     /// IO error with path context.
     Io {
         path: String,
@@ -34,6 +37,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Fleet(m) => write!(f, "fleet error: {m}"),
+            Error::Wire(m) => write!(f, "wire error: {m}"),
             Error::Io { path, source } => write!(f, "io error: {path}: {source}"),
         }
     }

@@ -268,16 +268,24 @@ impl Drop for Device {
 /// order independent of layout, and makes `batch == 1` bit-identical to
 /// the unbatched hash — failure replay of an unbatched session is
 /// unchanged by this field existing.
-fn order_stream(device: usize, order: &WorkOrder) -> u64 {
+///
+/// Shared with `transport::worker` so a real TCP worker's intermittent
+/// drop draws replay identically to the simulated device's.
+pub(crate) fn order_stream(
+    device: usize,
+    first_task: Option<u64>,
+    batch: usize,
+    input: &Tensor,
+) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut mix = |v: u64| {
         h ^= v;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     };
     mix(device as u64);
-    mix(order.tasks.first().copied().unwrap_or(u64::MAX));
-    let b = order.batch.max(1);
-    let data = order.input.data();
+    mix(first_task.unwrap_or(u64::MAX));
+    let b = batch.max(1);
+    let data = input.data();
     let rows = data.len() / b;
     for m in 0..b {
         for r in 0..rows {
@@ -315,7 +323,15 @@ fn device_main(
             ToDevice::SetNet(n) => net = n,
             ToDevice::SetRate(r) => rate = r,
             ToDevice::Work(order) => {
-                let mut rng = Pcg32::new(seed, order_stream(cfg.id, &order));
+                let mut rng = Pcg32::new(
+                    seed,
+                    order_stream(
+                        cfg.id,
+                        order.tasks.first().copied(),
+                        order.batch,
+                        &order.input,
+                    ),
+                );
                 let dropped = failure.drops(order.req, &mut rng);
                 // Request transfer happens once per order (deterministic
                 // leg; congestion jitter is on the replies — see net.rs).

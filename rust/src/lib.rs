@@ -47,6 +47,12 @@
 //! `session.serve(&Workload::closed(inputs, 4))` — and the scenario
 //! engine ([`scenario`]) scripts time-varying fleet chaos on top; see
 //! `docs/EXPERIMENTS.md` for the full experiment book.
+//!
+//! Everything above runs over the virtual-time simulator by default;
+//! setting `SessionConfig::transport` to [`transport::TransportSpec::Tcp`]
+//! serves the same session over **real TCP worker processes**
+//! (`cdc-dnn worker`) with wall-clock timing and real process-kill
+//! failure injection — see [`transport`] and DESIGN.md §11.
 
 pub mod cdc;
 pub mod coordinator;
@@ -65,6 +71,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod testkit;
 pub mod tensor;
+pub mod transport;
 
 pub use error::{Error, Result};
 pub use tensor::Tensor;

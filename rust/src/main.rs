@@ -16,7 +16,8 @@
 //!   calibrate   simulator-vs-paper anchor table
 //!   scenarios   fleet-chaos scenario suite (synthetic model, no artifacts)
 //!   synth       materialise the synthetic artifact set at --artifacts
-//!   serve       serve a deployment file (see --deployment)
+//!   serve       serve a deployment file (see --deployment / --transport)
+//!   worker      run a standalone TCP shard-compute worker (DESIGN.md §11)
 //!   all         every experiment in order
 //!
 //! options:
@@ -26,14 +27,28 @@
 //!   --seed S           experiment seed           [default: 2021]
 //!   --quick            reduced workloads (CI smoke)
 //!   --deployment FILE  deployment JSON for `serve`
+//!
+//! serve options:
+//!   --transport M      sim | tcp (overrides the deployment file)
+//!   --workers LIST     comma-separated worker host:port list (tcp);
+//!                      empty in tcp mode spawns a loopback fleet
+//!   --rate-rps R       Poisson arrival rate       [default: 50]
+//!   --chaos-kill-ms T  loopback only: SIGKILL one worker T ms into the run
+//!   --expect-no-loss   exit non-zero if any request is lost/balked
+//!
+//! worker options:
+//!   --listen ADDR      bind address               [default: 127.0.0.1:0]
+//!   --net PROFILE      artificial reply delay: ideal|moderate|congested
+//!   --rate MACS_PER_MS artificial compute rate (RPi ≈ 83886)
 //! ```
 
 use cdc_dnn::config::load_deployment;
-use cdc_dnn::coordinator::Session;
+use cdc_dnn::coordinator::{Session, Workload};
 use cdc_dnn::exp::{self, ExpCtx};
-use cdc_dnn::metrics::Series;
+use cdc_dnn::fleet::NetConfig;
 use cdc_dnn::rng::Pcg32;
 use cdc_dnn::tensor::Tensor;
+use cdc_dnn::transport::{loopback, worker, TcpConfig, TransportSpec};
 
 fn usage() -> ! {
     // The module doc above is the single source of truth for help text.
@@ -43,8 +58,24 @@ fn usage() -> ! {
 
 const HELP: &str = "cdc-dnn — robust distributed DNN inference with CDC\n\n\
 usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
-       [--seed S] [--quick] [--deployment FILE]\n\n\
-commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve all\n";
+       [--seed S] [--quick] [--deployment FILE] [--transport sim|tcp]\n\
+       [--workers H:P,..] [--rate-rps R] [--chaos-kill-ms T]\n\
+       [--expect-no-loss] [--listen ADDR] [--net PROFILE] [--rate R]\n\n\
+commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve worker all\n";
+
+/// serve/worker options beyond the shared ExpCtx ones.
+#[derive(Default)]
+struct CliOpts {
+    deployment: Option<String>,
+    transport: Option<String>,
+    workers: Option<String>,
+    rate_rps: Option<f64>,
+    chaos_kill_ms: Option<u64>,
+    expect_no_loss: bool,
+    listen: Option<String>,
+    net: Option<String>,
+    rate: Option<f64>,
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -53,7 +84,7 @@ fn main() {
     }
     let cmd = args[0].clone();
     let mut ctx = ExpCtx::new("artifacts");
-    let mut deployment: Option<String> = None;
+    let mut opts = CliOpts::default();
     let mut i = 1;
     while i < args.len() {
         let need = |i: usize| {
@@ -90,7 +121,48 @@ fn main() {
                 i += 1;
             }
             "--deployment" => {
-                deployment = Some(need(i));
+                opts.deployment = Some(need(i));
+                i += 2;
+            }
+            "--transport" => {
+                opts.transport = Some(need(i));
+                i += 2;
+            }
+            "--workers" => {
+                opts.workers = Some(need(i));
+                i += 2;
+            }
+            "--rate-rps" => {
+                opts.rate_rps = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --rate-rps");
+                    std::process::exit(2)
+                }));
+                i += 2;
+            }
+            "--chaos-kill-ms" => {
+                opts.chaos_kill_ms = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --chaos-kill-ms");
+                    std::process::exit(2)
+                }));
+                i += 2;
+            }
+            "--expect-no-loss" => {
+                opts.expect_no_loss = true;
+                i += 1;
+            }
+            "--listen" => {
+                opts.listen = Some(need(i));
+                i += 2;
+            }
+            "--net" => {
+                opts.net = Some(need(i));
+                i += 2;
+            }
+            "--rate" => {
+                opts.rate = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --rate");
+                    std::process::exit(2)
+                }));
                 i += 2;
             }
             "-h" | "--help" => usage(),
@@ -114,7 +186,8 @@ fn main() {
         "ablate" => exp::ablate::run(&ctx),
         "scenarios" => exp::scenarios::run(&ctx).map(|_| ()),
         "synth" => synth_artifacts(&ctx),
-        "serve" => serve(&ctx, deployment.as_deref()),
+        "serve" => serve(&ctx, &opts),
+        "worker" => run_worker(&ctx, &opts),
         "all" => run_all(&ctx),
         _ => {
             eprintln!("unknown command {cmd}");
@@ -156,48 +229,158 @@ fn synth_artifacts(ctx: &ExpCtx) -> cdc_dnn::Result<()> {
     Ok(())
 }
 
-/// Serve a deployment file: run `--requests` single-batch inferences with
-/// random inputs and report the latency distribution and loss statistics.
-fn serve(ctx: &ExpCtx, deployment: Option<&str>) -> cdc_dnn::Result<()> {
+/// Serve a deployment file: drive a Poisson arrival stream through the
+/// pipelined engine (`Session::serve`) and report throughput + latency.
+/// `--transport tcp` runs the same session over real TCP worker
+/// processes — spawning a loopback fleet when no `--workers` are given —
+/// with wall-clock timing; `--transport sim` (default) keeps the
+/// virtual-time simulator.
+fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
+    let deployment = opts.deployment.as_deref();
     let path = deployment.unwrap_or("configs/lenet5_cdc.json");
-    let cfg = load_deployment(std::path::Path::new(path))?;
+    let mut cfg = load_deployment(std::path::Path::new(path))?;
+
+    // --transport / --workers override the deployment file.
+    match opts.transport.as_deref() {
+        None => {}
+        Some("sim") => cfg.transport = TransportSpec::Sim,
+        Some("tcp") => {
+            if !matches!(cfg.transport, TransportSpec::Tcp(_)) {
+                cfg.transport = TransportSpec::Tcp(TcpConfig::default());
+            }
+        }
+        Some(other) => {
+            return Err(cdc_dnn::Error::Config(format!(
+                "unknown --transport {other:?} (want sim | tcp)"
+            )))
+        }
+    }
+    if let Some(list) = opts.workers.as_deref() {
+        // Listing worker addresses is an unambiguous request for real
+        // execution: silently simulating against them would be a trap.
+        if opts.transport.as_deref() == Some("sim") {
+            return Err(cdc_dnn::Error::Config(
+                "--workers conflicts with --transport sim (worker \
+                 addresses mean tcp)"
+                    .into(),
+            ));
+        }
+        if !matches!(cfg.transport, TransportSpec::Tcp(_)) {
+            cfg.transport = TransportSpec::Tcp(TcpConfig::default());
+        }
+        if let TransportSpec::Tcp(tcp) = &mut cfg.transport {
+            tcp.workers = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
+    }
+
+    // tcp with no worker addresses: spawn a loopback fleet of child
+    // worker processes (this binary, `worker` subcommand), one per
+    // planned device. Held until the report is printed.
+    let mut fleet: Option<loopback::LoopbackFleet> = None;
+    if let TransportSpec::Tcp(tcp) = &mut cfg.transport {
+        if tcp.workers.is_empty() {
+            let n = cfg.planned_devices();
+            println!("spawning {n} loopback workers…");
+            let f = loopback::LoopbackFleet::spawn(None, &ctx.artifacts, n, None)?;
+            tcp.workers = f.addrs();
+            fleet = Some(f);
+        }
+    }
+
     println!(
-        "serving {} on {} data devices (+redundancy)…",
-        cfg.model, cfg.n_devices
+        "serving {} on {} data devices (+redundancy) over {}…",
+        cfg.model,
+        cfg.n_devices,
+        cfg.transport.mode()
     );
     let input_shape = {
         let manifest = cdc_dnn::runtime::Manifest::load(&ctx.artifacts)?;
         manifest.model(&cfg.model)?.input_shape.clone()
     };
+    let seed = ctx.seed;
     let mut session = Session::start(&ctx.artifacts, cfg)?;
-    let mut rng = Pcg32::seeded(ctx.seed);
-    let mut lat = Series::new();
-    let mut lost = 0u64;
-    let mut recovered = 0u64;
-    let n = ctx.n_requests();
-    let t0 = std::time::Instant::now();
-    for _ in 0..n {
-        let x = Tensor::randn(input_shape.clone(), &mut rng);
-        match session.infer(&x) {
-            Ok(t) => {
-                lat.record(t.total_ms);
-                if t.any_recovery {
-                    recovered += 1;
-                }
+
+    // Chaos injection (loopback only): SIGKILL one worker mid-run; the
+    // CDC arm must lose nothing.
+    if let Some(t) = opts.chaos_kill_ms {
+        match &fleet {
+            Some(f) => {
+                let victim = if f.len() > 1 { 1 } else { 0 };
+                println!("chaos: killing loopback worker {victim} at t+{t}ms");
+                let _ = f.kill_after(victim, t);
             }
-            Err(_) => {
-                lost += 1;
-                session.drain();
+            None => {
+                return Err(cdc_dnn::Error::Config(
+                    "--chaos-kill-ms needs a spawned loopback fleet \
+                     (tcp transport without --workers)"
+                        .into(),
+                ))
             }
         }
     }
+
+    let n = ctx.n_requests();
+    let mut rng = Pcg32::seeded(seed);
+    let inputs: Vec<Tensor> = (0..n)
+        .map(|_| Tensor::randn(input_shape.clone(), &mut rng))
+        .collect();
+    let rate = opts.rate_rps.unwrap_or(50.0);
+    let t0 = std::time::Instant::now();
+    let report = session.serve(&Workload::poisson(inputs, rate, seed))?;
     let wall = t0.elapsed().as_secs_f64();
-    let s = lat.summary();
-    println!("requests: {n}  lost: {lost}  recovered: {recovered}");
-    println!("simulated latency: {}", s.line());
+
+    let clock = if session.transport_label() == "tcp" {
+        "wall"
+    } else {
+        "virtual"
+    };
+    let lat = report.latency.summary();
     println!(
-        "harness wall-clock: {wall:.2}s ({:.1} req/s through real PJRT compute)",
-        n as f64 / wall
+        "transport={} arrivals=poisson@{rate}rps",
+        session.transport_label()
     );
+    println!("{}", report.line());
+    println!("{clock}-clock latency: {}", lat.line());
+    println!(
+        "{clock}-clock throughput: {:.1} rps (harness wall total {wall:.2}s)",
+        report.rps()
+    );
+    let lost = report.failures.len() as u64 + report.dropped;
+    if opts.expect_no_loss && lost > 0 {
+        return Err(cdc_dnn::Error::Fleet(format!(
+            "--expect-no-loss: {} lost, {} balked",
+            report.failures.len(),
+            report.dropped
+        )));
+    }
+    drop(session); // disconnect before the fleet reaps its children
+    drop(fleet);
     Ok(())
+}
+
+/// Run a standalone TCP shard-compute worker until killed (or told to
+/// shut down over the wire).
+fn run_worker(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
+    let mut w = worker::WorkerOptions::new(&ctx.artifacts);
+    if let Some(l) = &opts.listen {
+        w.listen = l.clone();
+    }
+    w.net = match opts.net.as_deref() {
+        None => None,
+        Some("ideal") => Some(NetConfig::ideal()),
+        Some("moderate") => Some(NetConfig::moderate()),
+        Some("congested") => Some(NetConfig::congested()),
+        Some(other) => {
+            return Err(cdc_dnn::Error::Config(format!(
+                "unknown --net profile {other:?} (want ideal | moderate | congested)"
+            )))
+        }
+    };
+    w.rate_macs_per_ms = opts.rate;
+    worker::run(&w)
 }

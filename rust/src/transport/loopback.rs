@@ -1,0 +1,185 @@
+//! Loopback worker fleet: N `cdc-dnn worker` **child processes** on
+//! 127.0.0.1, for driving the full serving engine over real sockets
+//! with real process-kill failure injection.
+//!
+//! Each worker is spawned with an ephemeral port and its bound address
+//! parsed from the `cdc-dnn worker listening on …` stdout line. The
+//! children are wrapped in `Arc<Mutex<Child>>` so a chaos timer thread
+//! ([`LoopbackFleet::kill_after`]) can SIGKILL one mid-run while the
+//! coordinator blocks in `Session::serve` — the TCP transport's reader
+//! threads see the connection die and synthesise the losses CDC then
+//! recovers from. Dropping the fleet kills and reaps every child.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+use super::worker::LISTENING_PREFIX;
+use super::TcpConfig;
+
+/// One spawned worker child process.
+pub struct LoopbackWorker {
+    child: Arc<Mutex<Child>>,
+    /// The worker's bound `host:port`.
+    pub addr: String,
+    /// Kept open so the child's stdout pipe never blocks it.
+    _stdout: Option<BufReader<ChildStdout>>,
+}
+
+/// A fleet of loopback worker processes.
+pub struct LoopbackFleet {
+    workers: Vec<LoopbackWorker>,
+}
+
+/// Resolve the worker binary: `CDC_DNN_WORKER_BIN` if set (integration
+/// tests and benches point it — or the `bin` argument — at
+/// `CARGO_BIN_EXE_cdc-dnn`), else the current executable (the `cdc-dnn`
+/// binary spawning its own loopback fleet).
+pub fn default_worker_bin() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("CDC_DNN_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().map_err(|e| Error::io("current_exe", e))
+}
+
+impl LoopbackFleet {
+    /// Spawn `n` workers of `bin` (None = [`default_worker_bin`]) over
+    /// the artifact set at `artifacts`. Optional `rate` enables
+    /// RPi-style compute emulation (MACs/ms) on every worker.
+    pub fn spawn(
+        bin: Option<&Path>,
+        artifacts: &Path,
+        n: usize,
+        rate_macs_per_ms: Option<f64>,
+    ) -> Result<LoopbackFleet> {
+        let default_bin;
+        let bin = match bin {
+            Some(b) => b,
+            None => {
+                default_bin = default_worker_bin()?;
+                &default_bin
+            }
+        };
+        // Build the fleet incrementally so an error mid-spawn drops the
+        // partial fleet — Drop kills and reaps every child spawned so
+        // far (no orphan worker processes on failure).
+        let mut fleet = LoopbackFleet { workers: Vec::with_capacity(n) };
+        for i in 0..n {
+            let mut cmd = Command::new(bin);
+            cmd.arg("worker")
+                .arg("--listen")
+                .arg("127.0.0.1:0")
+                .arg("--artifacts")
+                .arg(artifacts)
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit());
+            if let Some(r) = rate_macs_per_ms {
+                cmd.arg("--rate").arg(format!("{r}"));
+            }
+            let mut child = cmd
+                .spawn()
+                .map_err(|e| Error::Fleet(format!("spawn worker {i} ({}): {e}", bin.display())))?;
+            let stdout = child
+                .stdout
+                .take()
+                .ok_or_else(|| Error::Fleet(format!("worker {i}: no stdout pipe")))?;
+            let mut reader = BufReader::new(stdout);
+            let addr = match read_listen_line(&mut reader) {
+                Ok(a) => a,
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(e);
+                }
+            };
+            fleet.workers.push(LoopbackWorker {
+                child: Arc::new(Mutex::new(child)),
+                addr,
+                _stdout: Some(reader),
+            });
+        }
+        Ok(fleet)
+    }
+
+    /// Number of workers (alive or killed).
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// True when the fleet is empty.
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Worker addresses in spawn (= device) order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.addr.clone()).collect()
+    }
+
+    /// A [`TcpConfig`] pointing at this fleet (default deadlines).
+    pub fn tcp_config(&self) -> TcpConfig {
+        TcpConfig { workers: self.addrs(), ..TcpConfig::default() }
+    }
+
+    /// SIGKILL worker `i` now (and reap it).
+    pub fn kill(&self, i: usize) -> Result<()> {
+        let w = self
+            .workers
+            .get(i)
+            .ok_or_else(|| Error::Config(format!("no worker {i}")))?;
+        let mut child = w.child.lock().unwrap_or_else(|e| e.into_inner());
+        child
+            .kill()
+            .map_err(|e| Error::Fleet(format!("kill worker {i}: {e}")))?;
+        let _ = child.wait();
+        Ok(())
+    }
+
+    /// SIGKILL worker `i` from a timer thread after `delay_ms` — the
+    /// chaos injector used while the coordinator blocks in
+    /// `Session::serve`. Join the handle to synchronise.
+    pub fn kill_after(&self, i: usize, delay_ms: u64) -> std::thread::JoinHandle<()> {
+        let child = self.workers[i].child.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(delay_ms));
+            let mut c = child.lock().unwrap_or_else(|e| e.into_inner());
+            if c.kill().is_ok() {
+                let _ = c.wait();
+            }
+        })
+    }
+}
+
+impl Drop for LoopbackFleet {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let mut c = w.child.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Read stdout lines until the worker announces its bound address.
+fn read_listen_line(reader: &mut BufReader<ChildStdout>) -> Result<String> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| Error::io("worker stdout", e))?;
+        if n == 0 {
+            return Err(Error::Fleet(
+                "worker exited before announcing its address".into(),
+            ));
+        }
+        if let Some(addr) = line.trim_end().strip_prefix(LISTENING_PREFIX) {
+            return Ok(addr.to_string());
+        }
+    }
+}

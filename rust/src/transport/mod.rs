@@ -1,0 +1,169 @@
+//! Transport subsystem: how the coordinator reaches its fleet
+//! (DESIGN.md §11).
+//!
+//! Every PR-1..4 experiment executed over the **virtual-time simulator**
+//! — device threads in the coordinator process stamping simulated
+//! arrival times. This module puts that fleet behind a [`Transport`]
+//! trait and adds a second, **real-execution** implementation:
+//!
+//! * [`SimTransport`] — the adapter over the in-process device-thread
+//!   fleet. Dispatch/recv are the exact same channels as before, and
+//!   every wall-clock hook is a no-op, so sim-mode serving is
+//!   bit-identical to the pre-transport engine.
+//! * [`TcpTransport`] — per-device persistent TCP connections speaking
+//!   the length-prefixed [`wire`] protocol to standalone `cdc-dnn
+//!   worker` processes. Completions are stamped with **wall-clock**
+//!   receipt time; a reply-reaper thread synthesises a lost completion
+//!   (`t_arrival = ∞`) for any order still outstanding past its
+//!   per-order deadline, and a connection death (worker killed
+//!   mid-request) synthesises losses for everything in flight on it —
+//!   so the serve engine's invariant ("every dispatched task eventually
+//!   yields a completion") holds over real sockets with real process
+//!   failures.
+//!
+//! The serving engine (`coordinator::serve`) is transport-generic: the
+//! same pipelining, micro-batching, adaptive-policy and CDC-parity
+//! machinery drives either implementation. The [`loopback`] harness
+//! spawns N worker child processes on 127.0.0.1 and is what the
+//! integration tests and the `transport_loopback` bench use to exercise
+//! real process-kill failure injection.
+
+pub mod loopback;
+pub mod sim;
+pub mod tcp;
+pub mod wire;
+pub mod worker;
+
+use crate::error::Result;
+use crate::fleet::{Completion, FailurePlan, NetConfig, TaskDef, WorkOrder};
+
+pub use sim::SimTransport;
+pub use tcp::TcpTransport;
+
+/// How the coordinator reaches its devices. All methods take `&self`:
+/// implementations synchronise internally (channels / mutexed socket
+/// writers), which lets the serve loop hold immutable borrows of the
+/// stage plan while dispatching and gathering.
+pub trait Transport: Send {
+    /// Short tag for reports ("sim" | "tcp").
+    fn label(&self) -> &'static str;
+
+    /// True when completions are stamped with wall-clock time (the
+    /// serve engine then paces dispatches and gathers eagerly instead
+    /// of round-synchronously).
+    fn wall_clock(&self) -> bool;
+
+    /// Milliseconds since the current serve epoch (wall-clock
+    /// transports; the simulator returns 0 — its time comes from the
+    /// completions themselves).
+    fn now_ms(&self) -> f64 {
+        0.0
+    }
+
+    /// Mark the start of a `Session::serve` run: wall-clock transports
+    /// reset their epoch and clear orphaned in-flight state.
+    fn begin_serve(&self) {}
+
+    /// Block until the transport clock reaches `t_ms` (no-op for the
+    /// simulator — virtual time needs no waiting).
+    fn pace(&self, _t_ms: f64) {}
+
+    /// Clamp a virtual entry timestamp to "not in the past" on the
+    /// transport clock (identity for the simulator).
+    fn clamp_ms(&self, t_ms: f64) -> f64 {
+        t_ms
+    }
+
+    /// Number of devices this transport reaches.
+    fn n_devices(&self) -> usize;
+
+    /// Install tasks (weights included) on a device.
+    fn deploy(&self, device: usize, tasks: Vec<TaskDef>) -> Result<()>;
+
+    /// Remove tasks from a device.
+    fn undeploy(&self, device: usize, task_ids: Vec<u64>) -> Result<()>;
+
+    /// Dispatch one work order. Must never fail just because the device
+    /// is dead: a dead device's tasks yield synthesised lost
+    /// completions instead, exactly like the simulator's `∞` arrivals.
+    fn dispatch(&self, device: usize, order: WorkOrder) -> Result<()>;
+
+    /// Block for the next completion. Every dispatched task eventually
+    /// produces exactly one (real reply, worker error, deadline
+    /// timeout, or connection death).
+    fn recv(&self) -> Result<Completion>;
+
+    /// Wall-clock transports: block for the next completion, but give
+    /// up once the transport clock reaches `until_ms` (`Ok(None)`) —
+    /// the serve engine's wake-up for dispatches it deferred to the
+    /// future. The simulator never defers, so its default blocks like
+    /// [`Transport::recv`].
+    fn recv_deadline(&self, _until_ms: f64) -> Result<Option<Completion>> {
+        self.recv().map(Some)
+    }
+
+    /// Non-blocking completion poll (`Session::drain`).
+    fn try_recv(&self) -> Option<Completion>;
+
+    /// Swap a device's failure plan (sim: the timing model; tcp: the
+    /// worker's silent-drop emulation).
+    fn set_failure(&self, device: usize, plan: FailurePlan) -> Result<()>;
+
+    /// Swap a device's network profile (sim: the timing model; tcp: the
+    /// worker's artificial reply delay).
+    fn set_net(&self, device: usize, net: NetConfig) -> Result<()>;
+
+    /// Change a device's compute rate in MACs/ms (sim: the timing
+    /// model; tcp: the worker's artificial compute delay).
+    fn set_rate(&self, device: usize, macs_per_ms: f64) -> Result<()>;
+}
+
+/// TCP transport parameters (the deployment file's `transport` section).
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// Worker addresses (`host:port`), one per device in device order.
+    /// May list more workers than the session needs; extras stay idle.
+    /// Empty + the CLI's `--transport tcp` means "spawn a loopback
+    /// fleet automatically".
+    pub workers: Vec<String>,
+    /// Wall-clock straggler gate: an order's replies not received this
+    /// many ms after dispatch are treated as lost (CDC substitutes from
+    /// parity — the paper's zero-recovery-latency path, on real time).
+    pub order_deadline_ms: f64,
+    /// Per-connection handshake/connect timeout.
+    pub connect_timeout_ms: u64,
+    /// Reply-reaper poll interval.
+    pub reaper_tick_ms: u64,
+}
+
+impl Default for TcpConfig {
+    fn default() -> TcpConfig {
+        TcpConfig {
+            workers: Vec::new(),
+            order_deadline_ms: 2_000.0,
+            connect_timeout_ms: 5_000,
+            reaper_tick_ms: 5,
+        }
+    }
+}
+
+/// Which transport a session deploys over (`SessionConfig::transport`).
+#[derive(Debug, Clone, Default)]
+pub enum TransportSpec {
+    /// The in-process virtual-time simulator (the default; bit-identical
+    /// to the pre-transport engine).
+    #[default]
+    Sim,
+    /// Real execution over TCP worker processes.
+    Tcp(TcpConfig),
+}
+
+impl TransportSpec {
+    /// Short tag for logs/serialisation.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            TransportSpec::Sim => "sim",
+            TransportSpec::Tcp(_) => "tcp",
+        }
+    }
+}

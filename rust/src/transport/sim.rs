@@ -1,0 +1,89 @@
+//! The virtual-time transport: an adapter over the in-process
+//! device-thread fleet (`fleet::Device`).
+//!
+//! This is the exact dispatch/recv machinery the coordinator used
+//! before the transport trait existed — the same device threads, the
+//! same completion channel — moved behind [`Transport`]. Every
+//! wall-clock hook is the trait's no-op default, so a sim-mode session
+//! schedules, draws and merges **bit-identically** to the PR-4 engine
+//! (the serve-pipeline and batching determinism tests are the guard).
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::error::{Error, Result};
+use crate::fleet::{Completion, Device, FailurePlan, NetConfig, TaskDef, WorkOrder};
+
+use super::Transport;
+
+/// Virtual-time transport over in-process device threads.
+pub struct SimTransport {
+    devices: Vec<Device>,
+    rx: Receiver<Completion>,
+    /// Keeps the channel open even if every device thread exits.
+    _tx: Sender<Completion>,
+}
+
+impl SimTransport {
+    /// Wrap a spawned fleet and its completion channel.
+    pub fn new(
+        devices: Vec<Device>,
+        rx: Receiver<Completion>,
+        tx: Sender<Completion>,
+    ) -> SimTransport {
+        SimTransport { devices, rx, _tx: tx }
+    }
+
+    fn device(&self, id: usize) -> Result<&Device> {
+        self.devices
+            .get(id)
+            .ok_or_else(|| Error::Config(format!("no device {id}")))
+    }
+}
+
+impl Transport for SimTransport {
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+
+    fn wall_clock(&self) -> bool {
+        false
+    }
+
+    fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn deploy(&self, device: usize, tasks: Vec<TaskDef>) -> Result<()> {
+        self.device(device)?.deploy(tasks)
+    }
+
+    fn undeploy(&self, device: usize, task_ids: Vec<u64>) -> Result<()> {
+        self.device(device)?.undeploy(task_ids)
+    }
+
+    fn dispatch(&self, device: usize, order: WorkOrder) -> Result<()> {
+        self.device(device)?.dispatch(order)
+    }
+
+    fn recv(&self) -> Result<Completion> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Fleet("completion channel closed".into()))
+    }
+
+    fn try_recv(&self) -> Option<Completion> {
+        self.rx.try_recv().ok()
+    }
+
+    fn set_failure(&self, device: usize, plan: FailurePlan) -> Result<()> {
+        self.device(device)?.set_failure(plan)
+    }
+
+    fn set_net(&self, device: usize, net: NetConfig) -> Result<()> {
+        self.device(device)?.set_net(net)
+    }
+
+    fn set_rate(&self, device: usize, macs_per_ms: f64) -> Result<()> {
+        self.device(device)?.set_rate(macs_per_ms)
+    }
+}

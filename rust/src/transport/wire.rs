@@ -1,0 +1,601 @@
+//! Length-prefixed binary wire protocol for the TCP transport.
+//!
+//! Every message is one **frame**:
+//!
+//! ```text
+//! [kind: u8] [len: u32 LE] [payload: len bytes]
+//! ```
+//!
+//! Payload fields are little-endian scalars, UTF-8 strings with a u16
+//! length prefix, and tensors as `rank:u8, dims:u32×rank, data:f32-LE`.
+//! The codec is hand-rolled (zero external deps) and **hardened**:
+//! every read is bounds-checked against the declared payload, frame
+//! lengths are capped at [`MAX_FRAME_LEN`] *before* any allocation,
+//! tensor element counts are capped at [`MAX_TENSOR_ELEMS`] and must
+//! exactly match the bytes on the wire, and trailing payload bytes are
+//! rejected. Malformed input of any shape produces an [`Error::Wire`]
+//! value — never a panic, never an attacker-sized allocation.
+//!
+//! Frame kinds (coordinator → worker unless noted):
+//!
+//! | kind | frame       | payload                                        |
+//! |------|-------------|------------------------------------------------|
+//! | 0x01 | Hello       | magic u32, proto u16, seed u64, device u32     |
+//! | 0x02 | HelloAck    | proto u16 (worker → coordinator)               |
+//! | 0x03 | Deploy      | n u32, n × task(id, artifact, macs, reply_bytes, w, b) |
+//! | 0x04 | Undeploy    | n u32, n × id u64                              |
+//! | 0x05 | Work        | req u64, n u32, n × task u64, batch u32, input |
+//! | 0x06 | SetFailure  | tag u8 (+ u64 / f64)                           |
+//! | 0x07 | SetNet      | enabled u8, 8 × f64 NetConfig fields           |
+//! | 0x08 | SetRate     | macs_per_ms f64                                |
+//! | 0x09 | Shutdown    | (empty)                                        |
+//! | 0x0A | Reply       | req u64, task u64, ok u8 [, tensor] (worker →) |
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::fleet::{FailurePlan, NetConfig, TaskDef};
+use crate::tensor::Tensor;
+
+/// Protocol version; bumped on any wire-format change. The handshake
+/// rejects a peer speaking a different version.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Handshake magic ("CDCW" little-endian).
+pub const MAGIC: u32 = 0x5743_4443;
+
+/// Hard cap on one frame's payload (256 MiB) — enforced before any
+/// allocation, so a hostile length prefix cannot balloon memory. Sized
+/// for one task's weight shard (the coordinator deploys one task per
+/// frame): a whole unsplit 4096×9216 fc layer is ~151 MiB.
+pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+
+/// Hard cap on one wire tensor's element count (64M f32 = 256 MiB).
+pub const MAX_TENSOR_ELEMS: u64 = 1 << 26;
+
+/// Max tensor rank on the wire.
+pub const MAX_TENSOR_RANK: u8 = 8;
+
+/// Max tasks in one Deploy/Undeploy/Work frame.
+pub const MAX_TASKS: u32 = 65_536;
+
+const K_HELLO: u8 = 0x01;
+const K_HELLO_ACK: u8 = 0x02;
+const K_DEPLOY: u8 = 0x03;
+const K_UNDEPLOY: u8 = 0x04;
+const K_WORK: u8 = 0x05;
+const K_SET_FAILURE: u8 = 0x06;
+const K_SET_NET: u8 = 0x07;
+const K_SET_RATE: u8 = 0x08;
+const K_SHUTDOWN: u8 = 0x09;
+const K_REPLY: u8 = 0x0a;
+
+/// One deployed task as carried by a Deploy frame (the on-wire twin of
+/// [`TaskDef`], with owned weight tensors).
+#[derive(Debug, Clone)]
+pub struct WireTask {
+    /// Session-unique task id.
+    pub id: u64,
+    /// Artifact name the worker executes for this task.
+    pub artifact: String,
+    /// Cost-model MACs per batch member (drives worker-side emulation).
+    pub macs: u64,
+    /// Reply payload bytes per batch member (drives emulation).
+    pub reply_bytes: u64,
+    /// Weight shard.
+    pub w: Tensor,
+    /// Bias shard.
+    pub b: Tensor,
+}
+
+/// A decoded frame (owned payload).
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// Coordinator handshake: session seed + the device id this
+    /// connection plays in the fleet.
+    Hello {
+        /// Protocol version of the coordinator.
+        proto: u16,
+        /// Session seed (drives the worker's content-addressed draws).
+        seed: u64,
+        /// Device id assigned to this worker.
+        device: u32,
+    },
+    /// Worker handshake reply.
+    HelloAck {
+        /// Protocol version of the worker.
+        proto: u16,
+    },
+    /// Install tasks (weights included) on the worker.
+    Deploy {
+        /// Tasks to install (id collisions overwrite).
+        tasks: Vec<WireTask>,
+    },
+    /// Remove tasks from the worker.
+    Undeploy {
+        /// Task ids to remove.
+        ids: Vec<u64>,
+    },
+    /// Execute one work order (the wire twin of `fleet::WorkOrder`).
+    Work {
+        /// Batch-leader request id.
+        req: u64,
+        /// Task ids to run, in order.
+        tasks: Vec<u64>,
+        /// Cross-request micro-batch width carried by `input`.
+        batch: u32,
+        /// Activation input, `(k, batch)` column-concatenated.
+        input: Tensor,
+    },
+    /// Swap the worker's failure plan (drop emulation).
+    SetFailure {
+        /// The plan; `Intermittent`/`PermanentAt` make the worker stay
+        /// silent on affected replies (real-loss semantics).
+        plan: FailurePlan,
+    },
+    /// Enable/disable worker-side artificial reply delay.
+    SetNet {
+        /// When false, the profile is cleared (no artificial delay).
+        enabled: bool,
+        /// Delay profile sampled per reply when enabled.
+        net: NetConfig,
+    },
+    /// Artificial compute-rate emulation (MACs/ms); non-finite or ≤ 0
+    /// disables it.
+    SetRate {
+        /// Emulated device rate.
+        macs_per_ms: f64,
+    },
+    /// Ask the worker process to exit cleanly.
+    Shutdown,
+    /// One task's result (worker → coordinator). `result: None` means
+    /// the worker failed to execute (unknown task / shape error).
+    Reply {
+        /// Request id echoed from the Work frame.
+        req: u64,
+        /// Task id echoed from the Work frame.
+        task: u64,
+        /// The shard output, absent on worker-side failure.
+        result: Option<Tensor>,
+    },
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn frame(kind: u8) -> Enc {
+        // kind + length placeholder; patched in finish().
+        Enc { buf: vec![kind, 0, 0, 0, 0] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        let bytes = s.as_bytes();
+        // Always-on: a silently truncated length prefix would corrupt
+        // every following byte of the frame.
+        assert!(bytes.len() <= u16::MAX as usize, "wire string too long");
+        self.u16(bytes.len() as u16);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        let shape = t.shape();
+        assert!(
+            shape.len() <= MAX_TENSOR_RANK as usize,
+            "wire tensor rank {} exceeds cap",
+            shape.len()
+        );
+        self.u8(shape.len() as u8);
+        for &d in shape {
+            self.u32(d as u32);
+        }
+        for &v in t.data() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let len = self.buf.len() - 5;
+        // Always-on: an encoder producing what the decoder rejects would
+        // kill the connection with a misleading symptom (and ≥ 4 GiB
+        // would wrap the u32 prefix, corrupting the stream). Callers
+        // shipping user-sized payloads (deploy) pre-check and surface a
+        // proper Error before encoding.
+        assert!(
+            len as u64 <= MAX_FRAME_LEN as u64,
+            "encoded frame of {len} bytes exceeds the wire cap {MAX_FRAME_LEN}"
+        );
+        self.buf[1..5].copy_from_slice(&(len as u32).to_le_bytes());
+        self.buf
+    }
+}
+
+/// Encode a Hello handshake frame.
+pub fn hello(seed: u64, device: u32) -> Vec<u8> {
+    let mut e = Enc::frame(K_HELLO);
+    e.u32(MAGIC);
+    e.u16(PROTO_VERSION);
+    e.u64(seed);
+    e.u32(device);
+    e.finish()
+}
+
+/// Encode a HelloAck handshake reply.
+pub fn hello_ack() -> Vec<u8> {
+    let mut e = Enc::frame(K_HELLO_ACK);
+    e.u16(PROTO_VERSION);
+    e.finish()
+}
+
+/// Encode a Deploy frame from coordinator-side task definitions (the
+/// `Arc`'d weight shards are serialised by value).
+pub fn deploy(tasks: &[TaskDef]) -> Vec<u8> {
+    let mut e = Enc::frame(K_DEPLOY);
+    e.u32(tasks.len() as u32);
+    for t in tasks {
+        e.u64(t.id);
+        e.str(&t.artifact);
+        e.u64(t.macs);
+        e.u64(t.reply_bytes);
+        e.tensor(t.w.as_ref());
+        e.tensor(t.b.as_ref());
+    }
+    e.finish()
+}
+
+/// Encode an Undeploy frame.
+pub fn undeploy(ids: &[u64]) -> Vec<u8> {
+    let mut e = Enc::frame(K_UNDEPLOY);
+    e.u32(ids.len() as u32);
+    for &id in ids {
+        e.u64(id);
+    }
+    e.finish()
+}
+
+/// Encode a Work frame (the input tensor is borrowed — dispatch never
+/// clones the activation payload to serialise it).
+pub fn work(req: u64, tasks: &[u64], batch: usize, input: &Tensor) -> Vec<u8> {
+    let mut e = Enc::frame(K_WORK);
+    e.u64(req);
+    e.u32(tasks.len() as u32);
+    for &t in tasks {
+        e.u64(t);
+    }
+    e.u32(batch.max(1) as u32);
+    e.tensor(input);
+    e.finish()
+}
+
+/// Encode a SetFailure frame.
+pub fn set_failure(plan: &FailurePlan) -> Vec<u8> {
+    let mut e = Enc::frame(K_SET_FAILURE);
+    match plan {
+        FailurePlan::None => e.u8(0),
+        FailurePlan::PermanentAt(at) => {
+            e.u8(1);
+            e.u64(*at);
+        }
+        FailurePlan::Intermittent(p) => {
+            e.u8(2);
+            e.f64(*p);
+        }
+    }
+    e.finish()
+}
+
+/// Encode a SetNet frame.
+pub fn set_net(enabled: bool, net: &NetConfig) -> Vec<u8> {
+    let mut e = Enc::frame(K_SET_NET);
+    e.u8(enabled as u8);
+    e.f64(net.base_ms);
+    e.f64(net.bandwidth_mbps);
+    e.f64(net.p_fast);
+    e.f64(net.lognorm_mu);
+    e.f64(net.lognorm_sigma);
+    e.f64(net.pareto_xm);
+    e.f64(net.pareto_alpha);
+    e.f64(net.max_ms);
+    e.finish()
+}
+
+/// Encode a SetRate frame.
+pub fn set_rate(macs_per_ms: f64) -> Vec<u8> {
+    let mut e = Enc::frame(K_SET_RATE);
+    e.f64(macs_per_ms);
+    e.finish()
+}
+
+/// Encode a Shutdown frame.
+pub fn shutdown() -> Vec<u8> {
+    Enc::frame(K_SHUTDOWN).finish()
+}
+
+/// Encode a Reply frame (`None` = worker-side execution failure).
+pub fn reply(req: u64, task: u64, result: Option<&Tensor>) -> Vec<u8> {
+    let mut e = Enc::frame(K_REPLY);
+    e.u64(req);
+    e.u64(task);
+    match result {
+        Some(t) => {
+            e.u8(1);
+            e.tensor(t);
+        }
+        None => e.u8(0),
+    }
+    e.finish()
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Wire(format!(
+                "truncated payload: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Wire("non-UTF-8 string on the wire".into()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let rank = self.u8()?;
+        if rank > MAX_TENSOR_RANK {
+            return Err(Error::Wire(format!("tensor rank {rank} exceeds cap")));
+        }
+        let mut shape = Vec::with_capacity(rank as usize);
+        let mut elems: u64 = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as u64;
+            elems = elems.saturating_mul(d);
+            if elems > MAX_TENSOR_ELEMS {
+                return Err(Error::Wire(format!(
+                    "tensor of ≥ {elems} elements exceeds cap {MAX_TENSOR_ELEMS}"
+                )));
+            }
+            shape.push(d as usize);
+        }
+        let n = elems as usize;
+        // Verify the bytes exist on the wire *before* allocating.
+        let bytes = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Tensor::new(shape, data)
+            .map_err(|e| Error::Wire(format!("tensor on the wire: {e}")))
+    }
+
+    /// Read a `u32` element count, bounds-checked against both an
+    /// explicit cap and the bytes actually present (`min_elem_bytes`
+    /// per element), before any allocation.
+    fn count(&mut self, cap: u32, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()?;
+        if n > cap {
+            return Err(Error::Wire(format!("count {n} exceeds cap {cap}")));
+        }
+        let need = (n as usize).saturating_mul(min_elem_bytes);
+        if self.remaining() < need {
+            return Err(Error::Wire(format!(
+                "count {n} needs ≥ {need} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Wire(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame from its kind byte and payload.
+pub fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
+    let mut d = Dec::new(payload);
+    let frame = match kind {
+        K_HELLO => {
+            let magic = d.u32()?;
+            if magic != MAGIC {
+                return Err(Error::Wire(format!("bad handshake magic {magic:#x}")));
+            }
+            Frame::Hello { proto: d.u16()?, seed: d.u64()?, device: d.u32()? }
+        }
+        K_HELLO_ACK => Frame::HelloAck { proto: d.u16()? },
+        K_DEPLOY => {
+            // Each task is ≥ 8+2+8+8 + 2×(1 byte rank) bytes.
+            let n = d.count(MAX_TASKS, 28)?;
+            let mut tasks = Vec::with_capacity(n);
+            for _ in 0..n {
+                tasks.push(WireTask {
+                    id: d.u64()?,
+                    artifact: d.str()?,
+                    macs: d.u64()?,
+                    reply_bytes: d.u64()?,
+                    w: d.tensor()?,
+                    b: d.tensor()?,
+                });
+            }
+            Frame::Deploy { tasks }
+        }
+        K_UNDEPLOY => {
+            let n = d.count(MAX_TASKS, 8)?;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(d.u64()?);
+            }
+            Frame::Undeploy { ids }
+        }
+        K_WORK => {
+            let req = d.u64()?;
+            let n = d.count(MAX_TASKS, 8)?;
+            let mut tasks = Vec::with_capacity(n);
+            for _ in 0..n {
+                tasks.push(d.u64()?);
+            }
+            let batch = d.u32()?;
+            if batch == 0 || batch > MAX_TASKS {
+                return Err(Error::Wire(format!("bad batch width {batch}")));
+            }
+            Frame::Work { req, tasks, batch, input: d.tensor()? }
+        }
+        K_SET_FAILURE => {
+            let plan = match d.u8()? {
+                0 => FailurePlan::None,
+                1 => FailurePlan::PermanentAt(d.u64()?),
+                2 => {
+                    let p = d.f64()?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(Error::Wire(format!("bad drop probability {p}")));
+                    }
+                    FailurePlan::Intermittent(p)
+                }
+                t => return Err(Error::Wire(format!("unknown failure tag {t}"))),
+            };
+            Frame::SetFailure { plan }
+        }
+        K_SET_NET => {
+            let enabled = d.u8()? != 0;
+            let net = NetConfig {
+                base_ms: d.f64()?,
+                bandwidth_mbps: d.f64()?,
+                p_fast: d.f64()?,
+                lognorm_mu: d.f64()?,
+                lognorm_sigma: d.f64()?,
+                pareto_xm: d.f64()?,
+                pareto_alpha: d.f64()?,
+                max_ms: d.f64()?,
+            };
+            Frame::SetNet { enabled, net }
+        }
+        K_SET_RATE => Frame::SetRate { macs_per_ms: d.f64()? },
+        K_SHUTDOWN => Frame::Shutdown,
+        K_REPLY => {
+            let req = d.u64()?;
+            let task = d.u64()?;
+            let result = match d.u8()? {
+                0 => None,
+                1 => Some(d.tensor()?),
+                t => return Err(Error::Wire(format!("unknown reply tag {t}"))),
+            };
+            Frame::Reply { req, task, result }
+        }
+        k => return Err(Error::Wire(format!("unknown frame kind {k:#x}"))),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Read one frame from a stream. Returns `Ok(None)` on a clean EOF at a
+/// frame boundary; EOF mid-frame, an oversized length prefix, or any
+/// malformed payload is an [`Error::Wire`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut head = [0u8; 5];
+    let mut got = 0;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                return Err(Error::Wire("EOF inside frame header".into()));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Wire(format!("read frame header: {e}"))),
+        }
+    }
+    let kind = head[0];
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Wire(format!(
+            "frame length {len} exceeds cap {MAX_FRAME_LEN}"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| Error::Wire(format!("read frame payload ({len} bytes): {e}")))?;
+    decode(kind, &payload)
+}
+
+/// Write one pre-encoded frame to a stream.
+pub fn write_frame(w: &mut impl Write, frame_bytes: &[u8]) -> Result<()> {
+    w.write_all(frame_bytes)
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::Wire(format!("write frame: {e}")))
+}

@@ -1,0 +1,242 @@
+//! The standalone shard-compute worker behind `cdc-dnn worker`.
+//!
+//! A worker binds a TCP port, loads an artifact set (python-built or
+//! `cdc-dnn synth`), and serves one coordinator connection at a time:
+//! Deploy frames install task definitions (weights included), Work
+//! frames execute batched GEMM orders through the shared [`Runtime`]
+//! (interpreter by default), and Reply frames stream back. Between
+//! coordinator sessions the worker returns to its accept loop with a
+//! clean slate, so a single long-lived worker serves many sessions.
+//!
+//! ## Failure + delay emulation
+//!
+//! Real deployments misbehave; the worker can be told to, too:
+//!
+//! * `SetFailure` installs a `fleet::FailurePlan`; a dropped reply is
+//!   **silence** (the frame is simply not sent), so the coordinator's
+//!   deadline reaper — not a polite error — detects it, exactly like a
+//!   lossy WLAN. Drop draws reuse the fleet's content-addressed RNG
+//!   keyed on `(seed, device, first task, input bits)`, so a scripted
+//!   drop pattern replays identically in sim and tcp modes.
+//! * `SetNet` (or `--net` on the CLI) applies a `fleet::net` profile as
+//!   artificial reply delay, sampled per reply from the same
+//!   distributions the simulator uses.
+//! * `SetRate` (or `--rate`) emulates RPi-class compute: each task
+//!   sleeps `batch × macs / rate` ms before replying, making loopback
+//!   wall-clock behaviour resemble the paper's testbed instead of a
+//!   laptop's microseconds.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::fleet::{self, FailurePlan, NetConfig};
+use crate::rng::Pcg32;
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+
+use super::wire::{self, Frame, WireTask};
+
+/// Worker launch options (`cdc-dnn worker` CLI flags).
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Bind address; port 0 picks an ephemeral port (printed on stdout
+    /// as `cdc-dnn worker listening on <addr>` for harnesses to parse).
+    pub listen: String,
+    /// Artifact set root (`manifest.json` + weights).
+    pub artifacts: PathBuf,
+    /// Optional artificial reply-delay profile applied from startup.
+    pub net: Option<NetConfig>,
+    /// Optional artificial compute rate (MACs/ms) applied from startup.
+    pub rate_macs_per_ms: Option<f64>,
+}
+
+impl WorkerOptions {
+    /// Defaults: ephemeral loopback port, `artifacts/`, no emulation.
+    pub fn new(artifacts: impl Into<PathBuf>) -> WorkerOptions {
+        WorkerOptions {
+            listen: "127.0.0.1:0".into(),
+            artifacts: artifacts.into(),
+            net: None,
+            rate_macs_per_ms: None,
+        }
+    }
+}
+
+/// The line prefix a worker prints once bound — harnesses parse the
+/// address after it.
+pub const LISTENING_PREFIX: &str = "cdc-dnn worker listening on ";
+
+struct WorkerTask {
+    artifact: String,
+    macs: u64,
+    reply_bytes: u64,
+    w: Tensor,
+    b: Tensor,
+}
+
+/// Per-connection session state, reset for every coordinator.
+struct ConnState {
+    seed: u64,
+    device: usize,
+    tasks: HashMap<u64, WorkerTask>,
+    failure: FailurePlan,
+    net: Option<NetConfig>,
+    rate: Option<f64>,
+}
+
+/// Run a worker until its process is killed or a Shutdown frame
+/// arrives. Blocks forever on the accept loop otherwise.
+pub fn run(opts: &WorkerOptions) -> Result<()> {
+    let manifest = Manifest::load(&opts.artifacts)?;
+    let runtime = Runtime::new()?;
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| Error::Wire(format!("bind {}: {e}", opts.listen)))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::Wire(format!("local_addr: {e}")))?;
+    println!("{LISTENING_PREFIX}{addr}");
+    std::io::stdout()
+        .flush()
+        .map_err(|e| Error::io("stdout", e))?;
+
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("worker: accept: {e}");
+                continue;
+            }
+        };
+        match serve_conn(stream, &runtime, &manifest, opts) {
+            Ok(true) => return Ok(()), // Shutdown frame
+            Ok(false) => {}            // coordinator hung up; next session
+            Err(e) => eprintln!("worker: connection error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one coordinator connection; `Ok(true)` means a Shutdown frame
+/// asked the whole process to exit.
+fn serve_conn(
+    mut stream: TcpStream,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    opts: &WorkerOptions,
+) -> Result<bool> {
+    stream
+        .set_nodelay(true)
+        .map_err(|e| Error::Wire(format!("set_nodelay: {e}")))?;
+    let mut st = ConnState {
+        seed: 0,
+        device: 0,
+        tasks: HashMap::new(),
+        failure: FailurePlan::None,
+        net: opts.net.clone(),
+        rate: opts.rate_macs_per_ms.filter(|r| r.is_finite() && *r > 0.0),
+    };
+    loop {
+        let frame = match wire::read_frame(&mut stream)? {
+            Some(f) => f,
+            None => return Ok(false), // coordinator closed the session
+        };
+        match frame {
+            Frame::Hello { proto, seed, device } => {
+                if proto != wire::PROTO_VERSION {
+                    return Err(Error::Wire(format!(
+                        "coordinator speaks protocol {proto}, worker speaks {}",
+                        wire::PROTO_VERSION
+                    )));
+                }
+                st.seed = seed;
+                st.device = device as usize;
+                wire::write_frame(&mut stream, &wire::hello_ack())?;
+            }
+            Frame::Deploy { tasks } => {
+                for t in tasks {
+                    let WireTask { id, artifact, macs, reply_bytes, w, b } = t;
+                    st.tasks.insert(id, WorkerTask { artifact, macs, reply_bytes, w, b });
+                }
+            }
+            Frame::Undeploy { ids } => {
+                for id in ids {
+                    st.tasks.remove(&id);
+                }
+            }
+            Frame::SetFailure { plan } => st.failure = plan,
+            Frame::SetNet { enabled, net } => {
+                st.net = enabled.then_some(net);
+            }
+            Frame::SetRate { macs_per_ms } => {
+                st.rate = Some(macs_per_ms).filter(|r| r.is_finite() && *r > 0.0);
+            }
+            Frame::Shutdown => return Ok(true),
+            Frame::Work { req, tasks, batch, input } => {
+                work(&mut stream, runtime, manifest, &mut st, req, tasks, batch, input)?;
+            }
+            other => {
+                return Err(Error::Wire(format!(
+                    "unexpected frame from coordinator: {other:?}"
+                )));
+            }
+        }
+    }
+}
+
+/// Execute one work order: real compute through the runtime, optional
+/// emulated compute/network delay, reply per task — or silence when the
+/// failure plan drops this order.
+#[allow(clippy::too_many_arguments)]
+fn work(
+    stream: &mut TcpStream,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    st: &mut ConnState,
+    req: u64,
+    tasks: Vec<u64>,
+    batch: u32,
+    input: Tensor,
+) -> Result<()> {
+    // Same content-addressed stream as the simulated device: the drop
+    // decision and delay jitter replay identically across transports.
+    let mut rng = Pcg32::new(
+        st.seed,
+        fleet::order_stream(st.device, tasks.first().copied(), batch as usize, &input),
+    );
+    let dropped = st.failure.drops(req, &mut rng);
+    for task_id in tasks {
+        let result = match st.tasks.get(&task_id) {
+            Some(t) => {
+                let out = runtime
+                    .execute(manifest, &t.artifact, &[&t.w, &t.b, &input])
+                    .ok();
+                if let Some(rate) = st.rate {
+                    let ms = (batch as u64 * t.macs) as f64 / rate;
+                    sleep_ms(ms);
+                }
+                if let Some(net) = &st.net {
+                    sleep_ms(net.sample(batch as u64 * t.reply_bytes, &mut rng));
+                }
+                out
+            }
+            None => None, // unknown task: explicit failure reply below
+        };
+        if dropped && result.is_some() {
+            // A "dropped" reply is silence — the coordinator's deadline
+            // reaper is what notices, like a real lossy network.
+            continue;
+        }
+        wire::write_frame(stream, &wire::reply(req, task_id, result.as_ref()))?;
+    }
+    Ok(())
+}
+
+fn sleep_ms(ms: f64) {
+    if ms.is_finite() && ms > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+    }
+}

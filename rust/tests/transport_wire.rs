@@ -1,0 +1,221 @@
+//! Wire-codec hardening tests (ISSUE 5): round-trip property tests over
+//! every frame type, plus adversarial inputs — truncated, oversized, and
+//! garbage frames must come back as `Error` values, never panics or
+//! attacker-sized allocations.
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use cdc_dnn::fleet::{FailurePlan, NetConfig, TaskDef};
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit;
+use cdc_dnn::transport::wire::{self, Frame};
+
+fn roundtrip(bytes: &[u8]) -> Frame {
+    let mut c = Cursor::new(bytes.to_vec());
+    let f = wire::read_frame(&mut c).expect("decode").expect("one frame");
+    // The whole frame must be consumed.
+    assert_eq!(c.position() as usize, bytes.len());
+    f
+}
+
+#[test]
+fn handshake_frames_roundtrip() {
+    match roundtrip(&wire::hello(0xdead_beef, 7)) {
+        Frame::Hello { proto, seed, device } => {
+            assert_eq!(proto, wire::PROTO_VERSION);
+            assert_eq!(seed, 0xdead_beef);
+            assert_eq!(device, 7);
+        }
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(
+        roundtrip(&wire::hello_ack()),
+        Frame::HelloAck { proto } if proto == wire::PROTO_VERSION
+    ));
+    assert!(matches!(roundtrip(&wire::shutdown()), Frame::Shutdown));
+}
+
+#[test]
+fn control_frames_roundtrip() {
+    match roundtrip(&wire::undeploy(&[3, 1, 4, 1, 5])) {
+        Frame::Undeploy { ids } => assert_eq!(ids, vec![3, 1, 4, 1, 5]),
+        other => panic!("{other:?}"),
+    }
+    match roundtrip(&wire::set_failure(&FailurePlan::PermanentAt(42))) {
+        Frame::SetFailure { plan: FailurePlan::PermanentAt(42) } => {}
+        other => panic!("{other:?}"),
+    }
+    match roundtrip(&wire::set_failure(&FailurePlan::Intermittent(0.25))) {
+        Frame::SetFailure { plan: FailurePlan::Intermittent(p) } => {
+            assert!((p - 0.25).abs() < 1e-12)
+        }
+        other => panic!("{other:?}"),
+    }
+    match roundtrip(&wire::set_net(true, &NetConfig::moderate())) {
+        Frame::SetNet { enabled: true, net } => {
+            let m = NetConfig::moderate();
+            assert_eq!(net.base_ms, m.base_ms);
+            assert_eq!(net.p_fast, m.p_fast);
+            assert_eq!(net.max_ms, m.max_ms);
+        }
+        other => panic!("{other:?}"),
+    }
+    match roundtrip(&wire::set_rate(1234.5)) {
+        Frame::SetRate { macs_per_ms } => assert_eq!(macs_per_ms, 1234.5),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Property: Work / Reply / Deploy frames round-trip bit-exactly over
+/// random shapes, ids and payload values (including negative zero and
+/// subnormals from the normal draw).
+#[test]
+fn payload_frames_roundtrip_property() {
+    testkit::forall(
+        0x11ce,
+        60,
+        |rng| {
+            let k = 1 + rng.below(24);
+            let b = 1 + rng.below(4);
+            let input = Tensor::randn(vec![k, b], rng);
+            let w = Tensor::randn(vec![1 + rng.below(8), k], rng);
+            let bias = Tensor::randn(vec![w.shape()[0], 1], rng);
+            let req = rng.next_u64();
+            let tasks: Vec<u64> = (0..1 + rng.below(5)).map(|_| rng.next_u64()).collect();
+            (req, tasks, b, input, w, bias)
+        },
+        |(req, tasks, b, input, w, bias)| {
+            // Work
+            match roundtrip(&wire::work(*req, tasks, *b, input)) {
+                Frame::Work { req: r, tasks: t, batch, input: i } => {
+                    if r != *req || &t != tasks || batch as usize != *b || &i != input {
+                        return Err("work roundtrip mismatch".into());
+                    }
+                }
+                other => return Err(format!("work decoded as {other:?}")),
+            }
+            // Reply (present and lost)
+            match roundtrip(&wire::reply(*req, tasks[0], Some(input))) {
+                Frame::Reply { req: r, task, result: Some(t) } => {
+                    if r != *req || task != tasks[0] || &t != input {
+                        return Err("reply roundtrip mismatch".into());
+                    }
+                }
+                other => return Err(format!("reply decoded as {other:?}")),
+            }
+            match roundtrip(&wire::reply(*req, tasks[0], None)) {
+                Frame::Reply { result: None, .. } => {}
+                other => return Err(format!("lost reply decoded as {other:?}")),
+            }
+            // Deploy
+            let def = TaskDef {
+                id: tasks[0],
+                artifact: format!("fc_m{}_k{}_lin", w.shape()[0], w.shape()[1]),
+                w: Arc::new(w.clone()),
+                b: Arc::new(bias.clone()),
+                macs: *req % 1_000_000,
+                reply_bytes: *req % 4096,
+            };
+            match roundtrip(&wire::deploy(&[def.clone()])) {
+                Frame::Deploy { tasks: ts } => {
+                    let t = &ts[0];
+                    if t.id != def.id
+                        || t.artifact != def.artifact
+                        || t.macs != def.macs
+                        || t.reply_bytes != def.reply_bytes
+                        || &t.w != w
+                        || &t.b != bias
+                    {
+                        return Err("deploy roundtrip mismatch".into());
+                    }
+                }
+                other => return Err(format!("deploy decoded as {other:?}")),
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn clean_eof_is_none_truncation_is_error() {
+    // Empty stream: clean EOF.
+    let mut c = Cursor::new(Vec::<u8>::new());
+    assert!(wire::read_frame(&mut c).unwrap().is_none());
+
+    // Every proper prefix of a valid frame must error (EOF mid-frame or
+    // truncated payload), never panic, never hang.
+    let frame = wire::work(9, &[1, 2], 1, &Tensor::col(&[1.0, 2.0, 3.0]));
+    for cut in 1..frame.len() {
+        let mut c = Cursor::new(frame[..cut].to_vec());
+        assert!(
+            wire::read_frame(&mut c).is_err(),
+            "prefix of {cut}/{} bytes decoded",
+            frame.len()
+        );
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // kind + u32::MAX length: must fail on the cap check, not attempt a
+    // 4 GiB allocation or read.
+    let mut bytes = vec![0x05u8];
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 64]);
+    let err = wire::read_frame(&mut Cursor::new(bytes)).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+}
+
+#[test]
+fn hostile_tensor_and_count_headers_are_rejected() {
+    // A Work frame claiming a 2^32-ish element tensor: the declared dims
+    // overflow the element cap long before any allocation.
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&7u64.to_le_bytes()); // req
+    payload.extend_from_slice(&1u32.to_le_bytes()); // 1 task
+    payload.extend_from_slice(&1u64.to_le_bytes());
+    payload.extend_from_slice(&1u32.to_le_bytes()); // batch
+    payload.push(2); // rank 2
+    payload.extend_from_slice(&0xffff_ffffu32.to_le_bytes());
+    payload.extend_from_slice(&0xffff_ffffu32.to_le_bytes());
+    let mut frame = vec![0x05u8];
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    let err = wire::read_frame(&mut Cursor::new(frame)).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+
+    // An Undeploy frame claiming 2^31 ids in a 12-byte payload: the
+    // count is cross-checked against the bytes actually present.
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+    payload.extend_from_slice(&[0u8; 8]);
+    let mut frame = vec![0x04u8];
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    assert!(wire::read_frame(&mut Cursor::new(frame)).is_err());
+}
+
+#[test]
+fn garbage_never_panics() {
+    let mut rng = Pcg32::seeded(0xbad);
+    for _ in 0..200 {
+        let n = rng.below(96);
+        let bytes: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+        // Any outcome but a panic/hang is acceptable; a full garbage
+        // header usually fails the kind/cap/bounds checks.
+        let _ = wire::read_frame(&mut Cursor::new(bytes));
+    }
+}
+
+#[test]
+fn trailing_payload_bytes_are_rejected() {
+    let mut frame = wire::set_rate(1.0);
+    // Grow the payload by one byte and patch the length.
+    frame.push(0);
+    let len = (frame.len() - 5) as u32;
+    frame[1..5].copy_from_slice(&len.to_le_bytes());
+    let err = wire::read_frame(&mut Cursor::new(frame)).unwrap_err();
+    assert!(err.to_string().contains("trailing"), "{err}");
+}
