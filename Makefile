@@ -49,9 +49,10 @@ bench-batching:
 bench-batching-smoke:
 	BATCHING_BENCH_SMOKE=1 cargo bench --bench batching
 
-# Real-TCP loopback serving (DESIGN.md §11): spawns worker child
-# processes, drives wall-clock CDC serving over real sockets, SIGKILLs
-# one worker mid-run, and writes BENCH_transport.json. The smoke flavor
+# Real-TCP loopback serving (DESIGN.md §11–12): spawns worker child
+# processes, sweeps fleet widths {4, 16, 64} (asserting O(1)
+# coordinator I/O threads across the sweep), SIGKILLs one worker
+# mid-run, and writes BENCH_transport.json. The smoke flavor ({4, 16})
 # is the CI robustness guard.
 bench-transport:
 	cargo bench --bench transport_loopback

@@ -1,19 +1,29 @@
-//! Transport-loopback bench (DESIGN.md §11): the full serving engine
+//! Transport-loopback bench (DESIGN.md §11–12): the full serving engine
 //! over **real TCP worker processes** on 127.0.0.1, measuring
-//! wall-clock rps / p50 / p99 — steady, and with one worker SIGKILLed
-//! mid-run (the CDC arm must finish with zero lost requests, the
-//! paper's invariant on real sockets). A virtual-time sim arm runs the
-//! same deployment for reference.
+//! wall-clock rps / p50 / p99 — steady at fleet widths {4, 16, 64},
+//! and with one worker SIGKILLed mid-run (the CDC arm must finish with
+//! zero lost requests, the paper's invariant on real sockets). A
+//! virtual-time sim arm runs the same deployment for reference.
+//!
+//! The width sweep shards the wide synth model (two 434-high fc layers)
+//! across `width − 2` data devices plus parity, and asserts the
+//! event-loop property the sweep exists for: the coordinator's I/O
+//! thread count is **O(1) in fleet width** — the process thread count,
+//! sampled with every fleet connected, is identical at width 4 and
+//! width 64.
 //!
 //! Workers run RPi-style emulated compute (`--rate`) so loopback
 //! numbers reflect the serving machinery, not a laptop GEMM finishing
 //! in microseconds; the arrival rate oversubscribes the emulated
 //! capacity, so the measured rps is the saturated (stable) throughput.
+//! Sweep worker rates are scaled per width so a shard order costs ~3 ms
+//! at every width — per-width rps is then comparable and bounded by the
+//! same emulated device capacity, not by shard size.
 //!
-//! `TRANSPORT_BENCH_SMOKE=1` scales the stream down for CI;
-//! `BENCH_BASELINE_ENFORCE=1` gates the headline metrics against the
-//! committed seed in `rust/baselines/BENCH_transport.json`
-//! (bootstrap-empty until promoted from CI artifacts).
+//! `TRANSPORT_BENCH_SMOKE=1` scales the stream down and sweeps
+//! {4, 16} for CI; `BENCH_BASELINE_ENFORCE=1` gates the headline
+//! metrics against the committed seed in
+//! `rust/baselines/BENCH_transport.json`.
 //!
 //! Run with `cargo bench --bench transport_loopback`.
 
@@ -27,13 +37,20 @@ use cdc_dnn::rng::Pcg32;
 use cdc_dnn::tensor::Tensor;
 use cdc_dnn::testkit::synth;
 use cdc_dnn::transport::loopback::LoopbackFleet;
-use cdc_dnn::transport::{TcpConfig, TransportSpec};
+use cdc_dnn::transport::{TcpConfig, TcpTransport, TransportSpec};
 
 const SEED: u64 = 2021;
-/// Emulated worker compute rate (MACs/ms): a synth fc1 shard order
-/// costs ~5 ms, putting loopback service times in RPi territory.
+/// Emulated worker compute rate for the narrow model (MACs/ms): a synth
+/// fc1 shard order costs ~5 ms, putting loopback service times in RPi
+/// territory.
 const WORKER_RATE: f64 = 20.0;
 const ARRIVAL_RPS: f64 = 120.0;
+/// Sweep arrival rate: oversubscribes the ~3 ms emulated shard service
+/// time at every width, so the sweep measures saturated throughput.
+const SWEEP_RPS: f64 = 400.0;
+/// Target emulated cost of one (unbatched) fc2 shard order in the
+/// width sweep, whatever the width.
+const SWEEP_SHARD_MS: f64 = 3.0;
 
 fn bench_out_path() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -56,9 +73,48 @@ fn cdc_cfg() -> SessionConfig {
     cfg
 }
 
-fn inputs(n: usize, seed: u64) -> Vec<Tensor> {
+/// mlp_wide over `width − 2` data devices, both layers parity-coded
+/// (`width` workers total) — one point of the fleet-width sweep.
+fn wide_cfg(width: usize) -> SessionConfig {
+    let d = width - 2;
+    let mut cfg = SessionConfig::new(synth::WIDE_MODEL);
+    cfg.n_devices = d;
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(d));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(d));
+    cfg.seed = SEED;
+    cfg.detection_ms = 500.0;
+    cfg.batch_max = 4;
+    cfg.batch_wait_ms = 2.0;
+    cfg
+}
+
+/// Per-width worker rate (MACs/ms) that prices the width's fc2 shard —
+/// the dominant order — at [`SWEEP_SHARD_MS`].
+fn sweep_rate(width: usize) -> f64 {
+    let shard_macs = (synth::WIDE_M / (width - 2)) * synth::WIDE_M;
+    shard_macs as f64 / SWEEP_SHARD_MS
+}
+
+fn inputs(n: usize, k: usize, seed: u64) -> Vec<Tensor> {
     let mut rng = Pcg32::seeded(seed);
-    (0..n).map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng)).collect()
+    (0..n).map(|_| Tensor::randn(vec![k], &mut rng)).collect()
+}
+
+/// Total threads of this process (`/proc/self/status`); `None` off
+/// Linux. Sampled with a fleet connected, this is the O(1)-I/O-thread
+/// probe: the count must not grow with fleet width.
+#[cfg(target_os = "linux")]
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn process_threads() -> Option<usize> {
+    None
 }
 
 struct ArmResult {
@@ -70,21 +126,26 @@ struct ArmResult {
     p99: f64,
     makespan_ms: f64,
     max_batch: usize,
+    /// Process thread count right after deploy (fleet connected).
+    threads: Option<usize>,
 }
 
 fn run_arm(
     arts: &Path,
     cfg: SessionConfig,
+    k: usize,
     n: usize,
+    rps: f64,
     kill: Option<(&LoopbackFleet, usize, u64)>,
 ) -> ArmResult {
     let mut session = Session::start(arts, cfg).expect("deploy");
+    let threads = process_threads();
     let killer = kill.map(|(fleet, victim, at_ms)| fleet.kill_after(victim, at_ms));
     let report = session
-        .serve(&Workload::poisson(inputs(n, SEED), ARRIVAL_RPS, SEED))
+        .serve(&Workload::poisson(inputs(n, k, SEED), rps, SEED))
         .expect("serve");
-    if let Some(k) = killer {
-        k.join().expect("chaos thread");
+    if let Some(kh) = killer {
+        kh.join().expect("chaos thread");
     }
     let s = report.latency.summary();
     ArmResult {
@@ -96,7 +157,29 @@ fn run_arm(
         p99: s.p99,
         makespan_ms: report.makespan_ms,
         max_batch: report.max_batch,
+        threads,
     }
+}
+
+fn arm_row(label: &str, n: usize, arrival: f64, width: usize, r: &ArmResult) -> Value {
+    obj(vec![
+        ("arm", Value::Str(label.into())),
+        ("width", Value::Num(width as f64)),
+        ("requests", Value::Num(n as f64)),
+        ("arrival_rps", Value::Num(arrival)),
+        ("completed", Value::Num(r.completed as f64)),
+        ("failed", Value::Num(r.failed as f64)),
+        ("recovered", Value::Num(r.recovered as f64)),
+        ("rps", Value::Num(r.rps)),
+        ("p50_ms", Value::Num(r.p50)),
+        ("p99_ms", Value::Num(r.p99)),
+        ("makespan_ms", Value::Num(r.makespan_ms)),
+        ("max_batch", Value::Num(r.max_batch as f64)),
+        (
+            "process_threads",
+            r.threads.map(|t| Value::Num(t as f64)).unwrap_or(Value::Null),
+        ),
+    ])
 }
 
 fn main() {
@@ -105,9 +188,16 @@ fn main() {
         "transport_loopback: compute backend = {}, smoke = {smoke}",
         cdc_dnn::runtime::backend_label()
     );
+    // The O(1) property is structural before it is measured: the
+    // transport runs exactly one I/O thread by construction.
+    assert_eq!(TcpTransport::IO_THREADS, 1);
+
     let arts = synth::build(SEED).expect("synthetic artifacts");
+    let wide_arts = synth::build_wide(SEED).expect("wide synthetic artifacts");
     let worker_bin = Path::new(env!("CARGO_BIN_EXE_cdc-dnn"));
     let n = if smoke { 100 } else { 300 };
+    let sweep_n = if smoke { 80 } else { 240 };
+    let widths: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 64] };
     // Kill ~30% into the expected (saturated) makespan.
     let kill_at_ms = if smoke { 300 } else { 900 };
 
@@ -117,30 +207,51 @@ fn main() {
     let mode = if smoke { "smoke" } else { "full" };
 
     // ---- arm 1: virtual-time sim reference ---------------------------
-    let sim = run_arm(&arts.root, cdc_cfg(), n, None);
+    let sim = run_arm(&arts.root, cdc_cfg(), synth::FC1_K, n, ARRIVAL_RPS, None);
     println!(
         "  sim-steady:  completed={} failed={} rps={:.1} (virtual) p50={:.1}ms p99={:.1}ms",
         sim.completed, sim.failed, sim.rps, sim.p50, sim.p99
     );
     assert_eq!(sim.failed, 0, "sim CDC arm lost requests");
+    rows.push(arm_row("sim-steady", n, ARRIVAL_RPS, 4, &sim));
 
-    // ---- arm 2: tcp-steady over a loopback worker fleet --------------
-    let fleet = LoopbackFleet::spawn(Some(worker_bin), &arts.root, 4, Some(WORKER_RATE))
+    // ---- arm 2: tcp fleet-width sweep over the wide model ------------
+    let mut sweep_threads: Vec<(usize, usize)> = Vec::new();
+    for &width in widths {
+        let fleet = LoopbackFleet::spawn(
+            Some(worker_bin),
+            &wide_arts.root,
+            width,
+            Some(sweep_rate(width)),
+        )
         .expect("spawn loopback fleet");
-    let mut cfg = cdc_cfg();
-    let mut tcp: TcpConfig = fleet.tcp_config();
-    tcp.order_deadline_ms = 1_000.0;
-    cfg.transport = TransportSpec::Tcp(tcp);
-    let steady = run_arm(&arts.root, cfg, n, None);
-    drop(fleet);
-    println!(
-        "  tcp-steady:  completed={} failed={} rps={:.1} (wall) p50={:.1}ms \
-         p99={:.1}ms max_batch={}",
-        steady.completed, steady.failed, steady.rps, steady.p50, steady.p99,
-        steady.max_batch
-    );
-    assert_eq!(steady.failed, 0, "tcp CDC arm lost requests under steady load");
-    assert_eq!(steady.completed, n as u64, "tcp arm must complete the stream");
+        let mut cfg = wide_cfg(width);
+        let mut tcp: TcpConfig = fleet.tcp_config();
+        tcp.order_deadline_ms = 1_000.0;
+        cfg.transport = TransportSpec::Tcp(tcp);
+        let r = run_arm(&wide_arts.root, cfg, synth::WIDE_K, sweep_n, SWEEP_RPS, None);
+        drop(fleet);
+        println!(
+            "  tcp-w{width:<3}:    completed={} failed={} rps={:.1} (wall) p50={:.1}ms \
+             p99={:.1}ms threads={:?}",
+            r.completed, r.failed, r.rps, r.p50, r.p99, r.threads
+        );
+        assert_eq!(r.failed, 0, "width-{width} CDC arm lost requests");
+        assert_eq!(r.completed, sweep_n as u64, "width-{width} arm must complete");
+        if let Some(t) = r.threads {
+            sweep_threads.push((width, t));
+        }
+        headline.push((format!("{mode}_tcp_w{width}_rps"), r.rps));
+        rows.push(arm_row(&format!("tcp-w{width}"), sweep_n, SWEEP_RPS, width, &r));
+    }
+    // The tentpole property: coordinator thread count does not grow
+    // with fleet width — one event loop owns every connection.
+    if let (Some(first), Some(last)) = (sweep_threads.first(), sweep_threads.last()) {
+        assert_eq!(
+            first.1, last.1,
+            "coordinator thread count grew with fleet width: {sweep_threads:?}"
+        );
+    }
 
     // ---- arm 3: tcp + SIGKILL one data worker mid-run ----------------
     let fleet = LoopbackFleet::spawn(Some(worker_bin), &arts.root, 4, Some(WORKER_RATE))
@@ -149,7 +260,14 @@ fn main() {
     let mut tcp: TcpConfig = fleet.tcp_config();
     tcp.order_deadline_ms = 1_000.0;
     cfg.transport = TransportSpec::Tcp(tcp);
-    let kill = run_arm(&arts.root, cfg, n, Some((&fleet, 1, kill_at_ms)));
+    let kill = run_arm(
+        &arts.root,
+        cfg,
+        synth::FC1_K,
+        n,
+        ARRIVAL_RPS,
+        Some((&fleet, 1, kill_at_ms)),
+    );
     drop(fleet);
     println!(
         "  tcp-kill:    completed={} failed={} recovered={} rps={:.1} (wall) \
@@ -167,34 +285,22 @@ fn main() {
         kill.recovered > 0,
         "the kill landed after the run — no recovery was exercised"
     );
-
-    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    for (label, r) in
-        [("sim-steady", &sim), ("tcp-steady", &steady), ("tcp-kill", &kill)]
-    {
-        rows.push(obj(vec![
-            ("arm", Value::Str(label.into())),
-            ("requests", Value::Num(n as f64)),
-            ("arrival_rps", Value::Num(ARRIVAL_RPS)),
-            ("completed", Value::Num(r.completed as f64)),
-            ("failed", Value::Num(r.failed as f64)),
-            ("recovered", Value::Num(r.recovered as f64)),
-            ("rps", Value::Num(r.rps)),
-            ("p50_ms", Value::Num(r.p50)),
-            ("p99_ms", Value::Num(r.p99)),
-            ("makespan_ms", Value::Num(r.makespan_ms)),
-            ("max_batch", Value::Num(r.max_batch as f64)),
-        ]));
-    }
-    headline.push((format!("{mode}_tcp_steady_rps"), steady.rps));
+    rows.push(arm_row("tcp-kill", n, ARRIVAL_RPS, 4, &kill));
     headline.push((format!("{mode}_tcp_kill_rps"), kill.rps));
 
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
     let doc = obj(vec![
         ("experiment", Value::Str("bench_transport_loopback".into())),
         ("backend", Value::Str(cdc_dnn::runtime::backend_label().into())),
         ("transport", Value::Str("tcp-loopback".into())),
         ("smoke", Value::Bool(smoke)),
         ("worker_rate_macs_per_ms", Value::Num(WORKER_RATE)),
+        ("sweep_shard_ms", Value::Num(SWEEP_SHARD_MS)),
+        (
+            "sweep_widths",
+            Value::Arr(widths.iter().map(|&w| Value::Num(w as f64)).collect()),
+        ),
+        ("io_threads", Value::Num(TcpTransport::IO_THREADS as f64)),
         ("suite_wall_ms", Value::Num(wall_ms)),
         ("points", Value::Arr(rows)),
     ]);

@@ -53,9 +53,15 @@ impl Outcome {
 ///   `0.0` = substitute as soon as any n of n+1 results are in.
 pub fn resolve(data: &[f64], parity: Option<f64>, threshold_ms: f64) -> Outcome {
     assert!(!data.is_empty());
-    let t_all = data.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    // A NaN stamp is a corrupt arrival record (a mangled wall-clock
+    // reading, an uninitialised slot): treat it as "never arrived".
+    // `f64::max` silently *ignores* NaN, which would count the shard as
+    // arrived, and `partial_cmp(..).unwrap()` on NaN panics mid-serve —
+    // sanitising to ∞ keeps both folds and the total_cmp ordering sound.
+    let sane = |t: f64| if t.is_nan() { f64::INFINITY } else { t };
+    let t_all = data.iter().map(|&t| sane(t)).fold(f64::NEG_INFINITY, f64::max);
 
-    let Some(t_parity) = parity else {
+    let Some(t_parity) = parity.map(sane) else {
         return if t_all.is_finite() {
             Outcome::AllData { t_ms: t_all }
         } else {
@@ -68,13 +74,13 @@ pub fn resolve(data: &[f64], parity: Option<f64>, threshold_ms: f64) -> Outcome 
     let (slowest_idx, _) = data
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| sane(*a.1).total_cmp(&sane(*b.1)))
         .unwrap();
     let t_rest = data
         .iter()
         .enumerate()
         .filter(|(i, _)| *i != slowest_idx)
-        .map(|(_, t)| *t)
+        .map(|(_, t)| sane(*t))
         .fold(f64::NEG_INFINITY, f64::max)
         .max(f64::NEG_INFINITY);
     let t_rest = if data.len() == 1 { 0.0 } else { t_rest };
@@ -476,6 +482,28 @@ mod tests {
             Outcome::AllData { t_ms: 20.0 }
         );
         assert_eq!(resolve(&[10.0, INF], Some(INF), 0.0), Outcome::Lost);
+    }
+
+    #[test]
+    fn nan_stamps_resolve_as_lost_shards_not_panics() {
+        const NAN: f64 = f64::NAN;
+        // A corrupt (NaN) arrival is a missing shard: parity stands in.
+        assert_eq!(
+            resolve(&[10.0, NAN], Some(30.0), 0.0),
+            Outcome::Recovered { t_ms: 30.0, missing: 1 }
+        );
+        // NaN + a genuinely lost shard exceeds one parity's budget.
+        assert_eq!(resolve(&[NAN, INF, 5.0], Some(6.0), 0.0), Outcome::Lost);
+        // A corrupt parity stamp degrades to all-data, like a lost parity.
+        assert_eq!(
+            resolve(&[1.0, 2.0], Some(NAN), 0.0),
+            Outcome::AllData { t_ms: 2.0 }
+        );
+        // The grouped resolver inherits the same semantics.
+        assert_eq!(
+            resolve_grouped(&[NAN, 7.0], &[9.0], &[vec![0, 1]], 0.0),
+            GroupedOutcome::Ok { t_ms: 9.0, missing: vec![0] }
+        );
     }
 
     #[test]

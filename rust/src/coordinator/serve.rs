@@ -797,6 +797,7 @@ impl Session {
                     batch,
                     threshold_factor,
                     scratch,
+                    self.transport.as_ref(),
                 )?;
                 // Dispatch accounting is outcome-independent: a lost
                 // order was still a dispatched batch of this width.

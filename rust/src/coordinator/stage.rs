@@ -192,7 +192,11 @@ impl DistStage {
     /// Takes the gathered completions by value so shard outputs are
     /// *moved* into the merge (no per-shard tensor clones), and `scratch`
     /// backs the merge/pool buffers — the steady-state resolve path
-    /// performs no fresh heap allocations.
+    /// performs no fresh heap allocations. Consumed shard outputs are
+    /// offered back through [`Transport::reclaim`] so a wall-clock
+    /// transport's decode arena recycles them (the simulator declines
+    /// and they return to `scratch`, bit-identically to before).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn resolve(
         &self,
         layer: &LayerManifest,
@@ -201,6 +205,7 @@ impl DistStage {
         batch: usize,
         threshold_factor: f64,
         scratch: &mut Scratch,
+        transport: &dyn Transport,
     ) -> Result<StageOutcome> {
         let data_t: Vec<f64> = self
             .data
@@ -308,7 +313,9 @@ impl DistStage {
             merge_channels(&out, layer.k, scratch)?
         };
         for p in out {
-            scratch.put(p.into_data());
+            if let Some(buf) = transport.reclaim(p.into_data()) {
+                scratch.put(buf);
+            }
         }
         if layer.relu && !self.fused_relu {
             merged.relu();

@@ -296,6 +296,24 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))
     }
 
+    /// Parse exactly four hex digits starting at byte `at`. Truncated or
+    /// non-hex input is a parse error — never a panic or an OOB slice,
+    /// whatever bytes (including invalid UTF-8) follow the `\u`.
+    fn hex4(&self, at: usize) -> Result<u32> {
+        let bytes = self
+            .b
+            .get(at..at + 4)
+            .ok_or_else(|| self.err("bad \\u escape"))?;
+        let mut v = 0u32;
+        for &b in bytes {
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad \\u escape"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut out = String::new();
@@ -318,30 +336,26 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{0008}'),
                         Some(b'f') => out.push('\u{000c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs: join if a low surrogate follows.
+                            let cp = self.hex4(self.i + 1)?;
+                            // Surrogate pairs: a high surrogate must be
+                            // followed by a `\u`-escaped low surrogate in
+                            // range — anything else (truncation, a
+                            // non-escape, a second high surrogate) is a
+                            // parse error, never a panic.
                             let c = if (0xD800..0xDC00).contains(&cp) {
-                                self.i += 5;
-                                if self.b[self.i..].starts_with(b"\\u") {
-                                    let hex2 = std::str::from_utf8(
-                                        &self.b[self.i + 2..self.i + 6],
-                                    )
-                                    .unwrap();
-                                    let lo = u32::from_str_radix(hex2, 16)
-                                        .map_err(|_| self.err("bad \\u escape"))?;
-                                    self.i += 1; // balanced with the +5 below
-                                    let joined =
-                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                                    char::from_u32(joined)
-                                } else {
+                                if self.b.get(self.i + 5) != Some(&b'\\')
+                                    || self.b.get(self.i + 6) != Some(&b'u')
+                                {
                                     return Err(self.err("lone surrogate"));
                                 }
+                                let lo = self.hex4(self.i + 7)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("bad low surrogate"));
+                                }
+                                self.i += 6;
+                                let joined =
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(joined)
                             } else {
                                 char::from_u32(cp)
                             };
@@ -463,6 +477,42 @@ mod tests {
             Value::parse(r#""é""#).unwrap(),
             Value::Str("é".into())
         );
+    }
+
+    #[test]
+    fn unicode_escape_pairs_and_bmp() {
+        assert_eq!(
+            Value::parse(r#""é""#).unwrap(),
+            Value::Str("é".into())
+        );
+        // Astral codepoint via a surrogate pair (U+1F600).
+        assert_eq!(
+            Value::parse(r#""😀""#).unwrap(),
+            Value::Str("😀".into())
+        );
+    }
+
+    #[test]
+    fn malformed_unicode_escapes_error_not_panic() {
+        // Non-hex digits.
+        assert!(Value::parse(r#""\uZZZZ""#).is_err());
+        // `from_str_radix` would accept a sign; a strict hex4 must not.
+        assert!(Value::parse(r#""\u+fff""#).is_err());
+        // Truncated escape at end of input.
+        assert!(Value::parse(r#""\u00"#).is_err());
+        // High surrogate followed by a plain char (was an OOB slice
+        // panic path), by a truncated escape, and by nothing at all.
+        assert!(Value::parse(r#""\ud800A""#).is_err());
+        assert!(Value::parse(r#""\ud800\u""#).is_err());
+        assert!(Value::parse(r#""\ud800""#).is_err());
+        // High surrogate followed by a non-low-surrogate escape
+        // (`lo - 0xDC00` underflow in the old decoder).
+        assert!(Value::parse(r#""\ud800\u0041""#).is_err());
+        // Lone low surrogate is not a scalar value.
+        assert!(Value::parse(r#""\ude00""#).is_err());
+        // A multi-byte char straddling the 4-digit window: the old
+        // `from_utf8(..).unwrap()` panicked on the split scalar.
+        assert!(Value::parse("\"\\u1😀\"").is_err());
     }
 
     #[test]

@@ -69,6 +69,19 @@ pub mod synth {
     /// Eval-set size.
     pub const EVAL_COUNT: usize = 4;
 
+    /// Name of the wide synthetic model (fleet-width benchmarks).
+    pub const WIDE_MODEL: &str = "mlp_wide";
+    /// Wide fc1/fc2 height: 434 = lcm(2, 14, 62), so the shard heights
+    /// divide evenly at every fleet width the `transport_loopback` bench
+    /// sweeps ({4, 16, 64} workers → split degrees {2, 14, 62}; the
+    /// partitioner requires `(d-1)·⌈m/d⌉ ≤ m`).
+    pub const WIDE_M: usize = 434;
+    /// Wide fc1 input width (kept small — the bench is transport-bound,
+    /// not GEMM-bound).
+    pub const WIDE_K: usize = 8;
+    /// Split degrees both wide layers carry artifacts for.
+    pub const WIDE_DEGREES: [usize; 4] = [1, 2, 14, 62];
+
     /// A materialised synthetic artifact directory.
     #[derive(Debug)]
     pub struct SynthArtifacts {
@@ -152,26 +165,69 @@ pub mod synth {
         vals.iter().flat_map(|v| v.to_le_bytes()).collect()
     }
 
+    /// Shape of one synthetic two-layer MLP (the narrow default or the
+    /// wide fleet-bench variant).
+    struct MlpSpec {
+        model: &'static str,
+        fc1_m: usize,
+        fc1_k: usize,
+        fc2_m: usize,
+        degrees1: &'static [usize],
+        degrees2: &'static [usize],
+    }
+
+    const NARROW: MlpSpec = MlpSpec {
+        model: MODEL,
+        fc1_m: FC1_M,
+        fc1_k: FC1_K,
+        fc2_m: FC2_M,
+        degrees1: &[1, 2, 4],
+        degrees2: &[1, 2],
+    };
+
+    const WIDE: MlpSpec = MlpSpec {
+        model: WIDE_MODEL,
+        fc1_m: WIDE_M,
+        fc1_k: WIDE_K,
+        fc2_m: WIDE_M,
+        degrees1: &WIDE_DEGREES,
+        degrees2: &WIDE_DEGREES,
+    };
+
+    fn fresh_root(seed: u64) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "cdc-dnn-synth-{}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            seed
+        ))
+    }
+
     /// Build a synthetic artifact set under a fresh temp directory.
     ///
     /// Layout mirrors `compile/aot.py`: `manifest.json`,
     /// `weights/mlp.bin`, `eval/images.bin`, `eval/labels.bin`. Weights
     /// and eval data are deterministic in `seed`.
     pub fn build(seed: u64) -> Result<SynthArtifacts> {
-        let root = std::env::temp_dir().join(format!(
-            "cdc-dnn-synth-{}-{}-{}",
-            std::process::id(),
-            COUNTER.fetch_add(1, Ordering::Relaxed),
-            seed
-        ));
-        build_at(root, seed)
+        build_at(fresh_root(seed), seed)
     }
 
     /// Build the synthetic artifact set at an explicit directory — the
     /// `cdc-dnn synth` CLI command, so binary entrypoints (serve,
     /// ablate) can run offline against a durable artifact path.
     pub fn build_at(root: impl Into<PathBuf>, seed: u64) -> Result<SynthArtifacts> {
-        let root = root.into();
+        build_spec_at(root.into(), seed, &NARROW)
+    }
+
+    /// Build the *wide* synthetic artifact set ([`WIDE_MODEL`]: two
+    /// 434-high fc layers with split degrees up to 62) under a fresh
+    /// temp directory — the model the fleet-width transport bench
+    /// shards across up to 64 loopback workers.
+    pub fn build_wide(seed: u64) -> Result<SynthArtifacts> {
+        build_spec_at(fresh_root(seed), seed, &WIDE)
+    }
+
+    fn build_spec_at(root: PathBuf, seed: u64, spec: &MlpSpec) -> Result<SynthArtifacts> {
         for sub in ["", "weights", "eval"] {
             let dir = root.join(sub);
             std::fs::create_dir_all(&dir)
@@ -182,46 +238,63 @@ pub mod synth {
         let mut rng = Pcg32::new(seed, 0x5e1f);
         let mut blob: Vec<f32> = Vec::new();
         let fc1_w_off = blob.len() * 4;
-        blob.extend((0..FC1_M * FC1_K).map(|_| rng.normal() as f32 * 0.5));
+        blob.extend((0..spec.fc1_m * spec.fc1_k).map(|_| rng.normal() as f32 * 0.5));
         let fc1_b_off = blob.len() * 4;
-        blob.extend((0..FC1_M).map(|_| rng.normal() as f32 * 0.1));
+        blob.extend((0..spec.fc1_m).map(|_| rng.normal() as f32 * 0.1));
         let fc2_w_off = blob.len() * 4;
-        blob.extend((0..FC2_M * FC1_M).map(|_| rng.normal() as f32 * 0.5));
+        blob.extend((0..spec.fc2_m * spec.fc1_m).map(|_| rng.normal() as f32 * 0.5));
         let fc2_b_off = blob.len() * 4;
-        blob.extend((0..FC2_M).map(|_| rng.normal() as f32 * 0.1));
-        write_file(&root.join("weights/mlp.bin"), &f32_bytes(&blob))?;
+        blob.extend((0..spec.fc2_m).map(|_| rng.normal() as f32 * 0.1));
+        let weights_file = format!("weights/{}.bin", spec.model);
+        write_file(&root.join(&weights_file), &f32_bytes(&blob))?;
 
         // ---- eval set ------------------------------------------------
         let mut images: Vec<f32> = Vec::new();
         let mut labels: Vec<u8> = Vec::new();
         for i in 0..EVAL_COUNT {
-            images.extend((0..FC1_K).map(|_| rng.normal() as f32));
-            labels.extend(((i % FC2_M) as i32).to_le_bytes());
+            images.extend((0..spec.fc1_k).map(|_| rng.normal() as f32));
+            labels.extend(((i % spec.fc2_m) as i32).to_le_bytes());
         }
         write_file(&root.join("eval/images.bin"), &f32_bytes(&images))?;
         write_file(&root.join("eval/labels.bin"), &labels)?;
 
         // ---- manifest ------------------------------------------------
         let mut artifacts = Vec::new();
-        for d in [1usize, 2, 4] {
+        for &d in spec.degrees1 {
             for relu in [true, false] {
-                artifacts.push(fc_artifact(FC1_M.div_ceil(d), FC1_K, relu).1);
+                artifacts.push(fc_artifact(spec.fc1_m.div_ceil(d), spec.fc1_k, relu).1);
             }
         }
-        for d in [1usize, 2] {
-            artifacts.push(fc_artifact(FC2_M.div_ceil(d), FC1_M, false).1);
+        for &d in spec.degrees2 {
+            artifacts.push(fc_artifact(spec.fc2_m.div_ceil(d), spec.fc1_m, false).1);
         }
         let model = obj(vec![
-            ("name", Value::Str(MODEL.into())),
-            ("input_shape", usize_arr(&[FC1_K])),
-            ("classes", Value::Num(FC2_M as f64)),
+            ("name", Value::Str(spec.model.into())),
+            ("input_shape", usize_arr(&[spec.fc1_k])),
+            ("classes", Value::Num(spec.fc2_m as f64)),
             ("trained", Value::Bool(false)),
-            ("weights_file", Value::Str("weights/mlp.bin".into())),
+            ("weights_file", Value::Str(weights_file.clone())),
             (
                 "layers",
                 Value::Arr(vec![
-                    fc_layer("fc1", FC1_M, FC1_K, true, fc1_w_off, fc1_b_off, &[1, 2, 4]),
-                    fc_layer("fc2", FC2_M, FC1_M, false, fc2_w_off, fc2_b_off, &[1, 2]),
+                    fc_layer(
+                        "fc1",
+                        spec.fc1_m,
+                        spec.fc1_k,
+                        true,
+                        fc1_w_off,
+                        fc1_b_off,
+                        spec.degrees1,
+                    ),
+                    fc_layer(
+                        "fc2",
+                        spec.fc2_m,
+                        spec.fc1_m,
+                        false,
+                        fc2_w_off,
+                        fc2_b_off,
+                        spec.degrees2,
+                    ),
                 ]),
             ),
         ]);
@@ -234,7 +307,7 @@ pub mod synth {
                     ("images", Value::Str("eval/images.bin".into())),
                     ("labels", Value::Str("eval/labels.bin".into())),
                     ("count", Value::Num(EVAL_COUNT as f64)),
-                    ("image_shape", usize_arr(&[FC1_K])),
+                    ("image_shape", usize_arr(&[spec.fc1_k])),
                 ]),
             ),
             ("goldens", Value::Arr(Vec::new())),

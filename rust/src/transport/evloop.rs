@@ -1,0 +1,912 @@
+//! Single-thread event-loop I/O core for the TCP transport
+//! (DESIGN.md §12).
+//!
+//! PR 5's transport spent two OS threads per worker (a blocking reader
+//! plus the shared reaper's share of wakeups) — a coordinator cost that
+//! grows linearly with fleet width, exactly the scaling failure the
+//! paper's CDC argument is supposed to avoid. This module replaces all
+//! of that with **one** thread owning every connection:
+//!
+//! * **Readiness, not blocking.** Sockets are nonblocking and
+//!   multiplexed through hand-rolled FFI over `epoll` (Linux) or
+//!   `kqueue` (macOS) — zero external crates, the same way
+//!   [`super::wire`] hand-rolls its codec.
+//! * **Write coalescing.** Coordinator threads never touch a socket:
+//!   they encode frames into per-device queues and poke a wake pipe.
+//!   Each loop iteration drains the queues and flushes every connection
+//!   with a single `writev` sweep, so all frames queued in one dispatch
+//!   round leave in one syscall batch instead of one `write_all` per
+//!   frame.
+//! * **Zero-copy decode.** Incoming bytes accumulate in one growable
+//!   receive buffer per connection; frames are parsed **in place**
+//!   ([`wire::decode_prefix_in`]) and Reply tensors are built in
+//!   buffers taken from a shared [`Scratch`] arena, which the serve
+//!   loop refills via `Transport::reclaim` — steady-state receive does
+//!   no per-reply payload allocations.
+//! * **Reaper as timeout.** The poll timeout is the time to the
+//!   earliest outstanding deadline, so the straggler gate fires at the
+//!   exact deadline with no dedicated reaper thread or polling tick.
+//!
+//! The PR-5 liveness invariants carry over unchanged: every dispatched
+//! task yields exactly one completion (reply, reap, or connection
+//! death), EOF reaps a dead worker's in-flight tasks at TCP speed, and
+//! late replies for reaped tasks are dropped (their buffers recycled
+//! into the arena).
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+compile_error!(
+    "transport::evloop has poller backends for epoll (linux) and \
+     kqueue (macos) only; add one for this platform"
+);
+
+use std::collections::{BTreeMap, VecDeque};
+use std::ffi::{c_int, c_void};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::fleet::Completion;
+use crate::kernels::Scratch;
+use crate::tensor::Tensor;
+
+use super::wire::{self, Frame};
+
+/// Lock a mutex, recovering from poisoning (a panicked thread must not
+/// cascade into the coordinator).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// raw syscall surface (libc-style FFI, zero external crates)
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::ffi::{c_int, c_void};
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    /// The kernel's `struct epoll_event`: packed on x86-64 (the kernel
+    /// ABI), natural C layout on other architectures.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    /// `struct iovec` for scatter-gather writes.
+    #[repr(C)]
+    pub struct IoVec {
+        pub base: *const c_void,
+        pub len: usize,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            max: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
+    }
+}
+
+#[cfg(target_os = "macos")]
+mod sys {
+    use std::ffi::{c_int, c_void};
+
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+    pub const EV_ADD: u16 = 0x0001;
+    pub const EV_DELETE: u16 = 0x0002;
+    pub const EV_EOF: u16 = 0x8000;
+    pub const EV_ERROR: u16 = 0x4000;
+
+    /// Darwin's `struct kevent`. Deliberately **not** shared with other
+    /// BSDs: FreeBSD ≥ 12 appends `ext[4]`, a different ABI.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct KEvent {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: *mut c_void,
+    }
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    /// `struct iovec` for scatter-gather writes.
+    #[repr(C)]
+    pub struct IoVec {
+        pub base: *const c_void,
+        pub len: usize,
+    }
+
+    extern "C" {
+        pub fn kqueue() -> c_int;
+        pub fn kevent(
+            kq: c_int,
+            changelist: *const KEvent,
+            nchanges: c_int,
+            eventlist: *mut KEvent,
+            nevents: c_int,
+            timeout: *const Timespec,
+        ) -> c_int;
+        pub fn writev(fd: c_int, iov: *const IoVec, iovcnt: c_int) -> isize;
+    }
+}
+
+fn os_err(call: &str) -> Error {
+    Error::Wire(format!("{call}: {}", std::io::Error::last_os_error()))
+}
+
+// ---------------------------------------------------------------------
+// poller abstraction
+// ---------------------------------------------------------------------
+
+/// Per-fd readiness report from [`Poller::wait`].
+pub(crate) struct PollEvent {
+    /// The token the fd was registered with.
+    pub token: u64,
+    /// Bytes (or EOF) are waiting to be read.
+    pub readable: bool,
+    /// The socket accepts writes again.
+    pub writable: bool,
+    /// Error/EOF condition; treat like readable (the read reports it).
+    pub hangup: bool,
+}
+
+/// Max events drained per wait call (the loop simply waits again when
+/// more are pending — level-triggered registration keeps them ready).
+const MAX_EVENTS: usize = 64;
+
+/// Thin wrapper over the platform readiness syscall (epoll / kqueue).
+pub(crate) struct Poller {
+    fd: OwnedFd,
+}
+
+#[cfg(target_os = "linux")]
+fn interest(want_write: bool) -> u32 {
+    let mut ev = sys::EPOLLIN | sys::EPOLLRDHUP;
+    if want_write {
+        ev |= sys::EPOLLOUT;
+    }
+    ev
+}
+
+/// Round a duration *up* to whole milliseconds (epoll granularity): a
+/// truncated timeout would wake just before a deadline and spin.
+#[cfg(target_os = "linux")]
+fn ceil_ms(d: Duration) -> c_int {
+    let mut ms = d.as_millis();
+    if Duration::from_millis(ms as u64) < d {
+        ms += 1;
+    }
+    ms.min(i32::MAX as u128) as c_int
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    /// A fresh epoll instance (close-on-exec).
+    pub fn new() -> Result<Poller> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(Poller { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, token: u64, want_write: bool) -> Result<()> {
+        let mut ev = sys::EpollEvent { events: interest(want_write), data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    /// Register an fd for readiness events under `token`.
+    pub fn add(&self, fd: RawFd, token: u64, want_write: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, want_write)
+    }
+
+    /// Toggle write interest on a registered fd.
+    pub fn rearm(&self, fd: RawFd, token: u64, want_write: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, want_write)
+    }
+
+    /// Deregister an fd (best-effort; closing the fd removes it too).
+    pub fn del(&self, fd: RawFd) {
+        // The event argument is ignored for DEL but must be non-null on
+        // pre-2.6.9 kernels.
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        let _ = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Block for readiness, at most `timeout` (`None` = forever).
+    /// EINTR surfaces as an empty event set.
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+        let tmo = match timeout {
+            None => -1,
+            Some(d) => ceil_ms(d),
+        };
+        let n = unsafe {
+            sys::epoll_wait(self.fd.as_raw_fd(), buf.as_mut_ptr(), MAX_EVENTS as c_int, tmo)
+        };
+        if n < 0 {
+            if std::io::Error::last_os_error().kind() == ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(os_err("epoll_wait"));
+        }
+        for ev in buf.iter().take(n as usize) {
+            // Copy packed fields out by value; no references into them.
+            let events = ev.events;
+            let token = ev.data;
+            out.push(PollEvent {
+                token,
+                readable: events & sys::EPOLLIN != 0,
+                writable: events & sys::EPOLLOUT != 0,
+                hangup: events & (sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "macos")]
+impl Poller {
+    /// A fresh kqueue instance.
+    pub fn new() -> Result<Poller> {
+        let fd = unsafe { sys::kqueue() };
+        if fd < 0 {
+            return Err(os_err("kqueue"));
+        }
+        Ok(Poller { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn change(&self, fd: RawFd, filter: i16, flags: u16, token: u64) -> c_int {
+        let ch = sys::KEvent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: token as usize as *mut c_void,
+        };
+        unsafe {
+            sys::kevent(self.fd.as_raw_fd(), &ch, 1, std::ptr::null_mut(), 0, std::ptr::null())
+        }
+    }
+
+    /// Register an fd for readiness events under `token`.
+    pub fn add(&self, fd: RawFd, token: u64, want_write: bool) -> Result<()> {
+        if self.change(fd, sys::EVFILT_READ, sys::EV_ADD, token) < 0 {
+            return Err(os_err("kevent add read"));
+        }
+        if want_write && self.change(fd, sys::EVFILT_WRITE, sys::EV_ADD, token) < 0 {
+            return Err(os_err("kevent add write"));
+        }
+        Ok(())
+    }
+
+    /// Toggle write interest on a registered fd. `EV_ADD` on an
+    /// existing filter updates it; deleting an absent write filter is
+    /// an expected no-op error.
+    pub fn rearm(&self, fd: RawFd, token: u64, want_write: bool) -> Result<()> {
+        if want_write {
+            if self.change(fd, sys::EVFILT_WRITE, sys::EV_ADD, token) < 0 {
+                return Err(os_err("kevent add write"));
+            }
+        } else {
+            let _ = self.change(fd, sys::EVFILT_WRITE, sys::EV_DELETE, token);
+        }
+        Ok(())
+    }
+
+    /// Deregister an fd (best-effort; closing the fd removes it too).
+    pub fn del(&self, fd: RawFd) {
+        let _ = self.change(fd, sys::EVFILT_READ, sys::EV_DELETE, 0);
+        let _ = self.change(fd, sys::EVFILT_WRITE, sys::EV_DELETE, 0);
+    }
+
+    /// Block for readiness, at most `timeout` (`None` = forever).
+    /// EINTR surfaces as an empty event set.
+    pub fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let zero = sys::KEvent {
+            ident: 0,
+            filter: 0,
+            flags: 0,
+            fflags: 0,
+            data: 0,
+            udata: std::ptr::null_mut(),
+        };
+        let mut buf = [zero; MAX_EVENTS];
+        let ts;
+        let ts_ptr = match timeout {
+            None => std::ptr::null(),
+            Some(d) => {
+                ts = sys::Timespec {
+                    tv_sec: d.as_secs() as i64,
+                    tv_nsec: d.subsec_nanos() as i64,
+                };
+                &ts as *const sys::Timespec
+            }
+        };
+        let n = unsafe {
+            sys::kevent(
+                self.fd.as_raw_fd(),
+                std::ptr::null(),
+                0,
+                buf.as_mut_ptr(),
+                MAX_EVENTS as c_int,
+                ts_ptr,
+            )
+        };
+        if n < 0 {
+            if std::io::Error::last_os_error().kind() == ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(os_err("kevent wait"));
+        }
+        for ev in buf.iter().take(n as usize) {
+            out.push(PollEvent {
+                token: ev.udata as usize as u64,
+                readable: ev.filter == sys::EVFILT_READ,
+                writable: ev.filter == sys::EVFILT_WRITE,
+                hangup: ev.flags & (sys::EV_EOF | sys::EV_ERROR) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared coordinator-side state
+// ---------------------------------------------------------------------
+
+/// One dispatched, not-yet-answered task.
+pub(crate) struct OutTask {
+    /// Device the task was dispatched to.
+    pub device: usize,
+    /// Wall-clock deadline after which the task is reaped as lost.
+    pub deadline_ms: f64,
+}
+
+/// Liveness + in-flight bookkeeping.
+pub(crate) struct State {
+    /// Per-device liveness (false once the connection died).
+    pub alive: Vec<bool>,
+    /// (req, task) → in-flight bookkeeping.
+    pub outstanding: BTreeMap<(u64, u64), OutTask>,
+}
+
+/// Everything the event loop shares with the coordinator-side handles.
+pub(crate) struct Shared {
+    /// Wall-clock zero of the current serve run.
+    pub epoch: Mutex<Instant>,
+    /// Liveness and the outstanding-task table.
+    pub state: Mutex<State>,
+    /// Per-device egress queues: handles enqueue encoded frames here;
+    /// the loop drains them into per-connection `writev` batches.
+    pub outq: Vec<Mutex<VecDeque<Vec<u8>>>>,
+    /// Decode arena: Reply tensors are parsed straight into pooled
+    /// buffers; `Transport::reclaim` feeds consumed outputs back.
+    pub arena: Mutex<Scratch>,
+    /// Completion stream consumed by `Transport::recv`.
+    pub tx: Sender<Completion>,
+    /// Tells the loop to flush and exit.
+    pub stop: AtomicBool,
+    /// Write half of the wake pipe (the loop polls the read half).
+    waker: UnixStream,
+}
+
+impl Shared {
+    /// Fresh shared state for `n_devices` live connections.
+    pub fn new(n_devices: usize, tx: Sender<Completion>, waker: UnixStream) -> Shared {
+        Shared {
+            epoch: Mutex::new(Instant::now()),
+            state: Mutex::new(State {
+                alive: vec![true; n_devices],
+                outstanding: BTreeMap::new(),
+            }),
+            outq: (0..n_devices).map(|_| Mutex::new(VecDeque::new())).collect(),
+            arena: Mutex::new(Scratch::new()),
+            tx,
+            stop: AtomicBool::new(false),
+            waker,
+        }
+    }
+
+    /// Milliseconds since the serve epoch.
+    pub fn now_ms(&self) -> f64 {
+        lock(&self.epoch).elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Queue an encoded frame for a device and wake the loop; the next
+    /// flush coalesces it with every neighbour queued meanwhile.
+    pub fn enqueue(&self, device: usize, frame: Vec<u8>) {
+        lock(&self.outq[device]).push_back(frame);
+        self.wake();
+    }
+
+    /// Wake the event loop. Nonblocking: a full pipe already guarantees
+    /// a pending wake, so `WouldBlock` is success.
+    pub fn wake(&self) {
+        let _ = (&self.waker).write(&[1u8]);
+    }
+
+    /// Synthesise a lost completion (the wire twin of the simulator's
+    /// `t_arrival = ∞` delivery).
+    pub fn send_lost(&self, req: u64, task: u64, device: usize) {
+        let _ = self.tx.send(Completion {
+            req,
+            task,
+            device,
+            result: None,
+            t_arrival_ms: f64::INFINITY,
+        });
+    }
+
+    /// Mark a device's connection dead: drop its queued frames and
+    /// synthesise losses for everything outstanding on it. Idempotent.
+    pub fn mark_dead(&self, device: usize) {
+        lock(&self.outq[device]).clear();
+        let mut st = lock(&self.state);
+        if !st.alive[device] {
+            return;
+        }
+        st.alive[device] = false;
+        let dead: Vec<(u64, u64)> = st
+            .outstanding
+            .iter()
+            .filter(|(_, o)| o.device == device)
+            .map(|(&k, _)| k)
+            .collect();
+        for (req, task) in dead {
+            st.outstanding.remove(&(req, task));
+            self.send_lost(req, task, device);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the event loop
+// ---------------------------------------------------------------------
+
+/// Receive-buffer growth step (also the spare-room floor per read).
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Max frames batched into one `writev` call.
+const MAX_IOV: usize = 64;
+
+/// Poll-wait cap when no deadline is pending: bounds stop-flag latency
+/// without a polling reaper thread.
+const IDLE_TICK: Duration = Duration::from_millis(500);
+
+/// Poller token of the wake pipe (devices use their index).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Per-connection nonblocking I/O state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Receive window: undecoded bytes live in `rbuf[rstart..rend]`;
+    /// frames are parsed in place and the window advances.
+    rbuf: Vec<u8>,
+    rstart: usize,
+    rend: usize,
+    /// Encoded frames awaiting flush, oldest first.
+    wq: VecDeque<Vec<u8>>,
+    /// Bytes of `wq[0]` already written (partial `writev`).
+    woff: usize,
+    /// Whether the poller currently watches writability.
+    want_write: bool,
+}
+
+/// Start the event loop over connected, handshaken worker streams
+/// (device order). Registration failures surface here, before any
+/// thread exists.
+pub(crate) fn spawn(
+    streams: Vec<TcpStream>,
+    shared: Arc<Shared>,
+    wake_rx: UnixStream,
+) -> Result<JoinHandle<()>> {
+    let poller = Poller::new()?;
+    wake_rx
+        .set_nonblocking(true)
+        .map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
+    poller.add(wake_rx.as_raw_fd(), WAKE_TOKEN, false)?;
+    let mut conns = Vec::with_capacity(streams.len());
+    for (device, s) in streams.into_iter().enumerate() {
+        s.set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("device {device}: set_nonblocking: {e}")))?;
+        poller.add(s.as_raw_fd(), device as u64, false)?;
+        conns.push(Some(Conn {
+            stream: s,
+            rbuf: Vec::new(),
+            rstart: 0,
+            rend: 0,
+            wq: VecDeque::new(),
+            woff: 0,
+            want_write: false,
+        }));
+    }
+    std::thread::Builder::new()
+        .name("tcp-evloop".into())
+        .spawn(move || loop_main(poller, conns, shared, wake_rx))
+        .map_err(|e| Error::Fleet(format!("spawn tcp-evloop: {e}")))
+}
+
+fn loop_main(
+    poller: Poller,
+    mut conns: Vec<Option<Conn>>,
+    shared: Arc<Shared>,
+    wake_rx: UnixStream,
+) {
+    let mut events: Vec<PollEvent> = Vec::with_capacity(MAX_EVENTS);
+    loop {
+        // 1. Adopt frames queued by coordinator threads since the last
+        //    round.
+        for device in 0..conns.len() {
+            let mut q = lock(&shared.outq[device]);
+            if q.is_empty() {
+                continue;
+            }
+            match conns[device].as_mut() {
+                Some(c) => c.wq.extend(q.drain(..)),
+                None => q.clear(), // dead device: losses already synthesised
+            }
+        }
+        // 2. Coalesced flush: one writev sweep per connection sends
+        //    everything queued in this dispatch round together.
+        for device in 0..conns.len() {
+            flush_conn(&poller, &mut conns, device, &shared);
+        }
+        // 3. The reaper, folded in: reap overdue tasks and learn when
+        //    the next deadline falls due.
+        let next_deadline = reap(&shared);
+        if shared.stop.load(Ordering::SeqCst) {
+            teardown(&mut conns);
+            return;
+        }
+        // 4. Sleep until readiness, a wake byte, or that deadline.
+        let timeout = match next_deadline {
+            Some(dl) => {
+                let ms = (dl - shared.now_ms()).max(0.0);
+                Duration::from_secs_f64(ms / 1e3).min(IDLE_TICK)
+            }
+            None => IDLE_TICK,
+        };
+        if poller.wait(&mut events, Some(timeout)).is_err() {
+            // A broken poller can't observe anything anymore: declare
+            // the fleet dead so in-flight work resolves as losses
+            // instead of hanging the serve loop, then exit.
+            for device in 0..conns.len() {
+                kill_conn(&poller, &mut conns, device, &shared);
+            }
+            return;
+        }
+        // 5. Service readiness.
+        for ev in &events {
+            if ev.token == WAKE_TOKEN {
+                drain_wake(&wake_rx);
+                continue;
+            }
+            let device = ev.token as usize;
+            if device >= conns.len() {
+                continue;
+            }
+            if ev.readable || ev.hangup {
+                let alive = match conns[device].as_mut() {
+                    Some(c) => read_ready(c, device, &shared),
+                    None => continue,
+                };
+                if !alive {
+                    kill_conn(&poller, &mut conns, device, &shared);
+                    continue;
+                }
+            }
+            if ev.writable {
+                flush_conn(&poller, &mut conns, device, &shared);
+            }
+        }
+    }
+}
+
+/// Final best-effort flush, then socket shutdown. Workers are NOT told
+/// to exit — they return to their accept loop for the next session.
+fn teardown(conns: &mut [Option<Conn>]) {
+    for slot in conns.iter_mut() {
+        if let Some(mut c) = slot.take() {
+            let _ = c.stream.set_nonblocking(false);
+            let _ = c.stream.set_write_timeout(Some(Duration::from_millis(250)));
+            while let Some(f) = c.wq.pop_front() {
+                if c.stream.write_all(&f[c.woff..]).is_err() {
+                    break;
+                }
+                c.woff = 0;
+            }
+            let _ = c.stream.flush();
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Drop a connection: deregister, shut the socket down, mark the
+/// device dead (synthesising losses for its in-flight tasks).
+fn kill_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared: &Shared) {
+    if let Some(c) = conns[device].take() {
+        poller.del(c.stream.as_raw_fd());
+        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    }
+    shared.mark_dead(device);
+}
+
+/// Write as much queued data as the socket accepts, then keep the
+/// poller's write interest exactly while bytes remain.
+fn flush_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared: &Shared) {
+    let (res, fd, was) = match conns[device].as_mut() {
+        None => return,
+        Some(c) => (write_queued(c), c.stream.as_raw_fd(), c.want_write),
+    };
+    let pending = match res {
+        Err(()) => {
+            kill_conn(poller, conns, device, shared);
+            return;
+        }
+        Ok(p) => p,
+    };
+    if pending != was {
+        if let Some(c) = conns[device].as_mut() {
+            c.want_write = pending;
+        }
+        if poller.rearm(fd, device as u64, pending).is_err() {
+            kill_conn(poller, conns, device, shared);
+        }
+    }
+}
+
+/// Drain `c.wq` into the socket, batching up to [`MAX_IOV`] frames per
+/// `writev` call. `Ok(true)` = socket full, bytes remain; `Ok(false)` =
+/// queue drained; `Err` = connection dead.
+fn write_queued(c: &mut Conn) -> std::result::Result<bool, ()> {
+    loop {
+        if c.wq.is_empty() {
+            return Ok(false);
+        }
+        let mut iov: Vec<sys::IoVec> = Vec::with_capacity(c.wq.len().min(MAX_IOV));
+        for (i, f) in c.wq.iter().take(MAX_IOV).enumerate() {
+            let off = if i == 0 { c.woff } else { 0 };
+            iov.push(sys::IoVec {
+                base: f[off..].as_ptr() as *const c_void,
+                len: f.len() - off,
+            });
+        }
+        let n = unsafe { sys::writev(c.stream.as_raw_fd(), iov.as_ptr(), iov.len() as c_int) };
+        if n < 0 {
+            match std::io::Error::last_os_error().kind() {
+                ErrorKind::WouldBlock => return Ok(true),
+                ErrorKind::Interrupted => continue,
+                _ => return Err(()),
+            }
+        }
+        let mut n = n as usize;
+        while n > 0 {
+            let left = c.wq[0].len() - c.woff;
+            if n >= left {
+                c.wq.pop_front();
+                c.woff = 0;
+                n -= left;
+            } else {
+                c.woff += n;
+                n = 0;
+            }
+        }
+    }
+}
+
+/// Pull everything the socket has, parsing complete frames in place.
+/// Returns false when the connection is finished (EOF, error, protocol
+/// violation, or malformed frame).
+fn read_ready(c: &mut Conn, device: usize, shared: &Shared) -> bool {
+    loop {
+        let need = match parse_frames(c, device, shared) {
+            Err(()) => return false,
+            Ok(n) => n,
+        };
+        ensure_room(c, need);
+        match c.stream.read(&mut c.rbuf[c.rend..]) {
+            Ok(0) => return false,
+            Ok(n) => c.rend += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Guarantee spare capacity after `rend`: compact the window to the
+/// front, then grow so the in-progress frame (`need` bytes) plus a
+/// read chunk fit.
+fn ensure_room(c: &mut Conn, need: usize) {
+    if c.rstart > 0 {
+        c.rbuf.copy_within(c.rstart..c.rend, 0);
+        c.rend -= c.rstart;
+        c.rstart = 0;
+    }
+    let want = need.max(c.rend + READ_CHUNK);
+    if c.rbuf.len() < want {
+        c.rbuf.resize(want, 0);
+    }
+}
+
+/// Decode every complete frame in the receive window (zero copy: the
+/// payload is parsed where it landed, Reply tensors go straight into
+/// the arena). Returns the total length of the frame the stream is
+/// mid-way through — the `ensure_room` hint.
+fn parse_frames(c: &mut Conn, device: usize, shared: &Shared) -> std::result::Result<usize, ()> {
+    loop {
+        let parsed = {
+            let avail = &c.rbuf[c.rstart..c.rend];
+            let mut arena = lock(&shared.arena);
+            wire::decode_prefix_in(avail, &mut arena)
+        };
+        let (frame, used) = match parsed {
+            Ok(Some(p)) => p,
+            Ok(None) => {
+                let need = match wire::frame_len(&c.rbuf[c.rstart..c.rend]) {
+                    Ok(Some(n)) => n,
+                    _ => 5,
+                };
+                return Ok(need);
+            }
+            Err(_) => return Err(()),
+        };
+        c.rstart += used;
+        if c.rstart == c.rend {
+            c.rstart = 0;
+            c.rend = 0;
+        }
+        match frame {
+            Frame::Reply { req, task, result } => deliver(shared, device, req, task, result),
+            // Workers speak only Reply after the handshake; anything
+            // else is a protocol violation.
+            _ => return Err(()),
+        }
+    }
+}
+
+/// Route one Reply to the completion channel — or drop it (recycling
+/// its buffer) when the task was already reaped.
+fn deliver(shared: &Shared, device: usize, req: u64, task: u64, result: Option<Tensor>) {
+    let now = shared.now_ms();
+    let known = lock(&shared.state).outstanding.remove(&(req, task)).is_some();
+    if !known {
+        // Late reply after a reap: the loss was already delivered, and
+        // a second completion would break exactly-once accounting.
+        if let Some(t) = result {
+            lock(&shared.arena).put(t.into_data());
+        }
+        return;
+    }
+    let t_arrival_ms = if result.is_none() { f64::INFINITY } else { now };
+    let _ = shared.tx.send(Completion { req, task, device, result, t_arrival_ms });
+}
+
+/// Swallow pending wake bytes (their only job was ending the wait).
+fn drain_wake(mut wake_rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    while matches!(wake_rx.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+/// Synthesise losses for tasks past their wall-clock deadline and
+/// report the earliest remaining deadline (the poll-timeout source).
+fn reap(shared: &Shared) -> Option<f64> {
+    let now = shared.now_ms();
+    let mut next = None;
+    let expired: Vec<(u64, u64, usize)> = {
+        let mut st = lock(&shared.state);
+        let keys: Vec<(u64, u64, usize)> = st
+            .outstanding
+            .iter()
+            .filter(|(_, o)| o.deadline_ms <= now)
+            .map(|(&(req, task), o)| (req, task, o.device))
+            .collect();
+        for &(req, task, _) in &keys {
+            st.outstanding.remove(&(req, task));
+        }
+        for o in st.outstanding.values() {
+            next = Some(o.deadline_ms.min(next.unwrap_or(f64::INFINITY)));
+        }
+        keys
+    };
+    for (req, task, device) in expired {
+        shared.send_lost(req, task, device);
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poller_sees_readiness_and_timeouts() {
+        let poller = Poller::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.add(b.as_raw_fd(), 7, false).unwrap();
+        let mut events = Vec::new();
+        // Nothing to read yet: the wait times out empty.
+        poller.wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.is_empty());
+        (&a).write_all(&[9u8]).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(1_000))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        // Write interest: an idle socket is immediately writable.
+        poller.rearm(b.as_raw_fd(), 7, true).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(1_000))).unwrap();
+        assert!(events.iter().any(|e| e.writable));
+        poller.del(b.as_raw_fd());
+    }
+
+    #[test]
+    fn peer_close_surfaces_as_hangup_or_readable() {
+        let poller = Poller::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.add(b.as_raw_fd(), 1, false).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(1_000))).unwrap();
+        assert!(events.iter().any(|e| e.hangup || e.readable));
+    }
+
+    #[test]
+    fn writev_writes_across_iovecs() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let bufs = [vec![1u8, 2], vec![3u8, 4, 5]];
+        let iov: Vec<sys::IoVec> = bufs
+            .iter()
+            .map(|v| sys::IoVec { base: v.as_ptr() as *const c_void, len: v.len() })
+            .collect();
+        let n = unsafe { sys::writev(a.as_raw_fd(), iov.as_ptr(), iov.len() as c_int) };
+        assert_eq!(n, 5);
+        let mut got = [0u8; 5];
+        (&b).read_exact(&mut got).unwrap();
+        assert_eq!(got, [1, 2, 3, 4, 5]);
+    }
+}

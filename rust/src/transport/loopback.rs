@@ -6,9 +6,10 @@
 //! parsed from the `cdc-dnn worker listening on …` stdout line. The
 //! children are wrapped in `Arc<Mutex<Child>>` so a chaos timer thread
 //! ([`LoopbackFleet::kill_after`]) can SIGKILL one mid-run while the
-//! coordinator blocks in `Session::serve` — the TCP transport's reader
-//! threads see the connection die and synthesise the losses CDC then
-//! recovers from. Dropping the fleet kills and reaps every child.
+//! coordinator blocks in `Session::serve` — the TCP transport's event
+//! loop sees the connection die (EOF/hangup readiness) and synthesises
+//! the losses CDC then recovers from. Dropping the fleet kills and
+//! reaps every child.
 
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};

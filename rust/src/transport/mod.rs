@@ -12,14 +12,17 @@
 //!   bit-identical to the pre-transport engine.
 //! * [`TcpTransport`] — per-device persistent TCP connections speaking
 //!   the length-prefixed [`wire`] protocol to standalone `cdc-dnn
-//!   worker` processes. Completions are stamped with **wall-clock**
-//!   receipt time; a reply-reaper thread synthesises a lost completion
-//!   (`t_arrival = ∞`) for any order still outstanding past its
-//!   per-order deadline, and a connection death (worker killed
-//!   mid-request) synthesises losses for everything in flight on it —
-//!   so the serve engine's invariant ("every dispatched task eventually
-//!   yields a completion") holds over real sockets with real process
-//!   failures.
+//!   worker` processes, all multiplexed through the single [`evloop`]
+//!   I/O thread (epoll/kqueue readiness, writev-coalesced sends,
+//!   in-place frame decode). Completions are stamped with
+//!   **wall-clock** receipt time; the loop's poll timeout doubles as
+//!   the reply reaper, synthesising a lost completion (`t_arrival =
+//!   ∞`) for any order still outstanding past its per-order deadline,
+//!   and a connection death (worker killed mid-request) synthesises
+//!   losses for everything in flight on it — so the serve engine's
+//!   invariant ("every dispatched task eventually yields a
+//!   completion") holds over real sockets with real process failures,
+//!   while coordinator I/O threads stay O(1) in fleet width.
 //!
 //! The serving engine (`coordinator::serve`) is transport-generic: the
 //! same pipelining, micro-batching, adaptive-policy and CDC-parity
@@ -28,6 +31,7 @@
 //! integration tests and the `transport_loopback` bench use to exercise
 //! real process-kill failure injection.
 
+pub mod evloop;
 pub mod loopback;
 pub mod sim;
 pub mod tcp;
@@ -105,6 +109,17 @@ pub trait Transport: Send {
     /// Non-blocking completion poll (`Session::drain`).
     fn try_recv(&self) -> Option<Completion>;
 
+    /// Offer a consumed result buffer back to the transport.
+    /// `Some(buf)` = the transport has no private use for it and the
+    /// caller should recycle it in its own arena (the simulator's
+    /// path — bit-identical to the pre-reclaim engine). `None` = the
+    /// transport kept it: the TCP transport feeds its decode arena, so
+    /// Reply tensors parsed off the wire and shard outputs consumed by
+    /// the serve loop cycle through one bounded pool.
+    fn reclaim(&self, buf: Vec<f32>) -> Option<Vec<f32>> {
+        Some(buf)
+    }
+
     /// Swap a device's failure plan (sim: the timing model; tcp: the
     /// worker's silent-drop emulation).
     fn set_failure(&self, device: usize, plan: FailurePlan) -> Result<()>;
@@ -132,7 +147,9 @@ pub struct TcpConfig {
     pub order_deadline_ms: f64,
     /// Per-connection handshake/connect timeout.
     pub connect_timeout_ms: u64,
-    /// Reply-reaper poll interval.
+    /// Retained for deployment-file compatibility: the event loop now
+    /// reaps on exact deadlines (its poll timeout), so no polling
+    /// thread consumes this tick anymore.
     pub reaper_tick_ms: u64,
 }
 

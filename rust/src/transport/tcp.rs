@@ -1,5 +1,13 @@
-//! Coordinator-side TCP transport: persistent per-device connections,
-//! per-connection reader threads, and the reply-reaper.
+//! Coordinator-side TCP transport: persistent per-device connections
+//! multiplexed through the single [`evloop`] I/O thread.
+//!
+//! The coordinator's I/O cost is **O(1) in fleet width**: however many
+//! workers a session spans, exactly one `tcp-evloop` thread owns every
+//! socket ([`TcpTransport::IO_THREADS`]). Handle methods (`dispatch`,
+//! `deploy`, …) encode frames, queue them per device, and wake the
+//! loop; the loop batches each round's frames into one `writev` flush
+//! per connection and parses replies in place out of per-connection
+//! receive buffers (DESIGN.md §12).
 //!
 //! ## Liveness invariant
 //!
@@ -11,12 +19,13 @@
 //! shape the simulator delivers for a dropped reply, so the policy /
 //! CDC-recovery layers run unchanged:
 //!
-//! * **deadline reaper**: every dispatched task carries a wall-clock
-//!   deadline (`TcpConfig::order_deadline_ms` after dispatch); a
-//!   background thread reaps overdue tasks. This is the straggler gate
-//!   on real time — CDC then substitutes the parity result without
+//! * **deadline reaping**: every dispatched task carries a wall-clock
+//!   deadline (`TcpConfig::order_deadline_ms` after dispatch); the
+//!   event loop uses the earliest deadline as its poll timeout and
+//!   reaps overdue tasks when it fires. This is the straggler gate on
+//!   real time — CDC then substitutes the parity result without
 //!   waiting, the paper's zero-latency recovery.
-//! * **connection death**: a reader thread hitting EOF/error marks the
+//! * **connection death**: EOF or a socket error on the loop marks the
 //!   device dead and synthesises losses for everything outstanding on
 //!   it — a killed worker process is detected at TCP speed, not at the
 //!   deadline.
@@ -25,102 +34,41 @@
 //!   with `∞`).
 //!
 //! Late replies that arrive after their task was reaped are dropped on
-//! the reader thread (the task is no longer outstanding), so a task
-//! never yields two completions.
+//! the loop (the task is no longer outstanding), so a task never
+//! yields two completions.
 
-use std::collections::BTreeMap;
-use std::io::Write;
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::fleet::{Completion, FailurePlan, NetConfig, TaskDef, WorkOrder};
 
+use super::evloop::{self, lock, OutTask, Shared};
 use super::wire::{self, Frame};
 use super::{TcpConfig, Transport};
 
-/// Lock a mutex, recovering from poisoning (a panicked reader thread
-/// must not cascade into the coordinator).
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// One dispatched, not-yet-answered task.
-struct OutTask {
-    device: usize,
-    deadline_ms: f64,
-}
-
-/// Mutable transport state shared with the reader/reaper threads.
-struct State {
-    /// Per-device liveness (false once the connection died).
-    alive: Vec<bool>,
-    /// (req, task) → in-flight bookkeeping.
-    outstanding: BTreeMap<(u64, u64), OutTask>,
-}
-
-struct Inner {
-    epoch: Mutex<Instant>,
-    state: Mutex<State>,
-    tx: Sender<Completion>,
-    stop: AtomicBool,
-}
-
-impl Inner {
-    fn now_ms(&self) -> f64 {
-        lock(&self.epoch).elapsed().as_secs_f64() * 1e3
-    }
-
-    /// Synthesise a lost completion (the wire twin of the simulator's
-    /// `t_arrival = ∞` delivery).
-    fn send_lost(&self, req: u64, task: u64, device: usize) {
-        let _ = self.tx.send(Completion {
-            req,
-            task,
-            device,
-            result: None,
-            t_arrival_ms: f64::INFINITY,
-        });
-    }
-
-    /// Mark a device's connection dead and synthesise losses for all of
-    /// its outstanding tasks. Idempotent.
-    fn mark_dead(&self, device: usize) {
-        let mut st = lock(&self.state);
-        if !st.alive[device] {
-            return;
-        }
-        st.alive[device] = false;
-        let dead: Vec<(u64, u64)> = st
-            .outstanding
-            .iter()
-            .filter(|(_, o)| o.device == device)
-            .map(|(&k, _)| k)
-            .collect();
-        for (req, task) in dead {
-            st.outstanding.remove(&(req, task));
-            self.send_lost(req, task, device);
-        }
-    }
-}
-
 /// Real-execution transport over per-device TCP connections.
 pub struct TcpTransport {
-    inner: Arc<Inner>,
-    /// Writer halves, one per device, frame-atomic via the mutex.
-    writers: Vec<Mutex<TcpStream>>,
+    shared: Arc<Shared>,
     rx: Receiver<Completion>,
-    threads: Vec<JoinHandle<()>>,
+    evloop: Option<JoinHandle<()>>,
+    n_devices: usize,
     deadline_ms: f64,
 }
 
 impl TcpTransport {
+    /// Coordinator I/O threads, independent of fleet width: one event
+    /// loop owns every connection. The fleet-width bench asserts this
+    /// O(1) property as the width sweep grows.
+    pub const IO_THREADS: usize = 1;
+
     /// Connect to the first `n_devices` workers of `cfg.workers`,
-    /// handshake each, and start the reader + reaper threads.
+    /// handshake each, then hand every socket to the event loop.
     pub fn connect(cfg: &TcpConfig, n_devices: usize, seed: u64) -> Result<TcpTransport> {
         if cfg.workers.len() < n_devices {
             return Err(Error::Config(format!(
@@ -132,41 +80,23 @@ impl TcpTransport {
             )));
         }
         let timeout = Duration::from_millis(cfg.connect_timeout_ms.max(1));
-        let (tx, rx) = channel();
-        let inner = Arc::new(Inner {
-            epoch: Mutex::new(Instant::now()),
-            state: Mutex::new(State {
-                alive: vec![true; n_devices],
-                outstanding: BTreeMap::new(),
-            }),
-            tx,
-            stop: AtomicBool::new(false),
-        });
-
-        // Build the transport incrementally so a partial connect/
-        // handshake failure drops it — Drop sets the stop flag, shuts
-        // the already-open sockets down, and joins the already-spawned
-        // reader threads (no wedged workers or leaked readers).
-        let mut t = TcpTransport {
-            inner,
-            writers: Vec::with_capacity(n_devices),
-            rx,
-            threads: Vec::new(),
-            deadline_ms: cfg.order_deadline_ms.max(1.0),
-        };
+        // Connect + handshake every worker up front, blocking, on the
+        // caller thread: a failure here just drops the already-open
+        // sockets (workers return to their accept loop) — no I/O
+        // thread exists yet.
+        let mut streams = Vec::with_capacity(n_devices);
         for (device, addr) in cfg.workers.iter().take(n_devices).enumerate() {
             let stream = connect_one(addr, timeout)?;
             stream
                 .set_nodelay(true)
                 .map_err(|e| Error::Wire(format!("{addr}: set_nodelay: {e}")))?;
             // Handshake under a read timeout so a wedged worker fails
-            // fast; cleared before the reader thread takes over.
+            // fast; cleared before the event loop takes the socket
+            // nonblocking.
             stream
                 .set_read_timeout(Some(timeout))
                 .map_err(|e| Error::Wire(format!("{addr}: set timeout: {e}")))?;
-            let mut hs = stream
-                .try_clone()
-                .map_err(|e| Error::Wire(format!("{addr}: clone stream: {e}")))?;
+            let mut hs = &stream;
             wire::write_frame(&mut hs, &wire::hello(seed, device as u32))?;
             match wire::read_frame(&mut hs)? {
                 Some(Frame::HelloAck { proto }) if proto == wire::PROTO_VERSION => {}
@@ -185,56 +115,46 @@ impl TcpTransport {
             stream
                 .set_read_timeout(None)
                 .map_err(|e| Error::Wire(format!("{addr}: clear timeout: {e}")))?;
-
-            let reader = stream
-                .try_clone()
-                .map_err(|e| Error::Wire(format!("{addr}: clone stream: {e}")))?;
-            let inner2 = t.inner.clone();
-            t.threads.push(
-                std::thread::Builder::new()
-                    .name(format!("tcp-reader-{device}"))
-                    .spawn(move || reader_main(reader, device, inner2))
-                    .map_err(|e| Error::Fleet(format!("spawn reader {device}: {e}")))?,
-            );
-            t.writers.push(Mutex::new(stream));
+            streams.push(stream);
         }
 
-        let inner2 = t.inner.clone();
-        let tick = Duration::from_millis(cfg.reaper_tick_ms.max(1));
-        t.threads.push(
-            std::thread::Builder::new()
-                .name("tcp-reaper".into())
-                .spawn(move || reaper_main(inner2, tick))
-                .map_err(|e| Error::Fleet(format!("spawn reaper: {e}")))?,
-        );
+        let (tx, rx) = channel();
+        let (wake_tx, wake_rx) =
+            UnixStream::pair().map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
+        wake_tx
+            .set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
+        let shared = Arc::new(Shared::new(n_devices, tx, wake_tx));
+        let evloop = evloop::spawn(streams, shared.clone(), wake_rx)?;
+        Ok(TcpTransport {
+            shared,
+            rx,
+            evloop: Some(evloop),
+            n_devices,
+            deadline_ms: cfg.order_deadline_ms.max(1.0),
+        })
+    }
 
-        Ok(t)
+    /// Number of I/O threads this transport runs — always
+    /// [`TcpTransport::IO_THREADS`], whatever the fleet width.
+    pub fn io_threads(&self) -> usize {
+        TcpTransport::IO_THREADS
     }
 
     /// Per-device liveness snapshot (tests / diagnostics).
     pub fn alive(&self) -> Vec<bool> {
-        lock(&self.inner.state).alive.clone()
-    }
-
-    /// Write a pre-encoded frame to a device; on failure the device is
-    /// marked dead (synthesising losses for its in-flight work) and
-    /// `false` is returned.
-    fn write(&self, device: usize, frame: &[u8]) -> bool {
-        let ok = {
-            let mut w = lock(&self.writers[device]);
-            w.write_all(frame).and_then(|_| w.flush()).is_ok()
-        };
-        if !ok {
-            self.inner.mark_dead(device);
-        }
-        ok
+        lock(&self.shared.state).alive.clone()
     }
 
     fn check_device(&self, device: usize) -> Result<()> {
-        if device >= self.writers.len() {
+        if device >= self.n_devices {
             return Err(Error::Config(format!("no device {device}")));
         }
         Ok(())
+    }
+
+    fn device_alive(&self, device: usize) -> bool {
+        lock(&self.shared.state).alive[device]
     }
 }
 
@@ -248,18 +168,18 @@ impl Transport for TcpTransport {
     }
 
     fn now_ms(&self) -> f64 {
-        self.inner.now_ms()
+        self.shared.now_ms()
     }
 
     fn begin_serve(&self) {
         // Orphans of a previous serve (late replies, reaped stragglers)
         // must not leak into this run's gather loop or deadlines.
         {
-            let mut st = lock(&self.inner.state);
+            let mut st = lock(&self.shared.state);
             st.outstanding.clear();
         }
         while self.rx.try_recv().is_ok() {}
-        *lock(&self.inner.epoch) = Instant::now();
+        *lock(&self.shared.epoch) = std::time::Instant::now();
     }
 
     fn pace(&self, t_ms: f64) {
@@ -274,18 +194,21 @@ impl Transport for TcpTransport {
     }
 
     fn n_devices(&self) -> usize {
-        self.writers.len()
+        self.n_devices
     }
 
     fn deploy(&self, device: usize, tasks: Vec<TaskDef>) -> Result<()> {
         self.check_device(device)?;
-        if !lock(&self.inner.state).alive[device] {
+        if !self.device_alive(device) {
             return Err(Error::Fleet(format!("device {device} is gone")));
         }
         // One frame per task so a device's whole shard set can exceed
         // the frame cap without tripping it; a single shard that still
         // does gets a diagnosis *before* encoding (the encoder asserts
-        // the cap) instead of a dead connection.
+        // the cap). The frames queue as one batch — a single wake, one
+        // coalesced flush. A mid-deploy socket failure surfaces as
+        // connection death: the affected tasks' dispatches later
+        // resolve as synthesised losses.
         for task in &tasks {
             let payload = 4 * (task.w.len() + task.b.len()) + task.artifact.len() + 128;
             if payload > wire::MAX_FRAME_LEN as usize {
@@ -297,19 +220,17 @@ impl Transport for TcpTransport {
                 )));
             }
             let frame = wire::deploy(std::slice::from_ref(task));
-            if !self.write(device, &frame) {
-                return Err(Error::Fleet(format!("device {device}: deploy failed")));
-            }
+            lock(&self.shared.outq[device]).push_back(frame);
         }
+        self.shared.wake();
         Ok(())
     }
 
     fn undeploy(&self, device: usize, task_ids: Vec<u64>) -> Result<()> {
         self.check_device(device)?;
         // Best effort: undeploying from a dead device is a no-op.
-        let frame = wire::undeploy(&task_ids);
-        if lock(&self.inner.state).alive[device] {
-            self.write(device, &frame);
+        if self.device_alive(device) {
+            self.shared.enqueue(device, wire::undeploy(&task_ids));
         }
         Ok(())
     }
@@ -318,26 +239,28 @@ impl Transport for TcpTransport {
         self.check_device(device)?;
         let deadline_ms = self.now_ms() + self.deadline_ms;
         {
-            let mut st = lock(&self.inner.state);
+            let mut st = lock(&self.shared.state);
             if !st.alive[device] {
                 // A dead device still "answers": synthesised losses keep
                 // the gather loop's completion count exact.
                 drop(st);
                 for &t in &order.tasks {
-                    self.inner.send_lost(order.req, t, device);
+                    self.shared.send_lost(order.req, t, device);
                 }
                 return Ok(());
             }
+            // Register before the frame can possibly leave, so a reply
+            // can never race its own bookkeeping.
             for &t in &order.tasks {
                 st.outstanding.insert((order.req, t), OutTask { device, deadline_ms });
             }
         }
         let frame =
             wire::work(order.req, &order.tasks, order.batch, order.input.as_ref());
-        // On write failure mark_dead has already reaped the tasks
-        // registered above — dispatch still succeeds from the engine's
-        // point of view (the losses are in the completion stream).
-        self.write(device, &frame);
+        // If the connection dies before the flush, mark_dead reaps the
+        // tasks registered above — dispatch still succeeds from the
+        // engine's point of view (the losses are in the stream).
+        self.shared.enqueue(device, frame);
         Ok(())
     }
 
@@ -366,26 +289,34 @@ impl Transport for TcpTransport {
         self.rx.try_recv().ok()
     }
 
+    fn reclaim(&self, buf: Vec<f32>) -> Option<Vec<f32>> {
+        // Shard outputs were decoded into arena buffers on the event
+        // loop; handing them back closes the receive path's allocation
+        // cycle (DESIGN.md §12 lifetimes).
+        lock(&self.shared.arena).put(buf);
+        None
+    }
+
     fn set_failure(&self, device: usize, plan: FailurePlan) -> Result<()> {
         self.check_device(device)?;
-        if lock(&self.inner.state).alive[device] {
-            self.write(device, &wire::set_failure(&plan));
+        if self.device_alive(device) {
+            self.shared.enqueue(device, wire::set_failure(&plan));
         }
         Ok(())
     }
 
     fn set_net(&self, device: usize, net: NetConfig) -> Result<()> {
         self.check_device(device)?;
-        if lock(&self.inner.state).alive[device] {
-            self.write(device, &wire::set_net(true, &net));
+        if self.device_alive(device) {
+            self.shared.enqueue(device, wire::set_net(true, &net));
         }
         Ok(())
     }
 
     fn set_rate(&self, device: usize, macs_per_ms: f64) -> Result<()> {
         self.check_device(device)?;
-        if lock(&self.inner.state).alive[device] {
-            self.write(device, &wire::set_rate(macs_per_ms));
+        if self.device_alive(device) {
+            self.shared.enqueue(device, wire::set_rate(macs_per_ms));
         }
         Ok(())
     }
@@ -393,15 +324,13 @@ impl Transport for TcpTransport {
 
 impl Drop for TcpTransport {
     fn drop(&mut self) {
-        self.inner.stop.store(true, Ordering::SeqCst);
-        // Closing the sockets unblocks the reader threads; workers
-        // return to their accept loop (they are NOT shut down — the
-        // loopback harness owns child lifetimes, and standalone workers
-        // keep serving the next coordinator).
-        for w in &self.writers {
-            let _ = lock(w).shutdown(std::net::Shutdown::Both);
-        }
-        for t in self.threads.drain(..) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        // The loop does a final best-effort flush and shuts every
+        // socket down; workers return to their accept loop (they are
+        // NOT shut down — the loopback harness owns child lifetimes,
+        // and standalone workers keep serving the next coordinator).
+        if let Some(t) = self.evloop.take() {
             let _ = t.join();
         }
     }
@@ -419,65 +348,4 @@ fn connect_one(addr: &str, timeout: Duration) -> Result<TcpStream> {
         }
     }
     Err(last)
-}
-
-/// Reader thread: parse reply frames, stamp receipt time, forward
-/// completions for tasks still outstanding; on EOF/error mark the
-/// device dead.
-fn reader_main(mut stream: TcpStream, device: usize, inner: Arc<Inner>) {
-    loop {
-        match wire::read_frame(&mut stream) {
-            Ok(Some(Frame::Reply { req, task, result })) => {
-                let now = inner.now_ms();
-                let known = {
-                    let mut st = lock(&inner.state);
-                    st.outstanding.remove(&(req, task)).is_some()
-                };
-                if !known {
-                    continue; // late reply, already reaped — drop it
-                }
-                let lost = result.is_none();
-                let t_arrival_ms = if lost { f64::INFINITY } else { now };
-                let _ = inner.tx.send(Completion { req, task, device, result, t_arrival_ms });
-            }
-            Ok(Some(_)) => {
-                // A worker must only speak Reply after the handshake;
-                // anything else is a protocol violation.
-                inner.mark_dead(device);
-                break;
-            }
-            Ok(None) | Err(_) => {
-                inner.mark_dead(device);
-                break;
-            }
-        }
-        if inner.stop.load(Ordering::SeqCst) {
-            break;
-        }
-    }
-}
-
-/// Reaper thread: synthesise losses for tasks past their deadline —
-/// the wall-clock straggler gate.
-fn reaper_main(inner: Arc<Inner>, tick: Duration) {
-    while !inner.stop.load(Ordering::SeqCst) {
-        std::thread::sleep(tick);
-        let now = inner.now_ms();
-        let expired: Vec<(u64, u64, usize)> = {
-            let mut st = lock(&inner.state);
-            let keys: Vec<(u64, u64, usize)> = st
-                .outstanding
-                .iter()
-                .filter(|(_, o)| o.deadline_ms <= now)
-                .map(|(&(req, task), o)| (req, task, o.device))
-                .collect();
-            for &(req, task, _) in &keys {
-                st.outstanding.remove(&(req, task));
-            }
-            keys
-        };
-        for (req, task, device) in expired {
-            inner.send_lost(req, task, device);
-        }
-    }
 }

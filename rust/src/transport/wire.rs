@@ -35,6 +35,7 @@ use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 use crate::fleet::{FailurePlan, NetConfig, TaskDef};
+use crate::kernels::Scratch;
 use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any wire-format change. The handshake
@@ -355,14 +356,22 @@ pub fn reply(req: u64, task: u64, result: Option<&Tensor>) -> Vec<u8> {
 // decoding
 // ---------------------------------------------------------------------
 
-struct Dec<'a> {
+struct Dec<'a, 's> {
     buf: &'a [u8],
     pos: usize,
+    /// When present, tensor data is built in buffers taken from this
+    /// arena instead of fresh allocations (the event loop's zero-copy
+    /// receive path — see `transport::evloop`).
+    arena: Option<&'s mut Scratch>,
 }
 
-impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Dec<'a> {
-        Dec { buf, pos: 0 }
+impl<'a, 's> Dec<'a, 's> {
+    fn new(buf: &'a [u8]) -> Dec<'a, 's> {
+        Dec { buf, pos: 0, arena: None }
+    }
+
+    fn new_in(buf: &'a [u8], arena: &'s mut Scratch) -> Dec<'a, 's> {
+        Dec { buf, pos: 0, arena: Some(arena) }
     }
 
     fn remaining(&self) -> usize {
@@ -428,9 +437,12 @@ impl<'a> Dec<'a> {
         let n = elems as usize;
         // Verify the bytes exist on the wire *before* allocating.
         let bytes = self.take(n * 4)?;
-        let mut data = Vec::with_capacity(n);
-        for c in bytes.chunks_exact(4) {
-            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        let mut data = match self.arena.as_deref_mut() {
+            Some(a) => a.take(n),
+            None => vec![0.0; n],
+        };
+        for (dst, src) in data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
         }
         Tensor::new(shape, data)
             .map_err(|e| Error::Wire(format!("tensor on the wire: {e}")))
@@ -467,7 +479,17 @@ impl<'a> Dec<'a> {
 
 /// Decode one frame from its kind byte and payload.
 pub fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
-    let mut d = Dec::new(payload);
+    decode_with(Dec::new(payload), kind)
+}
+
+/// Like [`decode`], but tensor payloads are built in buffers taken
+/// from `arena` — the event loop's zero-copy receive path (the serve
+/// engine returns consumed buffers through `Transport::reclaim`).
+pub fn decode_in(kind: u8, payload: &[u8], arena: &mut Scratch) -> Result<Frame> {
+    decode_with(Dec::new_in(payload, arena), kind)
+}
+
+fn decode_with(mut d: Dec<'_, '_>, kind: u8) -> Result<Frame> {
     let frame = match kind {
         K_HELLO => {
             let magic = d.u32()?;
@@ -561,6 +583,48 @@ pub fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
     Ok(frame)
 }
 
+/// Total encoded length (header + payload) of the frame starting at
+/// `buf[0]`, or `Ok(None)` while the 5-byte header is still partial.
+/// The cap check runs here, as soon as the header is present, so a
+/// hostile length prefix is rejected before any buffering policy acts
+/// on it.
+pub fn frame_len(buf: &[u8]) -> Result<Option<usize>> {
+    if buf.len() < 5 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[1..5].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Wire(format!(
+            "frame length {len} exceeds cap {MAX_FRAME_LEN}"
+        )));
+    }
+    Ok(Some(5 + len as usize))
+}
+
+/// Decode one frame from the front of `buf` without consuming a
+/// stream: `Ok(None)` means the frame's bytes have not all arrived
+/// yet; `Ok(Some((frame, used)))` parsed exactly `used` bytes. This is
+/// the incremental (receive-buffer) twin of [`read_frame`].
+pub fn decode_prefix(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    match frame_len(buf)? {
+        Some(total) if buf.len() >= total => {
+            Ok(Some((decode(buf[0], &buf[5..total])?, total)))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// [`decode_prefix`] with arena-backed tensor decode (the zero-copy
+/// receive path).
+pub fn decode_prefix_in(buf: &[u8], arena: &mut Scratch) -> Result<Option<(Frame, usize)>> {
+    match frame_len(buf)? {
+        Some(total) if buf.len() >= total => {
+            Ok(Some((decode_in(buf[0], &buf[5..total], arena)?, total)))
+        }
+        _ => Ok(None),
+    }
+}
+
 /// Read one frame from a stream. Returns `Ok(None)` on a clean EOF at a
 /// frame boundary; EOF mid-frame, an oversized length prefix, or any
 /// malformed payload is an [`Error::Wire`].
@@ -590,7 +654,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload)
         .map_err(|e| Error::Wire(format!("read frame payload ({len} bytes): {e}")))?;
-    decode(kind, &payload)
+    decode(kind, &payload).map(Some)
 }
 
 /// Write one pre-encoded frame to a stream.

@@ -189,7 +189,10 @@ fn serve_conn(
 
 /// Execute one work order: real compute through the runtime, optional
 /// emulated compute/network delay, reply per task — or silence when the
-/// failure plan drops this order.
+/// failure plan drops this order. Reply frames for the whole order are
+/// coalesced into one buffer and hit the socket in a single
+/// write+flush, mirroring the coordinator event loop's writev
+/// coalescing on the other side of the wire.
 #[allow(clippy::too_many_arguments)]
 fn work(
     stream: &mut TcpStream,
@@ -208,6 +211,7 @@ fn work(
         fleet::order_stream(st.device, tasks.first().copied(), batch as usize, &input),
     );
     let dropped = st.failure.drops(req, &mut rng);
+    let mut replies: Vec<u8> = Vec::new();
     for task_id in tasks {
         let result = match st.tasks.get(&task_id) {
             Some(t) => {
@@ -230,7 +234,10 @@ fn work(
             // reaper is what notices, like a real lossy network.
             continue;
         }
-        wire::write_frame(stream, &wire::reply(req, task_id, result.as_ref()))?;
+        replies.extend_from_slice(&wire::reply(req, task_id, result.as_ref()));
+    }
+    if !replies.is_empty() {
+        wire::write_frame(stream, &replies)?;
     }
     Ok(())
 }

@@ -209,6 +209,129 @@ fn garbage_never_panics() {
     }
 }
 
+/// Build one valid encoded frame of every wire kind — the corpus the
+/// mutation fuzzer perturbs.
+fn corpus() -> Vec<Vec<u8>> {
+    let t = Tensor::col(&[1.0, -2.5, 3.25, 0.0]);
+    let def = TaskDef {
+        id: 11,
+        artifact: "fc_m4_k4_lin".into(),
+        w: Arc::new(Tensor::randn(vec![4, 4], &mut Pcg32::seeded(1))),
+        b: Arc::new(Tensor::col(&[0.0, 0.0, 0.0, 0.0])),
+        macs: 16,
+        reply_bytes: 16,
+    };
+    vec![
+        wire::hello(0xfeed, 3),
+        wire::hello_ack(),
+        wire::deploy(&[def]),
+        wire::undeploy(&[11, 12]),
+        wire::work(7, &[11], 2, &t),
+        wire::reply(7, 11, Some(&t)),
+        wire::reply(7, 11, None),
+        wire::set_failure(&FailurePlan::Intermittent(0.5)),
+        wire::set_net(true, &NetConfig::moderate()),
+        wire::set_rate(250.0),
+        wire::shutdown(),
+    ]
+}
+
+/// Deterministic mutation fuzz (ISSUE 6): flip, truncate, and extend
+/// random bytes of valid frames; every mutant must decode to `Ok` or
+/// `Error::Wire` — never a panic, a hang, or an attacker-sized
+/// allocation. `read_frame` is only exercised when the (possibly
+/// mutated) length prefix stays small: unlike the slice decoders it
+/// must allocate the declared payload up front, and this test's budget
+/// is panics, not gigabyte allocations under the 256 MiB cap.
+#[test]
+fn mutated_frames_never_panic() {
+    let corpus = corpus();
+    let mut rng = Pcg32::seeded(0x5eed_f822);
+    for iter in 0..2000 {
+        let mut bytes = corpus[rng.below(corpus.len())].clone();
+        // 1-4 mutations per round.
+        for _ in 0..1 + rng.below(4) {
+            match rng.below(4) {
+                0 => {
+                    // Flip one bit.
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+                1 => {
+                    // Overwrite one byte.
+                    let i = rng.below(bytes.len());
+                    bytes[i] = (rng.next_u32() & 0xff) as u8;
+                }
+                2 => {
+                    // Truncate.
+                    bytes.truncate(rng.below(bytes.len() + 1));
+                    if bytes.is_empty() {
+                        bytes.push((rng.next_u32() & 0xff) as u8);
+                    }
+                }
+                _ => {
+                    // Extend with garbage.
+                    for _ in 0..1 + rng.below(8) {
+                        bytes.push((rng.next_u32() & 0xff) as u8);
+                    }
+                }
+            }
+        }
+        // Slice decoder: allocation is bounded by the bytes actually
+        // present, so every mutant is fair game.
+        match wire::decode_prefix(&bytes) {
+            Ok(Some((_, used))) => assert!(
+                used <= bytes.len(),
+                "iter {iter}: consumed {used} of {} bytes",
+                bytes.len()
+            ),
+            Ok(None) => {} // incomplete frame — needs more bytes
+            Err(cdc_dnn::error::Error::Wire(_)) => {}
+            Err(e) => panic!("iter {iter}: non-wire error {e}"),
+        }
+        // Stream decoder: gate on the declared length so a mutated
+        // prefix can't demand a huge up-front payload allocation.
+        let declared = (bytes.len() >= 5)
+            .then(|| u32::from_le_bytes([bytes[1], bytes[2], bytes[3], bytes[4]]));
+        if declared.is_some_and(|len| len <= 1 << 20) {
+            match wire::read_frame(&mut Cursor::new(bytes)) {
+                Ok(_) => {}
+                Err(cdc_dnn::error::Error::Wire(_)) => {}
+                Err(e) => panic!("iter {iter}: non-wire error {e}"),
+            }
+        }
+    }
+}
+
+/// The event loop's incremental decoder: complete frames come off the
+/// front of a receive buffer one at a time, a partial tail reports
+/// `None` until the missing bytes arrive.
+#[test]
+fn decode_prefix_walks_concatenated_frames() {
+    let a = wire::set_rate(9.5);
+    let b = wire::reply(3, 4, Some(&Tensor::col(&[1.0, 2.0])));
+    let c = wire::shutdown();
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&a);
+    buf.extend_from_slice(&b);
+    buf.extend_from_slice(&c[..c.len() - 1]); // partial third frame
+
+    let (f1, used1) = wire::decode_prefix(&buf).unwrap().unwrap();
+    assert!(matches!(f1, Frame::SetRate { macs_per_ms } if macs_per_ms == 9.5));
+    assert_eq!(used1, a.len());
+
+    let (f2, used2) = wire::decode_prefix(&buf[used1..]).unwrap().unwrap();
+    assert!(matches!(f2, Frame::Reply { req: 3, task: 4, result: Some(_) }));
+    assert_eq!(used2, b.len());
+
+    // The tail is one byte short of a complete frame: not an error —
+    // the event loop keeps it buffered and reads more.
+    assert!(wire::decode_prefix(&buf[used1 + used2..]).unwrap().is_none());
+    buf.extend_from_slice(&c[c.len() - 1..]);
+    let (f3, _) = wire::decode_prefix(&buf[used1 + used2..]).unwrap().unwrap();
+    assert!(matches!(f3, Frame::Shutdown));
+}
+
 #[test]
 fn trailing_payload_bytes_are_rejected() {
     let mut frame = wire::set_rate(1.0);
