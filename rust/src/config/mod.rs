@@ -141,8 +141,31 @@ pub fn transport_from_json(v: &Value) -> Result<TransportSpec> {
             if let Some(c) = v.opt("connect_timeout_ms") {
                 tcp.connect_timeout_ms = c.as_usize()? as u64;
             }
-            if let Some(t) = v.opt("reaper_tick_ms") {
-                tcp.reaper_tick_ms = t.as_usize()? as u64;
+            if v.opt("reaper_tick_ms").is_some() {
+                // Dead since the reaper folded into the event loop's
+                // poll timeout; warn once instead of failing old files.
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: transport.reaper_tick_ms is obsolete and \
+                         ignored (deadlines are reaped by the event loop's \
+                         poll timeout); remove it from the deployment file"
+                    );
+                });
+            }
+            if let Some(l) = v.opt("listen") {
+                let addr = l.as_str()?;
+                tcp.listen =
+                    if addr.is_empty() { None } else { Some(addr.to_string()) };
+            }
+            if let Some(h) = v.opt("heartbeat_ms") {
+                tcp.heartbeat_ms = h.as_f64()?;
+            }
+            if let Some(s) = v.opt("suspect_after_missed") {
+                tcp.suspect_after_missed = s.as_usize()? as u32;
+            }
+            if let Some(d) = v.opt("dead_after_missed") {
+                tcp.dead_after_missed = d.as_usize()? as u32;
             }
             Ok(TransportSpec::Tcp(tcp))
         }
@@ -162,7 +185,16 @@ pub fn transport_to_json(spec: &TransportSpec) -> Value {
             ),
             ("order_deadline_ms", Value::Num(tcp.order_deadline_ms)),
             ("connect_timeout_ms", Value::Num(tcp.connect_timeout_ms as f64)),
-            ("reaper_tick_ms", Value::Num(tcp.reaper_tick_ms as f64)),
+            (
+                "listen",
+                Value::Str(tcp.listen.clone().unwrap_or_default()),
+            ),
+            ("heartbeat_ms", Value::Num(tcp.heartbeat_ms)),
+            (
+                "suspect_after_missed",
+                Value::Num(tcp.suspect_after_missed as f64),
+            ),
+            ("dead_after_missed", Value::Num(tcp.dead_after_missed as f64)),
         ]),
     }
 }
@@ -254,7 +286,10 @@ mod tests {
             workers: vec!["127.0.0.1:7070".into(), "127.0.0.1:7071".into()],
             order_deadline_ms: 750.0,
             connect_timeout_ms: 1234,
-            reaper_tick_ms: 7,
+            listen: None,
+            heartbeat_ms: 125.0,
+            suspect_after_missed: 3,
+            dead_after_missed: 9,
         });
         let back = deployment_from_json(&deployment_to_json(&cfg)).unwrap();
         match back.transport {
@@ -262,7 +297,23 @@ mod tests {
                 assert_eq!(t.workers, vec!["127.0.0.1:7070", "127.0.0.1:7071"]);
                 assert!((t.order_deadline_ms - 750.0).abs() < 1e-12);
                 assert_eq!(t.connect_timeout_ms, 1234);
-                assert_eq!(t.reaper_tick_ms, 7);
+                assert_eq!(t.listen, None);
+                assert!((t.heartbeat_ms - 125.0).abs() < 1e-12);
+                assert_eq!(t.suspect_after_missed, 3);
+                assert_eq!(t.dead_after_missed, 9);
+            }
+            other => panic!("expected tcp transport, got {other:?}"),
+        }
+        // Old deployment files carrying the dead reaper knob still parse
+        // (the key is warned about and ignored), and `listen` defaults on.
+        let v = Value::parse(
+            r#"{"model":"mlp","n_devices":1,
+                "transport":{"mode":"tcp","reaper_tick_ms":5}}"#,
+        )
+        .unwrap();
+        match deployment_from_json(&v).unwrap().transport {
+            TransportSpec::Tcp(t) => {
+                assert_eq!(t.listen.as_deref(), Some("127.0.0.1:0"));
             }
             other => panic!("expected tcp transport, got {other:?}"),
         }

@@ -31,7 +31,9 @@ use crate::partition::LayerPlan;
 use crate::runtime::manifest::{Manifest, ModelManifest};
 use crate::runtime::server::{ComputeHandle, ComputeServer};
 use crate::tensor::Tensor;
-use crate::transport::{SimTransport, TcpTransport, Transport, TransportSpec};
+use crate::transport::{
+    MembershipEvent, SimTransport, TcpTransport, Transport, TransportSpec,
+};
 pub use policy::{AdaptiveConfig, AdaptivePolicy, Outcome, PolicyReport};
 pub use serve::{Arrivals, Pipeline, ServeReport, StageStats, Workload};
 pub use stage::Stage;
@@ -205,11 +207,248 @@ impl RequestTrace {
     }
 }
 
+/// One planned task assignment awaiting deployment.
+struct Pending {
+    task: u64,
+    device: usize,
+    def: TaskDef,
+}
+
+/// Output of [`build_stages`]: the per-layer pipeline plus the task
+/// deployments and the artifact preload set it implies.
+struct BuiltStages {
+    stages: Vec<Stage>,
+    pending: Vec<Pending>,
+    preload: Vec<String>,
+    /// Redundancy slots consumed from the extra pool.
+    extra_used: usize,
+}
+
+/// Claim the next redundancy slot from the extra pool.
+fn next_extra_slot(extra_pool: &[usize], extra: &mut usize, layer: &str) -> Result<usize> {
+    let slot = extra_pool.get(*extra).copied().ok_or_else(|| {
+        Error::Config(format!(
+            "fleet too small for {layer}'s redundancy ({} extra slots)",
+            extra_pool.len()
+        ))
+    })?;
+    *extra += 1;
+    Ok(slot)
+}
+
+/// Build the per-layer execution plan over concrete device slots.
+///
+/// `data_pool` lists the slots data shards round-robin over and
+/// `extra_pool` the slots parity/replica tasks consume in order. The
+/// initial deployment passes contiguous `0..n_devices` pools; a live
+/// repartition (DESIGN.md §13) passes whatever slots survived the churn
+/// — slot numbers are stable for a TCP fleet member's lifetime and
+/// never reused. `splits` is the effective (already clamped) split map
+/// and `next_task` the persistent task-id counter: ids from before a
+/// repartition are never reissued, so a stale completion can never
+/// collide with a live task. Explicit placement only applies on the
+/// initial build (`use_placement`) — placements name original slots
+/// that churn may have retired.
+#[allow(clippy::too_many_arguments)]
+fn build_stages(
+    cfg: &SessionConfig,
+    model: &ModelManifest,
+    weights: &Weights,
+    splits: &BTreeMap<String, SplitSpec>,
+    data_pool: &[usize],
+    extra_pool: &[usize],
+    use_placement: bool,
+    next_task: &mut u64,
+) -> Result<BuiltStages> {
+    let mut stages = Vec::new();
+    let mut next_data_dev = 0usize;
+    let mut extra = 0usize;
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut preload: Vec<String> = Vec::new();
+
+    for (layer_idx, layer) in model.layers.iter().enumerate() {
+        if !layer.is_weighted() {
+            stages.push(Stage { kind: StageKind::Local { layer_idx } });
+            continue;
+        }
+        let spec = splits
+            .get(&layer.name)
+            .copied()
+            .unwrap_or(SplitSpec::plain(1));
+        if spec.d > data_pool.len() {
+            return Err(Error::Config(format!(
+                "layer {} wants d={} > {} devices",
+                layer.name,
+                spec.d,
+                data_pool.len()
+            )));
+        }
+        let plan = LayerPlan::build(layer, spec.d)?;
+        // CDC needs the pre-activation (lin) artifact; otherwise use
+        // the fused flavor when present.
+        let use_cdc = matches!(
+            spec.redundancy,
+            Redundancy::Cdc | Redundancy::CdcGrouped(_)
+        );
+        let (artifact, fused_relu) = if use_cdc || plan.artifact_relu.is_none() {
+            (plan.artifact_lin.clone(), false)
+        } else {
+            (plan.artifact_relu.clone().unwrap(), true)
+        };
+        preload.push(artifact.clone());
+
+        let macs = shard_macs(layer, spec.d);
+        let (req_bytes, reply_bytes) = shard_io_bytes(layer, spec.d);
+        let placed = match cfg.placement.get(&layer.name).filter(|_| use_placement) {
+            Some(devs) => {
+                if devs.len() != spec.d {
+                    return Err(Error::Config(format!(
+                        "placement for {} has {} devices, split is {}",
+                        layer.name,
+                        devs.len(),
+                        spec.d
+                    )));
+                }
+                if let Some(bad) = devs.iter().find(|&&d| d >= cfg.n_devices) {
+                    return Err(Error::Config(format!(
+                        "placement for {} uses device {bad} >= n_devices {}",
+                        layer.name, cfg.n_devices
+                    )));
+                }
+                Some(devs.clone())
+            }
+            None => None,
+        };
+        let mut shard_wb: Vec<(Arc<Tensor>, Arc<Tensor>)> = Vec::new();
+        let mut data = Vec::new();
+        for s in &plan.shards {
+            let (w, b) = plan.shard_weights(weights, s)?;
+            let (w, b) = (Arc::new(w), Arc::new(b));
+            let task = *next_task;
+            *next_task += 1;
+            let device = match &placed {
+                Some(devs) => devs[s.index],
+                None => {
+                    let d = data_pool[next_data_dev % data_pool.len()];
+                    next_data_dev += 1;
+                    d
+                }
+            };
+            pending.push(Pending {
+                task,
+                device,
+                def: TaskDef {
+                    id: task,
+                    artifact: artifact.clone(),
+                    w: w.clone(),
+                    b: b.clone(),
+                    macs,
+                    reply_bytes,
+                },
+            });
+            shard_wb.push((w, b));
+            data.push((device, task));
+        }
+
+        let mut parities = Vec::new();
+        let mut replicas = Vec::new();
+        match spec.redundancy {
+            Redundancy::None => {}
+            Redundancy::Cdc | Redundancy::CdcGrouped(_) => {
+                let group_size = match spec.redundancy {
+                    Redundancy::CdcGrouped(g) => g,
+                    _ => spec.d,
+                };
+                let groups = cdc::parity_groups(spec.d, group_size)?;
+                for cover in groups {
+                    let members: Vec<(Tensor, Tensor)> = cover
+                        .iter()
+                        .map(|&i| {
+                            let (w, b) = &shard_wb[i];
+                            (w.as_ref().clone(), b.as_ref().clone())
+                        })
+                        .collect();
+                    let (pw, pb) = cdc::parity_weights(&members)?;
+                    let (pw, pb) = (Arc::new(pw), Arc::new(pb));
+                    let task = *next_task;
+                    *next_task += 1;
+                    let device = next_extra_slot(extra_pool, &mut extra, &layer.name)?;
+                    pending.push(Pending {
+                        task,
+                        device,
+                        def: TaskDef {
+                            id: task,
+                            artifact: artifact.clone(),
+                            w: pw,
+                            b: pb,
+                            macs,
+                            reply_bytes,
+                        },
+                    });
+                    parities.push((device, task, cover));
+                }
+            }
+            Redundancy::TwoMr => {
+                for (w, b) in shard_wb.iter() {
+                    let task = *next_task;
+                    *next_task += 1;
+                    let device = next_extra_slot(extra_pool, &mut extra, &layer.name)?;
+                    pending.push(Pending {
+                        task,
+                        device,
+                        def: TaskDef {
+                            id: task,
+                            artifact: artifact.clone(),
+                            w: w.clone(),
+                            b: b.clone(),
+                            macs,
+                            reply_bytes,
+                        },
+                    });
+                    replicas.push((device, task));
+                }
+            }
+        }
+
+        // Fixed per-order cost (network base latency, both legs) vs
+        // the payload-proportional part (compute + bytes on the
+        // wire): batching pays the former once per batch and the
+        // latter once per member.
+        let wire_ms =
+            ((req_bytes + reply_bytes) as f64 * 8.0) / (cfg.net.bandwidth_mbps * 1000.0);
+        let per_member_ms = macs as f64 / cfg.device_rate + wire_ms;
+        let expected_ms = per_member_ms + 2.0 * cfg.net.base_ms;
+        stages.push(Stage {
+            kind: StageKind::Dist(DistStage {
+                layer_idx,
+                plan,
+                data,
+                parities,
+                replicas,
+                fused_relu,
+                expected_ms,
+                expected_extra_ms: per_member_ms,
+                request_bytes: req_bytes,
+                macs,
+                batchable: layer.kind == "fc",
+            }),
+        });
+    }
+
+    Ok(BuiltStages { stages, pending, preload, extra_used: extra })
+}
+
 /// A deployed model serving session over a fleet — simulated device
 /// threads or real TCP workers, per `SessionConfig::transport`.
 pub struct Session {
     cfg: SessionConfig,
     model: ModelManifest,
+    /// Retained model weights: a live repartition (DESIGN.md §13)
+    /// re-shards them for the surviving device set.
+    weights: Weights,
+    /// Compute handle, kept so a repartition can re-validate/preload the
+    /// artifact set its re-clamped split degrees select.
+    compute: ComputeHandle,
     /// How orders reach devices and completions come back (DESIGN.md
     /// §11) — the virtual-time simulator or the TCP worker fleet.
     transport: Box<dyn Transport>,
@@ -219,6 +458,18 @@ pub struct Session {
     task_defs: BTreeMap<u64, TaskDef>,
     /// task id → owning device (mutated by failover).
     task_owner: BTreeMap<u64, usize>,
+    /// Device slots currently in the serving set. Slots are stable for
+    /// the lifetime of a fleet member and never reused: a dead or
+    /// drained device's slot stays retired, a joiner gets a fresh one.
+    active: Vec<usize>,
+    /// Monotone live-membership partition epoch: bumped by every
+    /// repartition so work orders (and their late replies) from an old
+    /// partition are identifiable (DESIGN.md §13).
+    partition_epoch: u64,
+    /// Persistent task-id counter — ids from before a repartition are
+    /// never reissued, so stale completions can't collide with live
+    /// tasks.
+    next_task: u64,
     next_req: u64,
     /// Devices currently considered failed by the *coordinator*.
     known_failed: Vec<usize>,
@@ -279,187 +530,24 @@ impl Session {
         let weights = Weights::load(&manifest, &model)?;
 
         // ---- build the execution plan --------------------------------
-        let mut stages = Vec::new();
+        // Initial deployment: data shards round-robin over slots
+        // 0..n_devices, redundancy tasks consume slots from n_devices up
+        // (the paper's "extra device"). A live repartition later rebuilds
+        // over whatever slots survived — same planner, different pools.
         let mut next_task = 0u64;
-        let mut next_data_dev = 0usize;
-        let mut extra = 0usize;
-        struct Pending {
-            task: u64,
-            device: usize,
-            def: TaskDef,
-        }
-        let mut pending: Vec<Pending> = Vec::new();
-        let mut preload: Vec<String> = Vec::new();
-
-        for (layer_idx, layer) in model.layers.iter().enumerate() {
-            if !layer.is_weighted() {
-                stages.push(Stage { kind: StageKind::Local { layer_idx } });
-                continue;
-            }
-            let spec = cfg
-                .splits
-                .get(&layer.name)
-                .copied()
-                .unwrap_or(SplitSpec::plain(1));
-            if spec.d > cfg.n_devices {
-                return Err(Error::Config(format!(
-                    "layer {} wants d={} > {} devices",
-                    layer.name, spec.d, cfg.n_devices
-                )));
-            }
-            let plan = LayerPlan::build(layer, spec.d)?;
-            // CDC needs the pre-activation (lin) artifact; otherwise use
-            // the fused flavor when present.
-            let use_cdc = matches!(
-                spec.redundancy,
-                Redundancy::Cdc | Redundancy::CdcGrouped(_)
-            );
-            let (artifact, fused_relu) = if use_cdc || plan.artifact_relu.is_none() {
-                (plan.artifact_lin.clone(), false)
-            } else {
-                (plan.artifact_relu.clone().unwrap(), true)
-            };
-            preload.push(artifact.clone());
-
-            let macs = shard_macs(layer, spec.d);
-            let (req_bytes, reply_bytes) = shard_io_bytes(layer, spec.d);
-            let placed = match cfg.placement.get(&layer.name) {
-                Some(devs) => {
-                    if devs.len() != spec.d {
-                        return Err(Error::Config(format!(
-                            "placement for {} has {} devices, split is {}",
-                            layer.name,
-                            devs.len(),
-                            spec.d
-                        )));
-                    }
-                    if let Some(bad) = devs.iter().find(|&&d| d >= cfg.n_devices) {
-                        return Err(Error::Config(format!(
-                            "placement for {} uses device {bad} >= n_devices {}",
-                            layer.name, cfg.n_devices
-                        )));
-                    }
-                    Some(devs.clone())
-                }
-                None => None,
-            };
-            let mut shard_wb: Vec<(Arc<Tensor>, Arc<Tensor>)> = Vec::new();
-            let mut data = Vec::new();
-            for s in &plan.shards {
-                let (w, b) = plan.shard_weights(&weights, s)?;
-                let (w, b) = (Arc::new(w), Arc::new(b));
-                let task = next_task;
-                next_task += 1;
-                let device = match &placed {
-                    Some(devs) => devs[s.index],
-                    None => {
-                        let d = next_data_dev % cfg.n_devices;
-                        next_data_dev += 1;
-                        d
-                    }
-                };
-                pending.push(Pending {
-                    task,
-                    device,
-                    def: TaskDef {
-                        id: task,
-                        artifact: artifact.clone(),
-                        w: w.clone(),
-                        b: b.clone(),
-                        macs,
-                        reply_bytes,
-                    },
-                });
-                shard_wb.push((w, b));
-                data.push((device, task));
-            }
-
-            let mut parities = Vec::new();
-            let mut replicas = Vec::new();
-            match spec.redundancy {
-                Redundancy::None => {}
-                Redundancy::Cdc | Redundancy::CdcGrouped(_) => {
-                    let group_size = match spec.redundancy {
-                        Redundancy::CdcGrouped(g) => g,
-                        _ => spec.d,
-                    };
-                    let groups = cdc::parity_groups(spec.d, group_size)?;
-                    for cover in groups {
-                        let members: Vec<(Tensor, Tensor)> = cover
-                            .iter()
-                            .map(|&i| {
-                                let (w, b) = &shard_wb[i];
-                                (w.as_ref().clone(), b.as_ref().clone())
-                            })
-                            .collect();
-                        let (pw, pb) = cdc::parity_weights(&members)?;
-                        let (pw, pb) = (Arc::new(pw), Arc::new(pb));
-                        let task = next_task;
-                        next_task += 1;
-                        let device = cfg.n_devices + extra;
-                        extra += 1;
-                        pending.push(Pending {
-                            task,
-                            device,
-                            def: TaskDef {
-                                id: task,
-                                artifact: artifact.clone(),
-                                w: pw,
-                                b: pb,
-                                macs,
-                                reply_bytes,
-                            },
-                        });
-                        parities.push((device, task, cover));
-                    }
-                }
-                Redundancy::TwoMr => {
-                    for (w, b) in shard_wb.iter() {
-                        let task = next_task;
-                        next_task += 1;
-                        let device = cfg.n_devices + extra;
-                        extra += 1;
-                        pending.push(Pending {
-                            task,
-                            device,
-                            def: TaskDef {
-                                id: task,
-                                artifact: artifact.clone(),
-                                w: w.clone(),
-                                b: b.clone(),
-                                macs,
-                                reply_bytes,
-                            },
-                        });
-                        replicas.push((device, task));
-                    }
-                }
-            }
-
-            // Fixed per-order cost (network base latency, both legs) vs
-            // the payload-proportional part (compute + bytes on the
-            // wire): batching pays the former once per batch and the
-            // latter once per member.
-            let wire_ms =
-                ((req_bytes + reply_bytes) as f64 * 8.0) / (cfg.net.bandwidth_mbps * 1000.0);
-            let per_member_ms = macs as f64 / cfg.device_rate + wire_ms;
-            let expected_ms = per_member_ms + 2.0 * cfg.net.base_ms;
-            stages.push(Stage {
-                kind: StageKind::Dist(DistStage {
-                    layer_idx,
-                    plan,
-                    data,
-                    parities,
-                    replicas,
-                    fused_relu,
-                    expected_ms,
-                    expected_extra_ms: per_member_ms,
-                    request_bytes: req_bytes,
-                    macs,
-                    batchable: layer.kind == "fc",
-                }),
-            });
-        }
+        let data_pool: Vec<usize> = (0..cfg.n_devices).collect();
+        let extra_pool: Vec<usize> = (cfg.n_devices..cfg.planned_devices()).collect();
+        let built = build_stages(
+            &cfg,
+            &model,
+            &weights,
+            &cfg.splits,
+            &data_pool,
+            &extra_pool,
+            true,
+            &mut next_task,
+        )?;
+        let BuiltStages { stages, pending, mut preload, extra_used: extra } = built;
 
         // ---- connect the fleet transport ------------------------------
         let n_total = cfg.n_devices + extra;
@@ -520,10 +608,15 @@ impl Session {
         Ok(Session {
             cfg,
             model,
+            weights,
+            compute,
             transport,
             stages,
             task_defs,
             task_owner,
+            active: (0..n_total).collect(),
+            partition_epoch: 0,
+            next_task,
             next_req: 0,
             known_failed: Vec::new(),
             rates,
@@ -611,6 +704,11 @@ impl Session {
             return Err(Error::Config(format!("no device {device}")));
         }
         self.transport.set_rate(device, macs_per_ms)?;
+        // The transport width can outgrow the mirror between a join
+        // registering and the serve loop folding it in.
+        if self.rates.len() <= device {
+            self.rates.resize(device + 1, self.cfg.device_rate);
+        }
         self.rates[device] = macs_per_ms;
         Ok(())
     }
@@ -641,6 +739,221 @@ impl Session {
     /// Latest adaptive-policy snapshot (None when adaptive mode is off).
     pub fn policy_snapshot(&self) -> Option<policy::PolicyReport> {
         self.adaptive.as_ref().map(|a| a.snapshot())
+    }
+
+    /// Device slots currently in the serving set (live membership —
+    /// DESIGN.md §13). Slot numbers are stable and never reused, so the
+    /// set is not contiguous after churn.
+    pub fn active_devices(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Current live-membership partition epoch (bumped by every
+    /// repartition; 0 until the fleet churns).
+    pub fn partition_epoch(&self) -> u64 {
+        self.partition_epoch
+    }
+
+    /// The coordinator's membership listen address — where a fresh
+    /// `cdc-dnn worker --join` dials in (None on the simulator or when
+    /// `TcpConfig::listen` is disabled).
+    pub fn membership_addr(&self) -> Option<String> {
+        self.transport.listen_addr()
+    }
+
+    /// Fold queued membership events (worker joins, heartbeat deaths,
+    /// graceful leaves, suspicion changes) into the serving plan. Called
+    /// by the serve engine at pipeline-quiescent points — no stage holds
+    /// work, so a repartition never strands an in-flight order — and
+    /// harmless anywhere else events are empty (the simulator never
+    /// emits any). Returns true when the device set changed (and the
+    /// model was re-partitioned and re-deployed).
+    pub(crate) fn apply_membership(&mut self) -> Result<bool> {
+        let events = self.transport.poll_membership();
+        if events.is_empty() {
+            return Ok(false);
+        }
+        let mut changed = false;
+        let mut drained: Vec<usize> = Vec::new();
+        for ev in events {
+            match ev {
+                MembershipEvent::Joined { device, macs_per_ms } => {
+                    // 0.0 = the worker didn't announce a rate; assume
+                    // the fleet default.
+                    let rate = if macs_per_ms > 0.0 {
+                        macs_per_ms
+                    } else {
+                        self.cfg.device_rate
+                    };
+                    if self.rates.len() <= device {
+                        self.rates.resize(device + 1, self.cfg.device_rate);
+                    }
+                    self.rates[device] = rate;
+                    if let Some(a) = self.adaptive.as_mut() {
+                        a.grow(device + 1);
+                    }
+                    if !self.active.contains(&device) {
+                        self.active.push(device);
+                        changed = true;
+                    }
+                    eprintln!(
+                        "membership: device {device} joined ({} MACs/ms)",
+                        rate
+                    );
+                }
+                MembershipEvent::Dead { device } => {
+                    let before = self.active.len();
+                    self.active.retain(|&d| d != device);
+                    if self.active.len() != before {
+                        changed = true;
+                        eprintln!(
+                            "membership: device {device} dead (missed heartbeats / \
+                             connection lost)"
+                        );
+                    }
+                }
+                MembershipEvent::LeaveRequested { device } => {
+                    let before = self.active.len();
+                    self.active.retain(|&d| d != device);
+                    if self.active.len() != before {
+                        changed = true;
+                        eprintln!("membership: device {device} draining (graceful leave)");
+                    }
+                    drained.push(device);
+                }
+                MembershipEvent::Suspect { device, missed } => {
+                    // Suspicion is drop-rate evidence for the adaptive
+                    // policy's parity-vs-replication chooser, not yet a
+                    // fleet change.
+                    if let Some(a) = self.adaptive.as_mut() {
+                        a.observe(device, 0.0, f64::INFINITY, 1.0);
+                    }
+                    eprintln!(
+                        "membership: device {device} suspect ({missed} missed heartbeats)"
+                    );
+                }
+                MembershipEvent::Recovered { device } => {
+                    eprintln!("membership: device {device} recovered");
+                }
+            }
+        }
+        if changed {
+            if self.active.is_empty() {
+                return Err(Error::Fleet(
+                    "membership: no devices left in the serving set".into(),
+                ));
+            }
+            self.repartition()?;
+        }
+        // Retire drained connections only after the repartition stopped
+        // assigning them work: the event loop closes each once its last
+        // queued bytes flush (no in-flight orders remain — quiescence).
+        for d in drained {
+            self.transport.retire(d);
+        }
+        Ok(changed)
+    }
+
+    /// Re-partition the model over the current active device set and
+    /// re-deploy (DESIGN.md §13): pick the largest data-device count the
+    /// survivors support, re-clamp every target split degree to what the
+    /// manifest offers at that width (the same rule the scenario
+    /// engine's churn path uses), re-shard the retained weights, and
+    /// stream fresh Deploy frames. Stage count and order are invariant —
+    /// the layer sequence doesn't change — so the serve engine's
+    /// per-stage state stays valid; only device assignments and task ids
+    /// change, and the partition epoch is bumped.
+    fn repartition(&mut self) -> Result<()> {
+        let avail = self.active.len();
+        // Choose the largest n_data whose implied redundancy still fits.
+        let mut chosen: Option<(usize, BTreeMap<String, SplitSpec>)> = None;
+        for n_data in (1..=self.cfg.n_devices.min(avail)).rev() {
+            let mut splits = BTreeMap::new();
+            let mut extras = 0usize;
+            let mut feasible = true;
+            for (name, spec) in &self.cfg.splits {
+                let Some(layer) = self.model.layers.iter().find(|l| l.name == *name)
+                else {
+                    continue;
+                };
+                let cap = spec.d.min(n_data);
+                let Some(d) = layer.splits.keys().copied().filter(|&d| d <= cap).max()
+                else {
+                    feasible = false;
+                    break;
+                };
+                extras += match spec.redundancy {
+                    Redundancy::None => 0,
+                    Redundancy::Cdc => 1,
+                    Redundancy::CdcGrouped(g) => d.div_ceil(g.max(1)),
+                    Redundancy::TwoMr => d,
+                };
+                splits.insert(name.clone(), SplitSpec { d, redundancy: spec.redundancy });
+            }
+            if feasible && n_data + extras <= avail {
+                chosen = Some((n_data, splits));
+                break;
+            }
+        }
+        let (n_data, splits) = chosen.ok_or_else(|| {
+            Error::Fleet(format!(
+                "membership: no feasible partition over {avail} device(s)"
+            ))
+        })?;
+
+        // Undeploy the old plan from the survivors (best effort — a
+        // device that died since the event queued just ignores it).
+        let mut per_dev: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        for (&t, &d) in &self.task_owner {
+            per_dev.entry(d).or_default().push(t);
+        }
+        for (d, ts) in per_dev {
+            if self.active.contains(&d) {
+                let _ = self.transport.undeploy(d, ts);
+            }
+        }
+
+        // Rebuild over the surviving slots: first n_data carry data
+        // shards, the rest carry redundancy.
+        let mut active = self.active.clone();
+        active.sort_unstable();
+        let built = build_stages(
+            &self.cfg,
+            &self.model,
+            &self.weights,
+            &splits,
+            &active[..n_data],
+            &active[n_data..],
+            false,
+            &mut self.next_task,
+        )?;
+        debug_assert_eq!(built.stages.len(), self.stages.len());
+        let mut preload = built.preload;
+        preload.sort();
+        preload.dedup();
+        self.compute.preload(&preload)?;
+
+        let mut task_defs = BTreeMap::new();
+        let mut task_owner = BTreeMap::new();
+        let mut per_device: BTreeMap<usize, Vec<TaskDef>> = BTreeMap::new();
+        for p in built.pending {
+            task_defs.insert(p.task, p.def.clone());
+            task_owner.insert(p.task, p.device);
+            per_device.entry(p.device).or_default().push(p.def);
+        }
+        for (dev, defs) in per_device {
+            self.transport.deploy(dev, defs)?;
+        }
+        self.stages = built.stages;
+        self.task_defs = task_defs;
+        self.task_owner = task_owner;
+        self.partition_epoch += 1;
+        eprintln!(
+            "membership: repartitioned over {avail} device(s) \
+             ({n_data} data) — epoch {}",
+            self.partition_epoch
+        );
+        Ok(())
     }
 
     /// Coordinator-side failover (the paper's non-CDC recovery): reassign

@@ -260,6 +260,15 @@ impl AdaptivePolicy {
         }
     }
 
+    /// Grow the per-device windows to cover at least `n` devices — live
+    /// membership joins widen the fleet mid-session; existing windows
+    /// are untouched (shrinking never happens: slots are not reused).
+    pub fn grow(&mut self, n: usize) {
+        if self.device_windows.len() < n {
+            self.device_windows.resize_with(n, VecDeque::new);
+        }
+    }
+
     /// Feed one shard completion: `t_arrival_ms = ∞` records a lost
     /// reply; finite arrivals update the latency windows and re-tune the
     /// gate.

@@ -294,6 +294,12 @@ struct BusyStage {
     batched_input: Option<Arc<Tensor>>,
     t_enter: f64,
     n_expected: usize,
+    /// Partition epoch the order was dispatched under (DESIGN.md §13).
+    /// Completions are only folded in while the epoch is current —
+    /// membership repartitions happen at quiescent points, so this is a
+    /// belt-and-braces guard against a late reply from an old partition
+    /// corrupting a fresh stage's gather set.
+    epoch: u64,
     got: BTreeMap<u64, Completion>,
 }
 
@@ -499,6 +505,20 @@ impl Session {
         }
 
         loop {
+            // ---- membership (wall clock only; DESIGN.md §13) ---------
+            // Worker joins, heartbeat deaths, and graceful leaves fold
+            // into the plan only at pipeline-quiescent instants — no
+            // stage holds work, so a repartition never strands an
+            // in-flight order. The simulator never emits events, keeping
+            // sim scheduling bit-identical.
+            if wall && stage_busy.iter().all(|b| b.is_none()) {
+                self.apply_membership()?;
+                let width = self.transport.n_devices();
+                if device_free.len() < width {
+                    device_free.resize(width, 0.0);
+                }
+            }
+
             // ---- admit -----------------------------------------------
             while let Some((idx, arrival)) = pending_admissions.pop_front() {
                 let cur = Arc::new(reshape_input(&self.model, &workload.inputs[idx])?);
@@ -675,6 +695,7 @@ impl Session {
                     input.clone(),
                     members.len(),
                     t_enter,
+                    self.partition_epoch,
                     &mut device_free,
                 )?;
                 for &i in &members {
@@ -690,6 +711,7 @@ impl Session {
                     batched_input,
                     t_enter,
                     n_expected: pending.n_expected,
+                    epoch: self.partition_epoch,
                     got: BTreeMap::new(),
                 });
             }
@@ -732,7 +754,11 @@ impl Session {
                 };
                 if let Some(&s) = req_to_stage.get(&c.req) {
                     if let Some(b) = stage_busy[s].as_mut() {
-                        if b.got.insert(c.task, c).is_none() {
+                        // Stale-epoch replies (from before a live
+                        // repartition) are discarded, never gathered.
+                        if b.epoch == self.partition_epoch
+                            && b.got.insert(c.task, c).is_none()
+                        {
                             remaining -= 1;
                         }
                     }

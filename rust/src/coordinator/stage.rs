@@ -142,6 +142,9 @@ impl DistStage {
     /// carries that many column-concatenated member activations, and
     /// compute/payload costs scale with it while the per-order fixed
     /// costs are paid once. `req` is the batch leader's request id.
+    /// `epoch` tags the order with the session's current partition epoch
+    /// (DESIGN.md §13) so late replies from before a live repartition
+    /// are identifiable.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn dispatch(
         &self,
@@ -152,6 +155,7 @@ impl DistStage {
         input: Arc<Tensor>,
         batch: usize,
         t_enter: f64,
+        epoch: u64,
         device_free: &mut [f64],
     ) -> Result<PendingStage> {
         let orders = self.orders();
@@ -174,6 +178,7 @@ impl DistStage {
                 batch,
                 t_dispatch_ms: t_enter,
                 not_before_ms: not_before,
+                epoch,
             })?;
         }
         Ok(PendingStage { n_expected })

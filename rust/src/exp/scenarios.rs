@@ -2,17 +2,25 @@
 //! (DESIGN.md §9, ROADMAP "handles as many scenarios as you can
 //! imagine").
 //!
-//! Six named scenarios cover the paper's §2 failure taxonomy as
+//! Seven named scenarios cover the paper's §2 failure taxonomy as
 //! *time-varying* regimes: `steady` (control), `crash-storm` (staggered
 //! permanent failures + an intermittent phase), `churn` (devices
 //! leave/join with re-partitioning), `congested-wlan` (Fig. 1's WLAN
 //! regime sweeping in and out), `hetero-fleet` (RPi3/RPi4-style rate
-//! mixes that turn devices into persistent stragglers), and `burst`
-//! (arrival spikes on top of the Poisson stream). Every scenario runs
-//! across four redundancy **arms** — no redundancy, replication (2MR),
-//! parity-coded CDC with the adaptive policy, and CDC with
-//! cross-request micro-batching (`cdc-b4`, DESIGN.md §10) — and the
-//! driver records per-arm rps/p50/p99 to `results/scenarios.json`.
+//! mixes that turn devices into persistent stragglers), `burst`
+//! (arrival spikes on top of the Poisson stream), and `churn-kill` (a
+//! worker SIGKILLed while another is mid-join — the live-membership
+//! stress, DESIGN.md §13). Every scenario runs across four redundancy
+//! **arms** — no redundancy, replication (2MR), parity-coded CDC with
+//! the adaptive policy, and CDC with cross-request micro-batching
+//! (`cdc-b4`, DESIGN.md §10) — and the driver records per-arm
+//! rps/p50/p99 to `results/scenarios.json`.
+//!
+//! [`run_tcp`] replays the same catalog over a **real loopback worker
+//! fleet** on the wall clock (`scenarios --transport tcp`): kills are
+//! SIGKILLs, joins are live `Register` handshakes, and every joiner
+//! announces a graceful `Leave` before the horizon — the zero-loss
+//! churn acceptance gate.
 //!
 //! The suite deploys the synthetic `testkit::synth` model, so — unlike
 //! the figure reproductions — it needs no AOT artifact build: it
@@ -22,11 +30,23 @@
 //! `rust/tests/scenario_engine.rs` and re-checked by
 //! `benches/scenario_suite.rs`.
 
-use crate::coordinator::{AdaptiveConfig, Redundancy, SessionConfig, SplitSpec};
-use crate::error::Result;
+use crate::coordinator::{
+    AdaptiveConfig, Redundancy, Session, SessionConfig, SplitSpec, Workload,
+};
+use crate::error::{Error, Result};
+use crate::fleet::{FailurePlan, NetConfig};
 use crate::json::{obj, Value};
-use crate::scenario::{Action, NetProfile, Scenario, ScenarioEngine, ScenarioReport};
+use crate::rng::Pcg32;
+use crate::runtime::manifest::Manifest;
+use crate::scenario::{
+    Action, NetProfile, Scenario, ScenarioEngine, ScenarioReport, SegmentReport,
+};
+use crate::tensor::Tensor;
 use crate::testkit::synth;
+use crate::transport::{loopback::LoopbackFleet, TransportSpec};
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use super::{print_table, ExpCtx};
 
@@ -164,6 +184,19 @@ pub fn burst(seed: u64) -> Scenario {
         .at(650.0, Action::Rate { rps: 30.0 })
 }
 
+/// Live-membership stress: a fresh device joins, an original worker is
+/// SIGKILLed 50 ms later (while the joiner may still be registering),
+/// and a second device joins after the fleet has re-partitioned around
+/// the death. On the simulator `Kill` degrades to a permanent crash;
+/// over TCP ([`run_tcp`]) it is a literal SIGKILL and the joins are live
+/// `Register` handshakes (DESIGN.md §13).
+pub fn churn_kill(seed: u64) -> Scenario {
+    Scenario::new("churn-kill", 1000.0, 40.0, seed)
+        .at(250.0, Action::Join { n: 1 })
+        .at(300.0, Action::Kill { device: 1 })
+        .at(550.0, Action::Join { n: 1 })
+}
+
 /// Every named scenario, suite order.
 pub fn catalog(seed: u64) -> Vec<Scenario> {
     vec![
@@ -173,6 +206,7 @@ pub fn catalog(seed: u64) -> Vec<Scenario> {
         congested_wlan(seed),
         hetero_fleet(seed),
         burst(seed),
+        churn_kill(seed),
     ]
 }
 
@@ -272,4 +306,373 @@ pub fn run(ctx: &ExpCtx) -> Result<Vec<SuitePoint>> {
         ]),
     )?;
     Ok(points)
+}
+
+// ---------------------------------------------------------------------
+// The TCP replay: same catalog, real processes, wall clock.
+// ---------------------------------------------------------------------
+
+/// Wall-clock order deadline (ms) for the TCP suite — on real time the
+/// deadline *is* the straggler/failure gate: replies later than this are
+/// treated as lost and reconstructed from parity.
+const TCP_ORDER_DEADLINE_MS: f64 = 250.0;
+
+/// Cap (ms) on the worker-emulated WLAN reply delay during `Net` regime
+/// events over TCP. The congested profile's Pareto tail reaches seconds;
+/// capped below the order deadline it stresses latency without being
+/// able to produce the ≥ 2 simultaneous in-group losses that would break
+/// the zero-loss invariant by construction rather than by fault.
+const TCP_NET_CAP_MS: f64 = 120.0;
+
+/// A process-level chaos action, fired by a timer thread at its
+/// scheduled wall-clock instant while the coordinator serves.
+enum TcpAct {
+    /// SIGKILL worker `i` (connection death → membership `Dead`).
+    Kill(usize),
+    /// Spawn a `worker --join` that registers against the live
+    /// coordinator; with `leave_after_ms` set it announces a graceful
+    /// `Leave` that long after joining (the drain path).
+    Join { leave_after_ms: Option<u64> },
+}
+
+/// A session-level regime change. These need `&mut Session`, so they
+/// apply *between* serve segments — the same quiescent event ordering
+/// the simulator engine uses.
+enum TcpBoundary {
+    Failure(usize, FailurePlan),
+    Net(NetConfig),
+    DeviceRate(usize, f64),
+    Rate(f64),
+    Burst(usize),
+}
+
+/// Compile a scenario script into its TCP execution plan: absolute-time
+/// process chaos (timer threads) plus ordered serve-segment boundaries.
+///
+/// Mapping rules, by what real processes can actually do:
+/// * `Crash`/`Kill` → SIGKILL the worker. A killed process cannot come
+///   back, so a later `Recover` of that device spawns a *fresh* joiner
+///   instead (device slots are never reused).
+/// * `Leave { n }` → SIGKILL the `n` highest-indexed surviving original
+///   workers (devices vanishing); graceful `Leave` drains are exercised
+///   by the joiners, each of which announces one before the horizon.
+/// * `Flaky`/`Recover`-of-healthy/`Net`/`Slowdown` → segment boundaries
+///   (worker-side emulation via the control frames).
+/// * `Rate`/`Burst` → arrival-schedule boundaries, as in the simulator.
+fn tcp_plan(
+    sc: &Scenario,
+    n_workers: usize,
+    base_device_rate: f64,
+) -> (Vec<(f64, TcpAct)>, Vec<(f64, TcpBoundary)>) {
+    let mut order: Vec<usize> = (0..sc.events.len()).collect();
+    order.sort_by(|&a, &b| {
+        sc.events[a]
+            .at_ms
+            .partial_cmp(&sc.events[b].at_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut killed: Vec<usize> = Vec::new();
+    let mut timers = Vec::new();
+    let mut bounds = Vec::new();
+    for &ei in &order {
+        let ev = &sc.events[ei];
+        let t = ev.at_ms.clamp(0.0, sc.duration_ms);
+        match &ev.action {
+            Action::Crash { device } | Action::Kill { device } => {
+                if *device < n_workers && !killed.contains(device) {
+                    killed.push(*device);
+                    timers.push((t, TcpAct::Kill(*device)));
+                }
+            }
+            Action::Recover { device } => {
+                if killed.contains(device) {
+                    timers.push((t, TcpAct::Join { leave_after_ms: None }));
+                } else {
+                    bounds.push((t, TcpBoundary::Failure(*device, FailurePlan::None)));
+                }
+            }
+            Action::Flaky { device, p } => {
+                bounds.push((
+                    t,
+                    TcpBoundary::Failure(*device, FailurePlan::Intermittent(*p)),
+                ));
+            }
+            Action::Join { n } => {
+                let leave = ((sc.duration_ms - t) * 0.6).max(50.0) as u64;
+                for _ in 0..*n {
+                    timers.push((t, TcpAct::Join { leave_after_ms: Some(leave) }));
+                }
+            }
+            Action::Leave { n } => {
+                let mut shed = 0usize;
+                for d in (0..n_workers).rev() {
+                    if shed == *n {
+                        break;
+                    }
+                    if !killed.contains(&d) {
+                        killed.push(d);
+                        timers.push((t, TcpAct::Kill(d)));
+                        shed += 1;
+                    }
+                }
+            }
+            Action::Net { profile } => {
+                let mut net = profile.config();
+                net.max_ms = net.max_ms.min(TCP_NET_CAP_MS);
+                bounds.push((t, TcpBoundary::Net(net)));
+            }
+            Action::Slowdown { device, factor } => {
+                bounds.push((
+                    t,
+                    TcpBoundary::DeviceRate(*device, base_device_rate * factor),
+                ));
+            }
+            Action::Rate { rps } => bounds.push((t, TcpBoundary::Rate(*rps))),
+            Action::Burst { n } => bounds.push((t, TcpBoundary::Burst(*n))),
+        }
+    }
+    (timers, bounds)
+}
+
+/// Serve one inter-boundary segment on the wall clock: a Poisson stream
+/// at the current rate over `span` ms (plus any pending burst at the
+/// segment start), merged into the accumulating report.
+#[allow(clippy::too_many_arguments)]
+fn serve_tcp_segment(
+    session: &mut Session,
+    report: &mut ScenarioReport,
+    rng: &mut Pcg32,
+    input_shape: &[usize],
+    t0: f64,
+    span: f64,
+    rate_rps: f64,
+    burst: usize,
+    event: Option<String>,
+) -> Result<()> {
+    let span = span.max(0.0);
+    let mut at: Vec<f64> = vec![0.0; burst];
+    if rate_rps > 0.0 && span > 0.0 {
+        let per_ms = rate_rps / 1000.0;
+        let mut t = rng.exponential(per_ms);
+        while t < span {
+            at.push(t);
+            t += rng.exponential(per_ms);
+        }
+    }
+    at.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let arrivals = at.len();
+    let mut seg = SegmentReport {
+        t_start_ms: t0,
+        arrivals,
+        completed: 0,
+        failed: 0,
+        recovered: 0,
+        dropped: 0,
+        p99_ms: 0.0,
+        event,
+    };
+    if arrivals > 0 {
+        let inputs: Vec<Tensor> = (0..arrivals)
+            .map(|_| Tensor::randn(input_shape.to_vec(), rng))
+            .collect();
+        let r = session.serve(&Workload::explicit(inputs, at))?;
+        seg.completed = r.throughput.completed;
+        seg.failed = r.throughput.failed;
+        seg.recovered = r.throughput.recovered;
+        seg.dropped = r.dropped;
+        seg.p99_ms = r.latency.summary().p99;
+        report.completed += r.throughput.completed;
+        report.failed += r.throughput.failed;
+        report.recovered += r.throughput.recovered;
+        report.dropped += r.dropped;
+        for &s in r.latency.samples() {
+            report.latency.record(s);
+        }
+        report.max_batch = report.max_batch.max(r.max_batch);
+        // Wall-clock segments run back to back: the suite makespan is
+        // their serialized span.
+        report.makespan_ms += r.makespan_ms;
+    }
+    report.segments.push(seg);
+    Ok(())
+}
+
+/// Run one scenario's CDC arm over a freshly spawned loopback fleet.
+fn run_tcp_scenario(root: &Path, sc: &Scenario) -> Result<ScenarioReport> {
+    let mut cfg = arm_cfg(sc, Arm::Cdc);
+    // The loopback link IS the network: coordinator estimates start
+    // ideal, and `Net` regime events emulate delay on the workers.
+    cfg.net = NetConfig::ideal();
+    let n0 = cfg.planned_devices();
+    let fleet = LoopbackFleet::spawn(None, root, n0, sc.device_rate)?;
+    let mut tcp = fleet.tcp_config();
+    tcp.order_deadline_ms = TCP_ORDER_DEADLINE_MS;
+    cfg.transport = TransportSpec::Tcp(tcp);
+    let base_device_rate = cfg.device_rate;
+
+    let manifest = Manifest::load(root)?;
+    let input_shape = manifest.model(&cfg.model)?.input_shape.clone();
+    let mut session = Session::start(root, cfg)?;
+    let addr = session.membership_addr().ok_or_else(|| {
+        Error::Config(
+            "tcp scenario suite needs the membership listener (TcpConfig::listen)".into(),
+        )
+    })?;
+
+    let (timers, bounds) = tcp_plan(sc, n0, base_device_rate);
+    let fleet = Arc::new(Mutex::new(fleet));
+    let mut handles = Vec::new();
+    for (t, act) in timers {
+        let fleet = Arc::clone(&fleet);
+        let root = root.to_path_buf();
+        let addr = addr.clone();
+        let rate = sc.device_rate;
+        handles.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(t as u64));
+            let mut f = fleet.lock().unwrap_or_else(|e| e.into_inner());
+            let r = match act {
+                TcpAct::Kill(d) => f.kill(d),
+                TcpAct::Join { leave_after_ms } => f
+                    .spawn_joiner(None, &root, &addr, rate, leave_after_ms)
+                    .map(|_| ()),
+            };
+            if let Err(e) = r {
+                eprintln!("scenario chaos action failed: {e}");
+            }
+        }));
+    }
+
+    let mut report = ScenarioReport {
+        scenario: sc.name.clone(),
+        completed: 0,
+        failed: 0,
+        recovered: 0,
+        dropped: 0,
+        latency: crate::metrics::Series::new(),
+        makespan_ms: 0.0,
+        segments: Vec::new(),
+        rebuilds: 0,
+        max_batch: 1,
+        policy: None,
+    };
+    let mut rng = Pcg32::new(sc.seed, 0x7c9);
+    let mut rate = sc.base_rate_rps;
+    let mut burst = 0usize;
+    let mut t0 = 0.0f64;
+    for (t1, b) in bounds {
+        let label = match &b {
+            TcpBoundary::Failure(d, FailurePlan::None) => format!("recover(d{d})"),
+            TcpBoundary::Failure(d, _) => format!("flaky(d{d})"),
+            TcpBoundary::Net(_) => "net".to_string(),
+            TcpBoundary::DeviceRate(d, r) => format!("rate(d{d},{r:.2})"),
+            TcpBoundary::Rate(rps) => format!("rate({rps}rps)"),
+            TcpBoundary::Burst(n) => format!("burst({n})"),
+        };
+        serve_tcp_segment(
+            &mut session,
+            &mut report,
+            &mut rng,
+            &input_shape,
+            t0,
+            t1 - t0,
+            rate,
+            std::mem::take(&mut burst),
+            Some(label),
+        )?;
+        match b {
+            TcpBoundary::Failure(d, plan) => session.set_failure(d, plan)?,
+            TcpBoundary::Net(net) => session.set_net(net)?,
+            TcpBoundary::DeviceRate(d, r) => session.set_device_rate(d, r)?,
+            TcpBoundary::Rate(rps) => rate = rps,
+            TcpBoundary::Burst(n) => burst += n,
+        }
+        t0 = t1;
+    }
+    serve_tcp_segment(
+        &mut session,
+        &mut report,
+        &mut rng,
+        &input_shape,
+        t0,
+        sc.duration_ms - t0,
+        rate,
+        std::mem::take(&mut burst),
+        None,
+    )?;
+    for h in handles {
+        let _ = h.join();
+    }
+    report.policy = session.policy_snapshot();
+    // Over TCP a "rebuild" is a live repartition (no session restart).
+    report.rebuilds = session.partition_epoch() as usize;
+    drop(session);
+    drop(fleet);
+    Ok(report)
+}
+
+/// Replay the scenario catalog over a **real loopback TCP fleet** — CDC
+/// arm, wall clock (`scenarios --transport tcp`). Process chaos is real:
+/// crashes/kills SIGKILL workers, joins are live `Register` handshakes
+/// against the coordinator's membership listener, each joiner announces
+/// a graceful `Leave` before the horizon, and `Leave` events SIGKILL
+/// original workers. With `expect_no_loss`, any failed or balked request
+/// fails the run — the zero-loss churn acceptance gate (DESIGN.md §13).
+pub fn run_tcp(ctx: &ExpCtx, expect_no_loss: bool) -> Result<()> {
+    let arts = synth::build(ctx.seed)?;
+    let scale = if ctx.quick { 0.5 } else { 1.0 };
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut lost = 0u64;
+
+    println!("\n=== Scenario suite over a live TCP fleet (cdc arm, wall clock) ===");
+    for sc in catalog(ctx.seed) {
+        let sc = sc.scaled(scale);
+        let report = run_tcp_scenario(&arts.root, &sc)?;
+        let s = report.latency.summary();
+        lost += report.failed + report.dropped;
+        println!("  {}", report.line());
+        rows.push(vec![
+            sc.name.clone(),
+            format!("{}", report.completed),
+            format!("{}", report.failed),
+            format!("{}", report.recovered),
+            format!("{:.1}", report.rps()),
+            format!("{:.1}", s.p50),
+            format!("{:.1}", s.p99),
+            format!("{}", report.rebuilds),
+        ]);
+        json_rows.push(obj(vec![
+            ("scenario", Value::Str(sc.name.clone())),
+            ("arm", Value::Str("cdc".into())),
+            ("completed", Value::Num(report.completed as f64)),
+            ("failed", Value::Num(report.failed as f64)),
+            ("recovered", Value::Num(report.recovered as f64)),
+            ("dropped", Value::Num(report.dropped as f64)),
+            ("rps", Value::Num(report.rps())),
+            ("p50_ms", Value::Num(s.p50)),
+            ("p99_ms", Value::Num(s.p99)),
+            ("makespan_ms", Value::Num(report.makespan_ms)),
+            ("repartitions", Value::Num(report.rebuilds as f64)),
+        ]));
+    }
+
+    print_table(
+        &["scenario", "served", "lost", "recovered", "rps", "p50 ms", "p99 ms", "repartitions"],
+        &rows,
+    );
+    ctx.write_result(
+        "scenarios_tcp",
+        &obj(vec![
+            ("experiment", Value::Str("scenario_suite_tcp".into())),
+            ("backend", Value::Str(crate::runtime::backend_label().into())),
+            ("scale", Value::Num(scale)),
+            ("points", Value::Arr(json_rows)),
+        ]),
+    )?;
+    if expect_no_loss && lost > 0 {
+        return Err(Error::Fleet(format!(
+            "--expect-no-loss: {lost} request(s) lost/balked across the TCP scenario suite"
+        )));
+    }
+    Ok(())
 }

@@ -154,6 +154,11 @@ pub struct WorkOrder {
     /// Virtual instant the device's compute becomes free (coordinator
     /// occupancy ledger); compute starts no earlier. 0.0 = idle device.
     pub not_before_ms: f64,
+    /// Live-membership partition epoch the order was formed under
+    /// (DESIGN.md §13): the serve engine discards replies tagged with an
+    /// older epoch than the current partition. Always 0 on the simulator,
+    /// whose membership never changes.
+    pub epoch: u64,
 }
 
 /// A task completion event.

@@ -34,10 +34,21 @@
 //!                      empty in tcp mode spawns a loopback fleet
 //!   --rate-rps R       Poisson arrival rate       [default: 50]
 //!   --chaos-kill-ms T  loopback only: SIGKILL one worker T ms into the run
+//!   --chaos-join-ms T  loopback only: a fresh worker dials the live
+//!                      coordinator's membership port T ms into the run
 //!   --expect-no-loss   exit non-zero if any request is lost/balked
+//!
+//! scenarios options:
+//!   --transport M      sim (default) | tcp: replay the chaos suite over a
+//!                      real loopback worker fleet (wall clock, CDC arm)
+//!   --expect-no-loss   exit non-zero if any tcp scenario loses a request
 //!
 //! worker options:
 //!   --listen ADDR      bind address               [default: 127.0.0.1:0]
+//!   --join ADDR        dial a live coordinator's membership port and
+//!                      Register instead of listening (DESIGN.md §13)
+//!   --leave-after-ms T with --join: announce a graceful Leave T ms after
+//!                      joining (drain, then exit)
 //!   --net PROFILE      artificial reply delay: ideal|moderate|congested
 //!   --rate MACS_PER_MS artificial compute rate (RPi ≈ 83886)
 //! ```
@@ -60,7 +71,8 @@ const HELP: &str = "cdc-dnn — robust distributed DNN inference with CDC\n\n\
 usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
        [--seed S] [--quick] [--deployment FILE] [--transport sim|tcp]\n\
        [--workers H:P,..] [--rate-rps R] [--chaos-kill-ms T]\n\
-       [--expect-no-loss] [--listen ADDR] [--net PROFILE] [--rate R]\n\n\
+       [--chaos-join-ms T] [--expect-no-loss] [--listen ADDR] [--join ADDR]\n\
+       [--leave-after-ms T] [--net PROFILE] [--rate R]\n\n\
 commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve worker all\n";
 
 /// serve/worker options beyond the shared ExpCtx ones.
@@ -71,8 +83,11 @@ struct CliOpts {
     workers: Option<String>,
     rate_rps: Option<f64>,
     chaos_kill_ms: Option<u64>,
+    chaos_join_ms: Option<u64>,
     expect_no_loss: bool,
     listen: Option<String>,
+    join: Option<String>,
+    leave_after_ms: Option<u64>,
     net: Option<String>,
     rate: Option<f64>,
 }
@@ -146,12 +161,30 @@ fn main() {
                 }));
                 i += 2;
             }
+            "--chaos-join-ms" => {
+                opts.chaos_join_ms = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --chaos-join-ms");
+                    std::process::exit(2)
+                }));
+                i += 2;
+            }
             "--expect-no-loss" => {
                 opts.expect_no_loss = true;
                 i += 1;
             }
             "--listen" => {
                 opts.listen = Some(need(i));
+                i += 2;
+            }
+            "--join" => {
+                opts.join = Some(need(i));
+                i += 2;
+            }
+            "--leave-after-ms" => {
+                opts.leave_after_ms = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --leave-after-ms");
+                    std::process::exit(2)
+                }));
                 i += 2;
             }
             "--net" => {
@@ -184,7 +217,13 @@ fn main() {
         "fig18" => exp::fig18::run(&ctx).map(|_| ()),
         "calibrate" => exp::calibrate::run(&ctx),
         "ablate" => exp::ablate::run(&ctx),
-        "scenarios" => exp::scenarios::run(&ctx).map(|_| ()),
+        "scenarios" => match opts.transport.as_deref() {
+            None | Some("sim") => exp::scenarios::run(&ctx).map(|_| ()),
+            Some("tcp") => exp::scenarios::run_tcp(&ctx, opts.expect_no_loss),
+            Some(other) => Err(cdc_dnn::Error::Config(format!(
+                "unknown --transport {other:?} (want sim | tcp)"
+            ))),
+        },
         "synth" => synth_artifacts(&ctx),
         "serve" => serve(&ctx, &opts),
         "worker" => run_worker(&ctx, &opts),
@@ -304,15 +343,25 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     };
     let seed = ctx.seed;
     let mut session = Session::start(&ctx.artifacts, cfg)?;
+    if let Some(addr) = session.membership_addr() {
+        println!("membership: workers may join at {addr} (cdc-dnn worker --join {addr} …)");
+    }
+
+    // Chaos timers run against the fleet while the coordinator blocks
+    // in `Session::serve`; their handles are joined before the fleet
+    // drops so no timer touches a reaped child.
+    let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
+    let mut chaos: Vec<std::thread::JoinHandle<()>> = Vec::new();
 
     // Chaos injection (loopback only): SIGKILL one worker mid-run; the
     // CDC arm must lose nothing.
     if let Some(t) = opts.chaos_kill_ms {
-        match &fleet {
+        let guard = fleet.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
             Some(f) => {
                 let victim = if f.len() > 1 { 1 } else { 0 };
                 println!("chaos: killing loopback worker {victim} at t+{t}ms");
-                let _ = f.kill_after(victim, t);
+                chaos.push(f.kill_after(victim, t));
             }
             None => {
                 return Err(cdc_dnn::Error::Config(
@@ -322,6 +371,38 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
                 ))
             }
         }
+    }
+
+    // Chaos join (loopback only): a fresh worker dials the live
+    // coordinator's membership port mid-run and is folded into the
+    // serving plan at the next quiescent point (DESIGN.md §13).
+    if let Some(t) = opts.chaos_join_ms {
+        let addr = session.membership_addr().ok_or_else(|| {
+            cdc_dnn::Error::Config(
+                "--chaos-join-ms needs a tcp session with a membership \
+                 listener (transport.listen)"
+                    .into(),
+            )
+        })?;
+        if fleet.lock().unwrap_or_else(|e| e.into_inner()).is_none() {
+            return Err(cdc_dnn::Error::Config(
+                "--chaos-join-ms needs a spawned loopback fleet \
+                 (tcp transport without --workers)"
+                    .into(),
+            ));
+        }
+        println!("chaos: worker joins {addr} at t+{t}ms");
+        let fleet = fleet.clone();
+        let artifacts = ctx.artifacts.clone();
+        chaos.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(t));
+            let mut guard = fleet.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(f) = guard.as_mut() {
+                if let Err(e) = f.spawn_joiner(None, &artifacts, &addr, None, None) {
+                    eprintln!("chaos: join failed: {e}");
+                }
+            }
+        }));
     }
 
     let n = ctx.n_requests();
@@ -358,6 +439,11 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
             report.dropped
         )));
     }
+    // Synchronise with the chaos timers before tearing down so no
+    // timer races the fleet's Drop (which kills and reaps children).
+    for h in chaos {
+        let _ = h.join();
+    }
     drop(session); // disconnect before the fleet reaps its children
     drop(fleet);
     Ok(())
@@ -369,6 +455,13 @@ fn run_worker(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     let mut w = worker::WorkerOptions::new(&ctx.artifacts);
     if let Some(l) = &opts.listen {
         w.listen = l.clone();
+    }
+    w.join = opts.join.clone();
+    w.leave_after_ms = opts.leave_after_ms;
+    if w.leave_after_ms.is_some() && w.join.is_none() {
+        return Err(cdc_dnn::Error::Config(
+            "--leave-after-ms only applies with --join".into(),
+        ));
     }
     w.net = match opts.net.as_deref() {
         None => None,

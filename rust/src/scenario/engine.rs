@@ -267,6 +267,11 @@ impl ScenarioEngine {
             Action::Crash { device } => {
                 self.session.set_failure(*device, FailurePlan::PermanentAt(0))
             }
+            // On the simulator an abrupt kill is indistinguishable from a
+            // permanent crash; the TCP runner turns it into a real SIGKILL.
+            Action::Kill { device } => {
+                self.session.set_failure(*device, FailurePlan::PermanentAt(0))
+            }
             Action::Recover { device } => {
                 self.session.set_failure(*device, FailurePlan::None)
             }

@@ -133,6 +133,16 @@ pub enum Action {
         /// Burst size (requests).
         n: usize,
     },
+    /// Abrupt process death: the device vanishes with no recovery
+    /// expected (no paired `Recover`). On the simulator this behaves
+    /// like [`Action::Crash`]; over a live TCP fleet
+    /// (`exp::scenarios::run_tcp`) it is a literal SIGKILL, exercising
+    /// connection-death detection and the live-membership repartition
+    /// path (DESIGN.md §13).
+    Kill {
+        /// Device index.
+        device: usize,
+    },
 }
 
 impl Action {
@@ -150,6 +160,7 @@ impl Action {
             }
             Action::Rate { rps } => format!("rate({rps}rps)"),
             Action::Burst { n } => format!("burst({n})"),
+            Action::Kill { device } => format!("kill(d{device})"),
         }
     }
 }

@@ -32,6 +32,23 @@
 //! death), EOF reaps a dead worker's in-flight tasks at TCP speed, and
 //! late replies for reaped tasks are dropped (their buffers recycled
 //! into the arena).
+//!
+//! ## Live membership (DESIGN.md §13)
+//!
+//! The same thread also owns fleet membership. A nonblocking listener
+//! (token [`LISTEN_TOKEN`]) accepts joining workers any time; an
+//! accepted connection is *pending* until its `Register` frame
+//! validates (magic, protocol version, compute capability), at which
+//! point it gets a never-reused device slot, a `RegisterAck`, and a
+//! [`MembershipEvent::Joined`] for the serve engine to re-partition
+//! around. The poll timeout doubles a second time as the **heartbeat
+//! tick**: every interval the loop pings each worker and advances a
+//! suspicion ladder (healthy → suspect → dead) for workers with no
+//! inbound traffic — any frame counts as proof of life, so a worker
+//! busy streaming replies is never pinged into suspicion. `Leave`
+//! starts a graceful drain: the serve engine stops dispatching and
+//! [`Shared::retire`]s the slot, and the loop closes the connection
+//! once its queues and in-flight orders are empty.
 
 #[cfg(not(any(target_os = "linux", target_os = "macos")))]
 compile_error!(
@@ -42,10 +59,10 @@ compile_error!(
 use std::collections::{BTreeMap, VecDeque};
 use std::ffi::{c_int, c_void};
 use std::io::{ErrorKind, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -57,6 +74,7 @@ use crate::kernels::Scratch;
 use crate::tensor::Tensor;
 
 use super::wire::{self, Frame};
+use super::{MembershipEvent, TcpConfig};
 
 /// Lock a mutex, recovering from poisoning (a panicked thread must not
 /// cascade into the coordinator).
@@ -405,11 +423,19 @@ pub(crate) struct OutTask {
 
 /// Liveness + in-flight bookkeeping.
 pub(crate) struct State {
-    /// Per-device liveness (false once the connection died).
+    /// Per-slot liveness (false once the connection died).
     pub alive: Vec<bool>,
+    /// Per-slot drain flags: a retired device gets no new dispatches
+    /// and its connection closes once its in-flight work finishes.
+    pub retired: Vec<bool>,
     /// (req, task) → in-flight bookkeeping.
     pub outstanding: BTreeMap<(u64, u64), OutTask>,
 }
+
+/// Device slots reserved for live joins beyond the initial fleet. Slots
+/// are never reused, so this also caps joins per transport lifetime —
+/// a full house closes new connections at accept.
+pub(crate) const JOIN_SLOTS: usize = 16;
 
 /// Everything the event loop shares with the coordinator-side handles.
 pub(crate) struct Shared {
@@ -417,8 +443,9 @@ pub(crate) struct Shared {
     pub epoch: Mutex<Instant>,
     /// Liveness and the outstanding-task table.
     pub state: Mutex<State>,
-    /// Per-device egress queues: handles enqueue encoded frames here;
+    /// Per-slot egress queues: handles enqueue encoded frames here;
     /// the loop drains them into per-connection `writev` batches.
+    /// Sized for the initial fleet plus [`JOIN_SLOTS`] headroom.
     pub outq: Vec<Mutex<VecDeque<Vec<u8>>>>,
     /// Decode arena: Reply tensors are parsed straight into pooled
     /// buffers; `Transport::reclaim` feeds consumed outputs back.
@@ -427,25 +454,92 @@ pub(crate) struct Shared {
     pub tx: Sender<Completion>,
     /// Tells the loop to flush and exit.
     pub stop: AtomicBool,
+    /// Session seed echoed in `RegisterAck` so a joiner's drop-emulation
+    /// RNG matches the fleet's.
+    pub seed: u64,
+    /// Heartbeat interval in ms (`<= 0` disables health probing).
+    pub heartbeat_ms: f64,
+    /// Silent intervals before a worker turns [`MembershipEvent::Suspect`].
+    pub suspect_after: u32,
+    /// Silent intervals before a worker is declared dead.
+    pub dead_after: u32,
+    /// Device slots assigned so far (initial fleet + admitted joiners).
+    /// Written only by the event loop; read by `Transport::n_devices`.
+    width: AtomicUsize,
+    /// Membership changes queued for `Transport::poll_membership`.
+    events: Mutex<Vec<MembershipEvent>>,
     /// Write half of the wake pipe (the loop polls the read half).
     waker: UnixStream,
 }
 
 impl Shared {
-    /// Fresh shared state for `n_devices` live connections.
-    pub fn new(n_devices: usize, tx: Sender<Completion>, waker: UnixStream) -> Shared {
+    /// Fresh shared state for `n_devices` live connections plus
+    /// [`JOIN_SLOTS`] of join headroom, configured from `cfg`.
+    pub fn new(
+        n_devices: usize,
+        seed: u64,
+        cfg: &TcpConfig,
+        tx: Sender<Completion>,
+        waker: UnixStream,
+    ) -> Shared {
+        let capacity = n_devices + JOIN_SLOTS;
         Shared {
             epoch: Mutex::new(Instant::now()),
             state: Mutex::new(State {
-                alive: vec![true; n_devices],
+                alive: vec![true; capacity],
+                retired: vec![false; capacity],
                 outstanding: BTreeMap::new(),
             }),
-            outq: (0..n_devices).map(|_| Mutex::new(VecDeque::new())).collect(),
+            outq: (0..capacity).map(|_| Mutex::new(VecDeque::new())).collect(),
             arena: Mutex::new(Scratch::new()),
             tx,
             stop: AtomicBool::new(false),
+            seed,
+            heartbeat_ms: cfg.heartbeat_ms,
+            suspect_after: cfg.suspect_after_missed.max(1),
+            dead_after: cfg.dead_after_missed.max(2),
+            width: AtomicUsize::new(n_devices),
+            events: Mutex::new(Vec::new()),
             waker,
         }
+    }
+
+    /// Device slots assigned so far (= the addressable device range).
+    pub fn width(&self) -> usize {
+        self.width.load(Ordering::SeqCst)
+    }
+
+    /// Claim the next never-used device slot for a joiner (`None` when
+    /// the join headroom is exhausted). Event-loop thread only.
+    fn alloc_slot(&self) -> Option<usize> {
+        let w = self.width.load(Ordering::SeqCst);
+        if w >= self.outq.len() {
+            return None;
+        }
+        self.width.store(w + 1, Ordering::SeqCst);
+        Some(w)
+    }
+
+    /// Queue a membership event for the serve engine.
+    pub fn push_event(&self, ev: MembershipEvent) {
+        lock(&self.events).push(ev);
+    }
+
+    /// Drain queued membership events (`Transport::poll_membership`).
+    pub fn take_events(&self) -> Vec<MembershipEvent> {
+        std::mem::take(&mut *lock(&self.events))
+    }
+
+    /// Flag a slot for graceful drain and nudge the loop so it can
+    /// close the connection once the slot's work is finished.
+    pub fn retire(&self, device: usize) {
+        {
+            let mut st = lock(&self.state);
+            if device < st.retired.len() {
+                st.retired[device] = true;
+            }
+        }
+        self.wake();
     }
 
     /// Milliseconds since the serve epoch.
@@ -479,12 +573,14 @@ impl Shared {
     }
 
     /// Mark a device's connection dead: drop its queued frames and
-    /// synthesise losses for everything outstanding on it. Idempotent.
-    pub fn mark_dead(&self, device: usize) {
+    /// synthesise losses for everything outstanding on it. Idempotent;
+    /// returns whether this call did the alive→dead transition (the
+    /// caller decides if that deserves a [`MembershipEvent::Dead`]).
+    pub fn mark_dead(&self, device: usize) -> bool {
         lock(&self.outq[device]).clear();
         let mut st = lock(&self.state);
         if !st.alive[device] {
-            return;
+            return false;
         }
         st.alive[device] = false;
         let dead: Vec<(u64, u64)> = st
@@ -497,6 +593,7 @@ impl Shared {
             st.outstanding.remove(&(req, task));
             self.send_lost(req, task, device);
         }
+        true
     }
 }
 
@@ -514,8 +611,11 @@ const MAX_IOV: usize = 64;
 /// without a polling reaper thread.
 const IDLE_TICK: Duration = Duration::from_millis(500);
 
-/// Poller token of the wake pipe (devices use their index).
+/// Poller token of the wake pipe (devices use their slot index).
 const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Poller token of the join listener.
+const LISTEN_TOKEN: u64 = u64::MAX - 1;
 
 /// Per-connection nonblocking I/O state machine.
 struct Conn {
@@ -531,39 +631,67 @@ struct Conn {
     woff: usize,
     /// Whether the poller currently watches writability.
     want_write: bool,
+    /// False between accept and a valid `Register` frame: a pending
+    /// joiner may speak nothing but `Register`.
+    registered: bool,
+    /// Inbound traffic observed since the last heartbeat tick — any
+    /// frame is proof of life, not just `HeartbeatAck`.
+    seen: bool,
+    /// Consecutive heartbeat intervals with no inbound traffic.
+    missed: u32,
+    /// Whether a `Suspect` event is currently in force for this slot.
+    suspect: bool,
 }
 
-/// Start the event loop over connected, handshaken worker streams
-/// (device order). Registration failures surface here, before any
-/// thread exists.
-pub(crate) fn spawn(
-    streams: Vec<TcpStream>,
-    shared: Arc<Shared>,
-    wake_rx: UnixStream,
-) -> Result<JoinHandle<()>> {
-    let poller = Poller::new()?;
-    wake_rx
-        .set_nonblocking(true)
-        .map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
-    poller.add(wake_rx.as_raw_fd(), WAKE_TOKEN, false)?;
-    let mut conns = Vec::with_capacity(streams.len());
-    for (device, s) in streams.into_iter().enumerate() {
-        s.set_nonblocking(true)
-            .map_err(|e| Error::Wire(format!("device {device}: set_nonblocking: {e}")))?;
-        poller.add(s.as_raw_fd(), device as u64, false)?;
-        conns.push(Some(Conn {
-            stream: s,
+impl Conn {
+    fn new(stream: TcpStream, registered: bool) -> Conn {
+        Conn {
+            stream,
             rbuf: Vec::new(),
             rstart: 0,
             rend: 0,
             wq: VecDeque::new(),
             woff: 0,
             want_write: false,
-        }));
+            registered,
+            seen: false,
+            missed: 0,
+            suspect: false,
+        }
     }
+}
+
+/// Start the event loop over connected, handshaken worker streams
+/// (device order) plus an optional nonblocking join listener.
+/// Registration failures surface here, before any thread exists.
+pub(crate) fn spawn(
+    streams: Vec<TcpStream>,
+    shared: Arc<Shared>,
+    wake_rx: UnixStream,
+    listener: Option<TcpListener>,
+) -> Result<JoinHandle<()>> {
+    let poller = Poller::new()?;
+    wake_rx
+        .set_nonblocking(true)
+        .map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
+    poller.add(wake_rx.as_raw_fd(), WAKE_TOKEN, false)?;
+    if let Some(l) = &listener {
+        l.set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("join listener: set_nonblocking: {e}")))?;
+        poller.add(l.as_raw_fd(), LISTEN_TOKEN, false)?;
+    }
+    let capacity = shared.outq.len();
+    let mut conns: Vec<Option<Conn>> = Vec::with_capacity(capacity);
+    for (device, s) in streams.into_iter().enumerate() {
+        s.set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("device {device}: set_nonblocking: {e}")))?;
+        poller.add(s.as_raw_fd(), device as u64, false)?;
+        conns.push(Some(Conn::new(s, true)));
+    }
+    conns.resize_with(capacity, || None);
     std::thread::Builder::new()
         .name("tcp-evloop".into())
-        .spawn(move || loop_main(poller, conns, shared, wake_rx))
+        .spawn(move || loop_main(poller, conns, shared, wake_rx, listener))
         .map_err(|e| Error::Fleet(format!("spawn tcp-evloop: {e}")))
 }
 
@@ -572,8 +700,11 @@ fn loop_main(
     mut conns: Vec<Option<Conn>>,
     shared: Arc<Shared>,
     wake_rx: UnixStream,
+    listener: Option<TcpListener>,
 ) {
     let mut events: Vec<PollEvent> = Vec::with_capacity(MAX_EVENTS);
+    let hb = shared.heartbeat_ms;
+    let mut next_beat = if hb > 0.0 { shared.now_ms() + hb } else { f64::INFINITY };
     loop {
         // 1. Adopt frames queued by coordinator threads since the last
         //    round.
@@ -587,25 +718,42 @@ fn loop_main(
                 None => q.clear(), // dead device: losses already synthesised
             }
         }
-        // 2. Coalesced flush: one writev sweep per connection sends
-        //    everything queued in this dispatch round together.
+        // 2. Heartbeat tick: ping live workers and advance the
+        //    suspicion ladder for the silent ones. Runs before the
+        //    flush so this tick's pings leave in the same writev sweep.
+        let now = shared.now_ms();
+        // `begin_serve` rewinds the epoch; never let the schedule point
+        // more than one interval past the (possibly reset) clock.
+        if next_beat > now + hb {
+            next_beat = now + hb;
+        }
+        if now >= next_beat {
+            heartbeat_tick(&poller, &mut conns, &shared);
+            next_beat = now + hb;
+        }
+        // 3. Coalesced flush: one writev sweep per connection sends
+        //    everything queued in this round together.
         for device in 0..conns.len() {
             flush_conn(&poller, &mut conns, device, &shared);
         }
-        // 3. The reaper, folded in: reap overdue tasks and learn when
+        // 4. Close retired (drained-out) connections whose queues and
+        //    in-flight orders are empty — the graceful half of Leave.
+        close_drained(&poller, &mut conns, &shared);
+        // 5. The reaper, folded in: reap overdue tasks and learn when
         //    the next deadline falls due.
         let next_deadline = reap(&shared);
         if shared.stop.load(Ordering::SeqCst) {
             teardown(&mut conns);
             return;
         }
-        // 4. Sleep until readiness, a wake byte, or that deadline.
-        let timeout = match next_deadline {
-            Some(dl) => {
-                let ms = (dl - shared.now_ms()).max(0.0);
-                Duration::from_secs_f64(ms / 1e3).min(IDLE_TICK)
-            }
-            None => IDLE_TICK,
+        // 6. Sleep until readiness, a wake byte, the next deadline, or
+        //    the next heartbeat tick.
+        let due = next_deadline.unwrap_or(f64::INFINITY).min(next_beat);
+        let timeout = if due.is_finite() {
+            let ms = (due - shared.now_ms()).max(0.0);
+            Duration::from_secs_f64(ms / 1e3).min(IDLE_TICK)
+        } else {
+            IDLE_TICK
         };
         if poller.wait(&mut events, Some(timeout)).is_err() {
             // A broken poller can't observe anything anymore: declare
@@ -616,10 +764,16 @@ fn loop_main(
             }
             return;
         }
-        // 5. Service readiness.
+        // 7. Service readiness.
         for ev in &events {
             if ev.token == WAKE_TOKEN {
                 drain_wake(&wake_rx);
+                continue;
+            }
+            if ev.token == LISTEN_TOKEN {
+                if let Some(l) = &listener {
+                    accept_ready(l, &poller, &mut conns, &shared);
+                }
                 continue;
             }
             let device = ev.token as usize;
@@ -643,6 +797,111 @@ fn loop_main(
     }
 }
 
+/// Accept every waiting joiner: each gets a never-reused device slot
+/// and sits *pending* until its `Register` frame validates. A full
+/// house (join headroom exhausted) closes the connection immediately.
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &Poller,
+    conns: &mut [Option<Conn>],
+    shared: &Shared,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        };
+        let Some(slot) = shared.alloc_slot() else {
+            // No slots left: refuse by closing (the worker sees EOF
+            // where it expected RegisterAck).
+            drop(stream);
+            continue;
+        };
+        if stream.set_nodelay(true).is_err() || stream.set_nonblocking(true).is_err() {
+            drop(stream);
+            continue;
+        }
+        if poller.add(stream.as_raw_fd(), slot as u64, false).is_err() {
+            drop(stream);
+            continue;
+        }
+        conns[slot] = Some(Conn::new(stream, false));
+    }
+}
+
+/// One heartbeat interval: reset the ladder for every slot that spoke
+/// since the last tick, advance it for the silent ones (suspect →
+/// dead), and queue a ping to everyone still live.
+fn heartbeat_tick(poller: &Poller, conns: &mut Vec<Option<Conn>>, shared: &Shared) {
+    let mut nonce = 0u64;
+    let mut dead: Vec<usize> = Vec::new();
+    for (device, slot) in conns.iter_mut().enumerate() {
+        let Some(c) = slot.as_mut() else { continue };
+        if c.seen {
+            c.seen = false;
+            c.missed = 0;
+            if c.suspect {
+                c.suspect = false;
+                shared.push_event(MembershipEvent::Recovered { device });
+            }
+        } else {
+            c.missed += 1;
+            if c.missed >= shared.dead_after {
+                // A pending joiner that never registered just goes
+                // away; a registered worker's death is announced by
+                // kill_conn below.
+                dead.push(device);
+                continue;
+            }
+            if c.missed >= shared.suspect_after && !c.suspect && c.registered {
+                c.suspect = true;
+                shared.push_event(MembershipEvent::Suspect { device, missed: c.missed });
+            }
+        }
+        if c.registered {
+            nonce = nonce.wrapping_add(1);
+            c.wq.push_back(wire::heartbeat(nonce));
+        }
+    }
+    for device in dead {
+        kill_conn(poller, conns, device, shared);
+    }
+}
+
+/// Close retired connections whose work has fully drained: nothing
+/// queued coordinator-side, nothing unflushed, nothing outstanding.
+/// The quiet close deliberately emits no `Dead` event — the serve
+/// engine already re-partitioned when it retired the slot.
+fn close_drained(poller: &Poller, conns: &mut [Option<Conn>], shared: &Shared) {
+    let closable: Vec<usize> = {
+        let st = lock(&shared.state);
+        (0..conns.len())
+            .filter(|&d| {
+                st.retired[d]
+                    && st.alive[d]
+                    && conns[d].is_some()
+                    && !st.outstanding.values().any(|o| o.device == d)
+            })
+            .collect()
+    };
+    for device in closable {
+        if !lock(&shared.outq[device]).is_empty() {
+            continue;
+        }
+        let drained = conns[device].as_ref().is_some_and(|c| c.wq.is_empty());
+        if !drained {
+            continue;
+        }
+        if let Some(c) = conns[device].take() {
+            poller.del(c.stream.as_raw_fd());
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        }
+        lock(&shared.state).alive[device] = false;
+    }
+}
+
 /// Final best-effort flush, then socket shutdown. Workers are NOT told
 /// to exit — they return to their accept loop for the next session.
 fn teardown(conns: &mut [Option<Conn>]) {
@@ -663,13 +922,23 @@ fn teardown(conns: &mut [Option<Conn>]) {
 }
 
 /// Drop a connection: deregister, shut the socket down, mark the
-/// device dead (synthesising losses for its in-flight tasks).
+/// device dead (synthesising losses for its in-flight tasks), and —
+/// for a worker that had completed registration — queue a
+/// [`MembershipEvent::Dead`] so the serve engine re-partitions.
 fn kill_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared: &Shared) {
-    if let Some(c) = conns[device].take() {
-        poller.del(c.stream.as_raw_fd());
-        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    let registered = match conns[device].take() {
+        Some(c) => {
+            poller.del(c.stream.as_raw_fd());
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+            c.registered
+        }
+        // Slot already closed locally: if it is still marked alive the
+        // death happened outside the loop — treat as registered.
+        None => true,
+    };
+    if shared.mark_dead(device) && registered {
+        shared.push_event(MembershipEvent::Dead { device });
     }
-    shared.mark_dead(device);
 }
 
 /// Write as much queued data as the socket accepts, then keep the
@@ -747,7 +1016,13 @@ fn read_ready(c: &mut Conn, device: usize, shared: &Shared) -> bool {
         ensure_room(c, need);
         match c.stream.read(&mut c.rbuf[c.rend..]) {
             Ok(0) => return false,
-            Ok(n) => c.rend += n,
+            Ok(n) => {
+                c.rend += n;
+                // Any inbound bytes are proof of life for the
+                // heartbeat ladder — a worker busy streaming replies
+                // never needs to answer pings to stay healthy.
+                c.seen = true;
+            }
             Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(_) => return false,
@@ -798,9 +1073,39 @@ fn parse_frames(c: &mut Conn, device: usize, shared: &Shared) -> std::result::Re
             c.rend = 0;
         }
         match frame {
-            Frame::Reply { req, task, result } => deliver(shared, device, req, task, result),
-            // Workers speak only Reply after the handshake; anything
-            // else is a protocol violation.
+            Frame::Reply { req, task, result } if c.registered => {
+                deliver(shared, device, req, task, result)
+            }
+            // Proof of life only; `c.seen` was already set by the read.
+            Frame::HeartbeatAck { .. } if c.registered => {}
+            // Graceful drain: the serve engine stops dispatching,
+            // re-partitions, then retires the slot; the loop closes it
+            // once the in-flight work drains (`close_drained`).
+            Frame::Leave if c.registered => {
+                shared.push_event(MembershipEvent::LeaveRequested { device });
+            }
+            // A pending joiner's one legal first frame. Valid magic is
+            // checked at decode; here the protocol version and compute
+            // capability gate admission.
+            Frame::Register { proto, macs_per_ms, capabilities } if !c.registered => {
+                if proto != wire::PROTO_VERSION {
+                    let err = wire::proto_mismatch("joining worker", "coordinator", proto);
+                    eprintln!("coordinator: rejecting join: {err}");
+                    return Err(());
+                }
+                if capabilities & wire::CAP_COMPUTE == 0 {
+                    eprintln!(
+                        "coordinator: rejecting join at device {device}: worker \
+                         announces no compute capability (caps {capabilities:#x})"
+                    );
+                    return Err(());
+                }
+                c.registered = true;
+                c.wq.push_back(wire::register_ack(device as u32, shared.seed));
+                shared.push_event(MembershipEvent::Joined { device, macs_per_ms });
+            }
+            // Anything else — a second Register, or any verb before
+            // registration — is a protocol violation.
             _ => return Err(()),
         }
     }

@@ -127,6 +127,55 @@ impl LoopbackFleet {
         TcpConfig { workers: self.addrs(), ..TcpConfig::default() }
     }
 
+    /// Spawn one extra worker in **join mode**: instead of binding a
+    /// listener, it dials `coordinator_addr` (a live coordinator's
+    /// membership port) and `Register`s mid-session. The child is
+    /// owned by this fleet like any other worker (killable, reaped on
+    /// drop). Optional `leave_after_ms` makes it announce a graceful
+    /// `Leave` that long after joining. Returns the fleet index of the
+    /// new worker.
+    pub fn spawn_joiner(
+        &mut self,
+        bin: Option<&Path>,
+        artifacts: &Path,
+        coordinator_addr: &str,
+        rate_macs_per_ms: Option<f64>,
+        leave_after_ms: Option<u64>,
+    ) -> Result<usize> {
+        let default_bin;
+        let bin = match bin {
+            Some(b) => b,
+            None => {
+                default_bin = default_worker_bin()?;
+                &default_bin
+            }
+        };
+        let mut cmd = Command::new(bin);
+        cmd.arg("worker")
+            .arg("--join")
+            .arg(coordinator_addr)
+            .arg("--artifacts")
+            .arg(artifacts)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if let Some(r) = rate_macs_per_ms {
+            cmd.arg("--rate").arg(format!("{r}"));
+        }
+        if let Some(ms) = leave_after_ms {
+            cmd.arg("--leave-after-ms").arg(format!("{ms}"));
+        }
+        let child = cmd.spawn().map_err(|e| {
+            Error::Fleet(format!("spawn joining worker ({}): {e}", bin.display()))
+        })?;
+        self.workers.push(LoopbackWorker {
+            child: Arc::new(Mutex::new(child)),
+            addr: format!("joined:{coordinator_addr}"),
+            _stdout: None,
+        });
+        Ok(self.workers.len() - 1)
+    }
+
     /// SIGKILL worker `i` now (and reap it).
     pub fn kill(&self, i: usize) -> Result<()> {
         let w = self

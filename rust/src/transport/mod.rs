@@ -44,6 +44,55 @@ use crate::fleet::{Completion, FailurePlan, NetConfig, TaskDef, WorkOrder};
 pub use sim::SimTransport;
 pub use tcp::TcpTransport;
 
+/// A change in fleet membership observed by a transport (DESIGN.md §13).
+///
+/// Wall-clock transports surface these from
+/// [`Transport::poll_membership`]; the serve engine applies them at
+/// pipeline-quiescent points (no stage mid-flight), re-partitioning the
+/// model across the new active set. The simulator never emits any — sim
+/// churn goes through the scenario engine's session rebuild instead, so
+/// sim-mode serving stays bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MembershipEvent {
+    /// A worker completed the `Register`/`RegisterAck` handshake and is
+    /// deployable at `device` with its announced compute rate.
+    Joined {
+        /// Transport device slot assigned to the newcomer.
+        device: usize,
+        /// Compute rate the worker announced in its `Register` frame
+        /// (MACs per millisecond); feeds the expected-latency model.
+        macs_per_ms: f64,
+    },
+    /// A worker has missed enough heartbeats to be suspect but is not
+    /// yet declared dead. Feeds `AdaptivePolicy` as drop-rate evidence
+    /// so the straggler gate tightens *before* the device fails.
+    Suspect {
+        /// Transport device slot of the suspect worker.
+        device: usize,
+        /// Consecutive heartbeat intervals with no inbound traffic.
+        missed: u32,
+    },
+    /// A previously suspect worker produced traffic again.
+    Recovered {
+        /// Transport device slot of the recovered worker.
+        device: usize,
+    },
+    /// The worker sent `Leave`: it will finish in-flight orders but
+    /// must receive no new dispatches. The coordinator re-partitions
+    /// without it, then the transport closes the drained connection.
+    LeaveRequested {
+        /// Transport device slot of the draining worker.
+        device: usize,
+    },
+    /// The connection died or the worker missed the dead-after
+    /// heartbeat budget. Everything in flight on it was already
+    /// synthesised as lost (`t_arrival = ∞`).
+    Dead {
+        /// Transport device slot of the dead worker.
+        device: usize,
+    },
+}
+
 /// How the coordinator reaches its devices. All methods take `&self`:
 /// implementations synchronise internally (channels / mutexed socket
 /// writers), which lets the serve loop hold immutable borrows of the
@@ -131,6 +180,25 @@ pub trait Transport: Send {
     /// Change a device's compute rate in MACs/ms (sim: the timing
     /// model; tcp: the worker's artificial compute delay).
     fn set_rate(&self, device: usize, macs_per_ms: f64) -> Result<()>;
+
+    /// Drain queued [`MembershipEvent`]s (joins, suspicion changes,
+    /// drains, deaths). The simulator's fleet is fixed, so the default
+    /// returns nothing.
+    fn poll_membership(&self) -> Vec<MembershipEvent> {
+        Vec::new()
+    }
+
+    /// The address new workers can `Register` at, when this transport
+    /// listens for joins (`None` for the simulator or a TCP transport
+    /// configured without a listen socket).
+    fn listen_addr(&self) -> Option<String> {
+        None
+    }
+
+    /// Stop dispatching to `device` and close its connection once its
+    /// in-flight orders finish — the graceful half of a `Leave`. No-op
+    /// for the simulator.
+    fn retire(&self, _device: usize) {}
 }
 
 /// TCP transport parameters (the deployment file's `transport` section).
@@ -147,10 +215,22 @@ pub struct TcpConfig {
     pub order_deadline_ms: f64,
     /// Per-connection handshake/connect timeout.
     pub connect_timeout_ms: u64,
-    /// Retained for deployment-file compatibility: the event loop now
-    /// reaps on exact deadlines (its poll timeout), so no polling
-    /// thread consumes this tick anymore.
-    pub reaper_tick_ms: u64,
+    /// Address the coordinator listens on for live worker joins
+    /// (`Register` handshakes). `Some("127.0.0.1:0")` — the default —
+    /// binds an ephemeral loopback port; `None` (empty string in the
+    /// deployment JSON) disables live membership entirely.
+    pub listen: Option<String>,
+    /// Heartbeat probe interval in milliseconds. Each tick the event
+    /// loop sends `Heartbeat` to every live worker and advances the
+    /// suspicion ladder for workers with no inbound traffic since the
+    /// previous tick.
+    pub heartbeat_ms: f64,
+    /// Consecutive silent heartbeat intervals before a worker is
+    /// reported [`MembershipEvent::Suspect`].
+    pub suspect_after_missed: u32,
+    /// Consecutive silent heartbeat intervals before a worker is
+    /// declared [`MembershipEvent::Dead`] and its connection killed.
+    pub dead_after_missed: u32,
 }
 
 impl Default for TcpConfig {
@@ -159,7 +239,10 @@ impl Default for TcpConfig {
             workers: Vec::new(),
             order_deadline_ms: 2_000.0,
             connect_timeout_ms: 5_000,
-            reaper_tick_ms: 5,
+            listen: Some("127.0.0.1:0".to_string()),
+            heartbeat_ms: 250.0,
+            suspect_after_missed: 2,
+            dead_after_missed: 8,
         }
     }
 }

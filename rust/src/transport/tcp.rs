@@ -37,7 +37,7 @@
 //! the loop (the task is no longer outstanding), so a task never
 //! yields two completions.
 
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
@@ -50,15 +50,15 @@ use crate::fleet::{Completion, FailurePlan, NetConfig, TaskDef, WorkOrder};
 
 use super::evloop::{self, lock, OutTask, Shared};
 use super::wire::{self, Frame};
-use super::{TcpConfig, Transport};
+use super::{MembershipEvent, TcpConfig, Transport};
 
 /// Real-execution transport over per-device TCP connections.
 pub struct TcpTransport {
     shared: Arc<Shared>,
     rx: Receiver<Completion>,
     evloop: Option<JoinHandle<()>>,
-    n_devices: usize,
     deadline_ms: f64,
+    listen_addr: Option<String>,
 }
 
 impl TcpTransport {
@@ -101,10 +101,11 @@ impl TcpTransport {
             match wire::read_frame(&mut hs)? {
                 Some(Frame::HelloAck { proto }) if proto == wire::PROTO_VERSION => {}
                 Some(Frame::HelloAck { proto }) => {
-                    return Err(Error::Wire(format!(
-                        "{addr}: protocol version {proto} != {}",
-                        wire::PROTO_VERSION
-                    )))
+                    return Err(wire::proto_mismatch(
+                        &format!("worker {addr}"),
+                        "this coordinator",
+                        proto,
+                    ))
                 }
                 other => {
                     return Err(Error::Wire(format!(
@@ -118,20 +119,34 @@ impl TcpTransport {
             streams.push(stream);
         }
 
+        // Live-membership listener: joining workers dial this port and
+        // `Register` at any time. `listen: None` freezes the fleet.
+        let (listener, listen_addr) = match &cfg.listen {
+            Some(bind) => {
+                let l = TcpListener::bind(bind)
+                    .map_err(|e| Error::Wire(format!("join listener {bind}: bind: {e}")))?;
+                let addr = l
+                    .local_addr()
+                    .map_err(|e| Error::Wire(format!("join listener {bind}: local_addr: {e}")))?;
+                (Some(l), Some(addr.to_string()))
+            }
+            None => (None, None),
+        };
+
         let (tx, rx) = channel();
         let (wake_tx, wake_rx) =
             UnixStream::pair().map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
         wake_tx
             .set_nonblocking(true)
             .map_err(|e| Error::Wire(format!("wake pipe: {e}")))?;
-        let shared = Arc::new(Shared::new(n_devices, tx, wake_tx));
-        let evloop = evloop::spawn(streams, shared.clone(), wake_rx)?;
+        let shared = Arc::new(Shared::new(n_devices, seed, cfg, tx, wake_tx));
+        let evloop = evloop::spawn(streams, shared.clone(), wake_rx, listener)?;
         Ok(TcpTransport {
             shared,
             rx,
             evloop: Some(evloop),
-            n_devices,
             deadline_ms: cfg.order_deadline_ms.max(1.0),
+            listen_addr,
         })
     }
 
@@ -141,13 +156,17 @@ impl TcpTransport {
         TcpTransport::IO_THREADS
     }
 
-    /// Per-device liveness snapshot (tests / diagnostics).
+    /// Per-device liveness snapshot (tests / diagnostics), covering
+    /// every slot assigned so far (initial fleet + admitted joiners).
     pub fn alive(&self) -> Vec<bool> {
-        lock(&self.shared.state).alive.clone()
+        let width = self.shared.width();
+        let mut v = lock(&self.shared.state).alive.clone();
+        v.truncate(width);
+        v
     }
 
     fn check_device(&self, device: usize) -> Result<()> {
-        if device >= self.n_devices {
+        if device >= self.shared.width() {
             return Err(Error::Config(format!("no device {device}")));
         }
         Ok(())
@@ -194,7 +213,10 @@ impl Transport for TcpTransport {
     }
 
     fn n_devices(&self) -> usize {
-        self.n_devices
+        // Grows as joiners register: the serve engine sizes its
+        // per-device tables off this and re-checks after every
+        // membership application.
+        self.shared.width()
     }
 
     fn deploy(&self, device: usize, tasks: Vec<TaskDef>) -> Result<()> {
@@ -319,6 +341,20 @@ impl Transport for TcpTransport {
             self.shared.enqueue(device, wire::set_rate(macs_per_ms));
         }
         Ok(())
+    }
+
+    fn poll_membership(&self) -> Vec<MembershipEvent> {
+        self.shared.take_events()
+    }
+
+    fn listen_addr(&self) -> Option<String> {
+        self.listen_addr.clone()
+    }
+
+    fn retire(&self, device: usize) {
+        if device < self.shared.width() {
+            self.shared.retire(device);
+        }
     }
 }
 

@@ -30,6 +30,17 @@
 //! | 0x08 | SetRate     | macs_per_ms f64                                |
 //! | 0x09 | Shutdown    | (empty)                                        |
 //! | 0x0A | Reply       | req u64, task u64, ok u8 [, tensor] (worker →) |
+//! | 0x0B | Register    | magic u32, proto u16, macs_per_ms f64, caps u32 (worker →) |
+//! | 0x0C | RegisterAck | proto u16, device u32, seed u64                |
+//! | 0x0D | Heartbeat   | nonce u64                                      |
+//! | 0x0E | HeartbeatAck| nonce u64 (worker → coordinator)               |
+//! | 0x0F | Leave       | (empty) (worker → coordinator)                 |
+//!
+//! Kinds 0x0B–0x0F are the live-membership verbs (DESIGN.md §13):
+//! `Register`/`RegisterAck` let a fresh worker dial the coordinator's
+//! listen port and join the fleet mid-session, `Heartbeat`/
+//! `HeartbeatAck` drive the suspicion ladder, and `Leave` asks for a
+//! graceful drain.
 
 use std::io::{Read, Write};
 
@@ -39,8 +50,11 @@ use crate::kernels::Scratch;
 use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any wire-format change. The handshake
-/// rejects a peer speaking a different version.
-pub const PROTO_VERSION: u16 = 1;
+/// rejects a peer speaking a different version — see
+/// [`proto_mismatch`] for the diagnostic it must produce. Version 2
+/// added the live-membership verbs (Register/RegisterAck/Heartbeat/
+/// HeartbeatAck/Leave).
+pub const PROTO_VERSION: u16 = 2;
 
 /// Handshake magic ("CDCW" little-endian).
 pub const MAGIC: u32 = 0x5743_4443;
@@ -70,6 +84,29 @@ const K_SET_NET: u8 = 0x07;
 const K_SET_RATE: u8 = 0x08;
 const K_SHUTDOWN: u8 = 0x09;
 const K_REPLY: u8 = 0x0a;
+const K_REGISTER: u8 = 0x0b;
+const K_REGISTER_ACK: u8 = 0x0c;
+const K_HEARTBEAT: u8 = 0x0d;
+const K_HEARTBEAT_ACK: u8 = 0x0e;
+const K_LEAVE: u8 = 0x0f;
+
+/// Capability bit: the worker runs shard compute (always set today;
+/// reserved bits let future workers advertise e.g. batching or
+/// quantised kernels without a proto bump).
+pub const CAP_COMPUTE: u32 = 1;
+
+/// First-class protocol-version mismatch diagnostic: every handshake
+/// site (coordinator checking a worker's `Register`/`HelloAck`, worker
+/// checking a coordinator's `Hello`/`RegisterAck`) reports through
+/// this one constructor so the error names both sides and both
+/// versions instead of surfacing as a generic frame error.
+pub fn proto_mismatch(peer: &str, local: &str, peer_proto: u16) -> Error {
+    Error::Wire(format!(
+        "{peer} speaks protocol {peer_proto}, {local} expects {PROTO_VERSION} — \
+         rebuild the older side (the wire format changes with the protocol \
+         version)"
+    ))
+}
 
 /// One deployed task as carried by a Deploy frame (the on-wire twin of
 /// [`TaskDef`], with owned weight tensors).
@@ -159,6 +196,44 @@ pub enum Frame {
         /// The shard output, absent on worker-side failure.
         result: Option<Tensor>,
     },
+    /// Membership handshake (worker → coordinator): a fresh worker
+    /// dialled the coordinator's listen port and asks to join the
+    /// fleet.
+    Register {
+        /// Protocol version of the joining worker.
+        proto: u16,
+        /// Announced compute rate (MACs/ms); ≤ 0 or non-finite means
+        /// unannounced (the coordinator assumes its configured default).
+        macs_per_ms: f64,
+        /// Capability bitmask ([`CAP_COMPUTE`] | reserved).
+        capabilities: u32,
+    },
+    /// Membership handshake reply: the coordinator admitted the worker.
+    RegisterAck {
+        /// Protocol version of the coordinator.
+        proto: u16,
+        /// Device id the joiner now plays in the fleet.
+        device: u32,
+        /// Session seed (drives the worker's content-addressed draws).
+        seed: u64,
+    },
+    /// Liveness probe (coordinator → worker), multiplexed on the event
+    /// loop's poll timeout.
+    Heartbeat {
+        /// Echo token (monotonic beat counter).
+        nonce: u64,
+    },
+    /// Liveness probe reply (worker → coordinator). Any inbound frame
+    /// counts as proof of life; the ack exists so an otherwise-idle
+    /// worker still answers within the suspicion window.
+    HeartbeatAck {
+        /// The probed nonce, echoed.
+        nonce: u64,
+    },
+    /// Graceful-drain request (worker → coordinator): finish what is in
+    /// flight, stop dispatching to this device, re-partition, then
+    /// close the connection.
+    Leave,
 }
 
 // ---------------------------------------------------------------------
@@ -352,6 +427,45 @@ pub fn reply(req: u64, task: u64, result: Option<&Tensor>) -> Vec<u8> {
     e.finish()
 }
 
+/// Encode a Register membership-handshake frame (worker →
+/// coordinator).
+pub fn register(macs_per_ms: f64, capabilities: u32) -> Vec<u8> {
+    let mut e = Enc::frame(K_REGISTER);
+    e.u32(MAGIC);
+    e.u16(PROTO_VERSION);
+    e.f64(macs_per_ms);
+    e.u32(capabilities);
+    e.finish()
+}
+
+/// Encode a RegisterAck admission reply.
+pub fn register_ack(device: u32, seed: u64) -> Vec<u8> {
+    let mut e = Enc::frame(K_REGISTER_ACK);
+    e.u16(PROTO_VERSION);
+    e.u32(device);
+    e.u64(seed);
+    e.finish()
+}
+
+/// Encode a Heartbeat probe.
+pub fn heartbeat(nonce: u64) -> Vec<u8> {
+    let mut e = Enc::frame(K_HEARTBEAT);
+    e.u64(nonce);
+    e.finish()
+}
+
+/// Encode a HeartbeatAck reply.
+pub fn heartbeat_ack(nonce: u64) -> Vec<u8> {
+    let mut e = Enc::frame(K_HEARTBEAT_ACK);
+    e.u64(nonce);
+    e.finish()
+}
+
+/// Encode a Leave (graceful-drain) frame.
+pub fn leave() -> Vec<u8> {
+    Enc::frame(K_LEAVE).finish()
+}
+
 // ---------------------------------------------------------------------
 // decoding
 // ---------------------------------------------------------------------
@@ -394,6 +508,10 @@ impl<'a, 's> Dec<'a, 's> {
         Ok(self.take(1)?[0])
     }
 
+    // The `try_into().unwrap()`s below cannot panic: `take(n)` either
+    // returns exactly `n` bytes or an `Error::Wire`, so the slice→array
+    // conversion length always matches. Peer input reaches only the
+    // length-checked `take` path.
     fn u16(&mut self) -> Result<u16> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
@@ -577,6 +695,25 @@ fn decode_with(mut d: Dec<'_, '_>, kind: u8) -> Result<Frame> {
             };
             Frame::Reply { req, task, result }
         }
+        K_REGISTER => {
+            let magic = d.u32()?;
+            if magic != MAGIC {
+                return Err(Error::Wire(format!("bad handshake magic {magic:#x}")));
+            }
+            Frame::Register {
+                proto: d.u16()?,
+                macs_per_ms: d.f64()?,
+                capabilities: d.u32()?,
+            }
+        }
+        K_REGISTER_ACK => Frame::RegisterAck {
+            proto: d.u16()?,
+            device: d.u32()?,
+            seed: d.u64()?,
+        },
+        K_HEARTBEAT => Frame::Heartbeat { nonce: d.u64()? },
+        K_HEARTBEAT_ACK => Frame::HeartbeatAck { nonce: d.u64()? },
+        K_LEAVE => Frame::Leave,
         k => return Err(Error::Wire(format!("unknown frame kind {k:#x}"))),
     };
     d.finish()?;

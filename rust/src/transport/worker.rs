@@ -30,6 +30,7 @@ use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::{Error, Result};
@@ -38,6 +39,7 @@ use crate::rng::Pcg32;
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
 
+use super::evloop::lock;
 use super::wire::{self, Frame, WireTask};
 
 /// Worker launch options (`cdc-dnn worker` CLI flags).
@@ -52,6 +54,14 @@ pub struct WorkerOptions {
     pub net: Option<NetConfig>,
     /// Optional artificial compute rate (MACs/ms) applied from startup.
     pub rate_macs_per_ms: Option<f64>,
+    /// Join mode: dial this coordinator membership port and `Register`
+    /// instead of binding a listener (DESIGN.md §13). The worker serves
+    /// that one session and exits when the coordinator closes it.
+    pub join: Option<String>,
+    /// Send a graceful `Leave` this many ms after a session starts,
+    /// then keep serving in-flight orders until the coordinator drains
+    /// and closes the connection.
+    pub leave_after_ms: Option<u64>,
 }
 
 impl WorkerOptions {
@@ -62,6 +72,8 @@ impl WorkerOptions {
             artifacts: artifacts.into(),
             net: None,
             rate_macs_per_ms: None,
+            join: None,
+            leave_after_ms: None,
         }
     }
 }
@@ -89,10 +101,15 @@ struct ConnState {
 }
 
 /// Run a worker until its process is killed or a Shutdown frame
-/// arrives. Blocks forever on the accept loop otherwise.
+/// arrives. Blocks forever on the accept loop otherwise. With
+/// `opts.join` set, dials the coordinator instead and serves that one
+/// session.
 pub fn run(opts: &WorkerOptions) -> Result<()> {
     let manifest = Manifest::load(&opts.artifacts)?;
     let runtime = Runtime::new()?;
+    if let Some(addr) = &opts.join {
+        return run_joined(addr, &runtime, &manifest, opts);
+    }
     let listener = TcpListener::bind(&opts.listen)
         .map_err(|e| Error::Wire(format!("bind {}: {e}", opts.listen)))?;
     let addr = listener
@@ -120,10 +137,69 @@ pub fn run(opts: &WorkerOptions) -> Result<()> {
     Ok(())
 }
 
+fn fresh_state(opts: &WorkerOptions) -> ConnState {
+    ConnState {
+        seed: 0,
+        device: 0,
+        tasks: HashMap::new(),
+        failure: FailurePlan::None,
+        net: opts.net.clone(),
+        rate: opts.rate_macs_per_ms.filter(|r| r.is_finite() && *r > 0.0),
+    }
+}
+
+/// Join mode: dial the coordinator's membership port, `Register` with
+/// the announced compute rate, and serve the session at the device
+/// slot assigned by `RegisterAck`. Returns when the coordinator closes
+/// the connection (drain complete or session over).
+fn run_joined(
+    addr: &str,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    opts: &WorkerOptions,
+) -> Result<()> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| Error::Wire(format!("join {addr}: {e}")))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| Error::Wire(format!("set_nodelay: {e}")))?;
+    // 0.0 = "no announced rate": the coordinator falls back to its
+    // configured per-device rate estimate.
+    let announced = opts.rate_macs_per_ms.filter(|r| r.is_finite() && *r > 0.0);
+    wire::write_frame(
+        &mut stream,
+        &wire::register(announced.unwrap_or(0.0), wire::CAP_COMPUTE),
+    )?;
+    let mut st = fresh_state(opts);
+    match wire::read_frame(&mut stream)? {
+        Some(Frame::RegisterAck { proto, device, seed }) if proto == wire::PROTO_VERSION => {
+            st.seed = seed;
+            st.device = device as usize;
+        }
+        Some(Frame::RegisterAck { proto, .. }) => {
+            return Err(wire::proto_mismatch("coordinator", "this worker", proto));
+        }
+        None => {
+            return Err(Error::Wire(format!(
+                "join {addr}: coordinator closed before RegisterAck \
+                 (join rejected or fleet full)"
+            )));
+        }
+        other => {
+            return Err(Error::Wire(format!(
+                "join {addr}: bad register reply: {other:?}"
+            )));
+        }
+    }
+    println!("cdc-dnn worker joined {addr} as device {}", st.device);
+    let _ = std::io::stdout().flush();
+    serve_frames(stream, runtime, manifest, &mut st, opts).map(|_| ())
+}
+
 /// Serve one coordinator connection; `Ok(true)` means a Shutdown frame
 /// asked the whole process to exit.
 fn serve_conn(
-    mut stream: TcpStream,
+    stream: TcpStream,
     runtime: &Runtime,
     manifest: &Manifest,
     opts: &WorkerOptions,
@@ -131,30 +207,50 @@ fn serve_conn(
     stream
         .set_nodelay(true)
         .map_err(|e| Error::Wire(format!("set_nodelay: {e}")))?;
-    let mut st = ConnState {
-        seed: 0,
-        device: 0,
-        tasks: HashMap::new(),
-        failure: FailurePlan::None,
-        net: opts.net.clone(),
-        rate: opts.rate_macs_per_ms.filter(|r| r.is_finite() && *r > 0.0),
-    };
+    let mut st = fresh_state(opts);
+    serve_frames(stream, runtime, manifest, &mut st, opts)
+}
+
+/// The post-handshake frame loop shared by listen and join modes.
+/// Writes go through a mutexed clone of the stream so the optional
+/// `Leave` timer thread can inject its frame without interleaving
+/// bytes into a half-written reply.
+fn serve_frames(
+    stream: TcpStream,
+    runtime: &Runtime,
+    manifest: &Manifest,
+    st: &mut ConnState,
+    opts: &WorkerOptions,
+) -> Result<bool> {
+    let mut rstream = stream
+        .try_clone()
+        .map_err(|e| Error::Wire(format!("clone stream: {e}")))?;
+    let writer = Arc::new(Mutex::new(stream));
+    if let Some(ms) = opts.leave_after_ms {
+        let w = Arc::clone(&writer);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(ms));
+            // Graceful drain announcement; in-flight orders keep being
+            // served below until the coordinator closes the socket.
+            let _ = wire::write_frame(&mut *lock(&w), &wire::leave());
+        });
+    }
     loop {
-        let frame = match wire::read_frame(&mut stream)? {
+        let frame = match wire::read_frame(&mut rstream)? {
             Some(f) => f,
             None => return Ok(false), // coordinator closed the session
         };
         match frame {
             Frame::Hello { proto, seed, device } => {
                 if proto != wire::PROTO_VERSION {
-                    return Err(Error::Wire(format!(
-                        "coordinator speaks protocol {proto}, worker speaks {}",
-                        wire::PROTO_VERSION
-                    )));
+                    return Err(wire::proto_mismatch("coordinator", "this worker", proto));
                 }
                 st.seed = seed;
                 st.device = device as usize;
-                wire::write_frame(&mut stream, &wire::hello_ack())?;
+                wire::write_frame(&mut *lock(&writer), &wire::hello_ack())?;
+            }
+            Frame::Heartbeat { nonce } => {
+                wire::write_frame(&mut *lock(&writer), &wire::heartbeat_ack(nonce))?;
             }
             Frame::Deploy { tasks } => {
                 for t in tasks {
@@ -176,7 +272,7 @@ fn serve_conn(
             }
             Frame::Shutdown => return Ok(true),
             Frame::Work { req, tasks, batch, input } => {
-                work(&mut stream, runtime, manifest, &mut st, req, tasks, batch, input)?;
+                work(&writer, runtime, manifest, st, req, tasks, batch, input)?;
             }
             other => {
                 return Err(Error::Wire(format!(
@@ -195,7 +291,7 @@ fn serve_conn(
 /// coalescing on the other side of the wire.
 #[allow(clippy::too_many_arguments)]
 fn work(
-    stream: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
     runtime: &Runtime,
     manifest: &Manifest,
     st: &mut ConnState,
@@ -237,7 +333,9 @@ fn work(
         replies.extend_from_slice(&wire::reply(req, task_id, result.as_ref()));
     }
     if !replies.is_empty() {
-        wire::write_frame(stream, &replies)?;
+        // Lock held for the write only — compute and emulated delays
+        // above never block the Leave timer or a heartbeat ack.
+        wire::write_frame(&mut *lock(writer), &replies)?;
     }
     Ok(())
 }

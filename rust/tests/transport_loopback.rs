@@ -140,6 +140,119 @@ fn sigkill_mid_run_loses_nothing_under_cdc() {
     assert!(report.latency.summary().p99 >= report.latency.summary().p50);
 }
 
+/// Live membership (DESIGN.md §13): a fresh worker dials the
+/// coordinator's membership listener and `Register`s while an open-loop
+/// stream is in flight; later an original worker is SIGKILLed, forcing
+/// a repartition that promotes surviving slots (including the joiner)
+/// into the serving plan. Zero requests may be lost, and every output —
+/// before the join, between join and kill, and after the kill — must
+/// match the local single-node oracle.
+#[test]
+fn live_join_mid_stream_survives_kill_and_matches_oracle() {
+    let arts = synth::build(74).unwrap();
+    // Emulated compute (~5 ms per shard) stretches the stream so the
+    // join and the kill both land mid-serving.
+    let fleet = LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
+    let mut session = Session::start(&arts.root, tcp_cfg(&fleet, 1_000.0)).unwrap();
+    let addr = session.membership_addr().expect("membership listener on by default");
+    assert_eq!(session.partition_epoch(), 0);
+    assert_eq!(session.active_devices().to_vec(), vec![0, 1, 2, 3]);
+
+    let root = arts.root.clone();
+    let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
+    let joiner = {
+        let fleet = std::sync::Arc::clone(&fleet);
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            let mut f = fleet.lock().unwrap_or_else(|e| e.into_inner());
+            f.spawn_joiner(Some(worker_bin()), &root, &addr, Some(20.0), None)
+                .expect("joiner spawn");
+        })
+    };
+    let killer = {
+        let fleet = std::sync::Arc::clone(&fleet);
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(650));
+            let f = fleet.lock().unwrap_or_else(|e| e.into_inner());
+            f.kill(1).expect("kill worker 1");
+        })
+    };
+
+    let n = 120;
+    let xs = inputs(n, 740);
+    let report = session.serve(&Workload::uniform(xs.clone(), 8.0)).unwrap();
+    joiner.join().unwrap();
+    killer.join().unwrap();
+
+    assert_eq!(
+        report.throughput.completed, n as u64,
+        "churn lost requests: {}",
+        report.line()
+    );
+    assert!(report.failures.is_empty(), "{}", report.line());
+    assert_eq!(report.dropped, 0);
+    // Join and death each forced a live repartition; slot 1 is gone,
+    // slot 4 (the joiner) is in, and slot numbers were never reused.
+    assert!(
+        session.partition_epoch() >= 2,
+        "expected ≥ 2 repartitions (join + death), got {}",
+        session.partition_epoch()
+    );
+    assert_eq!(session.active_devices().to_vec(), vec![0, 2, 3, 4]);
+    for t in &report.traces {
+        let want = oracle(&arts.root, &xs[t.req as usize]);
+        let diff = t.output.max_abs_diff(&want);
+        assert!(diff < 1e-4, "req {}: logits diverge by {diff}", t.req);
+        assert_eq!(t.output.argmax(), want.argmax(), "req {}", t.req);
+    }
+}
+
+/// Graceful drain (DESIGN.md §13): a joiner that announces `Leave`
+/// mid-stream finishes its in-flight orders, the coordinator
+/// repartitions back to the original fleet, and nothing is lost.
+#[test]
+fn graceful_leave_drains_without_loss() {
+    let arts = synth::build(75).unwrap();
+    let fleet = LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
+    let mut session = Session::start(&arts.root, tcp_cfg(&fleet, 1_000.0)).unwrap();
+    let addr = session.membership_addr().unwrap();
+
+    let root = arts.root.clone();
+    let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
+    let joiner = {
+        let fleet = std::sync::Arc::clone(&fleet);
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let mut f = fleet.lock().unwrap_or_else(|e| e.into_inner());
+            // Joins ~50 ms in, announces a graceful Leave 300 ms later.
+            f.spawn_joiner(Some(worker_bin()), &root, &addr, Some(20.0), Some(300))
+                .expect("joiner spawn");
+        })
+    };
+
+    let n = 120;
+    let xs = inputs(n, 750);
+    let report = session.serve(&Workload::uniform(xs.clone(), 8.0)).unwrap();
+    joiner.join().unwrap();
+
+    assert_eq!(report.throughput.completed, n as u64, "{}", report.line());
+    assert!(report.failures.is_empty(), "{}", report.line());
+    assert!(
+        session.partition_epoch() >= 2,
+        "expected ≥ 2 repartitions (join + drain), got {}",
+        session.partition_epoch()
+    );
+    assert_eq!(
+        session.active_devices().to_vec(),
+        vec![0, 1, 2, 3],
+        "the drained joiner must be out of the active set"
+    );
+    for t in &report.traces {
+        let want = oracle(&arts.root, &xs[t.req as usize]);
+        assert!(t.output.max_abs_diff(&want) < 1e-4, "req {}", t.req);
+    }
+}
+
 /// A worker that silently drops replies (the wire twin of the
 /// simulator's `Intermittent` plan) is caught by the wall-clock
 /// deadline reaper, and CDC recovers the order.

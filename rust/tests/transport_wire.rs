@@ -68,6 +68,58 @@ fn control_frames_roundtrip() {
     }
 }
 
+#[test]
+fn membership_frames_roundtrip() {
+    match roundtrip(&wire::register(812.5, wire::CAP_COMPUTE)) {
+        Frame::Register { proto, macs_per_ms, capabilities } => {
+            assert_eq!(proto, wire::PROTO_VERSION);
+            assert_eq!(macs_per_ms, 812.5);
+            assert_eq!(capabilities, wire::CAP_COMPUTE);
+        }
+        other => panic!("{other:?}"),
+    }
+    // An unannounced rate (0.0) survives the trip — the coordinator
+    // substitutes its configured default on admission.
+    assert!(matches!(
+        roundtrip(&wire::register(0.0, wire::CAP_COMPUTE)),
+        Frame::Register { macs_per_ms, .. } if macs_per_ms == 0.0
+    ));
+    match roundtrip(&wire::register_ack(9, 0xfeed_f00d)) {
+        Frame::RegisterAck { proto, device, seed } => {
+            assert_eq!(proto, wire::PROTO_VERSION);
+            assert_eq!(device, 9);
+            assert_eq!(seed, 0xfeed_f00d);
+        }
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(
+        roundtrip(&wire::heartbeat(41)),
+        Frame::Heartbeat { nonce: 41 }
+    ));
+    assert!(matches!(
+        roundtrip(&wire::heartbeat_ack(41)),
+        Frame::HeartbeatAck { nonce: 41 }
+    ));
+    assert!(matches!(roundtrip(&wire::leave()), Frame::Leave));
+}
+
+/// The protocol-mismatch diagnostic names both sides and both versions —
+/// the operator-facing message a stale worker binary produces when it
+/// dials a newer coordinator (ISSUE 7 satellite).
+#[test]
+fn proto_mismatch_diagnostic_names_both_sides() {
+    let err = wire::proto_mismatch("worker 127.0.0.1:9000", "coordinator", 1);
+    let msg = err.to_string();
+    assert!(msg.contains("worker 127.0.0.1:9000"), "{msg}");
+    assert!(msg.contains("coordinator"), "{msg}");
+    assert!(msg.contains("protocol 1"), "{msg}");
+    assert!(
+        msg.contains(&wire::PROTO_VERSION.to_string()),
+        "expected version missing: {msg}"
+    );
+    assert!(matches!(err, cdc_dnn::error::Error::Wire(_)));
+}
+
 /// Property: Work / Reply / Deploy frames round-trip bit-exactly over
 /// random shapes, ids and payload values (including negative zero and
 /// subnormals from the normal draw).
@@ -233,6 +285,11 @@ fn corpus() -> Vec<Vec<u8>> {
         wire::set_net(true, &NetConfig::moderate()),
         wire::set_rate(250.0),
         wire::shutdown(),
+        wire::register(640.0, wire::CAP_COMPUTE),
+        wire::register_ack(6, 0xabad_cafe),
+        wire::heartbeat(3),
+        wire::heartbeat_ack(3),
+        wire::leave(),
     ]
 }
 
