@@ -7,7 +7,7 @@ ARTIFACTS ?= rust/artifacts
 .PHONY: artifacts build test bench bench-gemm bench-gemm-smoke \
         bench-scenarios bench-scenarios-smoke bench-batching \
         bench-batching-smoke bench-transport bench-transport-smoke \
-        worker-demo doc fmt clippy
+        worker-demo gateway-demo doc fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -66,6 +66,16 @@ worker-demo:
 	cargo build --release
 	./target/release/cdc-dnn synth --artifacts synth-arts --seed 7
 	./target/release/cdc-dnn worker --artifacts synth-arts --listen 127.0.0.1:7070
+
+# HTTP/1.1 serving gateway over an auto-spawned loopback worker fleet
+# (DESIGN.md §14): prints GATEWAY_URL, then serves POST /v1/infer and
+# the fleet control plane until POST /v1/shutdown (curl quickstart in
+# the README).
+gateway-demo:
+	cargo build --release
+	./target/release/cdc-dnn synth --artifacts synth-arts --seed 7
+	./target/release/cdc-dnn gateway --artifacts synth-arts \
+		--deployment rust/configs/mlp_loopback.json --http 127.0.0.1:8080
 
 # Rustdoc for the whole crate; CI runs this with -D warnings.
 doc:

@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::coordinator::{Redundancy, SessionConfig, SplitSpec};
 use crate::error::{Error, Result};
 use crate::fleet::NetConfig;
+use crate::gateway::GatewayConfig;
 use crate::json::{obj, Value};
 use crate::transport::{TcpConfig, TransportSpec};
 
@@ -199,6 +200,46 @@ pub fn transport_to_json(spec: &TransportSpec) -> Value {
     }
 }
 
+/// Parse the deployment file's optional `gateway` section:
+/// `{"listen": "127.0.0.1:0", "max_body_bytes": N, "request_timeout_ms": N}`
+/// (every key optional; defaults from [`GatewayConfig::default`]).
+pub fn gateway_from_json(v: &Value) -> Result<GatewayConfig> {
+    let mut gw = GatewayConfig::default();
+    if let Some(l) = v.opt("listen") {
+        gw.listen = l.as_str()?.to_string();
+    }
+    if let Some(b) = v.opt("max_body_bytes") {
+        gw.max_body_bytes = b.as_usize()?;
+    }
+    if let Some(t) = v.opt("request_timeout_ms") {
+        gw.request_timeout_ms = t.as_usize()? as u64;
+    }
+    Ok(gw)
+}
+
+/// Serialise a gateway config back to the deployment-file shape.
+pub fn gateway_to_json(gw: &GatewayConfig) -> Value {
+    obj(vec![
+        ("listen", Value::Str(gw.listen.clone())),
+        ("max_body_bytes", Value::Num(gw.max_body_bytes as f64)),
+        ("request_timeout_ms", Value::Num(gw.request_timeout_ms as f64)),
+    ])
+}
+
+/// Read the optional `gateway` section out of a deployment file
+/// (`Ok(None)` when the file has none). The section lives beside the
+/// session keys rather than inside [`SessionConfig`]: the gateway fronts
+/// a session, it is not part of the distribution plan.
+pub fn load_gateway(path: &std::path::Path) -> Result<Option<GatewayConfig>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    let v = Value::parse(&text)?;
+    match v.opt("gateway") {
+        Some(g) => Ok(Some(gateway_from_json(g)?)),
+        None => Ok(None),
+    }
+}
+
 /// Serialise a SessionConfig back to the deployment-file JSON shape.
 pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
     let splits: BTreeMap<String, Value> = cfg
@@ -266,6 +307,23 @@ mod tests {
         assert_eq!(back.splits["fc1"].redundancy, Redundancy::Cdc);
         assert_eq!(back.splits["fc2"].redundancy, Redundancy::CdcGrouped(1));
         assert_eq!(back.placement["fc1"], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn roundtrip_gateway_section() {
+        let gw = GatewayConfig {
+            listen: "127.0.0.1:8080".to_string(),
+            max_body_bytes: 4096,
+            request_timeout_ms: 2500,
+        };
+        let back = gateway_from_json(&gateway_to_json(&gw)).unwrap();
+        assert_eq!(back.listen, "127.0.0.1:8080");
+        assert_eq!(back.max_body_bytes, 4096);
+        assert_eq!(back.request_timeout_ms, 2500);
+        // Every key optional: an empty section is all defaults.
+        let dflt = gateway_from_json(&obj(vec![])).unwrap();
+        assert_eq!(dflt.listen, GatewayConfig::default().listen);
+        assert_eq!(dflt.max_body_bytes, GatewayConfig::default().max_body_bytes);
     }
 
     #[test]

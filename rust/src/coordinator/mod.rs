@@ -1000,6 +1000,96 @@ impl Session {
         Ok(moved.len())
     }
 
+    /// Live migration (gateway `POST /v1/deployments/<model>/migrate`):
+    /// move every task owned by `from` onto `to` with zero request
+    /// drops. Unlike [`Session::failover`] — which tears down a device
+    /// already presumed dead — migration is make-before-break: the
+    /// target loads every task definition *first*, then stage routing
+    /// flips, and only then is the source undeployed. FIFO frame order
+    /// on the target connection guarantees its Deploy is processed
+    /// before any Work the flipped stages send it, and the source keeps
+    /// serving its in-flight orders until the flip, so no window exists
+    /// in which a request can be lost. Callers run this at a
+    /// pipeline-quiescent point (the serve loop's lifecycle hook does),
+    /// which additionally means no order is in flight at all.
+    pub fn migrate_tasks(&mut self, from: usize, to: usize) -> Result<usize> {
+        if from == to {
+            return Err(Error::Config(
+                "migrate: source and target are the same device".into(),
+            ));
+        }
+        for d in [from, to] {
+            if !self.active.contains(&d) {
+                return Err(Error::Fleet(format!(
+                    "migrate: device {d} is not an active fleet member"
+                )));
+            }
+        }
+        let moved: Vec<u64> = self
+            .task_owner
+            .iter()
+            .filter(|(_, &d)| d == from)
+            .map(|(&t, _)| t)
+            .collect();
+        if moved.is_empty() {
+            return Ok(0);
+        }
+        let defs: Vec<TaskDef> = moved
+            .iter()
+            .map(|t| self.task_defs[t].clone())
+            .collect();
+        // Make: the target holds every definition before any routing
+        // change exists.
+        self.transport.deploy(to, defs)?;
+        // Flip: stage routing and ownership move atomically (no order is
+        // dispatched between these loops — the caller holds the serve
+        // loop).
+        for t in &moved {
+            self.task_owner.insert(*t, to);
+        }
+        for st in &mut self.stages {
+            if let StageKind::Dist(d) = &mut st.kind {
+                for (dev, t) in d.data.iter_mut() {
+                    if moved.contains(t) {
+                        *dev = to;
+                    }
+                }
+                for (dev, t, _) in d.parities.iter_mut() {
+                    if moved.contains(t) {
+                        *dev = to;
+                    }
+                }
+                for (dev, t) in d.replicas.iter_mut() {
+                    if moved.contains(t) {
+                        *dev = to;
+                    }
+                }
+            }
+        }
+        // Break: best effort — the source staying loaded costs memory,
+        // not correctness.
+        let _ = self.transport.undeploy(from, moved.clone());
+        Ok(moved.len())
+    }
+
+    /// Undeploy every task from its owner (gateway `DELETE
+    /// /v1/deployments/<model>`). Stage structure and ownership maps are
+    /// kept — a later deploy verb rebuilds via `repartition` — but the
+    /// workers drop their shards now. Best effort per device, like the
+    /// repartition path: a device that died since the event queued just
+    /// ignores it.
+    pub(crate) fn undeploy_all(&mut self) {
+        let mut per_dev: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        for (&t, &d) in &self.task_owner {
+            per_dev.entry(d).or_default().push(t);
+        }
+        for (d, ts) in per_dev {
+            if self.active.contains(&d) {
+                let _ = self.transport.undeploy(d, ts);
+            }
+        }
+    }
+
     /// Run one single-batch inference through the distributed model —
     /// the single-request special case of [`Session::serve`].
     pub fn infer(&mut self, input: &Tensor) -> Result<RequestTrace> {

@@ -76,6 +76,8 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::fleet::Completion;
+use crate::gateway::{error_body, GatewayBridge, GatewayCmd, Responder};
+use crate::json::{self, Value};
 use crate::kernels::Scratch;
 use crate::metrics::{self, Intervals, Series, Throughput};
 use crate::rng::Pcg32;
@@ -404,7 +406,38 @@ impl Session {
         // exit path (an error mid-run must not drop the warmed pool).
         self.transport.begin_serve();
         let mut scratch = std::mem::take(&mut self.scratch);
-        let result = self.serve_inner(workload, &mut scratch);
+        let result = self.serve_inner(workload, None, &mut scratch);
+        self.scratch = scratch;
+        result
+    }
+
+    /// Like [`Session::serve`], but with a live HTTP gateway attached
+    /// (DESIGN.md §14): external `POST /v1/infer` requests are admitted
+    /// into the *same* micro-batching window as the workload's paced
+    /// traffic, fleet/stats/policy reads answer inline from the running
+    /// loop, and lifecycle verbs (deploy / undeploy / migrate) execute at
+    /// pipeline-quiescent points — the same instants membership changes
+    /// fold in, so they can never tear a batch in half. Returns once a
+    /// shutdown command has been received and the pipeline has drained.
+    ///
+    /// Wall-clock transports only: the simulated timeline has no real
+    /// "now" for an external socket to live on, and refusing sim here
+    /// keeps sim-mode scheduling bit-identical by construction.
+    pub fn serve_gateway(
+        &mut self,
+        workload: &Workload,
+        gw: &GatewayBridge,
+    ) -> Result<ServeReport> {
+        if !self.transport.wall_clock() {
+            return Err(Error::Config(
+                "the gateway requires a wall-clock transport (tcp): \
+                 the simulator has no real timeline for external clients"
+                    .into(),
+            ));
+        }
+        self.transport.begin_serve();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let result = self.serve_inner(workload, Some(gw), &mut scratch);
         self.scratch = scratch;
         result
     }
@@ -412,6 +445,7 @@ impl Session {
     fn serve_inner(
         &mut self,
         workload: &Workload,
+        gateway: Option<&GatewayBridge>,
         scratch: &mut Scratch,
     ) -> Result<ServeReport> {
         let total = workload.inputs.len();
@@ -504,7 +538,194 @@ impl Session {
             }
         }
 
+        // ---- gateway state (DESIGN.md §14) ---------------------------
+        // Reply handles for external in-flight requests, keyed by request
+        // id; presence marks a request as external (admission-cap exempt,
+        // no trace retained — its output leaves over HTTP).
+        let mut ext_replies: BTreeMap<u64, Responder> = BTreeMap::new();
+        // Lifecycle verbs wait here for the next quiescent point.
+        let mut pending_ctl: VecDeque<GatewayCmd> = VecDeque::new();
+        // Commands picked up by the idle wait, handled next loop top.
+        let mut queued_cmds: VecDeque<GatewayCmd> = VecDeque::new();
+        // Without a gateway the engine "shuts down" when work runs out,
+        // exactly as before; with one, only an explicit shutdown (or the
+        // command channel dying) lets the loop exit.
+        let mut shutdown = gateway.is_none();
+        let mut deployed = true;
+        // How long the gather phase may block while a gateway is
+        // attached: bounds external-admission latency under load.
+        const GATEWAY_POLL_MS: f64 = 5.0;
+        // Idle tick with a gateway attached: bounds how stale membership
+        // folding can get while no traffic flows.
+        const GATEWAY_IDLE_MS: f64 = 25.0;
+
         loop {
+            // ---- gateway commands (DESIGN.md §14) --------------------
+            // External admissions and reads are handled the moment they
+            // are seen; lifecycle verbs wait for the quiescent point
+            // below. `queued_cmds` holds commands the idle wait caught.
+            if let Some(gw) = gateway {
+                loop {
+                    let cmd = match queued_cmds.pop_front() {
+                        Some(c) => c,
+                        None => match gw.rx.try_recv() {
+                            Ok(c) => c,
+                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                shutdown = true;
+                                break;
+                            }
+                        },
+                    };
+                    match cmd {
+                        GatewayCmd::Infer { input, resp } => {
+                            if shutdown || !deployed {
+                                let why = if shutdown {
+                                    "gateway is shutting down".to_string()
+                                } else {
+                                    format!(
+                                        "model {} is not deployed",
+                                        self.cfg.model
+                                    )
+                                };
+                                resp.send(503, error_body(why));
+                                continue;
+                            }
+                            // Admit now, on the transport clock, into the
+                            // same queues (and micro-batch windows) the
+                            // paced workload uses.
+                            let arrival = self.transport.clamp_ms(0.0);
+                            let req = self.next_req;
+                            self.next_req += 1;
+                            let cur = match reshape_input(&self.model, &input) {
+                                Ok(t) => Arc::new(t),
+                                Err(e) => {
+                                    resp.send(
+                                        400,
+                                        error_body(format!("bad input: {e}")),
+                                    );
+                                    continue;
+                                }
+                            };
+                            let mut fl = InFlight {
+                                req,
+                                t_arrival: arrival,
+                                t_first_start: f64::NAN,
+                                t_ready: arrival,
+                                stage_idx: 0,
+                                cur,
+                                layers: Vec::new(),
+                                any_recovery: false,
+                            };
+                            if advance_locals(
+                                &self.stages,
+                                &self.model,
+                                &mut fl,
+                                scratch,
+                            )? {
+                                // No distributed stage: answer at once.
+                                let out = take_owned(&mut fl.cur);
+                                resp.send(200, infer_reply(req, &out, 0.0, false));
+                                scratch.put(out.into_data());
+                                latency.record(0.0);
+                                service.record(0.0);
+                                queue_wait.record(0.0);
+                                makespan = makespan.max(arrival);
+                                tp.completed += 1;
+                                continue;
+                            }
+                            let s = fl.stage_idx;
+                            let i = inflight.len();
+                            inflight.push(fl);
+                            stage_queue[s].push_back(i);
+                            ext_replies.insert(req, resp);
+                        }
+                        GatewayCmd::Stats { resp } => {
+                            let now = self.transport.now_ms();
+                            let in_flight = stage_busy
+                                .iter()
+                                .flatten()
+                                .map(|b| b.members.len())
+                                .sum::<usize>()
+                                + stage_queue.iter().map(VecDeque::len).sum::<usize>();
+                            let stage_rows: Vec<Value> = (0..n_stages)
+                                .filter(|&s| self.stages[s].is_distributed())
+                                .map(|s| {
+                                    json::obj(vec![
+                                        (
+                                            "layer",
+                                            Value::Str(
+                                                self.model.layers
+                                                    [self.stages[s].layer_idx()]
+                                                .name
+                                                .clone(),
+                                            ),
+                                        ),
+                                        ("served", num(served[s] as f64)),
+                                        ("batches", num(batches[s] as f64)),
+                                        ("busy_ms", num(occupancy[s].busy_ms())),
+                                        (
+                                            "utilization",
+                                            num(occupancy[s].utilization(now)),
+                                        ),
+                                    ])
+                                })
+                                .collect();
+                            let l = latency.summary();
+                            let rps = if now > 0.0 {
+                                tp.completed as f64 * 1000.0 / now
+                            } else {
+                                0.0
+                            };
+                            resp.send(
+                                200,
+                                json::obj(vec![
+                                    ("completed", num(tp.completed as f64)),
+                                    ("failed", num(tp.failed as f64)),
+                                    ("recovered", num(tp.recovered as f64)),
+                                    ("dropped", num(dropped as f64)),
+                                    ("in_flight", num(in_flight as f64)),
+                                    ("elapsed_ms", num(now)),
+                                    ("rps", num(rps)),
+                                    ("max_batch", num(max_batch as f64)),
+                                    (
+                                        "latency_ms",
+                                        json::obj(vec![
+                                            ("count", num(l.count as f64)),
+                                            ("mean", num(l.mean)),
+                                            ("p50", num(l.p50)),
+                                            ("p95", num(l.p95)),
+                                            ("p99", num(l.p99)),
+                                            ("max", num(l.max)),
+                                        ]),
+                                    ),
+                                    ("stages", Value::Arr(stage_rows)),
+                                ]),
+                            );
+                        }
+                        GatewayCmd::Fleet { resp } => resp.send(200, self.fleet_json()),
+                        GatewayCmd::Policy { resp } => {
+                            resp.send(200, self.policy_json())
+                        }
+                        GatewayCmd::Deployments { resp } => {
+                            resp.send(200, self.deployments_json(deployed))
+                        }
+                        GatewayCmd::Shutdown { resp } => {
+                            shutdown = true;
+                            if let Some(r) = resp {
+                                r.send(
+                                    200,
+                                    json::obj(vec![("ok", Value::Bool(true))]),
+                                );
+                            }
+                        }
+                        ctl @ (GatewayCmd::Deploy { .. }
+                        | GatewayCmd::Undeploy { .. }
+                        | GatewayCmd::Migrate { .. }) => pending_ctl.push_back(ctl),
+                    }
+                }
+            }
+
             // ---- membership (wall clock only; DESIGN.md §13) ---------
             // Worker joins, heartbeat deaths, and graceful leaves fold
             // into the plan only at pipeline-quiescent instants — no
@@ -513,6 +734,13 @@ impl Session {
             // sim scheduling bit-identical.
             if wall && stage_busy.iter().all(|b| b.is_none()) {
                 self.apply_membership()?;
+                // Lifecycle verbs (deploy / undeploy / migrate) execute
+                // at the same quiescent points as membership: no order is
+                // in flight, so they can never tear a batch (DESIGN.md
+                // §14).
+                while let Some(cmd) = pending_ctl.pop_front() {
+                    self.apply_lifecycle(cmd, &mut deployed);
+                }
                 let width = self.transport.n_devices();
                 if device_free.len() < width {
                     device_free.resize(width, 0.0);
@@ -580,6 +808,12 @@ impl Session {
                 if stage_busy[s].is_some() {
                     continue;
                 }
+                // Undeployed (gateway lifecycle): requests wait in their
+                // queues — never dispatched, never dropped — until a
+                // deploy verb restores the plan.
+                if !deployed {
+                    continue;
+                }
                 let StageKind::Dist(ds) = &self.stages[s].kind else {
                     continue;
                 };
@@ -589,6 +823,11 @@ impl Session {
                 // batching existed.
                 let balks = |i: usize, starts: &[(f64, f64)]| {
                     if Some(s) != first_dist || closed_c.is_some() {
+                        return false;
+                    }
+                    // External (gateway) requests never balk: the
+                    // admission cap governs the synthetic open loop.
+                    if ext_replies.contains_key(&inflight[i].req) {
                         return false;
                     }
                     let Some(cap) = workload.admission_cap else { return false };
@@ -658,9 +897,14 @@ impl Session {
             // flight, sleeping (pace) is the only thing left to do.
             let mut next_due = f64::INFINITY;
             for (t_enter, s, members) in cands {
+                // With a gateway attached, future-dated orders are ALWAYS
+                // deferred (never slept on via `pace`): a sleeping serve
+                // loop could not admit the external request that just
+                // arrived. The idle wait in the done-block takes pacing's
+                // place.
                 if wall
                     && t_enter > self.transport.now_ms()
-                    && stage_busy.iter().any(|b| b.is_some())
+                    && (gateway.is_some() || stage_busy.iter().any(|b| b.is_some()))
                 {
                     next_due = next_due.min(t_enter);
                     for &m in members.iter().rev() {
@@ -716,9 +960,77 @@ impl Session {
                 });
             }
 
+            // With a gateway attached, bound how long the gather phase
+            // may block while stages hold work, so commands arriving
+            // mid-burst are admitted within a few ms.
+            if gateway.is_some() && stage_busy.iter().any(|b| b.is_some()) {
+                next_due = next_due.min(self.transport.now_ms() + GATEWAY_POLL_MS);
+            }
+
             // ---- done? ----------------------------------------------
             if stage_busy.iter().all(|b| b.is_none()) {
-                break;
+                let Some(gw) = gateway else { break };
+                if shutdown && !deployed {
+                    // Shutting down with the model undeployed: queued
+                    // work can never dispatch — fail it out now instead
+                    // of waiting forever.
+                    for q in stage_queue.iter_mut() {
+                        while let Some(i) = q.pop_front() {
+                            let req = inflight[i].req;
+                            if let Some(r) = ext_replies.remove(&req) {
+                                r.send(
+                                    503,
+                                    error_body(
+                                        "shutting down with the model undeployed",
+                                    ),
+                                );
+                                failures.push((req, "undeployed".to_string()));
+                                tp.failed += 1;
+                            } else {
+                                dropped += 1;
+                            }
+                        }
+                    }
+                    dropped += pending_admissions.len() as u64;
+                    pending_admissions.clear();
+                }
+                let queued = !pending_admissions.is_empty()
+                    || stage_queue.iter().any(|q| !q.is_empty());
+                if shutdown
+                    && !queued
+                    && pending_ctl.is_empty()
+                    && queued_cmds.is_empty()
+                {
+                    break;
+                }
+                // Idle: block until the next deferred order is due or a
+                // command arrives (bounded tick keeps membership fresh).
+                let now = self.transport.now_ms();
+                let wait_ms = if next_due.is_finite() {
+                    (next_due - now).clamp(0.0, GATEWAY_IDLE_MS)
+                } else {
+                    GATEWAY_IDLE_MS
+                };
+                let wait = std::time::Duration::from_micros((wait_ms * 1000.0) as u64);
+                match gw.rx.recv_timeout(wait) {
+                    Ok(c) => queued_cmds.push_back(c),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        // The HTTP server is gone: no more external work
+                        // can arrive. Drain what's queued, then exit.
+                        shutdown = true;
+                        if !queued && pending_ctl.is_empty() && queued_cmds.is_empty()
+                        {
+                            break;
+                        }
+                        // recv_timeout returns instantly on a dead
+                        // channel; sleep for real so waiting on deferred
+                        // future-dated orders doesn't spin (wall-clock
+                        // transports only reach this path).
+                        std::thread::sleep(wait);
+                    }
+                }
+                continue;
             }
 
             // ---- gather outstanding completions ----------------------
@@ -871,6 +1183,31 @@ impl Session {
                             fl.stage_idx = s + 1;
                             if advance_locals(&self.stages, &self.model, fl, scratch)? {
                                 let done_t = fl.t_ready;
+                                if let Some(r) = ext_replies.remove(&fl.req) {
+                                    // External (gateway) request: the
+                                    // logits leave over HTTP; no trace is
+                                    // retained (a long-lived gateway must
+                                    // not accumulate outputs), but every
+                                    // serving metric records it.
+                                    let out = take_owned(&mut fl.cur);
+                                    let lat = done_t - fl.t_arrival;
+                                    r.send(
+                                        200,
+                                        infer_reply(fl.req, &out, lat, fl.any_recovery),
+                                    );
+                                    scratch.put(out.into_data());
+                                    latency.record(lat);
+                                    service.record(done_t - fl.t_first_start);
+                                    queue_wait.record(fl.t_first_start - fl.t_arrival);
+                                    req_intervals.push(fl.t_first_start, done_t);
+                                    makespan = makespan.max(done_t);
+                                    tp.completed += 1;
+                                    if fl.any_recovery {
+                                        tp.recovered += 1;
+                                    }
+                                    fl.layers.clear();
+                                    continue;
+                                }
                                 let trace = RequestTrace {
                                     req: fl.req,
                                     output: take_owned(&mut fl.cur),
@@ -912,9 +1249,25 @@ impl Session {
                         occupancy[s].push(b.t_enter, t_free);
                         makespan = makespan.max(t_free);
                         for &mi in &b.members {
-                            failures.push((inflight[mi].req, layer.name.clone()));
+                            let req = inflight[mi].req;
+                            let ext = ext_replies.remove(&req);
+                            if let Some(r) = &ext {
+                                // A lost external request is an honest
+                                // 502: the pipeline exhausted every
+                                // recovery path for this batch.
+                                r.send(
+                                    502,
+                                    error_body(format!(
+                                        "request lost at layer {} \
+                                         (redundancy exhausted)",
+                                        layer.name
+                                    )),
+                                );
+                            }
+                            failures.push((req, layer.name.clone()));
                             tp.failed += 1;
-                            if closed_c.is_some() && next_admit < total {
+                            if ext.is_none() && closed_c.is_some() && next_admit < total
+                            {
                                 pending_admissions.push_back((next_admit, t_free));
                                 next_admit += 1;
                             }
@@ -958,5 +1311,171 @@ impl Session {
             max_batch,
             policy: self.adaptive.as_ref().map(|a| a.snapshot()),
         })
+    }
+
+    /// `GET /v1/fleet` payload: live membership, device rates, epoch.
+    fn fleet_json(&self) -> Value {
+        let active: Vec<Value> =
+            self.active.iter().map(|&d| num(d as f64)).collect();
+        let failed: Vec<Value> =
+            self.known_failed.iter().map(|&d| num(d as f64)).collect();
+        json::obj(vec![
+            ("transport", Value::Str(self.transport_label().to_string())),
+            ("partition_epoch", num(self.partition_epoch as f64)),
+            ("total_devices", num(self.transport.n_devices() as f64)),
+            ("active", Value::Arr(active)),
+            ("known_failed", Value::Arr(failed)),
+            ("rates", json::arr_f64(self.device_rates())),
+            (
+                "membership_addr",
+                match self.membership_addr() {
+                    Some(a) => Value::Str(a),
+                    None => Value::Null,
+                },
+            ),
+        ])
+    }
+
+    /// `GET /v1/policy` payload: the adaptive `PolicyReport` snapshot,
+    /// or the static gate when adaptation is off.
+    fn policy_json(&self) -> Value {
+        match self.policy_snapshot() {
+            None => json::obj(vec![
+                ("adaptive", Value::Bool(false)),
+                ("threshold_factor", num(self.cfg.threshold_factor)),
+            ]),
+            Some(p) => json::obj(vec![
+                ("adaptive", Value::Bool(true)),
+                ("threshold_factor", num(p.threshold_factor)),
+                ("observed", num(p.observed as f64)),
+                ("drops", num(p.drops as f64)),
+                ("drop_rate", num(p.drop_rate)),
+                ("stragglers", num(p.stragglers as f64)),
+                ("recommended", Value::Str(redundancy_tag(p.recommended))),
+            ]),
+        }
+    }
+
+    /// `GET /v1/deployments` payload (this session serves one model).
+    fn deployments_json(&self, deployed: bool) -> Value {
+        Value::Arr(vec![json::obj(vec![
+            ("model", Value::Str(self.cfg.model.clone())),
+            ("deployed", Value::Bool(deployed)),
+            ("n_devices", num(self.cfg.n_devices as f64)),
+            ("active", num(self.active.len() as f64)),
+            ("partition_epoch", num(self.partition_epoch as f64)),
+            ("tasks", num(self.task_owner.len() as f64)),
+        ])])
+    }
+
+    /// Execute one lifecycle verb at a pipeline-quiescent point and
+    /// answer its responder. Infallible by design: every failure becomes
+    /// an HTTP error payload instead of tearing down the serve loop.
+    fn apply_lifecycle(&mut self, cmd: GatewayCmd, deployed: &mut bool) {
+        match cmd {
+            GatewayCmd::Undeploy { model, resp } => {
+                if model != self.cfg.model {
+                    resp.send(404, error_body(format!("no deployment named {model}")));
+                    return;
+                }
+                if *deployed {
+                    self.undeploy_all();
+                    *deployed = false;
+                }
+                resp.send(
+                    200,
+                    json::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("model", Value::Str(model)),
+                        ("deployed", Value::Bool(false)),
+                    ]),
+                );
+            }
+            GatewayCmd::Deploy { model, resp } => {
+                if model != self.cfg.model {
+                    resp.send(
+                        404,
+                        error_body(format!(
+                            "this session serves only model {}",
+                            self.cfg.model
+                        )),
+                    );
+                    return;
+                }
+                if !*deployed {
+                    if let Err(e) = self.repartition() {
+                        resp.send(500, error_body(format!("deploy failed: {e}")));
+                        return;
+                    }
+                    *deployed = true;
+                }
+                resp.send(
+                    200,
+                    json::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("model", Value::Str(model)),
+                        ("deployed", Value::Bool(true)),
+                        ("partition_epoch", num(self.partition_epoch as f64)),
+                    ]),
+                );
+            }
+            GatewayCmd::Migrate { model, from, to, resp } => {
+                if model != self.cfg.model {
+                    resp.send(404, error_body(format!("no deployment named {model}")));
+                    return;
+                }
+                if !*deployed {
+                    resp.send(503, error_body(format!("model {model} is not deployed")));
+                    return;
+                }
+                match self.migrate_tasks(from, to) {
+                    Ok(moved) => resp.send(
+                        200,
+                        json::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("moved", num(moved as f64)),
+                            ("from", num(from as f64)),
+                            ("to", num(to as f64)),
+                            ("partition_epoch", num(self.partition_epoch as f64)),
+                        ]),
+                    ),
+                    Err(e) => resp.send(400, error_body(format!("migrate failed: {e}"))),
+                }
+            }
+            // Only lifecycle verbs are ever queued to this hook.
+            _ => {}
+        }
+    }
+}
+
+/// JSON number that degrades to `null` instead of emitting non-finite
+/// literals the grammar forbids.
+fn num(v: f64) -> Value {
+    if v.is_finite() {
+        Value::Num(v)
+    } else {
+        Value::Null
+    }
+}
+
+/// `POST /v1/infer` success payload: logits + provenance.
+fn infer_reply(req: u64, out: &Tensor, latency_ms: f64, recovered: bool) -> Value {
+    let logits: Vec<f64> = out.data().iter().map(|&x| f64::from(x)).collect();
+    json::obj(vec![
+        ("req", num(req as f64)),
+        ("logits", json::arr_f64(&logits)),
+        ("argmax", num(out.argmax() as f64)),
+        ("latency_ms", num(latency_ms)),
+        ("recovered", Value::Bool(recovered)),
+    ])
+}
+
+/// Same tag grammar the config files use ("none" | "cdc" | "cdc:<g>" | "2mr").
+fn redundancy_tag(r: super::Redundancy) -> String {
+    match r {
+        super::Redundancy::None => "none".to_string(),
+        super::Redundancy::Cdc => "cdc".to_string(),
+        super::Redundancy::CdcGrouped(g) => format!("cdc:{g}"),
+        super::Redundancy::TwoMr => "2mr".to_string(),
     }
 }

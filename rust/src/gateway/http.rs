@@ -1,0 +1,491 @@
+//! Hand-rolled HTTP/1.1 request parser + response encoder for the serving
+//! gateway. Same hardening discipline as `transport::wire`: every length is
+//! validated BEFORE any allocation sized by it, malformed input is a typed
+//! [`HttpError`] (which maps to a status code) and never a panic, and a
+//! buffer that merely hasn't finished arriving yet is [`Parsed::Partial`],
+//! not an error.
+//!
+//! Scope is deliberately the subset the gateway needs: request line +
+//! headers + body (Content-Length or chunked), keep-alive semantics for
+//! HTTP/1.0 and 1.1. No obs-folding, no trailers, no extensions — those
+//! are rejected with a typed 4xx/5xx so a client is told exactly why.
+
+use std::fmt;
+
+/// Hard cap on the request line + header block, bytes (431 beyond this).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Hard cap on the number of header fields (431 beyond this).
+pub const MAX_HEADERS: usize = 64;
+/// Hard cap on the request-target length (414 beyond this).
+pub const MAX_TARGET_BYTES: usize = 2048;
+/// Longest accepted chunk-size line (hex digits + CRLF).
+const MAX_CHUNK_LINE: usize = 18;
+
+/// Typed parse failure: an HTTP status plus a human-readable reason.
+/// Connections that produce one get the status as a response and close.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}", self.status, self.msg)
+    }
+}
+
+fn err(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError { status, msg: msg.into() }
+}
+
+/// A fully parsed request. Header names are lowercased; values are
+/// whitespace-trimmed. `body` is the decoded payload (chunked bodies are
+/// already de-chunked).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response,
+    /// combining the HTTP-version default with any `Connection` header.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header value with the given (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Outcome of [`parse_request`] on a receive buffer.
+#[derive(Debug)]
+pub enum Parsed {
+    /// One complete request, consuming `consumed` bytes of the buffer.
+    Complete { req: Request, consumed: usize },
+    /// Not enough bytes yet — read more and call again.
+    Partial,
+}
+
+fn find_byte(hay: &[u8], needle: u8) -> Option<usize> {
+    hay.iter().position(|&b| b == needle)
+}
+
+fn is_tchar(b: u8) -> bool {
+    // RFC 7230 token chars, minus nothing we care to allow beyond them.
+    b.is_ascii_alphanumeric()
+        || matches!(
+            b,
+            b'!' | b'#'
+                | b'$'
+                | b'%'
+                | b'&'
+                | b'\''
+                | b'*'
+                | b'+'
+                | b'-'
+                | b'.'
+                | b'^'
+                | b'_'
+                | b'`'
+                | b'|'
+                | b'~'
+        )
+}
+
+/// Incremental parse of at most one request from the front of `buf`.
+/// `max_body` caps the decoded body size (413 beyond it); the cap is
+/// checked against declared lengths BEFORE any body allocation.
+pub fn parse_request(buf: &[u8], max_body: usize) -> Result<Parsed, HttpError> {
+    // ---- split off the head (request line + headers + blank line) ----
+    let mut pos = 0usize;
+    let mut lines: Vec<&[u8]> = Vec::new();
+    let head_end = loop {
+        let Some(nl) = find_byte(&buf[pos..], b'\n') else {
+            if buf.len() >= MAX_HEAD_BYTES {
+                return Err(err(431, "header block exceeds 16 KiB"));
+            }
+            return Ok(Parsed::Partial);
+        };
+        let line_end = pos + nl;
+        let next = line_end + 1;
+        if next > MAX_HEAD_BYTES {
+            return Err(err(431, "header block exceeds 16 KiB"));
+        }
+        let mut line = &buf[pos..line_end];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        if line.is_empty() {
+            break next;
+        }
+        if lines.len() >= MAX_HEADERS + 1 {
+            return Err(err(431, "too many header fields"));
+        }
+        lines.push(line);
+        pos = next;
+    };
+
+    let Some((&request_line, header_lines)) = lines.split_first() else {
+        return Err(err(400, "empty request"));
+    };
+
+    // ---- request line ----
+    let mut parts = request_line.split(|&b| b == b' ');
+    let (m, t, v) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(err(400, "malformed request line")),
+    };
+    if m.len() > 16 || !m.iter().all(|&b| is_tchar(b)) {
+        return Err(err(400, "malformed method"));
+    }
+    if t.len() > MAX_TARGET_BYTES {
+        return Err(err(414, "request target too long"));
+    }
+    if t[0] != b'/' || !t.iter().all(|&b| (0x21..=0x7e).contains(&b)) {
+        return Err(err(400, "malformed request target"));
+    }
+    let http11 = match v {
+        b"HTTP/1.1" => true,
+        b"HTTP/1.0" => false,
+        _ => return Err(err(505, "only HTTP/1.0 and HTTP/1.1 are supported")),
+    };
+    let method = String::from_utf8_lossy(m).into_owned();
+    let target = String::from_utf8_lossy(t).into_owned();
+
+    // ---- header fields ----
+    let mut headers: Vec<(String, String)> = Vec::with_capacity(header_lines.len());
+    for &line in header_lines {
+        if line[0] == b' ' || line[0] == b'\t' {
+            return Err(err(400, "obsolete header line folding is not supported"));
+        }
+        let Some(colon) = find_byte(line, b':') else {
+            return Err(err(400, "header field without ':'"));
+        };
+        let (name, value) = (&line[..colon], &line[colon + 1..]);
+        if name.is_empty() || !name.iter().all(|&b| is_tchar(b)) {
+            return Err(err(400, "malformed header name"));
+        }
+        if !value.iter().all(|&b| b == b'\t' || (0x20..=0x7e).contains(&b)) {
+            return Err(err(400, "control byte in header value"));
+        }
+        let name = String::from_utf8_lossy(name).to_lowercase();
+        let value = String::from_utf8_lossy(value).trim().to_string();
+        headers.push((name, value));
+    }
+
+    // ---- framing: Content-Length xor Transfer-Encoding: chunked ----
+    let mut content_length: Option<usize> = None;
+    for (n, v) in &headers {
+        if n == "content-length" {
+            if v.is_empty() || v.len() > 12 || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(err(400, "malformed Content-Length"));
+            }
+            let cl: usize =
+                v.parse().map_err(|_| err(400, "malformed Content-Length"))?;
+            if let Some(prev) = content_length {
+                if prev != cl {
+                    return Err(err(400, "conflicting Content-Length fields"));
+                }
+            }
+            content_length = Some(cl);
+        }
+    }
+    let chunked = match headers.iter().find(|(n, _)| n == "transfer-encoding") {
+        None => false,
+        Some((_, v)) if v.eq_ignore_ascii_case("chunked") => {
+            if content_length.is_some() {
+                // Request-smuggling shape: refuse outright.
+                return Err(err(400, "both Content-Length and Transfer-Encoding"));
+            }
+            true
+        }
+        Some(_) => return Err(err(501, "unsupported Transfer-Encoding")),
+    };
+
+    // ---- body ----
+    let (body, consumed) = if chunked {
+        match parse_chunked(&buf[head_end..], max_body)? {
+            None => return Ok(Parsed::Partial),
+            Some((body, used)) => (body, head_end + used),
+        }
+    } else {
+        let cl = content_length.unwrap_or(0);
+        if cl > max_body {
+            return Err(err(413, format!("body exceeds {max_body} byte cap")));
+        }
+        if buf.len() - head_end < cl {
+            return Ok(Parsed::Partial);
+        }
+        (buf[head_end..head_end + cl].to_vec(), head_end + cl)
+    };
+
+    // ---- keep-alive ----
+    let mut keep_alive = http11;
+    if let Some(c) = headers.iter().find(|(n, _)| n == "connection").map(|(_, v)| v) {
+        let c = c.to_lowercase();
+        if c.split(',').any(|t| t.trim() == "close") {
+            keep_alive = false;
+        } else if c.split(',').any(|t| t.trim() == "keep-alive") {
+            keep_alive = true;
+        }
+    }
+
+    let req = Request { method, target, http11, headers, body, keep_alive };
+    Ok(Parsed::Complete { req, consumed })
+}
+
+/// Decode a chunked body from `buf`. Returns `None` when more bytes are
+/// needed, `Some((body, consumed))` on a complete body. The running total
+/// is capped at `max_body` before each chunk is copied.
+fn parse_chunked(
+    buf: &[u8],
+    max_body: usize,
+) -> Result<Option<(Vec<u8>, usize)>, HttpError> {
+    let mut p = 0usize;
+    let mut body: Vec<u8> = Vec::new();
+    loop {
+        // Chunk-size line: 1..=8 hex digits, no extensions.
+        let Some(nl) = find_byte(&buf[p..], b'\n') else {
+            if buf.len() - p > MAX_CHUNK_LINE {
+                return Err(err(400, "malformed chunk size line"));
+            }
+            return Ok(None);
+        };
+        if nl > MAX_CHUNK_LINE {
+            return Err(err(400, "malformed chunk size line"));
+        }
+        let mut line = &buf[p..p + nl];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        if line.is_empty() || line.len() > 8 || !line.iter().all(u8::is_ascii_hexdigit)
+        {
+            return Err(err(400, "malformed chunk size (extensions unsupported)"));
+        }
+        let mut size = 0usize;
+        for &b in line {
+            let d = (b as char).to_digit(16).unwrap_or(0) as usize;
+            size = size * 16 + d;
+        }
+        if body.len() + size > max_body {
+            return Err(err(413, format!("chunked body exceeds {max_body} byte cap")));
+        }
+        p += nl + 1;
+
+        if size == 0 {
+            // Terminator: an immediate blank line. Anything else would be
+            // a trailer section, which we do not accept.
+            match buf.get(p) {
+                None => return Ok(None),
+                Some(b'\n') => return Ok(Some((body, p + 1))),
+                Some(b'\r') => match buf.get(p + 1) {
+                    None => return Ok(None),
+                    Some(b'\n') => return Ok(Some((body, p + 2))),
+                    Some(_) => return Err(err(400, "trailers are not supported")),
+                },
+                Some(_) => return Err(err(400, "trailers are not supported")),
+            }
+        }
+
+        // Chunk data + its terminating CRLF (LF tolerated).
+        if buf.len() - p < size {
+            return Ok(None);
+        }
+        body.extend_from_slice(&buf[p..p + size]);
+        p += size;
+        match buf.get(p) {
+            None => return Ok(None),
+            Some(b'\n') => p += 1,
+            Some(b'\r') => match buf.get(p + 1) {
+                None => return Ok(None),
+                Some(b'\n') => p += 2,
+                Some(_) => return Err(err(400, "chunk data not CRLF-terminated")),
+            },
+            Some(_) => return Err(err(400, "chunk data not CRLF-terminated")),
+        }
+    }
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+/// Encode a response with an explicit Content-Length (never chunked).
+pub fn response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(128 + body.len());
+    out.extend_from_slice(
+        format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            status,
+            reason(status),
+            content_type,
+            body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )
+        .as_bytes(),
+    );
+    out.extend_from_slice(body);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn complete(buf: &[u8]) -> (Request, usize) {
+        match parse_request(buf, 1 << 20).expect("parse") {
+            Parsed::Complete { req, consumed } => (req, consumed),
+            Parsed::Partial => panic!("unexpected partial"),
+        }
+    }
+
+    fn status_of(buf: &[u8], max_body: usize) -> u16 {
+        match parse_request(buf, max_body) {
+            Err(e) => e.status,
+            Ok(p) => panic!("expected error, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_get() {
+        let (req, used) = complete(b"GET /v1/healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/v1/healthz");
+        assert!(req.http11 && req.keep_alive);
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert_eq!(used, 37);
+    }
+
+    #[test]
+    fn post_with_content_length_and_pipelining() {
+        let buf =
+            b"POST /v1/infer HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET / HTTP/1.1\r\n\r\n";
+        let (req, used) = complete(buf);
+        assert_eq!(req.body, b"hello");
+        // The second pipelined request must be left in the buffer.
+        let (req2, _) = complete(&buf[used..]);
+        assert_eq!(req2.method, "GET");
+    }
+
+    #[test]
+    fn chunked_body_decodes() {
+        let buf = b"POST /v1/infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nwiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        let (req, used) = complete(buf);
+        assert_eq!(req.body, b"wikipedia");
+        assert_eq!(used, buf.len());
+    }
+
+    #[test]
+    fn partial_then_complete() {
+        let full = b"POST /x HTTP/1.1\r\nContent-Length: 3\r\n\r\nabc";
+        for cut in 0..full.len() {
+            match parse_request(&full[..cut], 1 << 20).expect("no error on prefix") {
+                Parsed::Partial => {}
+                Parsed::Complete { .. } => panic!("complete at cut {cut}"),
+            }
+        }
+        let (req, _) = complete(full);
+        assert_eq!(req.body, b"abc");
+    }
+
+    #[test]
+    fn keep_alive_defaults_and_overrides() {
+        let (req, _) = complete(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!req.keep_alive);
+        let (req, _) = complete(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(req.keep_alive);
+        let (req, _) = complete(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn typed_errors_not_panics() {
+        assert_eq!(status_of(b"\r\n\r\n", 1 << 20), 400);
+        assert_eq!(status_of(b"GET\r\n\r\n", 1 << 20), 400);
+        assert_eq!(status_of(b"GET / HTTP/2.0\r\n\r\n", 1 << 20), 505);
+        assert_eq!(status_of(b"GET x HTTP/1.1\r\n\r\n", 1 << 20), 400);
+        assert_eq!(status_of(b"GET / HTTP/1.1\r\nBad\r\n\r\n", 1 << 20), 400);
+        assert_eq!(
+            status_of(b"POST / HTTP/1.1\r\nContent-Length: 9999999999999\r\n\r\n", 64),
+            400
+        );
+        assert_eq!(
+            status_of(b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n", 64),
+            413
+        );
+        assert_eq!(
+            status_of(
+                b"POST / HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\n",
+                1 << 20
+            ),
+            400
+        );
+        assert_eq!(
+            status_of(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n", 1 << 20),
+            501
+        );
+        assert_eq!(
+            status_of(
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nff;ext=1\r\n",
+                1 << 20
+            ),
+            400
+        );
+    }
+
+    #[test]
+    fn header_flood_is_431_before_allocation() {
+        // A single oversized header block must be refused at the cap.
+        let mut buf = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..4000 {
+            buf.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        buf.extend_from_slice(b"\r\n");
+        assert_eq!(status_of(&buf, 1 << 20), 431);
+        // And an unterminated head that already exceeds the cap, too.
+        let flood = vec![b'A'; MAX_HEAD_BYTES + 1];
+        assert_eq!(status_of(&flood, 1 << 20), 431);
+    }
+
+    #[test]
+    fn chunked_cap_is_checked_before_copy() {
+        let buf = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffff\r\n";
+        assert_eq!(status_of(buf, 1 << 20), 413);
+    }
+
+    #[test]
+    fn response_roundtrips_through_parser_shape() {
+        let r = response(200, "application/json", b"{\"ok\":true}", true);
+        let s = String::from_utf8(r).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 11\r\n"));
+        assert!(s.ends_with("{\"ok\":true}"));
+    }
+}

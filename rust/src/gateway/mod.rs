@@ -1,0 +1,138 @@
+//! HTTP/1.1 serving gateway: the front door that turns the wall-clock CDC
+//! pipeline into a service external clients can actually call.
+//!
+//! Three pieces, all zero-dependency:
+//!
+//! * [`http`] — the hand-rolled request parser / response encoder, with the
+//!   same hardening discipline as `transport::wire` (pre-allocation caps,
+//!   typed errors, never a panic on attacker bytes).
+//! * [`server`] — a nonblocking accept/read/write event loop on the shared
+//!   `transport::evloop` readiness core (`Poller`), one thread for every client
+//!   connection. Parsed requests are routed into [`GatewayCmd`] values and
+//!   sent over an mpsc channel into the live serve loop; replies come back
+//!   over a per-server channel and a `UnixStream` waker.
+//! * The serve-loop side ([`crate::coordinator::Session::serve_gateway`]) —
+//!   drains the command channel every scheduling tick, admits external
+//!   `POST /v1/infer` requests into the SAME micro-batching window as paced
+//!   synthetic traffic, answers fleet/stats/policy reads inline, and defers
+//!   lifecycle verbs (deploy / undeploy / migrate) to pipeline-quiescent
+//!   points so they can never tear a batch in half.
+//!
+//! The gateway is only legal on a wall-clock transport: the simulated
+//! timeline has no real "now" for an external socket to live on, and
+//! keeping the gateway out of sim mode preserves sim bit-identity.
+
+use std::io::Write as _;
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::json::Value;
+use crate::tensor::Tensor;
+
+pub mod http;
+pub mod server;
+
+pub use server::{GatewayServer, ServerCtx};
+
+/// Gateway listener settings (optional `gateway` section of a deployment
+/// config; see `config::deployment_from_json`).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub listen: String,
+    /// Cap on a single decoded request body, bytes (413 beyond it).
+    pub max_body_bytes: usize,
+    /// How long a routed request may wait on the pipeline before the
+    /// connection gets a 504 and is closed.
+    pub request_timeout_ms: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_body_bytes: 1 << 20,
+            request_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// A reply from the serve loop back to the HTTP event loop: which
+/// connection + request it answers, and the JSON payload.
+#[derive(Debug)]
+pub struct HttpReply {
+    pub conn: u64,
+    pub seq: u64,
+    pub status: u16,
+    pub body: Value,
+}
+
+/// Reply handle embedded in every [`GatewayCmd`]. Sending never blocks and
+/// never fails loudly: if the HTTP side is gone the reply is dropped, which
+/// is exactly what a closed connection deserves.
+#[derive(Debug, Clone)]
+pub struct Responder {
+    conn: u64,
+    seq: u64,
+    tx: Sender<HttpReply>,
+    waker: Arc<UnixStream>,
+}
+
+impl Responder {
+    pub(crate) fn new(
+        conn: u64,
+        seq: u64,
+        tx: Sender<HttpReply>,
+        waker: Arc<UnixStream>,
+    ) -> Responder {
+        Responder { conn, seq, tx, waker }
+    }
+
+    /// Deliver a JSON reply and kick the HTTP event loop awake.
+    pub fn send(&self, status: u16, body: Value) {
+        let _ = self.tx.send(HttpReply {
+            conn: self.conn,
+            seq: self.seq,
+            status,
+            body,
+        });
+        let _ = (&*self.waker).write(&[1u8]);
+    }
+}
+
+/// Commands the HTTP front end injects into the live serve loop.
+#[derive(Debug)]
+pub enum GatewayCmd {
+    /// `POST /v1/infer`: admit a real request into the pipeline alongside
+    /// paced traffic. The reply carries logits once the request resolves.
+    Infer { input: Tensor, resp: Responder },
+    /// `GET /v1/fleet`: live membership + device rates + churn epoch.
+    Fleet { resp: Responder },
+    /// `GET /v1/stats`: serving metrics so far (bench-style).
+    Stats { resp: Responder },
+    /// `GET /v1/policy`: adaptive-redundancy `PolicyReport` snapshot.
+    Policy { resp: Responder },
+    /// `GET /v1/deployments`: model lifecycle state.
+    Deployments { resp: Responder },
+    /// `POST /v1/deployments`: (re)deploy the session's model.
+    Deploy { model: String, resp: Responder },
+    /// `DELETE /v1/deployments/<model>`: undeploy; infer turns 503.
+    Undeploy { model: String, resp: Responder },
+    /// `POST /v1/deployments/<model>/migrate`: move every task owned by
+    /// `from` onto `to`, make-before-break, with zero request drops.
+    Migrate { model: String, from: usize, to: usize, resp: Responder },
+    /// `POST /v1/shutdown` (or CLI `--serve-ms` timer): finish in-flight
+    /// work, answer every parked client, then return from serve.
+    Shutdown { resp: Option<Responder> },
+}
+
+/// The serve loop's end of the gateway: a receiver it drains every tick.
+pub struct GatewayBridge {
+    pub rx: Receiver<GatewayCmd>,
+}
+
+/// Shorthand for the `{"error": ...}` payload shape every non-200 uses.
+pub fn error_body(msg: impl Into<String>) -> Value {
+    crate::json::obj(vec![("error", Value::Str(msg.into()))])
+}

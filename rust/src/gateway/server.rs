@@ -1,0 +1,634 @@
+//! Gateway HTTP event loop: nonblocking accept + per-connection buffer
+//! state machines on the shared `Poller` readiness core, one thread for
+//! the whole front door.
+//!
+//! Data path: readable bytes append to a per-connection read buffer; the
+//! incremental parser lifts at most one request at a time off the front.
+//! Local routes (`/v1/healthz`, 404/405, malformed bodies) answer inline.
+//! Pipeline routes become [`GatewayCmd`] values sent to the serve loop and
+//! the connection is *parked* — parsing pauses (no pipelined request can
+//! overtake its predecessor's reply) until the serve loop answers through
+//! the reply channel + `UnixStream` waker, or the park deadline passes and
+//! the client gets a 504.
+//!
+//! Hardening mirrors `transport::wire`: the read buffer is capped at
+//! head-cap + body-cap + slack, every parse failure is a typed status (the
+//! connection is answered then closed), and a dead client never wedges the
+//! loop — replies to vanished connections are simply dropped.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+use crate::transport::evloop::{PollEvent, Poller};
+
+use super::http::{self, Parsed, Request};
+use super::{error_body, GatewayCmd, GatewayConfig, HttpReply, Responder};
+
+const TOKEN_LISTEN: u64 = u64::MAX - 1;
+const TOKEN_WAKE: u64 = u64::MAX;
+/// Idle poll tick: bounds how late a park-deadline sweep can run.
+const TICK: Duration = Duration::from_millis(200);
+
+/// What the HTTP thread needs to know about the deployment to validate
+/// `POST /v1/infer` bodies before they ever reach the pipeline.
+#[derive(Debug, Clone)]
+pub struct ServerCtx {
+    pub model: String,
+    pub input_len: usize,
+}
+
+/// Handle to the running HTTP front door. Dropping it stops the thread.
+pub struct GatewayServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Arc<UnixStream>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl GatewayServer {
+    /// Bind `cfg.listen`, spawn the event-loop thread, and return once the
+    /// socket is accepting. `cmd_tx` feeds the live serve loop.
+    pub fn start(
+        cfg: &GatewayConfig,
+        ctx: ServerCtx,
+        cmd_tx: Sender<GatewayCmd>,
+    ) -> Result<GatewayServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| Error::Wire(format!("gateway bind {}: {e}", cfg.listen)))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("gateway set_nonblocking: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Wire(format!("gateway local_addr: {e}")))?;
+        let (wake_rx, wake_tx) = UnixStream::pair()
+            .map_err(|e| Error::Wire(format!("gateway waker pair: {e}")))?;
+        // Both ends nonblocking: the read end lives on the poller; the
+        // write end must never block a responder even if the pipe fills
+        // (a pending byte already means the loop will wake).
+        wake_rx
+            .set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("gateway waker nonblocking: {e}")))?;
+        wake_tx
+            .set_nonblocking(true)
+            .map_err(|e| Error::Wire(format!("gateway waker nonblocking: {e}")))?;
+        let waker = Arc::new(wake_tx);
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut lp = Loop::new(
+            listener,
+            wake_rx,
+            cfg.clone(),
+            ctx,
+            cmd_tx,
+            waker.clone(),
+            stop.clone(),
+        )?;
+        let handle = std::thread::Builder::new()
+            .name("gateway-http".to_string())
+            .spawn(move || lp.run())
+            .map_err(|e| Error::Wire(format!("gateway thread spawn: {e}")))?;
+
+        Ok(GatewayServer { addr, stop, waker, handle: Some(handle) })
+    }
+
+    /// The bound socket address (ephemeral port already resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Convenience `http://host:port` base URL.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+}
+
+impl Drop for GatewayServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = (&*self.waker).write(&[1u8]);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A routed request waiting on the serve loop.
+struct Parked {
+    seq: u64,
+    deadline: Instant,
+    keep_alive: bool,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    woff: usize,
+    want_write: bool,
+    parked: Option<Parked>,
+    next_seq: u64,
+    close_after_flush: bool,
+}
+
+impl Conn {
+    fn queue(&mut self, bytes: Vec<u8>) {
+        if self.woff > 0 && self.woff == self.wbuf.len() {
+            self.wbuf.clear();
+            self.woff = 0;
+        }
+        self.wbuf.extend_from_slice(&bytes);
+    }
+
+    fn queue_json(&mut self, status: u16, body: &Value, keep_alive: bool) {
+        let payload = body.to_string_compact();
+        self.queue(http::response(status, "application/json", payload.as_bytes(), keep_alive));
+        if !keep_alive {
+            self.close_after_flush = true;
+        }
+    }
+
+    /// Flush as much as the socket accepts. Returns false when the
+    /// connection should be dropped (fatal write error).
+    fn flush(&mut self) -> bool {
+        while self.woff < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.woff..]) {
+                Ok(0) => return false,
+                Ok(n) => self.woff += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.woff == self.wbuf.len() {
+            self.wbuf.clear();
+            self.woff = 0;
+            if self.close_after_flush {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// What the router decided about one parsed request.
+enum Routed {
+    /// Answer from the HTTP thread, no pipeline involved.
+    Now(u16, Value),
+    /// Forward to the serve loop and park the connection.
+    Cmd(CmdSpec),
+}
+
+struct Loop {
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    cfg: GatewayConfig,
+    ctx: ServerCtx,
+    cmd_tx: Sender<GatewayCmd>,
+    reply_tx: Sender<HttpReply>,
+    reply_rx: Receiver<HttpReply>,
+    waker: Arc<UnixStream>,
+    stop: Arc<AtomicBool>,
+    conns: BTreeMap<u64, Conn>,
+    next_token: u64,
+}
+
+impl Loop {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        listener: TcpListener,
+        wake_rx: UnixStream,
+        cfg: GatewayConfig,
+        ctx: ServerCtx,
+        cmd_tx: Sender<GatewayCmd>,
+        waker: Arc<UnixStream>,
+        stop: Arc<AtomicBool>,
+    ) -> Result<Loop> {
+        let poller = Poller::new()?;
+        poller.add(listener.as_raw_fd(), TOKEN_LISTEN, false)?;
+        poller.add(wake_rx.as_raw_fd(), TOKEN_WAKE, false)?;
+        let (reply_tx, reply_rx) = channel();
+        Ok(Loop {
+            poller,
+            listener,
+            wake_rx,
+            cfg,
+            ctx,
+            cmd_tx,
+            reply_tx,
+            reply_rx,
+            waker,
+            stop,
+            conns: BTreeMap::new(),
+            next_token: 0,
+        })
+    }
+
+    fn run(&mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let timeout = self.next_deadline().map_or(TICK, |d| {
+                d.saturating_duration_since(Instant::now()).min(TICK)
+            });
+            if self.poller.wait(&mut events, Some(timeout)).is_err() {
+                return;
+            }
+            for i in 0..events.len() {
+                let (token, readable, writable, hangup) = {
+                    let e = &events[i];
+                    (e.token, e.readable, e.writable, e.hangup)
+                };
+                match token {
+                    TOKEN_WAKE => self.drain_waker(),
+                    TOKEN_LISTEN => self.accept_ready(),
+                    t => self.conn_ready(t, readable, writable, hangup),
+                }
+            }
+            self.drain_replies();
+            self.sweep_deadlines();
+        }
+    }
+
+    /// Earliest park deadline across connections, if any.
+    fn next_deadline(&self) -> Option<Instant> {
+        self.conns
+            .values()
+            .filter_map(|c| c.parked.as_ref().map(|p| p.deadline))
+            .min()
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.add(stream.as_raw_fd(), token, false).is_err() {
+                        continue;
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            want_write: false,
+                            parked: None,
+                            next_seq: 0,
+                            close_after_flush: false,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, token: u64, readable: bool, writable: bool, hangup: bool) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let mut dead = false;
+        if readable || hangup {
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        // Absolute backstop: head cap + body cap + slack.
+                        let cap = http::MAX_HEAD_BYTES + self.cfg.max_body_bytes + 4096;
+                        if conn.rbuf.len() > cap {
+                            conn.queue_json(
+                                413,
+                                &error_body("request exceeds gateway buffer cap"),
+                                false,
+                            );
+                            conn.rbuf.clear();
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close(token);
+            return;
+        }
+        if writable || readable || hangup {
+            self.advance(token);
+        }
+    }
+
+    /// Parse + route as many requests as the parked-state allows, then
+    /// flush and fix up write interest. Closes the connection on fatal IO.
+    fn advance(&mut self, token: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.parked.is_some() || conn.close_after_flush {
+                break;
+            }
+            match http::parse_request(&conn.rbuf, self.cfg.max_body_bytes) {
+                Ok(Parsed::Partial) => break,
+                Ok(Parsed::Complete { req, consumed }) => {
+                    conn.rbuf.drain(..consumed);
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    match route(&req, &self.ctx) {
+                        Routed::Now(status, body) => {
+                            conn.queue_json(status, &body, req.keep_alive)
+                        }
+                        Routed::Cmd(spec) => {
+                            let resp = Responder::new(
+                                token,
+                                seq,
+                                self.reply_tx.clone(),
+                                self.waker.clone(),
+                            );
+                            let cmd = attach(spec, resp);
+                            if self.cmd_tx.send(cmd).is_err() {
+                                let conn = self.conns.get_mut(&token).unwrap();
+                                conn.queue_json(
+                                    503,
+                                    &error_body("serve loop is not running"),
+                                    false,
+                                );
+                            } else {
+                                let deadline = Instant::now()
+                                    + Duration::from_millis(self.cfg.request_timeout_ms);
+                                let conn = self.conns.get_mut(&token).unwrap();
+                                conn.parked =
+                                    Some(Parked { seq, deadline, keep_alive: req.keep_alive });
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    conn.queue_json(e.status, &error_body(e.msg.clone()), false);
+                    conn.rbuf.clear();
+                    break;
+                }
+            }
+        }
+        self.flush_and_rearm(token);
+    }
+
+    fn flush_and_rearm(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if !conn.flush() {
+            self.close(token);
+            return;
+        }
+        let want = conn.woff < conn.wbuf.len();
+        if want != conn.want_write {
+            conn.want_write = want;
+            let fd = conn.stream.as_raw_fd();
+            if self.poller.rearm(fd, token, want).is_err() {
+                self.close(token);
+            }
+        }
+    }
+
+    fn drain_replies(&mut self) {
+        loop {
+            let reply = match self.reply_rx.try_recv() {
+                Ok(r) => r,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return,
+            };
+            let Some(conn) = self.conns.get_mut(&reply.conn) else { continue };
+            let Some(parked) = conn.parked.take() else { continue };
+            if parked.seq != reply.seq {
+                // Stale reply (the park already timed out); ignore it but
+                // put the newer park back.
+                conn.parked = Some(parked);
+                continue;
+            }
+            conn.queue_json(reply.status, &reply.body, parked.keep_alive);
+            // Un-parked: pipelined requests behind it may now proceed.
+            self.advance(reply.conn);
+        }
+    }
+
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.parked.as_ref().is_some_and(|p| p.deadline <= now))
+            .map(|(&t, _)| t)
+            .collect();
+        for token in expired {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.parked = None;
+                conn.queue_json(
+                    504,
+                    &error_body("pipeline did not answer before the gateway timeout"),
+                    false,
+                );
+            }
+            self.flush_and_rearm(token);
+        }
+    }
+
+    fn close(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            self.poller.del(conn.stream.as_raw_fd());
+        }
+    }
+}
+
+/// A routed pipeline command, before its [`Responder`] is attached (the
+/// router has no access to the connection token).
+enum CmdSpec {
+    Infer(Tensor),
+    Fleet,
+    Stats,
+    Policy,
+    Deployments,
+    Deploy(String),
+    Undeploy(String),
+    Migrate { model: String, from: usize, to: usize },
+    Shutdown,
+}
+
+/// Decide what to do with one parsed request. Everything that needs the
+/// pipeline becomes a command; everything else is answered here with a
+/// typed status.
+fn route(req: &Request, ctx: &ServerCtx) -> Routed {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/v1/healthz") => Routed::Now(
+            200,
+            json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("model", Value::Str(ctx.model.clone())),
+                ("input_len", Value::Num(ctx.input_len as f64)),
+            ]),
+        ),
+        ("GET", "/v1/fleet") => Routed::Cmd(CmdSpec::Fleet),
+        ("GET", "/v1/stats") => Routed::Cmd(CmdSpec::Stats),
+        ("GET", "/v1/policy") => Routed::Cmd(CmdSpec::Policy),
+        ("GET", "/v1/deployments") => Routed::Cmd(CmdSpec::Deployments),
+        ("POST", "/v1/infer") => match parse_infer(req, ctx) {
+            Ok(input) => Routed::Cmd(CmdSpec::Infer(input)),
+            Err(msg) => Routed::Now(400, error_body(msg)),
+        },
+        ("POST", "/v1/deployments") => match body_str_field(req, "model") {
+            Ok(model) => Routed::Cmd(CmdSpec::Deploy(model)),
+            Err(msg) => Routed::Now(400, error_body(msg)),
+        },
+        ("POST", "/v1/shutdown") => Routed::Cmd(CmdSpec::Shutdown),
+        ("DELETE", t) if t.starts_with("/v1/deployments/") => {
+            let model = &t["/v1/deployments/".len()..];
+            if model.is_empty() || model.contains('/') {
+                Routed::Now(404, error_body(format!("no such route: DELETE {t}")))
+            } else {
+                Routed::Cmd(CmdSpec::Undeploy(model.to_string()))
+            }
+        }
+        ("POST", t)
+            if t.starts_with("/v1/deployments/") && t.ends_with("/migrate") =>
+        {
+            let model = &t["/v1/deployments/".len()..t.len() - "/migrate".len()];
+            if model.is_empty() || model.contains('/') {
+                return Routed::Now(404, error_body(format!("no such route: POST {t}")));
+            }
+            match parse_migrate(req) {
+                Ok((from, to)) => Routed::Cmd(CmdSpec::Migrate {
+                    model: model.to_string(),
+                    from,
+                    to,
+                }),
+                Err(msg) => Routed::Now(400, error_body(msg)),
+            }
+        }
+        (m, t) => {
+            let known = matches!(
+                t,
+                "/v1/healthz"
+                    | "/v1/fleet"
+                    | "/v1/stats"
+                    | "/v1/policy"
+                    | "/v1/deployments"
+                    | "/v1/infer"
+                    | "/v1/shutdown"
+            ) || t.starts_with("/v1/deployments/");
+            if known {
+                Routed::Now(405, error_body(format!("method {m} not allowed on {t}")))
+            } else {
+                Routed::Now(404, error_body(format!("no such route: {m} {t}")))
+            }
+        }
+    }
+}
+
+/// Attach the connection's reply handle to a routed command.
+fn attach(spec: CmdSpec, resp: Responder) -> GatewayCmd {
+    match spec {
+        CmdSpec::Infer(input) => GatewayCmd::Infer { input, resp },
+        CmdSpec::Fleet => GatewayCmd::Fleet { resp },
+        CmdSpec::Stats => GatewayCmd::Stats { resp },
+        CmdSpec::Policy => GatewayCmd::Policy { resp },
+        CmdSpec::Deployments => GatewayCmd::Deployments { resp },
+        CmdSpec::Deploy(model) => GatewayCmd::Deploy { model, resp },
+        CmdSpec::Undeploy(model) => GatewayCmd::Undeploy { model, resp },
+        CmdSpec::Migrate { model, from, to } => {
+            GatewayCmd::Migrate { model, from, to, resp }
+        }
+        CmdSpec::Shutdown => GatewayCmd::Shutdown { resp: Some(resp) },
+    }
+}
+
+fn parse_body_json(req: &Request) -> std::result::Result<Value, String> {
+    let text = std::str::from_utf8(&req.body).map_err(|_| "body is not UTF-8")?;
+    if text.trim().is_empty() {
+        return Err("empty JSON body".to_string());
+    }
+    Value::parse(text).map_err(|e| format!("invalid JSON body: {e}"))
+}
+
+fn parse_infer(req: &Request, ctx: &ServerCtx) -> std::result::Result<Tensor, String> {
+    let v = parse_body_json(req)?;
+    let arr = v
+        .get("input")
+        .and_then(|x| x.as_arr().map(<[Value]>::to_vec))
+        .map_err(|_| "body must be {\"input\": [numbers]}".to_string())?;
+    if arr.len() != ctx.input_len {
+        return Err(format!(
+            "input length {} does not match model input length {}",
+            arr.len(),
+            ctx.input_len
+        ));
+    }
+    let mut data = Vec::with_capacity(arr.len());
+    for x in &arr {
+        let f = x.as_f64().map_err(|_| "input entries must be numbers".to_string())?;
+        if !f.is_finite() {
+            return Err("input entries must be finite".to_string());
+        }
+        data.push(f as f32);
+    }
+    Tensor::new(vec![data.len()], data).map_err(|e| e.to_string())
+}
+
+fn body_str_field(req: &Request, field: &str) -> std::result::Result<String, String> {
+    let v = parse_body_json(req)?;
+    v.get(field)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .map_err(|_| format!("body must be {{\"{field}\": string}}"))
+}
+
+fn parse_migrate(req: &Request) -> std::result::Result<(usize, usize), String> {
+    let v = parse_body_json(req)?;
+    let from = v
+        .get("from")
+        .and_then(Value::as_usize)
+        .map_err(|_| "body must be {\"from\": device, \"to\": device}".to_string())?;
+    let to = v
+        .get("to")
+        .and_then(Value::as_usize)
+        .map_err(|_| "body must be {\"from\": device, \"to\": device}".to_string())?;
+    Ok((from, to))
+}

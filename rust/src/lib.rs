@@ -61,6 +61,7 @@ pub mod config;
 pub mod error;
 pub mod exp;
 pub mod fleet;
+pub mod gateway;
 pub mod json;
 pub mod kernels;
 pub mod model;

@@ -17,6 +17,7 @@
 //!   scenarios   fleet-chaos scenario suite (synthetic model, no artifacts)
 //!   synth       materialise the synthetic artifact set at --artifacts
 //!   serve       serve a deployment file (see --deployment / --transport)
+//!   gateway     serve behind the HTTP/1.1 front door (DESIGN.md §14)
 //!   worker      run a standalone TCP shard-compute worker (DESIGN.md §11)
 //!   all         every experiment in order
 //!
@@ -37,6 +38,14 @@
 //!   --chaos-join-ms T  loopback only: a fresh worker dials the live
 //!                      coordinator's membership port T ms into the run
 //!   --expect-no-loss   exit non-zero if any request is lost/balked
+//!
+//! gateway options (plus the serve options above):
+//!   --http ADDR        HTTP bind address [default: deployment `gateway`
+//!                      section, else 127.0.0.1:0]
+//!   --serve-ms T       shut the gateway down after T ms (default: run
+//!                      until POST /v1/shutdown)
+//!   --rate-rps R       also drive synthetic paced traffic through the
+//!                      same pipeline (omit for external requests only)
 //!
 //! scenarios options:
 //!   --transport M      sim (default) | tcp: replay the chaos suite over a
@@ -72,8 +81,9 @@ usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
        [--seed S] [--quick] [--deployment FILE] [--transport sim|tcp]\n\
        [--workers H:P,..] [--rate-rps R] [--chaos-kill-ms T]\n\
        [--chaos-join-ms T] [--expect-no-loss] [--listen ADDR] [--join ADDR]\n\
-       [--leave-after-ms T] [--net PROFILE] [--rate R]\n\n\
-commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve worker all\n";
+       [--leave-after-ms T] [--net PROFILE] [--rate R] [--http ADDR]\n\
+       [--serve-ms T]\n\n\
+commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve gateway worker all\n";
 
 /// serve/worker options beyond the shared ExpCtx ones.
 #[derive(Default)]
@@ -90,6 +100,8 @@ struct CliOpts {
     leave_after_ms: Option<u64>,
     net: Option<String>,
     rate: Option<f64>,
+    http: Option<String>,
+    serve_ms: Option<u64>,
 }
 
 fn main() {
@@ -198,6 +210,17 @@ fn main() {
                 }));
                 i += 2;
             }
+            "--http" => {
+                opts.http = Some(need(i));
+                i += 2;
+            }
+            "--serve-ms" => {
+                opts.serve_ms = Some(need(i).parse().unwrap_or_else(|_| {
+                    eprintln!("bad --serve-ms");
+                    std::process::exit(2)
+                }));
+                i += 2;
+            }
             "-h" | "--help" => usage(),
             other => {
                 eprintln!("unknown option {other}");
@@ -226,6 +249,7 @@ fn main() {
         },
         "synth" => synth_artifacts(&ctx),
         "serve" => serve(&ctx, &opts),
+        "gateway" => gateway(&ctx, &opts),
         "worker" => run_worker(&ctx, &opts),
         "all" => run_all(&ctx),
         _ => {
@@ -444,6 +468,170 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     for h in chaos {
         let _ = h.join();
     }
+    drop(session); // disconnect before the fleet reaps its children
+    drop(fleet);
+    Ok(())
+}
+
+/// Serve a deployment behind the HTTP/1.1 gateway (DESIGN.md §14):
+/// external `POST /v1/infer` requests are admitted into the same
+/// micro-batching pipeline as the (optional) synthetic paced stream,
+/// and the fleet control plane (membership, stats, policy, deployment
+/// lifecycle) answers on GET/POST/DELETE endpoints. Wall-clock (tcp)
+/// transports only.
+fn gateway(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
+    use cdc_dnn::gateway::{GatewayCmd, GatewayBridge, GatewayServer, ServerCtx};
+
+    let path = opts
+        .deployment
+        .as_deref()
+        .unwrap_or("configs/mlp_loopback.json");
+    let mut cfg = load_deployment(std::path::Path::new(path))?;
+
+    match opts.transport.as_deref() {
+        // The gateway implies tcp: external clients need a real clock.
+        None | Some("tcp") => {
+            if !matches!(cfg.transport, TransportSpec::Tcp(_)) {
+                cfg.transport = TransportSpec::Tcp(TcpConfig::default());
+            }
+        }
+        Some(other) => {
+            return Err(cdc_dnn::Error::Config(format!(
+                "the gateway serves wall-clock only: --transport {other:?} \
+                 (want tcp)"
+            )))
+        }
+    }
+    if let Some(list) = opts.workers.as_deref() {
+        if let TransportSpec::Tcp(tcp) = &mut cfg.transport {
+            tcp.workers = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
+    }
+
+    // HTTP listener settings: the deployment file's optional `gateway`
+    // section, then the --http override.
+    let mut gw_cfg = cdc_dnn::config::load_gateway(std::path::Path::new(path))?
+        .unwrap_or_default();
+    if let Some(h) = &opts.http {
+        gw_cfg.listen = h.clone();
+    }
+
+    // tcp with no worker addresses: spawn a loopback fleet, as `serve`.
+    let mut fleet: Option<loopback::LoopbackFleet> = None;
+    if let TransportSpec::Tcp(tcp) = &mut cfg.transport {
+        if tcp.workers.is_empty() {
+            let n = cfg.planned_devices();
+            println!("spawning {n} loopback workers…");
+            let f = loopback::LoopbackFleet::spawn(None, &ctx.artifacts, n, None)?;
+            tcp.workers = f.addrs();
+            fleet = Some(f);
+        }
+    }
+
+    let model = cfg.model.clone();
+    let input_shape = {
+        let manifest = cdc_dnn::runtime::Manifest::load(&ctx.artifacts)?;
+        manifest.model(&model)?.input_shape.clone()
+    };
+    let input_len: usize = input_shape.iter().product();
+    let seed = ctx.seed;
+    let mut session = Session::start(&ctx.artifacts, cfg)?;
+    if let Some(addr) = session.membership_addr() {
+        println!(
+            "membership: workers may join at {addr} (cdc-dnn worker --join {addr} …)"
+        );
+    }
+
+    let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<GatewayCmd>();
+    let server = GatewayServer::start(
+        &gw_cfg,
+        ServerCtx { model: model.clone(), input_len },
+        cmd_tx.clone(),
+    )?;
+    println!(
+        "gateway: serving {model} at {} (POST /v1/infer, GET /v1/fleet \
+         /v1/stats /v1/policy /v1/deployments, POST /v1/shutdown)",
+        server.url()
+    );
+    // Machine-parseable line for harnesses (CI smoke greps for it).
+    println!("GATEWAY_URL {}", server.url());
+
+    let fleet = std::sync::Arc::new(std::sync::Mutex::new(fleet));
+    let mut timers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    if let Some(t) = opts.serve_ms {
+        // Watchdog: detached on purpose — joining it would stall exit
+        // for the full timeout when an HTTP shutdown lands first. Its
+        // late send on a dead channel is harmless.
+        let tx = cmd_tx.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(t));
+            let _ = tx.send(GatewayCmd::Shutdown { resp: None });
+        });
+    }
+    if let Some(t) = opts.chaos_kill_ms {
+        let guard = fleet.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(f) => {
+                let victim = if f.len() > 1 { 1 } else { 0 };
+                println!("chaos: killing loopback worker {victim} at t+{t}ms");
+                timers.push(f.kill_after(victim, t));
+            }
+            None => {
+                return Err(cdc_dnn::Error::Config(
+                    "--chaos-kill-ms needs a spawned loopback fleet \
+                     (tcp transport without --workers)"
+                        .into(),
+                ))
+            }
+        }
+    }
+    drop(cmd_tx); // remaining senders: HTTP thread + timer
+
+    // Optional synthetic paced stream through the same pipeline; without
+    // --rate-rps the gateway serves external requests only.
+    let workload = match opts.rate_rps {
+        Some(rate) => {
+            let n = ctx.n_requests();
+            let mut rng = Pcg32::seeded(seed);
+            let inputs: Vec<Tensor> = (0..n)
+                .map(|_| Tensor::randn(input_shape.clone(), &mut rng))
+                .collect();
+            println!("paced stream: {n} requests, poisson@{rate}rps");
+            Workload::poisson(inputs, rate, seed)
+        }
+        None => Workload::poisson(Vec::new(), 1.0, seed),
+    };
+
+    let bridge = GatewayBridge { rx: cmd_rx };
+    let t0 = std::time::Instant::now();
+    let report = session.serve_gateway(&workload, &bridge)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lat = report.latency.summary();
+    println!("{}", report.line());
+    println!("wall-clock latency: {}", lat.line());
+    println!(
+        "wall-clock throughput: {:.1} rps (harness wall total {wall:.2}s)",
+        report.rps()
+    );
+    let lost = report.failures.len() as u64 + report.dropped;
+    if opts.expect_no_loss && lost > 0 {
+        return Err(cdc_dnn::Error::Fleet(format!(
+            "--expect-no-loss: {} lost, {} balked",
+            report.failures.len(),
+            report.dropped
+        )));
+    }
+    for h in timers {
+        let _ = h.join();
+    }
+    drop(server); // stop accepting before the backend goes away
     drop(session); // disconnect before the fleet reaps its children
     drop(fleet);
     Ok(())

@@ -1,0 +1,354 @@
+//! Gateway end-to-end tests (ISSUE 8): real HTTP clients over real
+//! sockets, a real loopback worker fleet behind the serve loop, and the
+//! single-node forward pass as the logits oracle.
+//!
+//! - `gateway_serves_oracle_exact_logits_alongside_paced_traffic`:
+//!   N concurrent client threads POST /v1/infer while a paced synthetic
+//!   stream runs through the same micro-batching pipeline; every reply
+//!   is bit-close to the oracle and nothing is lost on either path.
+//! - `gateway_survives_sigkill_with_oracle_exact_replies`: SIGKILL a
+//!   data worker mid-POSTs; the CDC arm answers every client 200 with
+//!   oracle-matching logits.
+//! - `gateway_lifecycle_migrate_undeploy_deploy`: migrate a device's
+//!   tasks make-before-break (infers before/after both exact), then
+//!   undeploy (infer turns 503) and redeploy (200 again).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::mpsc;
+
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec, Workload};
+use cdc_dnn::gateway::{GatewayBridge, GatewayCmd, GatewayConfig, GatewayServer, ServerCtx};
+use cdc_dnn::json::Value;
+use cdc_dnn::model::Weights;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::runtime::Manifest;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::synth;
+use cdc_dnn::transport::loopback::LoopbackFleet;
+use cdc_dnn::transport::{TcpConfig, TransportSpec};
+
+fn worker_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cdc-dnn"))
+}
+
+fn base_cfg(fleet: &LoopbackFleet) -> SessionConfig {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 2;
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(2));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    cfg.detection_ms = 200.0;
+    cfg.batch_max = 4;
+    cfg.batch_wait_ms = 2.0;
+    let mut tcp: TcpConfig = fleet.tcp_config();
+    tcp.order_deadline_ms = 1_000.0;
+    cfg.transport = TransportSpec::Tcp(tcp);
+    cfg
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng)).collect()
+}
+
+/// Local single-node forward pass — the logits reference.
+fn oracle(root: &Path, x: &Tensor) -> Tensor {
+    let m = Manifest::load(root).unwrap();
+    let model = m.model(synth::MODEL).unwrap();
+    let w = Weights::load(&m, model).unwrap();
+    let xc = x.clone().reshape(vec![x.len(), 1]).unwrap();
+    let mut h = w.w("fc1").unwrap().matmul(&xc).unwrap();
+    h.add_assign(w.b("fc1").unwrap()).unwrap();
+    h.relu();
+    let mut out = w.w("fc2").unwrap().matmul(&h).unwrap();
+    out.add_assign(w.b("fc2").unwrap()).unwrap();
+    out
+}
+
+/// One-shot HTTP client: raw socket, `Connection: close`, blocking read
+/// to EOF. Returns (status, parsed JSON body).
+fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Value) {
+    let mut s = TcpStream::connect(addr).expect("connect gateway");
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: gw\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("send request");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read reply");
+    let text = String::from_utf8(raw).expect("utf-8 reply");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {text:?}"));
+    let json_body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .unwrap_or_else(|| panic!("no body in {text:?}"));
+    let v = Value::parse(json_body)
+        .unwrap_or_else(|e| panic!("bad JSON body {json_body:?}: {e}"));
+    (status, v)
+}
+
+fn infer_body(x: &Tensor) -> String {
+    let vals: Vec<String> =
+        x.data().iter().map(|&v| format!("{}", f64::from(v))).collect();
+    format!("{{\"input\":[{}]}}", vals.join(","))
+}
+
+fn assert_logits_match(root: &Path, x: &Tensor, reply: &Value) {
+    let logits: Vec<f32> = reply
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let want = oracle(root, x);
+    assert_eq!(logits.len(), want.len(), "logit count");
+    let diff = logits
+        .iter()
+        .zip(want.data())
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    assert!(diff < 1e-4, "gateway logits diverge by {diff}");
+    let argmax = reply.get("argmax").unwrap().as_f64().unwrap() as usize;
+    assert_eq!(argmax, want.argmax(), "argmax");
+}
+
+/// Start the HTTP front door + command channel for a running test.
+fn start_gateway() -> (GatewayServer, GatewayBridge, String) {
+    let (tx, rx) = mpsc::channel::<GatewayCmd>();
+    let server = GatewayServer::start(
+        &GatewayConfig::default(),
+        ServerCtx { model: synth::MODEL.to_string(), input_len: synth::FC1_K },
+        tx,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    (server, GatewayBridge { rx }, addr)
+}
+
+#[test]
+fn gateway_serves_oracle_exact_logits_alongside_paced_traffic() {
+    let arts = synth::build(81).unwrap();
+    let fleet =
+        LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
+    let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
+    let (server, bridge, addr) = start_gateway();
+
+    // 6 client threads × 4 POSTs interleave with a 40-request paced
+    // stream through the same pipeline.
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 4;
+    let ext_inputs = inputs(CLIENTS * PER_CLIENT, 811);
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        let xs: Vec<Tensor> =
+            ext_inputs[c * PER_CLIENT..(c + 1) * PER_CLIENT].to_vec();
+        clients.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            for x in &xs {
+                let (status, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(x)));
+                assert_eq!(status, 200, "infer failed: {v:?}");
+                replies.push(v);
+            }
+            replies
+        }));
+    }
+
+    // Control-plane reads answer inline while traffic flows; a
+    // controller thread joins the clients then shuts the gateway down.
+    let ctrl_addr = addr.clone();
+    let controller = std::thread::spawn(move || {
+        let (st, v) = http(&ctrl_addr, "GET", "/v1/healthz", None);
+        assert_eq!(st, 200, "{v:?}");
+        assert_eq!(v.get("model").unwrap().as_str().unwrap(), synth::MODEL);
+        let (st, v) = http(&ctrl_addr, "GET", "/v1/fleet", None);
+        assert_eq!(st, 200, "{v:?}");
+        assert_eq!(v.get("total_devices").unwrap().as_usize().unwrap(), 4);
+        let (st, v) = http(&ctrl_addr, "GET", "/v1/policy", None);
+        assert_eq!(st, 200, "{v:?}");
+        let (st, v) = http(&ctrl_addr, "GET", "/v1/deployments", None);
+        assert_eq!(st, 200, "{v:?}");
+        assert!(v.as_arr().unwrap()[0].get("deployed").unwrap().as_bool().unwrap());
+        let (st, v) = http(&ctrl_addr, "GET", "/v1/stats", None);
+        assert_eq!(st, 200, "{v:?}");
+        let (st, _) = http(&ctrl_addr, "GET", "/v1/nope", None);
+        assert_eq!(st, 404);
+    });
+
+    let shut_addr = addr.clone();
+    let shutter = std::thread::spawn(move || {
+        // Replies and handles come back to the main thread via join.
+        (clients.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>(), {
+            let (st, v) = http(&shut_addr, "POST", "/v1/shutdown", None);
+            assert_eq!(st, 200, "{v:?}");
+        })
+    });
+
+    let paced = inputs(40, 812);
+    let report =
+        session.serve_gateway(&Workload::uniform(paced, 6.0), &bridge).unwrap();
+
+    let (client_replies, ()) = shutter.join().unwrap();
+    controller.join().unwrap();
+    drop(server);
+
+    // Nothing lost on either path; every external reply is oracle-exact.
+    assert!(report.failures.is_empty(), "{}", report.line());
+    assert_eq!(report.dropped, 0, "{}", report.line());
+    assert_eq!(
+        report.throughput.completed,
+        (40 + CLIENTS * PER_CLIENT) as u64,
+        "{}",
+        report.line()
+    );
+    // Paced traces keep their outputs; external requests leave via HTTP
+    // only (a long-lived gateway must not accumulate logits).
+    assert_eq!(report.traces.len(), 40);
+    for (c, replies) in client_replies.iter().enumerate() {
+        for (k, v) in replies.iter().enumerate() {
+            assert_logits_match(&arts.root, &ext_inputs[c * PER_CLIENT + k], v);
+        }
+    }
+}
+
+#[test]
+fn gateway_survives_sigkill_with_oracle_exact_replies() {
+    let arts = synth::build(82).unwrap();
+    let fleet =
+        LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
+    let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
+    let (server, bridge, addr) = start_gateway();
+
+    // Worker 1 owns data shards of both layers; kill it mid-POSTs. The
+    // emulated ~5 ms/shard compute keeps the stream alive well past the
+    // kill instant (4 clients × 8 sequential round-trips ≫ 150 ms).
+    let killer = fleet.kill_after(1, 150);
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 8;
+    let ext_inputs = inputs(CLIENTS * PER_CLIENT, 821);
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        let xs: Vec<Tensor> =
+            ext_inputs[c * PER_CLIENT..(c + 1) * PER_CLIENT].to_vec();
+        clients.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            for x in &xs {
+                let (status, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(x)));
+                assert_eq!(status, 200, "infer failed during chaos: {v:?}");
+                replies.push(v);
+            }
+            replies
+        }));
+    }
+    let shut_addr = addr.clone();
+    let shutter = std::thread::spawn(move || {
+        let replies: Vec<_> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+        let (st, _) = http(&shut_addr, "POST", "/v1/shutdown", None);
+        assert_eq!(st, 200);
+        replies
+    });
+
+    let report = session
+        .serve_gateway(&Workload::uniform(Vec::new(), 0.0), &bridge)
+        .unwrap();
+    let client_replies = shutter.join().unwrap();
+    killer.join().unwrap();
+    drop(server);
+
+    assert!(report.failures.is_empty(), "chaos lost requests: {}", report.line());
+    assert_eq!(
+        report.throughput.completed,
+        (CLIENTS * PER_CLIENT) as u64,
+        "{}",
+        report.line()
+    );
+    assert!(
+        report.throughput.recovered > 0,
+        "kill landed but nothing used parity: {}",
+        report.line()
+    );
+    for (c, replies) in client_replies.iter().enumerate() {
+        for (k, v) in replies.iter().enumerate() {
+            assert_logits_match(&arts.root, &ext_inputs[c * PER_CLIENT + k], v);
+        }
+    }
+}
+
+#[test]
+fn gateway_lifecycle_migrate_undeploy_deploy() {
+    let arts = synth::build(83).unwrap();
+    let fleet =
+        LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, None).unwrap();
+    let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
+    let (server, bridge, addr) = start_gateway();
+    let root = arts.root.clone();
+    let xs = inputs(4, 831);
+
+    let controller = std::thread::spawn(move || {
+        // Baseline infer.
+        let (st, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(&xs[0])));
+        assert_eq!(st, 200, "{v:?}");
+        assert_logits_match(&root, &xs[0], &v);
+
+        // Migrate device 0's tasks onto device 2 (make-before-break) and
+        // infer again — still oracle-exact, nothing dropped.
+        let path = format!("/v1/deployments/{}/migrate", synth::MODEL);
+        let (st, v) = http(&addr, "POST", &path, Some("{\"from\":0,\"to\":2}"));
+        assert_eq!(st, 200, "migrate failed: {v:?}");
+        assert!(v.get("moved").unwrap().as_usize().unwrap() > 0);
+        let (st, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(&xs[1])));
+        assert_eq!(st, 200, "{v:?}");
+        assert_logits_match(&root, &xs[1], &v);
+
+        // Migrating to the same device is a clean 400, not a wedge.
+        let (st, _) = http(&addr, "POST", &path, Some("{\"from\":2,\"to\":2}"));
+        assert_eq!(st, 400);
+
+        // Undeploy: infer turns 503 (typed, not a hang or a drop).
+        let del = format!("/v1/deployments/{}", synth::MODEL);
+        let (st, v) = http(&addr, "DELETE", &del, None);
+        assert_eq!(st, 200, "{v:?}");
+        let (st, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(&xs[2])));
+        assert_eq!(st, 503, "undeployed infer must 503: {v:?}");
+        let (st, v) = http(&addr, "GET", "/v1/deployments", None);
+        assert_eq!(st, 200);
+        assert!(!v.as_arr().unwrap()[0].get("deployed").unwrap().as_bool().unwrap());
+
+        // Redeploy and serve again.
+        let body = format!("{{\"model\":\"{}\"}}", synth::MODEL);
+        let (st, v) = http(&addr, "POST", "/v1/deployments", Some(&body));
+        assert_eq!(st, 200, "redeploy failed: {v:?}");
+        let (st, v) = http(&addr, "POST", "/v1/infer", Some(&infer_body(&xs[3])));
+        assert_eq!(st, 200, "{v:?}");
+        assert_logits_match(&root, &xs[3], &v);
+
+        // Unknown model on lifecycle endpoints is a 404.
+        let (st, _) = http(&addr, "DELETE", "/v1/deployments/nope", None);
+        assert_eq!(st, 404);
+
+        let (st, _) = http(&addr, "POST", "/v1/shutdown", None);
+        assert_eq!(st, 200);
+    });
+
+    let report = session
+        .serve_gateway(&Workload::uniform(Vec::new(), 0.0), &bridge)
+        .unwrap();
+    controller.join().unwrap();
+    drop(server);
+
+    assert!(report.failures.is_empty(), "{}", report.line());
+    assert_eq!(report.throughput.completed, 3, "{}", report.line());
+    drop(session);
+    drop(fleet);
+}

@@ -1,0 +1,169 @@
+//! Gateway HTTP parser hardening (ISSUE 8): a seeded mutation-fuzz
+//! battery in the `transport_wire.rs` corpus style. Start from a corpus
+//! of well-formed requests (request lines, header blocks, fixed-length
+//! and chunked bodies), apply random mutations — bit flips, byte
+//! overwrites, truncations, garbage extensions — and require that every
+//! mutant parses to `Complete`, `Partial`, or a *typed* `HttpError`.
+//! Never a panic, and never an attacker-sized allocation (the parser
+//! rejects oversized declarations before reserving memory).
+
+use cdc_dnn::gateway::http::{self, Parsed};
+use cdc_dnn::rng::Pcg32;
+
+/// Well-formed seeds covering every parser path: simple GET, POST with
+/// Content-Length, chunked POST (multi-chunk), many-header GET, DELETE,
+/// HTTP/1.0 with explicit keep-alive, and a pipelined pair.
+fn corpus() -> Vec<Vec<u8>> {
+    let mut c: Vec<Vec<u8>> = vec![
+        b"GET /v1/healthz HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+        b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 18\r\n\r\n{\"input\":[1,2,3]}\n".to_vec(),
+        b"POST /v1/infer HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n7\r\n{\"input\r\nA\r\n\":[1,2,3]}\r\n0\r\n\r\n".to_vec(),
+        b"DELETE /v1/deployments/mlp HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+        b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n".to_vec(),
+        b"POST /v1/shutdown HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n".to_vec(),
+    ];
+    // Many-header request (still under MAX_HEADERS).
+    let mut many = b"GET /v1/stats HTTP/1.1\r\n".to_vec();
+    for i in 0..40 {
+        many.extend_from_slice(format!("X-H{i}: v{i}\r\n").as_bytes());
+    }
+    many.extend_from_slice(b"\r\n");
+    c.push(many);
+    // Pipelined pair in one buffer.
+    let mut pair = c[0].clone();
+    pair.extend_from_slice(&c[3]);
+    c.push(pair);
+    c
+}
+
+const MAX_BODY: usize = 1 << 20;
+
+/// The property every input — however mangled — must satisfy.
+fn assert_never_panics(bytes: &[u8]) {
+    match http::parse_request(bytes, MAX_BODY) {
+        Ok(Parsed::Complete { consumed, .. }) => {
+            assert!(consumed <= bytes.len(), "consumed past the buffer");
+            assert!(consumed > 0, "complete request consumed nothing");
+        }
+        Ok(Parsed::Partial) => {}
+        Err(e) => {
+            assert!(
+                (400..=599).contains(&e.status),
+                "error status {} outside 4xx/5xx",
+                e.status
+            );
+            assert!(!e.msg.is_empty(), "typed error with empty message");
+        }
+    }
+}
+
+fn mutate(rng: &mut Pcg32, seed: &[u8]) -> Vec<u8> {
+    let mut m = seed.to_vec();
+    for _ in 0..(1 + rng.below(4)) {
+        match rng.below(4) {
+            // Bit flip.
+            0 if !m.is_empty() => {
+                let i = rng.below(m.len());
+                m[i] ^= 1 << rng.below(8);
+            }
+            // Byte overwrite (full range, including CR/LF/NUL).
+            1 if !m.is_empty() => {
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            // Truncate.
+            2 if !m.is_empty() => {
+                let i = rng.below(m.len());
+                m.truncate(i);
+            }
+            // Extend with garbage.
+            _ => {
+                for _ in 0..(1 + rng.below(8)) {
+                    m.push(rng.below(256) as u8);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn corpus_parses_clean() {
+    for (i, seed) in corpus().iter().enumerate() {
+        match http::parse_request(seed, MAX_BODY) {
+            Ok(Parsed::Complete { .. }) => {}
+            other => panic!("corpus[{i}] did not parse: {other:?}"),
+        }
+    }
+    // Every strict prefix of a valid request is Partial or a typed error
+    // (it can never be Complete: the seed is exactly one request).
+    let seed = &corpus()[1];
+    for cut in 0..seed.len() {
+        match http::parse_request(&seed[..cut], MAX_BODY) {
+            Ok(Parsed::Partial) | Err(_) => {}
+            Ok(Parsed::Complete { .. }) => {
+                panic!("prefix of length {cut} parsed as complete")
+            }
+        }
+    }
+}
+
+#[test]
+fn mutation_fuzz_2000_mutants_no_panics() {
+    let corpus = corpus();
+    let mut rng = Pcg32::seeded(0x6a7e);
+    for round in 0..2000u32 {
+        let seed = &corpus[(round as usize) % corpus.len()];
+        let mutant = mutate(&mut rng, seed);
+        assert_never_panics(&mutant);
+    }
+}
+
+#[test]
+fn pure_garbage_never_panics() {
+    let mut rng = Pcg32::seeded(0xbad);
+    for _ in 0..500 {
+        let len = rng.below(256);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        assert_never_panics(&bytes);
+    }
+}
+
+#[test]
+fn adversarial_declarations_bounded() {
+    // A gigantic Content-Length must be rejected as 413 *before* any
+    // body-sized allocation happens — the test would OOM otherwise.
+    let huge = b"POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n";
+    let e = match http::parse_request(huge, MAX_BODY) {
+        Err(e) => e,
+        other => panic!("{other:?}"),
+    };
+    assert!(e.status == 413 || e.status == 400, "{e}");
+
+    // Ditto for an absurd chunk-size declaration.
+    let chunk = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nffffffff\r\n";
+    match http::parse_request(chunk, MAX_BODY) {
+        Err(e) => assert_eq!(e.status, 413, "{e}"),
+        Ok(Parsed::Partial) => panic!("oversized chunk not rejected"),
+        other => panic!("{other:?}"),
+    }
+
+    // Header flood: more than MAX_HEADERS distinct headers is a 431.
+    let mut flood = b"GET / HTTP/1.1\r\n".to_vec();
+    for i in 0..(http::MAX_HEADERS + 1) {
+        flood.extend_from_slice(format!("X-{i}: y\r\n").as_bytes());
+    }
+    flood.extend_from_slice(b"\r\n");
+    match http::parse_request(&flood, MAX_BODY) {
+        Err(e) => assert_eq!(e.status, 431, "{e}"),
+        other => panic!("{other:?}"),
+    }
+
+    // Smuggling: Content-Length together with Transfer-Encoding is 400.
+    let smuggle =
+        b"POST / HTTP/1.1\r\nContent-Length: 3\r\nTransfer-Encoding: chunked\r\n\r\n";
+    match http::parse_request(smuggle, MAX_BODY) {
+        Err(e) => assert_eq!(e.status, 400, "{e}"),
+        other => panic!("{other:?}"),
+    }
+}
