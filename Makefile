@@ -7,7 +7,7 @@ ARTIFACTS ?= rust/artifacts
 .PHONY: artifacts build test bench bench-gemm bench-gemm-smoke \
         bench-scenarios bench-scenarios-smoke bench-batching \
         bench-batching-smoke bench-transport bench-transport-smoke \
-        worker-demo gateway-demo doc fmt clippy
+        promote-baselines worker-demo gateway-demo doc fmt clippy
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -59,6 +59,15 @@ bench-transport:
 
 bench-transport-smoke:
 	TRANSPORT_BENCH_SMOKE=1 cargo bench --bench transport_loopback
+
+# Fold downloaded CI bench artifacts (BENCH_*.metrics.json, from the
+# bench matrix's uploads) into the committed perf-trajectory seeds under
+# rust/baselines/ — then review the diff and commit
+# (rust/baselines/README.md). ARTIFACT_DIR defaults to the repo root,
+# which also picks up a fresh local bench run.
+ARTIFACT_DIR ?= .
+promote-baselines:
+	scripts/promote_baselines.sh $(ARTIFACT_DIR)
 
 # Start one standalone TCP worker on a fixed port over the synthetic
 # artifact set — half of the README's two-terminal quickstart.

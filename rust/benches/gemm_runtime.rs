@@ -1,13 +1,17 @@
 //! Micro-benchmarks of the compute hot path.
 //!
 //! Part 1 (always runs, no artifacts needed): the kernel-layer sweep —
-//! naive vs tiled vs tiled+threaded GEMM across the acceptance 256³
-//! multiply, LeNet-5 shard shapes (conv layers as their im2col GEMMs),
-//! and non-square fc shard shapes. Writes the `BENCH_gemm.json` baseline
-//! (GFLOP/s + speedups) at the repo root so the perf trajectory is
-//! tracked across PRs. `GEMM_BENCH_SMOKE=1` shrinks iteration counts for
-//! CI; `GEMM_BENCH_ENFORCE=1` fails the run if the tiled kernel is
-//! slower than naive on the 256³ multiply (kernel-regression guard).
+//! naive vs tiled vs SIMD vs tiled+threaded GEMM across the acceptance
+//! 256³ multiply, LeNet-5 shard shapes (conv layers as their im2col
+//! GEMMs), and non-square fc shard shapes. The SIMD arm runs the
+//! runtime-detected micro-kernel tier (AVX2/NEON, DESIGN.md §15); its
+//! records carry the tier label so a promoted number is always
+//! attributable. Writes the `BENCH_gemm.json` baseline (GFLOP/s +
+//! speedups) at the repo root so the perf trajectory is tracked across
+//! PRs. `GEMM_BENCH_SMOKE=1` shrinks iteration counts for CI;
+//! `GEMM_BENCH_ENFORCE=1` fails the run if the dispatch ladder inverts
+//! on the 256³ multiply — `simd ≥ tiled ≥ naive` in GFLOP/s (the simd
+//! leg only when a SIMD tier is actually active).
 //!
 //! Part 2: the fused CDC parity epilogue vs a separate parity GEMM.
 //!
@@ -67,13 +71,15 @@ fn bench_out_path() -> PathBuf {
 fn kernel_sweep(smoke: bool, enforce: bool) {
     let (warm, iters) = if smoke { (1, 3) } else { (3, 15) };
     let threads = kernels::auto_threads();
+    let tier = kernels::active_tier();
+    let simd_on = kernels::simd_available();
     println!(
-        "== kernel sweep (naive vs tiled vs tiled+threaded, {threads} threads, \
-         smoke={smoke}) =="
+        "== kernel sweep (naive vs tiled vs simd[{tier}] vs tiled+threaded, \
+         {threads} threads, smoke={smoke}) =="
     );
     let mut rng = Pcg32::seeded(1);
     let mut records: Vec<Value> = Vec::new();
-    let mut acc256: Option<(f64, f64, f64)> = None;
+    let mut acc256: Option<(f64, f64, f64, f64)> = None;
     for s in SHAPES {
         let a = Tensor::randn(vec![s.m, s.k], &mut rng);
         let b = Tensor::randn(vec![s.k, s.n], &mut rng);
@@ -87,6 +93,9 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
         let tol = 1e-5 * s.k.max(16) as f32;
         let d = max_abs_diff(&c, &cref);
         assert!(d < tol, "{}: tiled diverges from naive by {d}", s.name);
+        kernels::gemm_simd(a.data(), b.data(), &mut c, s.m, s.k, s.n, &mut sc);
+        let d = max_abs_diff(&c, &cref);
+        assert!(d < tol, "{}: simd[{tier}] diverges from naive by {d}", s.name);
         kernels::gemm_threaded(a.data(), b.data(), &mut c, s.m, s.k, s.n, threads);
         let d = max_abs_diff(&c, &cref);
         assert!(d < tol, "{}: threaded diverges from naive by {d}", s.name);
@@ -101,6 +110,11 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
             .run(|| {
                 kernels::gemm_tiled(a.data(), b.data(), &mut c, s.m, s.k, s.n, &mut sc);
             });
+        let simd = Bench::new(&format!("gemm/simd[{tier}]/{}", s.name))
+            .iters(warm, iters)
+            .run(|| {
+                kernels::gemm_simd(a.data(), b.data(), &mut c, s.m, s.k, s.n, &mut sc);
+            });
         let threaded = Bench::new(&format!("gemm/threaded/{}", s.name))
             .iters(warm, iters)
             .run(|| {
@@ -109,12 +123,14 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
 
         let gn = gflops(s.m, s.k, s.n, naive.mean);
         let gt = gflops(s.m, s.k, s.n, tiled.mean);
+        let gs = gflops(s.m, s.k, s.n, simd.mean);
         let gth = gflops(s.m, s.k, s.n, threaded.mean);
         println!(
             "  {:<22} naive {gn:>6.2} GF/s | tiled {gt:>6.2} ({:.2}x) | \
-             +threads {gth:>6.2} ({:.2}x)",
+             simd {gs:>6.2} ({:.2}x) | +threads {gth:>6.2} ({:.2}x)",
             s.name,
             gt / gn,
+            gs / gn,
             gth / gn
         );
         records.push(obj(vec![
@@ -122,20 +138,24 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
             ("m", Value::Num(s.m as f64)),
             ("k", Value::Num(s.k as f64)),
             ("n", Value::Num(s.n as f64)),
+            ("kernel_tier", Value::Str(tier.into())),
             ("naive_gflops", Value::Num(gn)),
             ("tiled_gflops", Value::Num(gt)),
+            ("simd_gflops", Value::Num(gs)),
             ("threaded_gflops", Value::Num(gth)),
             ("tiled_speedup", Value::Num(gt / gn)),
+            ("simd_speedup", Value::Num(gs / gn)),
             ("threaded_speedup", Value::Num(gth / gn)),
         ]));
         if s.m == 256 && s.k == 256 && s.n == 256 {
-            acc256 = Some((gn, gt, gth));
+            acc256 = Some((gn, gt, gs, gth));
         }
     }
 
     let doc = obj(vec![
         ("bench", Value::Str("gemm_kernels".into())),
         ("backend", Value::Str(runtime::backend_label().into())),
+        ("kernel_tier", Value::Str(tier.into())),
         ("threads", Value::Num(threads as f64)),
         ("smoke", Value::Bool(smoke)),
         ("results", Value::Arr(records)),
@@ -144,29 +164,44 @@ fn kernel_sweep(smoke: bool, enforce: bool) {
     std::fs::write(&out, doc.to_string_pretty()).expect("write BENCH_gemm.json");
     println!("[result] wrote {}", out.display());
 
-    if let Some((gn, gt, gth)) = acc256 {
+    if let Some((gn, gt, gs, gth)) = acc256 {
         println!(
-            "acceptance 256^3: tiled {:.2}x, tiled+threaded {:.2}x vs naive \
-             (targets: >=2x single-thread, >=4x threaded)",
+            "acceptance 256^3: tiled {:.2}x, simd[{tier}] {:.2}x, \
+             tiled+threaded {:.2}x vs naive (targets: >=2x single-thread, \
+             simd >= tiled, >=4x threaded)",
             gt / gn,
+            gs / gn,
             gth / gn
         );
         if enforce {
+            // The dispatch-ladder gate (smoke included): each rung of
+            // `gemm_auto`'s escalation must actually be a speedup on the
+            // acceptance shape, or the ladder is misordered.
             assert!(
                 gt >= gn,
                 "kernel regression: tiled ({gt:.2} GF/s) slower than naive \
                  ({gn:.2} GF/s) on the 256^3 multiply"
             );
+            if simd_on {
+                assert!(
+                    gs >= gt,
+                    "kernel regression: simd[{tier}] ({gs:.2} GF/s) slower \
+                     than scalar tiled ({gt:.2} GF/s) on the 256^3 multiply"
+                );
+            }
         }
         // Perf-trajectory guard (CI): GFLOP/s on the acceptance shape vs
         // the committed seed. Wall-clock metrics vary by host, so the
-        // seed is promoted from the same CI runner class's artifacts.
+        // seed is promoted from the same CI runner class's artifacts
+        // (scripts/promote_baselines.sh).
         cdc_dnn::bench::guard_baseline(
             "gemm",
             &[
                 ("gemm256_tiled_gflops".to_string(), gt),
+                ("gemm256_simd_gflops".to_string(), gs),
                 ("gemm256_threaded_gflops".to_string(), gth),
                 ("gemm256_tiled_speedup".to_string(), gt / gn),
+                ("gemm256_simd_speedup".to_string(), gs / gn),
             ],
         );
     }

@@ -42,6 +42,10 @@ pub fn baseline_path(name: &str) -> PathBuf {
 ///   printed in promotable JSON form and skipped (seeds are committed
 ///   empty and promoted from CI artifact uploads, so the guard never
 ///   fails on numbers nobody measured).
+///
+/// Every call also writes `BENCH_<name>.metrics.json` (seed-shaped,
+/// into `$BENCH_METRICS_DIR` or the cwd) — the artifact
+/// `scripts/promote_baselines.sh` merges into `rust/baselines/`.
 pub fn guard_baseline(name: &str, fresh: &[(String, f64)]) {
     let enforce = std::env::var("BENCH_BASELINE_ENFORCE").is_ok();
     let path = baseline_path(name);
@@ -57,6 +61,18 @@ pub fn guard_baseline(name: &str, fresh: &[(String, f64)]) {
         path.display(),
         metrics_json.to_string_pretty()
     );
+    // Also drop the promotable form on disk: CI uploads `BENCH_*.json`
+    // artifacts and `scripts/promote_baselines.sh` folds these into the
+    // committed seeds under `rust/baselines/`. The file is exactly the
+    // seed shape (`{"metrics": {...}}`), so promotion is a merge, not a
+    // transformation. Best-effort: an unwritable cwd must not fail a
+    // bench run.
+    let out_dir = std::env::var("BENCH_METRICS_DIR").unwrap_or_else(|_| ".".into());
+    let out = PathBuf::from(out_dir).join(format!("BENCH_{name}.metrics.json"));
+    match std::fs::write(&out, metrics_json.to_string_pretty()) {
+        Ok(()) => println!("[baseline] {name}: wrote promotable {}", out.display()),
+        Err(e) => println!("[baseline] {name}: could not write {}: {e}", out.display()),
+    }
     let Some(baseline) = baseline else {
         println!("[baseline] {name}: no committed seed — bootstrap, nothing enforced");
         return;

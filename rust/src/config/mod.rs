@@ -115,6 +115,9 @@ pub fn deployment_from_json(v: &Value) -> Result<SessionConfig> {
     if let Some(t) = v.opt("transport") {
         cfg.transport = transport_from_json(t)?;
     }
+    if let Some(p) = v.opt("precision") {
+        cfg.precision = crate::kernels::Precision::parse(p.as_str()?)?;
+    }
     Ok(cfg)
 }
 
@@ -275,6 +278,7 @@ pub fn deployment_to_json(cfg: &SessionConfig) -> Value {
         ("adaptive", Value::Bool(cfg.adaptive.is_some())),
         ("batch_max", Value::Num(cfg.batch_max as f64)),
         ("batch_wait_ms", Value::Num(cfg.batch_wait_ms)),
+        ("precision", Value::Str(cfg.precision.label().to_string())),
         ("transport", transport_to_json(&cfg.transport)),
         ("splits", Value::Obj(splits)),
         ("placement", Value::Obj(placement)),
@@ -297,12 +301,14 @@ mod tests {
         cfg.placement.insert("fc1".into(), vec![0, 1, 2, 3]);
         cfg.batch_max = 4;
         cfg.batch_wait_ms = 2.5;
+        cfg.precision = crate::kernels::Precision::Int8;
         let json = deployment_to_json(&cfg);
         let back = deployment_from_json(&json).unwrap();
         assert_eq!(back.model, "lenet5");
         assert_eq!(back.n_devices, 4);
         assert_eq!(back.batch_max, 4);
         assert!((back.batch_wait_ms - 2.5).abs() < 1e-12);
+        assert_eq!(back.precision, crate::kernels::Precision::Int8);
         assert_eq!(back.splits["fc1"].d, 4);
         assert_eq!(back.splits["fc1"].redundancy, Redundancy::Cdc);
         assert_eq!(back.splits["fc2"].redundancy, Redundancy::CdcGrouped(1));

@@ -119,6 +119,12 @@ pub struct SessionConfig {
     /// pre-transport engine) or real TCP worker processes with
     /// wall-clock timing.
     pub transport: TransportSpec,
+    /// Numeric precision of fc shard tasks (DESIGN.md §15): `F32`
+    /// (default, bit-exact with the reference math) or `Int8`
+    /// (per-row-block symmetric quantization with an i32 accumulator
+    /// and a computable error bound; CDC parity is encoded in the
+    /// quantized domain). conv shards always stay f32.
+    pub precision: crate::kernels::Precision,
 }
 
 impl SessionConfig {
@@ -138,6 +144,7 @@ impl SessionConfig {
             batch_max: 1,
             batch_wait_ms: 0.0,
             transport: TransportSpec::Sim,
+            precision: crate::kernels::Precision::F32,
         }
     }
 
@@ -299,6 +306,9 @@ fn build_stages(
 
         let macs = shard_macs(layer, spec.d);
         let (req_bytes, reply_bytes) = shard_io_bytes(layer, spec.d);
+        // Deploy-time kernel prep (DESIGN.md §15) is per-task: int8
+        // quantization only ever applies to fc shards.
+        let is_fc = layer.kind == "fc";
         let placed = match cfg.placement.get(&layer.name).filter(|_| use_placement) {
             Some(devs) => {
                 if devs.len() != spec.d {
@@ -337,14 +347,8 @@ fn build_stages(
             pending.push(Pending {
                 task,
                 device,
-                def: TaskDef {
-                    id: task,
-                    artifact: artifact.clone(),
-                    w: w.clone(),
-                    b: b.clone(),
-                    macs,
-                    reply_bytes,
-                },
+                def: TaskDef::new(task, artifact.clone(), w.clone(), b.clone(), macs, reply_bytes)
+                    .prepare(cfg.precision, is_fc),
             });
             shard_wb.push((w, b));
             data.push((device, task));
@@ -376,14 +380,8 @@ fn build_stages(
                     pending.push(Pending {
                         task,
                         device,
-                        def: TaskDef {
-                            id: task,
-                            artifact: artifact.clone(),
-                            w: pw,
-                            b: pb,
-                            macs,
-                            reply_bytes,
-                        },
+                        def: TaskDef::new(task, artifact.clone(), pw, pb, macs, reply_bytes)
+                            .prepare(cfg.precision, is_fc),
                     });
                     parities.push((device, task, cover));
                 }
@@ -396,14 +394,15 @@ fn build_stages(
                     pending.push(Pending {
                         task,
                         device,
-                        def: TaskDef {
-                            id: task,
-                            artifact: artifact.clone(),
-                            w: w.clone(),
-                            b: b.clone(),
+                        def: TaskDef::new(
+                            task,
+                            artifact.clone(),
+                            w.clone(),
+                            b.clone(),
                             macs,
                             reply_bytes,
-                        },
+                        )
+                        .prepare(cfg.precision, is_fc),
                     });
                     replicas.push((device, task));
                 }

@@ -221,6 +221,12 @@ pub struct ServeReport {
     /// session runs the static straggler gate) — the tuned gate factor,
     /// observed drop rate, and the parity-vs-replication recommendation.
     pub policy: Option<super::policy::PolicyReport>,
+    /// SIMD micro-kernel tier the coordinator-side interpreter ran on
+    /// (`avx2` / `neon` / `scalar`, DESIGN.md §15) — attribution so a
+    /// recorded number can always be traced to the kernel that made it.
+    pub kernel_tier: &'static str,
+    /// Numeric precision of the fc shard tasks (`f32` / `int8`).
+    pub precision: &'static str,
 }
 
 impl ServeReport {
@@ -233,7 +239,7 @@ impl ServeReport {
     pub fn line(&self) -> String {
         format!(
             "served={} failed={} dropped={} recovered={} rps={:.2} \
-             makespan={:.0}ms max_in_flight={}",
+             makespan={:.0}ms max_in_flight={} tier={} precision={}",
             self.throughput.completed,
             self.throughput.failed,
             self.dropped,
@@ -241,6 +247,8 @@ impl ServeReport {
             self.rps(),
             self.makespan_ms,
             self.max_concurrent_requests,
+            self.kernel_tier,
+            self.precision,
         )
     }
 }
@@ -1310,6 +1318,8 @@ impl Session {
             max_concurrent_stages,
             max_batch,
             policy: self.adaptive.as_ref().map(|a| a.snapshot()),
+            kernel_tier: crate::kernels::active_tier(),
+            precision: self.cfg.precision.label(),
         })
     }
 

@@ -61,6 +61,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::kernels;
 use crate::rng::Pcg32;
 use crate::runtime::server::ComputeHandle;
 use crate::tensor::Tensor;
@@ -128,6 +129,61 @@ pub struct TaskDef {
     /// Cost model inputs.
     pub macs: u64,
     pub reply_bytes: u64,
+    /// Deploy-time packed weight panels (DESIGN.md §15): built once by
+    /// [`TaskDef::prepare`], shared `Arc` like the weights, so the serve
+    /// hot path never re-packs. `None` for shapes the blocked kernel
+    /// would never take, or before `prepare` ran.
+    pub packed: Option<Arc<kernels::PackedWeights>>,
+    /// Int8-quantized weights for `precision = int8` fc deployments;
+    /// execution uses these (plus `b`) and ignores `w`, which stays as
+    /// the coordinator's f32 reference for repartitioning.
+    pub quant: Option<Arc<kernels::QuantWeights>>,
+}
+
+impl TaskDef {
+    /// A bare f32 task; call [`TaskDef::prepare`] to attach the
+    /// deploy-time kernel state.
+    pub fn new(
+        id: u64,
+        artifact: impl Into<String>,
+        w: Arc<Tensor>,
+        b: Arc<Tensor>,
+        macs: u64,
+        reply_bytes: u64,
+    ) -> TaskDef {
+        TaskDef {
+            id,
+            artifact: artifact.into(),
+            w,
+            b,
+            macs,
+            reply_bytes,
+            packed: None,
+            quant: None,
+        }
+    }
+
+    /// Deploy-time kernel preparation: quantize fc shards when the
+    /// deployment asks for int8, otherwise pack the weight panels once
+    /// so per-call packing disappears from the hot path (only when the
+    /// shape can ever take the blocked kernel — see
+    /// [`kernels::PackedWeights::pays_off`]). `is_fc` comes from the
+    /// layer kind: conv shards always stay f32 (their im2col GEMM still
+    /// benefits from packing).
+    pub fn prepare(mut self, precision: kernels::Precision, is_fc: bool) -> TaskDef {
+        let dims = self.w.shape();
+        let (m, k) = match dims {
+            [m, k] => (*m, *k),
+            _ => return self,
+        };
+        if precision == kernels::Precision::Int8 && is_fc {
+            self.quant = Some(Arc::new(kernels::QuantWeights::quantize(self.w.data(), m, k)));
+            self.packed = None;
+        } else if kernels::PackedWeights::pays_off(m, k) {
+            self.packed = Some(Arc::new(kernels::PackedWeights::pack(self.w.data(), m, k)));
+        }
+        self
+    }
 }
 
 /// One layer's work for one device (may contain several tasks after a
@@ -366,13 +422,27 @@ fn device_main(
                     // per-order costs (request leg, reply base latency)
                     // are paid once — that amortisation is the whole
                     // point of cross-request micro-batching.
-                    let result = compute
-                        .execute(&task.artifact, vec![
-                            task.w.clone(),
-                            task.b.clone(),
-                            order.input.clone(),
-                        ])
-                        .ok();
+                    let result = match &task.quant {
+                        // Int8 task: the quantized weights replace w on
+                        // the compute side (b rides along for the
+                        // epilogue).
+                        Some(q) => compute
+                            .execute_prepared(
+                                &task.artifact,
+                                vec![task.b.clone(), order.input.clone()],
+                                None,
+                                Some(q.clone()),
+                            )
+                            .ok(),
+                        None => compute
+                            .execute_prepared(
+                                &task.artifact,
+                                vec![task.w.clone(), task.b.clone(), order.input.clone()],
+                                task.packed.clone(),
+                                None,
+                            )
+                            .ok(),
+                    };
                     let batch = order.batch.max(1) as u64;
                     cum_ms += (batch * task.macs) as f64 / rate;
                     let reply_ms = net.sample(batch * task.reply_bytes, &mut rng);

@@ -15,8 +15,15 @@
 //! epilogues ([`bias_relu`], [`row_block_checksum`]) run as one extra
 //! pass over C — the CDC parity checksum costs a panel pass, not a
 //! separate full multiply.
+//!
+//! The micro-kernel is tier-dispatched (DESIGN.md §15): the macro loop
+//! picks the scalar register tile or an explicit-SIMD one
+//! ([`super::simd`]) per [`Tier`]. All tiers accumulate in the same
+//! order without FMA, so their outputs are bit-identical — callers see
+//! one deterministic kernel that just gets faster on wider hardware.
 
 use super::scratch::{with_scratch, Scratch};
+use super::simd::{self, Tier};
 
 /// Rows of A per packed panel (multiple of [`MR`]).
 pub const MC: usize = 64;
@@ -31,7 +38,7 @@ pub const NR: usize = 8;
 
 /// Below this FLOP count (2mkn) the packed kernel's setup overhead
 /// dominates and the naive loop wins.
-const TILED_MIN_FLOPS: f64 = 2.0 * 48.0 * 48.0 * 48.0;
+pub(crate) const TILED_MIN_FLOPS: f64 = 2.0 * 48.0 * 48.0 * 48.0;
 /// Above this FLOP count row-partitioned threading pays for the spawn.
 pub const THREADED_MIN_FLOPS: f64 = 2.0 * 176.0 * 176.0 * 176.0;
 
@@ -61,7 +68,10 @@ pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
 
 /// Heuristic entry point: naive for tiny/degenerate shapes (the serving
 /// GEMV case), single-thread tiled in the mid range, row-threaded above
-/// [`THREADED_MIN_FLOPS`]. `scratch` feeds the packing panels.
+/// [`THREADED_MIN_FLOPS`]. `scratch` feeds the packing panels. The
+/// blocked paths run the process-wide active micro-kernel tier
+/// ([`simd::select`]), so SIMD flows into the serve hot path without
+/// callers changing.
 pub fn gemm_auto(
     a: &[f32],
     b: &[f32],
@@ -77,7 +87,7 @@ pub fn gemm_auto(
     } else if flops >= THREADED_MIN_FLOPS && auto_threads() > 1 {
         gemm_threaded(a, b, c, m, k, n, auto_threads());
     } else {
-        gemm_tiled(a, b, c, m, k, n, scratch);
+        gemm_tiled_with(a, b, c, m, k, n, scratch, simd::select());
     }
 }
 
@@ -93,10 +103,12 @@ pub fn auto_threads() -> usize {
     })
 }
 
-/// Single-threaded blocked GEMM: `c = a @ b` with MC/KC/NC panel
-/// blocking, packed micro-panels, and the [`MR`]`×`[`NR`] register
-/// micro-kernel. Packing buffers come from `scratch` (zero steady-state
-/// allocations).
+/// Single-threaded blocked GEMM on the **scalar** micro-kernel: `c = a
+/// @ b` with MC/KC/NC panel blocking, packed micro-panels, and the
+/// [`MR`]`×`[`NR`] register micro-kernel. Packing buffers come from
+/// `scratch` (zero steady-state allocations). This is the stable
+/// baseline tier benches compare SIMD against; the auto paths use
+/// [`gemm_tiled_with`] and the active tier.
 pub fn gemm_tiled(
     a: &[f32],
     b: &[f32],
@@ -106,7 +118,25 @@ pub fn gemm_tiled(
     n: usize,
     scratch: &mut Scratch,
 ) {
+    gemm_tiled_with(a, b, c, m, k, n, scratch, Tier::Scalar);
+}
+
+/// [`gemm_tiled`] with an explicit micro-kernel tier. Panics if the
+/// hardware does not support `tier` (see [`simd::tier_supported`]); use
+/// [`simd::select`] for the detected tier.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tiled_with(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut Scratch,
+    tier: Tier,
+) {
     check_dims(a, b, c, m, k, n);
+    assert!(simd::tier_supported(tier), "micro-kernel tier {tier:?} unsupported here");
     c.fill(0.0);
     if m == 0 || n == 0 || k == 0 {
         return;
@@ -124,7 +154,7 @@ pub fn gemm_tiled(
             while ic < m {
                 let mc = MC.min(m - ic);
                 pack_a(a, &mut apack, ic, pc, mc, kc, k);
-                macro_kernel(&apack, &bpack, c, ic, jc, mc, nc, kc, n);
+                macro_kernel(&apack, &bpack, c, ic, jc, mc, nc, kc, n, tier);
                 ic += MC;
             }
             pc += KC;
@@ -135,10 +165,32 @@ pub fn gemm_tiled(
     scratch.put(apack);
 }
 
+/// Single-threaded blocked GEMM on the process-wide **active SIMD
+/// tier**. Returns `true` when a SIMD micro-kernel actually ran; when
+/// no SIMD tier is available (or `CDC_DNN_SIMD=0`) it computes the same
+/// result through the scalar tile and returns `false`. Output is
+/// bit-identical to [`gemm_tiled`] either way.
+pub fn gemm_simd(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scratch: &mut Scratch,
+) -> bool {
+    let tier = simd::select();
+    gemm_tiled_with(a, b, c, m, k, n, scratch, tier);
+    tier != Tier::Scalar
+}
+
 /// Multi-threaded blocked GEMM: C's rows are partitioned into up to
 /// `threads` contiguous MR-aligned bands, each computed by a scoped
-/// worker running [`gemm_tiled`] on its slice of A and C (B is shared
-/// read-only; workers never synchronise mid-multiply).
+/// worker running the blocked kernel on its slice of A and C (B is
+/// shared read-only; workers never synchronise mid-multiply). Runs the
+/// active micro-kernel tier; thread partitioning never reassociates the
+/// per-element sums, so the result is bit-identical at every thread
+/// count.
 pub fn gemm_threaded(
     a: &[f32],
     b: &[f32],
@@ -148,7 +200,23 @@ pub fn gemm_threaded(
     n: usize,
     threads: usize,
 ) {
+    gemm_threaded_with(a, b, c, m, k, n, threads, simd::select());
+}
+
+/// [`gemm_threaded`] with an explicit micro-kernel tier.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_threaded_with(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    tier: Tier,
+) {
     check_dims(a, b, c, m, k, n);
+    assert!(simd::tier_supported(tier), "micro-kernel tier {tier:?} unsupported here");
     if m == 0 || n == 0 {
         return;
     }
@@ -158,7 +226,7 @@ pub fn gemm_threaded(
     }
     let t = threads.max(1).min(m.div_ceil(MR));
     if t <= 1 {
-        with_scratch(|sc| gemm_tiled(a, b, c, m, k, n, sc));
+        with_scratch(|sc| gemm_tiled_with(a, b, c, m, k, n, sc, tier));
         return;
     }
     let rows_per = m.div_ceil(t).div_ceil(MR) * MR;
@@ -168,7 +236,7 @@ pub fn gemm_threaded(
             let aband = &a[ci * rows_per * k..ci * rows_per * k + rows * k];
             s.spawn(move || {
                 let mut sc = Scratch::new();
-                gemm_tiled(aband, b, cband, rows, k, n, &mut sc);
+                gemm_tiled_with(aband, b, cband, rows, k, n, &mut sc, tier);
             });
         }
     });
@@ -178,7 +246,15 @@ pub fn gemm_threaded(
 /// MR-row strips: strip `s` stores rows `[s·MR, s·MR+MR)` interleaved by
 /// depth (`apack[s·MR·kc + kk·MR + i]`), zero-padded past `mc` so the
 /// micro-kernel always runs the full register tile.
-fn pack_a(a: &[f32], apack: &mut [f32], ic: usize, pc: usize, mc: usize, kc: usize, lda: usize) {
+pub(crate) fn pack_a(
+    a: &[f32],
+    apack: &mut [f32],
+    ic: usize,
+    pc: usize,
+    mc: usize,
+    kc: usize,
+    lda: usize,
+) {
     for strip in 0..mc.div_ceil(MR) {
         let base = strip * MR * kc;
         for kk in 0..kc {
@@ -198,7 +274,15 @@ fn pack_a(a: &[f32], apack: &mut [f32], ic: usize, pc: usize, mc: usize, kc: usi
 /// Pack a `kc × nc` block of B (at `(pc, jc)`, leading dim `ldb`) into
 /// NR-column strips: strip `t` stores columns `[t·NR, t·NR+NR)` row by
 /// row (`bpack[t·NR·kc + kk·NR + j]`), zero-padded past `nc`.
-fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
+pub(crate) fn pack_b(
+    b: &[f32],
+    bpack: &mut [f32],
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    ldb: usize,
+) {
     for strip in 0..nc.div_ceil(NR) {
         let base = strip * NR * kc;
         if (strip + 1) * NR <= nc {
@@ -220,9 +304,12 @@ fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usi
 }
 
 /// Multiply one packed A panel by one packed B panel into the C block at
-/// `(ic, jc)`, micro-tile by micro-tile.
+/// `(ic, jc)`, micro-tile by micro-tile, dispatching the micro-kernel
+/// for `tier`. The match is loop-invariant, so the branch predicts
+/// perfectly; callers guarantee hardware support via
+/// [`simd::tier_supported`] before any SIMD tier reaches here.
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(
+pub(crate) fn macro_kernel(
     apack: &[f32],
     bpack: &[f32],
     c: &mut [f32],
@@ -232,6 +319,7 @@ fn macro_kernel(
     nc: usize,
     kc: usize,
     ldc: usize,
+    tier: Tier,
 ) {
     for jstrip in 0..nc.div_ceil(NR) {
         let jr = jstrip * NR;
@@ -242,7 +330,22 @@ fn macro_kernel(
             let mr = MR.min(mc - ir);
             let astrip = &apack[istrip * MR * kc..(istrip + 1) * MR * kc];
             let coff = (ic + ir) * ldc + jc + jr;
-            micro_kernel(kc, astrip, bstrip, &mut c[coff..], ldc, mr, nr);
+            let cc = &mut c[coff..];
+            match tier {
+                Tier::Scalar => micro_kernel(kc, astrip, bstrip, cc, ldc, mr, nr),
+                // SAFETY: every caller asserts `simd::tier_supported`
+                // before dispatching a SIMD tier (detection happened at
+                // runtime), and the packed strips are sized/padded to
+                // full MR×NR tiles by `pack_a`/`pack_b`.
+                #[cfg(target_arch = "x86_64")]
+                Tier::Avx2 => unsafe {
+                    simd::avx2::micro_kernel(kc, astrip, bstrip, cc, ldc, mr, nr)
+                },
+                #[cfg(target_arch = "aarch64")]
+                Tier::Neon => unsafe {
+                    simd::neon::micro_kernel(kc, astrip, bstrip, cc, ldc, mr, nr)
+                },
+            }
         }
     }
 }
@@ -352,6 +455,24 @@ mod tests {
             gemm_naive(&a, &b, &mut c0, m, k, n);
             gemm_tiled(&a, &b, &mut c1, m, k, n, &mut sc);
             assert!(diff(&c0, &c1) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn simd_tier_bitwise_matches_scalar_tiled() {
+        // Whatever tier is active, gemm_simd must be bit-identical to
+        // the scalar tiled kernel — mul+add ordering is part of the
+        // kernel contract (DESIGN.md §15), not a tolerance question.
+        let mut rng = Pcg32::seeded(9);
+        let mut sc = Scratch::new();
+        for &(m, k, n) in &[(4, 8, 8), (65, 300, 63), (128, 512, 96), (31, 700, 9)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut c0 = vec![0.0; m * n];
+            let mut c1 = vec![1.0; m * n];
+            gemm_tiled(&a, &b, &mut c0, m, k, n, &mut sc);
+            let ran_simd = gemm_simd(&a, &b, &mut c1, m, k, n, &mut sc);
+            assert_eq!(c0, c1, "({m},{k},{n}) simd tier ran: {ran_simd}");
         }
     }
 

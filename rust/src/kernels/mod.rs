@@ -1,22 +1,31 @@
-//! High-performance compute kernel layer (DESIGN.md §8).
+//! High-performance compute kernel layer (DESIGN.md §8, §15).
 //!
 //! The paper's CDC overhead claims are all *ratios against a GEMM*: the
 //! parity encode, the recovery subtraction, and the straggler gate only
 //! read as "close to zero" when the underlying matrix multiply is as
 //! fast as the host allows. This module is that baseline: a cache-blocked,
-//! register-tiled f32 [`gemm`] with a scoped-thread row driver, the
-//! shared epilogues (bias/ReLU and the fused CDC parity checksum), and
-//! the [`Scratch`] buffer arena that makes the steady-state serving
-//! compute path allocation-free. The interpreter backend
-//! (`runtime::interp`), `Tensor::matmul`, and the coordinator's merge
-//! path are all lowered onto it; later SIMD/PJRT backends plug in at the
-//! same seam.
+//! register-tiled f32 [`gemm`] with a scoped-thread row driver and
+//! runtime-dispatched explicit-SIMD micro-kernels ([`simd`]: AVX2 /
+//! NEON, falling back to the scalar tile), deploy-time packed-weight
+//! caching ([`pack`]), an int8-quantized GEMM with a computable error
+//! bound ([`qgemm`]), the shared epilogues (bias/ReLU and the fused CDC
+//! parity checksum), and the [`Scratch`] buffer arena that makes the
+//! steady-state serving compute path allocation-free. The interpreter
+//! backend (`runtime::interp`), `Tensor::matmul`, and the coordinator's
+//! merge path are all lowered onto it; later PJRT backends plug in at
+//! the same seam.
 
 pub mod gemm;
+pub mod pack;
+pub mod qgemm;
 pub mod scratch;
+pub mod simd;
 
 pub use gemm::{
-    auto_threads, bias_relu, gemm_auto, gemm_naive, gemm_threaded, gemm_tiled,
-    row_block_checksum, KC, MC, MR, NC, NR,
+    auto_threads, bias_relu, gemm_auto, gemm_naive, gemm_simd, gemm_threaded,
+    gemm_threaded_with, gemm_tiled, gemm_tiled_with, row_block_checksum, KC, MC, MR, NC, NR,
 };
+pub use pack::{gemm_prepacked, gemm_prepacked_auto, gemm_prepacked_threaded, PackedWeights};
+pub use qgemm::{error_bound, qgemm, quantize_activation, Precision, QuantWeights, QBLOCK_ROWS};
 pub use scratch::{with_scratch, Scratch};
+pub use simd::{active_tier, simd_available, tier_supported, Tier};

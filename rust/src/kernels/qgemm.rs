@@ -1,0 +1,344 @@
+//! Int8-quantized GEMM with CDC parity in the quantized domain
+//! (DESIGN.md §15).
+//!
+//! Weights are quantized symmetrically per [`QBLOCK_ROWS`]-row block
+//! (`scale = maxabs / 127`, round-to-nearest), activations per tensor,
+//! products accumulate in `i32`, and the epilogue dequantizes
+//! (`scale_block · scale_x · acc`) before bias/ReLU — so the quantized
+//! path slots in wherever the f32 fc shard ran, at a quarter of the
+//! weight bytes.
+//!
+//! The CDC story survives quantization because the error is *bounded
+//! and computable*: with `w = s_w·q_w + e_w` (`|e_w| ≤ s_w/2`) and
+//! `x = s_x·q_x + e_x` (`|e_x| ≤ s_x/2`), each output element differs
+//! from the f32 oracle by at most
+//! `Σ_k (s_w/2·|x_k| + s_x/2·|s_w·q_w|)` — every term known exactly
+//! from the quantized operands ([`error_bound`]). Parity weights are
+//! the f32 shard sum quantized once ([`QuantWeights::quantize`] of
+//! `cdc::parity_weights`), and reconstruction by subtraction lands
+//! within the *sum* of the member bounds of the f32 oracle — the
+//! invariant `tests/kernels_simd.rs` proves under injected shard loss.
+//! That is the arXiv 2411.01579 numerical-stability condition
+//! specialised to sum parity.
+
+use crate::error::{Error, Result};
+
+/// Rows sharing one weight scale (matches the register tile height, so
+/// a future int8 micro-kernel can hoist one scale per strip).
+pub const QBLOCK_ROWS: usize = 4;
+
+/// Per-deployment numeric precision knob (config `precision`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f32 kernels (the default).
+    #[default]
+    F32,
+    /// Int8 weights + activations for fc shards, i32 accumulation,
+    /// dequantize epilogue; conv shards stay f32.
+    Int8,
+}
+
+impl Precision {
+    /// Config / report tag.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a config tag.
+    pub fn parse(tag: &str) -> Result<Precision> {
+        match tag {
+            "f32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            other => Err(Error::Config(format!(
+                "unknown precision {other:?} (expected \"f32\" or \"int8\")"
+            ))),
+        }
+    }
+}
+
+/// An `m × k` weight matrix quantized to int8 with symmetric
+/// per-row-block scales.
+#[derive(Clone, PartialEq)]
+pub struct QuantWeights {
+    m: usize,
+    k: usize,
+    data: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl std::fmt::Debug for QuantWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QuantWeights")
+            .field("m", &self.m)
+            .field("k", &self.k)
+            .field("blocks", &self.scales.len())
+            .finish()
+    }
+}
+
+/// Symmetric round-to-nearest quantization of one value at scale `s`.
+fn quantize_one(v: f32, s: f32) -> i8 {
+    if s <= 0.0 {
+        return 0;
+    }
+    (v / s).round().clamp(-127.0, 127.0) as i8
+}
+
+impl QuantWeights {
+    /// Quantize a row-major `m × k` f32 matrix. Each
+    /// [`QBLOCK_ROWS`]-row block gets `scale = maxabs / 127` (0 when
+    /// the block is all zero — those rows dequantize to exact zeros).
+    pub fn quantize(w: &[f32], m: usize, k: usize) -> QuantWeights {
+        assert_eq!(w.len(), m * k, "QuantWeights: weight length vs ({m},{k})");
+        let n_blocks = m.div_ceil(QBLOCK_ROWS);
+        let mut scales = Vec::with_capacity(n_blocks);
+        for blk in 0..n_blocks {
+            let lo = blk * QBLOCK_ROWS * k;
+            let hi = ((blk + 1) * QBLOCK_ROWS * k).min(m * k);
+            let maxabs = w[lo..hi].iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+            scales.push(maxabs / 127.0);
+        }
+        let data = w
+            .iter()
+            .enumerate()
+            .map(|(idx, &v)| quantize_one(v, scales[idx / k / QBLOCK_ROWS]))
+            .collect();
+        QuantWeights { m, k, data, scales }
+    }
+
+    /// Rebuild from wire-decoded parts (rows, depth, int8 data, one
+    /// scale per row block). Validates lengths so a hostile frame can
+    /// never build an inconsistent value.
+    pub fn from_parts(m: usize, k: usize, data: Vec<i8>, scales: Vec<f32>) -> Result<QuantWeights> {
+        if data.len() != m * k {
+            return Err(Error::Config(format!(
+                "QuantWeights: data length {} vs ({m},{k})",
+                data.len()
+            )));
+        }
+        if scales.len() != m.div_ceil(QBLOCK_ROWS) {
+            return Err(Error::Config(format!(
+                "QuantWeights: {} scales for {m} rows (block {QBLOCK_ROWS})",
+                scales.len()
+            )));
+        }
+        if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err(Error::Config("QuantWeights: scale not finite/non-negative".into()));
+        }
+        Ok(QuantWeights { m, k, data, scales })
+    }
+
+    /// (rows, depth).
+    pub fn dims(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    /// Raw int8 values, row-major.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Per-row-block scales (`m.div_ceil(QBLOCK_ROWS)` of them).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// The scale applied to row `i`.
+    pub fn row_scale(&self, i: usize) -> f32 {
+        self.scales[i / QBLOCK_ROWS]
+    }
+
+    /// Payload size in bytes (data + scales) — the wire/deploy cost.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// The exact f32 matrix this quantization represents
+    /// (`s_w · q_w`) — used by the error model and tests.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .enumerate()
+            .map(|(idx, &q)| q as f32 * self.scales[idx / self.k / QBLOCK_ROWS])
+            .collect()
+    }
+}
+
+/// Symmetric per-tensor activation quantization: `(q_x, s_x)` with
+/// `s_x = maxabs / 127`.
+pub fn quantize_activation(x: &[f32]) -> (Vec<i8>, f32) {
+    let maxabs = x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+    let s = maxabs / 127.0;
+    (x.iter().map(|&v| quantize_one(v, s)).collect(), s)
+}
+
+/// Int8 GEMM with fused dequantize + bias + ReLU epilogue:
+/// `c[i,j] = relu( row_scale(i)·s_x · Σ_k q_w[i,k]·q_x[k,j] + bias[i] )`.
+/// Activations are quantized here (per call, per tensor); products
+/// accumulate in `i32` — exact for any depth the deploy caps allow
+/// (`k · 127² ≪ i32::MAX`).
+pub fn qgemm(
+    qw: &QuantWeights,
+    x: &[f32],
+    c: &mut [f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    relu: bool,
+) {
+    let (m, k) = qw.dims();
+    assert_eq!(x.len(), k * n, "qgemm: rhs length vs ({k},{n})");
+    assert_eq!(c.len(), m * n, "qgemm: out length vs ({m},{n})");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), m, "qgemm: bias length vs rows {m}");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (qx, sx) = quantize_activation(x);
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        acc.fill(0);
+        let wrow = &qw.data[i * k..(i + 1) * k];
+        for (kk, &wv) in wrow.iter().enumerate() {
+            if wv == 0 {
+                continue;
+            }
+            let wv = wv as i32;
+            let xrow = &qx[kk * n..(kk + 1) * n];
+            for (av, &xv) in acc.iter_mut().zip(xrow) {
+                *av += wv * xv as i32;
+            }
+        }
+        let s = qw.row_scale(i) * sx;
+        let bv = bias.map_or(0.0, |b| b[i]);
+        for (cv, &av) in c[i * n..(i + 1) * n].iter_mut().zip(&acc) {
+            let mut v = s * av as f32 + bv;
+            if relu && v < 0.0 {
+                v = 0.0;
+            }
+            *cv = v;
+        }
+    }
+}
+
+/// Per-element upper bound on `|f32_oracle − qgemm|` (pre-activation),
+/// as an `m × n` row-major matrix:
+/// `bound[i,j] = s_w(i)/2 · Σ_k |x[k,j]|  +  s_x/2 · Σ_k |s_w(i)·q_w[i,k]|`.
+/// Both terms are computed exactly from the quantized operands; the
+/// bound is what the quantized-CDC reconstruction tests sum per lost
+/// shard.
+pub fn error_bound(qw: &QuantWeights, x: &[f32], n: usize) -> Vec<f32> {
+    let (m, k) = qw.dims();
+    assert_eq!(x.len(), k * n, "error_bound: rhs length vs ({k},{n})");
+    let sx = x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs())) / 127.0;
+    // Σ_k |x[k,j]| per column.
+    let mut colabs = vec![0.0f32; n];
+    for xrow in x.chunks_exact(n.max(1)).take(k) {
+        for (cacc, &v) in colabs.iter_mut().zip(xrow) {
+            *cacc += v.abs();
+        }
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let sw = qw.row_scale(i);
+        let rowabs: f32 = qw.data[i * k..(i + 1) * k]
+            .iter()
+            .map(|&q| (q as f32 * sw).abs())
+            .sum();
+        for (o, &ca) in out[i * n..(i + 1) * n].iter_mut().zip(&colabs) {
+            *o = sw / 2.0 * ca + sx / 2.0 * rowabs;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm_naive;
+    use crate::rng::Pcg32;
+
+    fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn precision_tags_roundtrip() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::Int8.label(), "int8");
+        assert_eq!(Precision::default(), Precision::F32);
+        assert!(Precision::parse("fp16").is_err());
+    }
+
+    #[test]
+    fn quantization_error_is_within_half_scale() {
+        let mut rng = Pcg32::seeded(31);
+        let (m, k) = (13, 40);
+        let w = randv(m * k, &mut rng);
+        let qw = QuantWeights::quantize(&w, m, k);
+        let wd = qw.dequantize();
+        for (i, (&orig, &deq)) in w.iter().zip(&wd).enumerate() {
+            let s = qw.row_scale(i / k);
+            assert!((orig - deq).abs() <= s / 2.0 + 1e-7, "element {i}: |{orig} - {deq}| > {s}/2");
+        }
+    }
+
+    #[test]
+    fn qgemm_stays_within_error_bound_of_f32_oracle() {
+        let mut rng = Pcg32::seeded(32);
+        for &(m, k, n) in &[(1, 1, 1), (7, 19, 3), (64, 128, 8), (33, 257, 5)] {
+            let w = randv(m * k, &mut rng);
+            let x = randv(k * n, &mut rng);
+            let qw = QuantWeights::quantize(&w, m, k);
+            let mut oracle = vec![0.0; m * n];
+            gemm_naive(&w, &x, &mut oracle, m, k, n);
+            let mut got = vec![0.0; m * n];
+            qgemm(&qw, &x, &mut got, n, None, false);
+            let bound = error_bound(&qw, &x, n);
+            for idx in 0..m * n {
+                let err = (oracle[idx] - got[idx]).abs();
+                assert!(
+                    err <= bound[idx] + 1e-5,
+                    "({m},{k},{n}) elem {idx}: err {err} > bound {}",
+                    bound[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_epilogue_applies_bias_and_relu() {
+        let w = vec![1.0, 0.0, 0.0, -1.0];
+        let qw = QuantWeights::quantize(&w, 2, 2);
+        let x = vec![2.0, 3.0];
+        let bias = vec![0.5, -0.5];
+        let mut lin = vec![0.0; 2];
+        qgemm(&qw, &x, &mut lin, 1, Some(&bias), false);
+        assert!((lin[0] - 2.5).abs() < 0.1 && (lin[1] + 3.5).abs() < 0.1, "{lin:?}");
+        let mut act = vec![0.0; 2];
+        qgemm(&qw, &x, &mut act, 1, Some(&bias), true);
+        assert!(act[0] > 0.0 && act[1] == 0.0, "{act:?}");
+    }
+
+    #[test]
+    fn zero_weights_quantize_to_exact_zero() {
+        let qw = QuantWeights::quantize(&[0.0; 12], 3, 4);
+        assert!(qw.scales().iter().all(|&s| s == 0.0));
+        let mut c = vec![9.0; 3];
+        qgemm(&qw, &[1.0, 2.0, 3.0, 4.0], &mut c, 1, None, false);
+        assert_eq!(c, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(QuantWeights::from_parts(2, 2, vec![0; 4], vec![0.1]).is_ok());
+        assert!(QuantWeights::from_parts(2, 2, vec![0; 3], vec![0.1]).is_err());
+        assert!(QuantWeights::from_parts(2, 2, vec![0; 4], vec![0.1, 0.2]).is_err());
+        assert!(QuantWeights::from_parts(2, 2, vec![0; 4], vec![f32::NAN]).is_err());
+        assert!(QuantWeights::from_parts(5, 1, vec![0; 5], vec![0.1, 0.2]).is_ok());
+    }
+}

@@ -1,0 +1,236 @@
+//! Explicit-SIMD micro-kernels for the blocked GEMM (DESIGN.md §15).
+//!
+//! One `std::arch` micro-kernel per architecture — AVX2 on x86_64, NEON
+//! on aarch64 — each a drop-in replacement for the scalar
+//! [`MR`]`×`[`NR`] register tile in `gemm.rs`. Both deliberately use
+//! separate multiply + add (never FMA) and accumulate in the same
+//! k-ascending order as the scalar micro-kernel, so every SIMD tier is
+//! **bit-for-bit identical** to the scalar tiled kernel on every shape
+//! (and to the naive oracle whenever the depth fits a single K panel,
+//! `k ≤ KC`). That determinism is what lets CDC parity decode by exact
+//! subtraction regardless of which tier a device ran.
+//!
+//! Tier selection is a runtime decision made once per process
+//! ([`select`]): `is_x86_feature_detected!("avx2")` on x86_64, NEON
+//! (baseline on `aarch64-unknown-linux-gnu`) on aarch64, scalar
+//! everywhere else. Setting `CDC_DNN_SIMD=0` (or `off`) forces the
+//! scalar tier — the kill switch for A/B runs and for debugging the
+//! unsafe blocks.
+
+use std::sync::OnceLock;
+
+use super::gemm::{MR, NR};
+
+// The micro-kernels below hard-code the 4×8 register tile.
+const _: () = assert!(MR == 4 && NR == 8, "SIMD micro-kernels assume a 4x8 tile");
+
+/// Which micro-kernel the macro loop dispatches to. `Scalar` is always
+/// available; the SIMD variants only exist on their architecture and are
+/// only ever constructed after a runtime feature check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar register tile (the PR-2 kernel).
+    Scalar,
+    /// 8-lane AVX2 tile (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 2×4-lane NEON tile (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Tier {
+    /// Short label for bench/report attribution.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+/// True when the `CDC_DNN_SIMD` environment kill-switch disables SIMD.
+fn simd_disabled_by_env() -> bool {
+    match std::env::var("CDC_DNN_SIMD") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            v == "0" || v == "off" || v == "false"
+        }
+        Err(_) => false,
+    }
+}
+
+fn detect() -> Tier {
+    if simd_disabled_by_env() {
+        return Tier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Tier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Tier::Neon;
+        }
+    }
+    Tier::Scalar
+}
+
+/// The process-wide active tier: detected once, cached. Everything on
+/// the serve hot path ([`super::gemm_auto`], the prepacked driver) uses
+/// this; benches and tests may pass an explicit [`Tier`] instead.
+pub fn select() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(detect)
+}
+
+/// True when a SIMD tier (not `Scalar`) is active.
+pub fn simd_available() -> bool {
+    select() != Tier::Scalar
+}
+
+/// True when the *hardware* supports `tier`, ignoring the environment
+/// kill-switch. The tier-explicit GEMM entry points assert this before
+/// dispatching into an `unsafe` micro-kernel, so a hand-constructed
+/// [`Tier`] can never execute instructions the CPU lacks.
+pub fn tier_supported(tier: Tier) -> bool {
+    match tier {
+        Tier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+    }
+}
+
+/// Label of the active tier: `"avx2"`, `"neon"` or `"scalar"`.
+pub fn active_tier() -> &'static str {
+    select().label()
+}
+
+/// AVX2 micro-kernel: 4 rows × one 8-lane `__m256` accumulator each.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Multiply one packed A strip by one packed B strip and add the
+    /// live `mr × nr` corner into C, exactly like the scalar
+    /// micro-kernel (same k order, mul+add — no FMA — so results are
+    /// bit-identical).
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime. Slice
+    /// bounds are asserted here; all loads go through `loadu` so no
+    /// alignment is required.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn micro_kernel(
+        kc: usize,
+        astrip: &[f32],
+        bstrip: &[f32],
+        c: &mut [f32],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        assert!(astrip.len() >= kc * MR && bstrip.len() >= kc * NR);
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut ap = astrip.as_ptr();
+        let mut bp = bstrip.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(bp);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ap), bv));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ap.add(1)), bv));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ap.add(2)), bv));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ap.add(3)), bv));
+            ap = ap.add(MR);
+            bp = bp.add(NR);
+        }
+        let mut tile = [[0.0f32; NR]; MR];
+        _mm256_storeu_ps(tile[0].as_mut_ptr(), acc0);
+        _mm256_storeu_ps(tile[1].as_mut_ptr(), acc1);
+        _mm256_storeu_ps(tile[2].as_mut_ptr(), acc2);
+        _mm256_storeu_ps(tile[3].as_mut_ptr(), acc3);
+        for (i, trow) in tile.iter().enumerate().take(mr) {
+            let crow = &mut c[i * ldc..i * ldc + nr];
+            for (cv, &av) in crow.iter_mut().zip(trow) {
+                *cv += av;
+            }
+        }
+    }
+}
+
+/// NEON micro-kernel: 4 rows × two 4-lane `float32x4_t` accumulators.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// NEON twin of the AVX2 kernel: same accumulation order, separate
+    /// `vmulq`/`vaddq` (no `vfmaq`), bit-identical to the scalar tile.
+    ///
+    /// # Safety
+    /// NEON is baseline on `aarch64-unknown-linux-gnu`, but the caller
+    /// still routes through runtime detection. Slice bounds are
+    /// asserted here; `vld1q`/`vst1q` are unaligned-safe.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn micro_kernel(
+        kc: usize,
+        astrip: &[f32],
+        bstrip: &[f32],
+        c: &mut [f32],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        assert!(astrip.len() >= kc * MR && bstrip.len() >= kc * NR);
+        let mut acc: [[float32x4_t; 2]; MR] = [[vdupq_n_f32(0.0); 2]; MR];
+        let mut ap = astrip.as_ptr();
+        let mut bp = bstrip.as_ptr();
+        for _ in 0..kc {
+            let b0 = vld1q_f32(bp);
+            let b1 = vld1q_f32(bp.add(4));
+            for (i, arow) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f32(*ap.add(i));
+                arow[0] = vaddq_f32(arow[0], vmulq_f32(av, b0));
+                arow[1] = vaddq_f32(arow[1], vmulq_f32(av, b1));
+            }
+            ap = ap.add(MR);
+            bp = bp.add(NR);
+        }
+        let mut tile = [[0.0f32; NR]; MR];
+        for (trow, arow) in tile.iter_mut().zip(&acc) {
+            vst1q_f32(trow.as_mut_ptr(), arow[0]);
+            vst1q_f32(trow.as_mut_ptr().add(4), arow[1]);
+        }
+        for (i, trow) in tile.iter().enumerate().take(mr) {
+            let crow = &mut c[i * ldc..i * ldc + nr];
+            for (cv, &av) in crow.iter_mut().zip(trow) {
+                *cv += av;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_labels_are_stable() {
+        assert_eq!(Tier::Scalar.label(), "scalar");
+        let t = select();
+        assert!(matches!(t.label(), "scalar" | "avx2" | "neon"));
+        assert_eq!(simd_available(), t != Tier::Scalar);
+        assert_eq!(active_tier(), t.label());
+    }
+}

@@ -31,6 +31,8 @@
 //!
 //! serve options:
 //!   --transport M      sim | tcp (overrides the deployment file)
+//!   --precision P      f32 | int8 fc-shard precision (overrides the
+//!                      deployment file; DESIGN.md §15)
 //!   --workers LIST     comma-separated worker host:port list (tcp);
 //!                      empty in tcp mode spawns a loopback fleet
 //!   --rate-rps R       Poisson arrival rate       [default: 50]
@@ -82,7 +84,7 @@ usage: cdc-dnn <command> [--artifacts DIR] [--results DIR] [--requests N]\n\
        [--workers H:P,..] [--rate-rps R] [--chaos-kill-ms T]\n\
        [--chaos-join-ms T] [--expect-no-loss] [--listen ADDR] [--join ADDR]\n\
        [--leave-after-ms T] [--net PROFILE] [--rate R] [--http ADDR]\n\
-       [--serve-ms T]\n\n\
+       [--serve-ms T] [--precision f32|int8]\n\n\
 commands: fig1 fig2 table1 case1 case2 fig16 fig17 fig18 calibrate ablate\n          scenarios synth serve gateway worker all\n";
 
 /// serve/worker options beyond the shared ExpCtx ones.
@@ -102,6 +104,7 @@ struct CliOpts {
     rate: Option<f64>,
     http: Option<String>,
     serve_ms: Option<u64>,
+    precision: Option<String>,
 }
 
 fn main() {
@@ -221,6 +224,10 @@ fn main() {
                 }));
                 i += 2;
             }
+            "--precision" => {
+                opts.precision = Some(need(i));
+                i += 2;
+            }
             "-h" | "--help" => usage(),
             other => {
                 eprintln!("unknown option {other}");
@@ -317,6 +324,9 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
                 "unknown --transport {other:?} (want sim | tcp)"
             )))
         }
+    }
+    if let Some(p) = opts.precision.as_deref() {
+        cfg.precision = cdc_dnn::kernels::Precision::parse(p)?;
     }
     if let Some(list) = opts.workers.as_deref() {
         // Listing worker addresses is an unambiguous request for real
@@ -501,6 +511,9 @@ fn gateway(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
                  (want tcp)"
             )))
         }
+    }
+    if let Some(p) = opts.precision.as_deref() {
+        cfg.precision = cdc_dnn::kernels::Precision::parse(p)?;
     }
     if let Some(list) = opts.workers.as_deref() {
         if let TransportSpec::Tcp(tcp) = &mut cfg.transport {

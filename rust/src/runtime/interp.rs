@@ -53,9 +53,23 @@ impl InterpRuntime {
     /// Execute an artifact by metadata. Inputs are pre-validated against
     /// `meta.params` by the facade.
     pub fn execute(&self, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.execute_packed(meta, inputs, None)
+    }
+
+    /// [`InterpRuntime::execute`] with optional pre-packed weight panels
+    /// (DESIGN.md §15): the blocked GEMM reads `packed` instead of
+    /// packing `inputs[0]` per call. The panels must have been packed
+    /// from the same weight matrix — dims are checked, content equality
+    /// is the deploy path's contract.
+    pub fn execute_packed(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[&Tensor],
+        packed: Option<&kernels::PackedWeights>,
+    ) -> Result<Tensor> {
         self.execs.set(self.execs.get() + 1);
         match meta.kind {
-            ArtifactKind::Fc => fc_shard(inputs[0], inputs[1], inputs[2], meta.relu),
+            ArtifactKind::Fc => fc_shard(inputs[0], inputs[1], inputs[2], meta.relu, packed),
             ArtifactKind::Conv => {
                 let geom = meta.geom.as_ref().ok_or_else(|| {
                     Error::Artifact(format!(
@@ -73,9 +87,28 @@ impl InterpRuntime {
                     geom.s,
                     &geom.padding,
                     meta.relu,
+                    packed,
                 )
             }
         }
+    }
+
+    /// Execute an int8-quantized fc shard: `dequant(qw @ quant(x)) + b
+    /// [relu]` (kind/shape validation happens in the facade's
+    /// `check_quant_inputs`).
+    pub fn execute_quant(
+        &self,
+        meta: &ArtifactMeta,
+        qw: &kernels::QuantWeights,
+        b: &Tensor,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.execs.set(self.execs.get() + 1);
+        let (m, _k) = qw.dims();
+        let n = x.shape()[1];
+        let mut out = vec![0.0f32; m * n];
+        kernels::qgemm(qw, x.data(), &mut out, n, Some(b.data()), meta.relu);
+        Tensor::new(vec![m, n], out)
     }
 
     /// Execute a built GEMM spec `(w, x[, b])`, counting the execution.
@@ -127,7 +160,17 @@ impl InterpRuntime {
 }
 
 /// fc shard: `w@x + b [relu]` with the bias column broadcast over n.
-fn fc_shard(w: &Tensor, b: &Tensor, x: &Tensor, relu: bool) -> Result<Tensor> {
+/// With `packed`, the blocked GEMM reads the deploy-time panels and
+/// skips per-call packing (dims must match `w`; mismatches fall back to
+/// the on-line path rather than erroring, so stale panels can never
+/// corrupt a result).
+fn fc_shard(
+    w: &Tensor,
+    b: &Tensor,
+    x: &Tensor,
+    relu: bool,
+    packed: Option<&kernels::PackedWeights>,
+) -> Result<Tensor> {
     let (m, k) = dims2(w, "fc weights")?;
     let (k2, n) = dims2(x, "fc input")?;
     if k != k2 {
@@ -140,8 +183,11 @@ fn fc_shard(w: &Tensor, b: &Tensor, x: &Tensor, relu: bool) -> Result<Tensor> {
         )));
     }
     let mut out = vec![0.0f32; m * n];
-    kernels::with_scratch(|sc| {
-        kernels::gemm_auto(w.data(), x.data(), &mut out, m, k, n, sc)
+    kernels::with_scratch(|sc| match packed {
+        Some(pw) if pw.dims() == (m, k) => {
+            kernels::gemm_prepacked_auto(pw, w.data(), x.data(), &mut out, n, sc)
+        }
+        _ => kernels::gemm_auto(w.data(), x.data(), &mut out, m, k, n, sc),
     });
     kernels::bias_relu(&mut out, m, n, Some(b.data()), relu);
     Tensor::new(vec![m, n], out)
@@ -156,7 +202,9 @@ fn dims2(t: &Tensor, what: &str) -> Result<(usize, usize)> {
 
 /// conv shard: im2col + the shared tiled GEMM + reshape/transpose to
 /// `(oh, ow, k_s)`, mirroring `conv_shard_fn` in `python/compile/model.py`.
-/// All intermediates come from the thread's scratch arena.
+/// All intermediates come from the thread's scratch arena. `packed`
+/// skips the per-call packing of `w` exactly as in [`fc_shard`].
+#[allow(clippy::too_many_arguments)]
 fn conv_shard(
     w: &Tensor,
     b: &Tensor,
@@ -165,6 +213,7 @@ fn conv_shard(
     stride: usize,
     padding: &str,
     relu: bool,
+    packed: Option<&kernels::PackedWeights>,
 ) -> Result<Tensor> {
     let (ks, wk) = dims2(w, "conv weights")?;
     let (h, wid, c) = match x.shape()[..] {
@@ -189,7 +238,12 @@ fn conv_shard(
         let mut cols = sc.take(rows * n_cols);
         fill_im2col(x.data(), h, wid, c, f, stride, pad_top, pad_left, oh, ow, &mut cols);
         let mut out = sc.take(ks * n_cols);
-        kernels::gemm_auto(w.data(), &cols, &mut out, ks, rows, n_cols, sc);
+        match packed {
+            Some(pw) if pw.dims() == (ks, rows) => {
+                kernels::gemm_prepacked_auto(pw, w.data(), &cols, &mut out, n_cols, sc)
+            }
+            _ => kernels::gemm_auto(w.data(), &cols, &mut out, ks, rows, n_cols, sc),
+        }
         kernels::bias_relu(&mut out, ks, n_cols, Some(b.data()), relu);
         // (k_s, oh*ow) row-major → (oh, ow, k_s) row-major.
         let mut data = vec![0.0f32; n_cols * ks];
@@ -373,9 +427,17 @@ mod tests {
             let x = Tensor::randn(vec![h, w, c], &mut rng);
             let wm = Tensor::randn(vec![k, f * f * c], &mut rng);
             let b = Tensor::randn(vec![k, 1], &mut rng);
-            let got =
-                conv_shard(&wm, &b, &x, f, s, if same { "SAME" } else { "VALID" }, false)
-                    .unwrap();
+            let got = conv_shard(
+                &wm,
+                &b,
+                &x,
+                f,
+                s,
+                if same { "SAME" } else { "VALID" },
+                false,
+                None,
+            )
+            .unwrap();
             let want = conv_naive(&x, &wm, &b, f, s, same);
             assert_eq!(got.shape(), want.shape(), "h{h}w{w}c{c}k{k}f{f}s{s}");
             assert!(
@@ -391,9 +453,9 @@ mod tests {
         let w = Tensor::new(vec![2, 2], vec![1., 0., 0., -1.]).unwrap();
         let b = Tensor::new(vec![2, 1], vec![0.5, 0.5]).unwrap();
         let x = Tensor::new(vec![2, 1], vec![1., 2.]).unwrap();
-        let lin = fc_shard(&w, &b, &x, false).unwrap();
+        let lin = fc_shard(&w, &b, &x, false, None).unwrap();
         assert_eq!(lin.data(), &[1.5, -1.5]);
-        let act = fc_shard(&w, &b, &x, true).unwrap();
+        let act = fc_shard(&w, &b, &x, true, None).unwrap();
         assert_eq!(act.data(), &[1.5, 0.0]);
     }
 
@@ -405,7 +467,7 @@ mod tests {
         let w = Tensor::randn(vec![96, 130], &mut rng);
         let b = Tensor::randn(vec![96, 1], &mut rng);
         let x = Tensor::randn(vec![130, 9], &mut rng);
-        let got = fc_shard(&w, &b, &x, true).unwrap();
+        let got = fc_shard(&w, &b, &x, true, None).unwrap();
         let mut want = w.matmul_naive(&x).unwrap();
         for (i, row) in want.data_mut().chunks_mut(9).enumerate() {
             for v in row.iter_mut() {
@@ -413,6 +475,44 @@ mod tests {
             }
         }
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fc_shard_packed_is_bitwise_identical() {
+        // Deploy-time packed panels must change nothing about the
+        // result — including on batched inputs and on GEMV shapes that
+        // fall back to the naive path.
+        let mut rng = Pcg32::seeded(34);
+        for (m, k, n) in [(96usize, 130usize, 9usize), (120, 400, 1), (64, 512, 16)] {
+            let w = Tensor::randn(vec![m, k], &mut rng);
+            let b = Tensor::randn(vec![m, 1], &mut rng);
+            let x = Tensor::randn(vec![k, n], &mut rng);
+            let pw = kernels::PackedWeights::pack(w.data(), m, k);
+            let plain = fc_shard(&w, &b, &x, true, None).unwrap();
+            let packed = fc_shard(&w, &b, &x, true, Some(&pw)).unwrap();
+            assert_eq!(plain.data(), packed.data(), "({m},{k},{n})");
+        }
+        // Mismatched panels (stale deploy state) fall back, not corrupt.
+        let w = Tensor::randn(vec![8, 8], &mut rng);
+        let b = Tensor::randn(vec![8, 1], &mut rng);
+        let x = Tensor::randn(vec![8, 1], &mut rng);
+        let wrong = kernels::PackedWeights::pack(&[0.0; 6], 2, 3);
+        let plain = fc_shard(&w, &b, &x, false, None).unwrap();
+        let got = fc_shard(&w, &b, &x, false, Some(&wrong)).unwrap();
+        assert_eq!(plain.data(), got.data());
+    }
+
+    #[test]
+    fn conv_shard_packed_is_bitwise_identical() {
+        let mut rng = Pcg32::seeded(35);
+        let (h, w, c, k, f, s) = (14usize, 14usize, 6usize, 16usize, 5usize, 1usize);
+        let x = Tensor::randn(vec![h, w, c], &mut rng);
+        let wm = Tensor::randn(vec![k, f * f * c], &mut rng);
+        let b = Tensor::randn(vec![k, 1], &mut rng);
+        let pw = kernels::PackedWeights::pack(wm.data(), k, f * f * c);
+        let plain = conv_shard(&wm, &b, &x, f, s, "SAME", true, None).unwrap();
+        let packed = conv_shard(&wm, &b, &x, f, s, "SAME", true, Some(&pw)).unwrap();
+        assert_eq!(plain.data(), packed.data());
     }
 
     #[test]

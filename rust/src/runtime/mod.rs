@@ -23,6 +23,7 @@ pub mod server;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::kernels::{PackedWeights, QuantWeights};
 use crate::tensor::Tensor;
 pub use manifest::{ArtifactKind, ArtifactMeta, ConvGeom, Manifest, ModelManifest};
 
@@ -48,12 +49,18 @@ enum Backend {
 /// Short label naming the default compute backend + kernel flavor, for
 /// baseline attribution in benches/examples (`BENCH_*.json` records must
 /// say which backend produced their numbers). The interpreter runs on
-/// the tiled kernel layer since DESIGN.md §8.
+/// the tiled kernel layer (DESIGN.md §8) with the runtime-detected SIMD
+/// micro-kernel tier (§15): `interp-avx2` / `interp-neon` when a SIMD
+/// tile is active, `interp-tiled` on the scalar fallback.
 pub fn backend_label() -> &'static str {
     if cfg!(feature = "pjrt") {
         "pjrt"
     } else {
-        "interp-tiled"
+        match crate::kernels::active_tier() {
+            "avx2" => "interp-avx2",
+            "neon" => "interp-neon",
+            _ => "interp-tiled",
+        }
     }
 }
 
@@ -129,12 +136,43 @@ impl Runtime {
         name: &str,
         inputs: &[&Tensor],
     ) -> Result<Tensor> {
+        self.execute_prepared(manifest, name, inputs, None, None)
+    }
+
+    /// [`Runtime::execute`] with a task's deploy-time kernel state
+    /// (DESIGN.md §15).
+    ///
+    /// * `packed`: pre-packed weight panels — the interpreter's blocked
+    ///   GEMM reads panels from the arena instead of packing per call
+    ///   (ignored by PJRT, which holds its own compiled form). Inputs
+    ///   are the usual `(w, b, x)`; `w` stays the naive-path fallback.
+    /// * `quant`: int8 weights — inputs shrink to `(b, x)`, the GEMM
+    ///   runs in the quantized domain with an i32 accumulator and a
+    ///   dequantize epilogue. fc artifacts only, interpreter only.
+    pub fn execute_prepared(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+        inputs: &[&Tensor],
+        packed: Option<&PackedWeights>,
+        quant: Option<&QuantWeights>,
+    ) -> Result<Tensor> {
         let meta = manifest.artifact(name)?;
+        if let Some(q) = quant {
+            check_quant_inputs(meta, q, inputs)?;
+            return match &self.backend {
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(_) => Err(Error::Config(
+                    "int8 precision requires the interpreter backend".into(),
+                )),
+                Backend::Interp(rt) => rt.execute_quant(meta, q, inputs[0], inputs[1]),
+            };
+        }
         check_inputs(meta, inputs)?;
         match &self.backend {
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(rt) => rt.execute(manifest, meta, inputs),
-            Backend::Interp(rt) => rt.execute(meta, inputs),
+            Backend::Interp(rt) => rt.execute_packed(meta, inputs, packed),
         }
     }
 
@@ -195,6 +233,60 @@ impl Runtime {
             Backend::Interp(rt) => rt.run_gemm(exe, inputs),
         }
     }
+}
+
+/// Validate a quantized task's inputs `(b, x)` against the artifact
+/// spec: the int8 weights stand in for `params[0]`, so their dims must
+/// match the weight spec, and the activation keeps the fc
+/// column-polymorphism of [`check_inputs`].
+fn check_quant_inputs(meta: &ArtifactMeta, q: &QuantWeights, inputs: &[&Tensor]) -> Result<()> {
+    if meta.kind != ArtifactKind::Fc {
+        return Err(Error::Config(format!(
+            "{}: int8 precision only applies to fc shards",
+            meta.name
+        )));
+    }
+    if meta.params.len() != 3 || inputs.len() != 2 {
+        return Err(Error::Shape(format!(
+            "{}: quantized task expects (b, x) against a (w, b, x) artifact; \
+             got {} inputs for {} params",
+            meta.name,
+            inputs.len(),
+            meta.params.len()
+        )));
+    }
+    let (m, k) = q.dims();
+    if meta.params[0] != [m, k] {
+        return Err(Error::Shape(format!(
+            "{}: int8 weights ({m},{k}) != artifact spec {:?}",
+            meta.name, meta.params[0]
+        )));
+    }
+    let b = inputs[0];
+    if b.shape() != &meta.params[1][..] {
+        return Err(Error::Shape(format!(
+            "{}: bias shape {:?} != artifact spec {:?}",
+            meta.name,
+            b.shape(),
+            meta.params[1]
+        )));
+    }
+    let x = inputs[1];
+    let spec = &meta.params[2];
+    let batched_ok = spec.len() == 2
+        && spec[1] == 1
+        && x.shape().len() == 2
+        && x.shape()[0] == spec[0]
+        && x.shape()[1] >= 1;
+    if !batched_ok {
+        return Err(Error::Shape(format!(
+            "{}: activation shape {:?} != artifact spec {:?}",
+            meta.name,
+            x.shape(),
+            spec
+        )));
+    }
+    Ok(())
 }
 
 /// Validate tensor inputs against an artifact's parameter spec.

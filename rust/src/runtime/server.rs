@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::kernels::{PackedWeights, QuantWeights};
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
 
@@ -24,6 +25,12 @@ enum Request {
     Execute {
         artifact: String,
         inputs: Vec<Arc<Tensor>>,
+        /// Deploy-time packed weight panels (DESIGN.md §15) — forwarded
+        /// to the runtime so the hot path skips per-call packing.
+        packed: Option<Arc<PackedWeights>>,
+        /// Int8 weights for quantized tasks; when set, `inputs` is
+        /// `[b, x]` and the f32 weight tensor is absent.
+        quant: Option<Arc<QuantWeights>>,
         reply: Sender<std::result::Result<Tensor, String>>,
     },
     Preload {
@@ -43,9 +50,24 @@ impl ComputeHandle {
     /// Execute an artifact by name; blocks until the result is ready.
     /// Inputs are `Arc`-shared: no tensor payload is copied to enqueue.
     pub fn execute(&self, artifact: &str, inputs: Vec<Arc<Tensor>>) -> Result<Tensor> {
+        self.execute_prepared(artifact, inputs, None, None)
+    }
+
+    /// [`ComputeHandle::execute`] carrying a task's deploy-time kernel
+    /// state (DESIGN.md §15): pre-packed weight panels and/or int8
+    /// weights, both `Arc`-shared like the inputs. For a quantized task
+    /// `inputs` is `[b, x]` — the f32 weight tensor stays coordinator-
+    /// side.
+    pub fn execute_prepared(
+        &self,
+        artifact: &str,
+        inputs: Vec<Arc<Tensor>>,
+        packed: Option<Arc<PackedWeights>>,
+        quant: Option<Arc<QuantWeights>>,
+    ) -> Result<Tensor> {
         let (reply, rx) = channel();
         self.tx
-            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, packed, quant, reply })
             .map_err(|_| Error::Fleet("compute server is gone".into()))?;
         rx.recv()
             .map_err(|_| Error::Fleet("compute server dropped reply".into()))?
@@ -139,11 +161,16 @@ fn serve(
     let _ = init_tx.send(Ok(()));
     while let Ok(req) = rx.recv() {
         match req {
-            Request::Execute { artifact, inputs, reply } => {
-                let refs: Vec<&Tensor> =
-                    inputs.iter().map(|a| a.as_ref()).collect();
+            Request::Execute { artifact, inputs, packed, quant, reply } => {
+                let refs: Vec<&Tensor> = inputs.iter().map(|a| a.as_ref()).collect();
                 let res = runtime
-                    .execute(&manifest, &artifact, &refs)
+                    .execute_prepared(
+                        &manifest,
+                        &artifact,
+                        &refs,
+                        packed.as_deref(),
+                        quant.as_deref(),
+                    )
                     .map_err(|e| e.to_string());
                 execs.store(runtime.exec_count(), Ordering::Relaxed);
                 let _ = reply.send(res);

@@ -232,7 +232,11 @@ impl Transport for TcpTransport {
         // connection death: the affected tasks' dispatches later
         // resolve as synthesised losses.
         for task in &tasks {
-            let payload = 4 * (task.w.len() + task.b.len()) + task.artifact.len() + 128;
+            let wbytes = match &task.quant {
+                Some(q) => q.bytes(),
+                None => 4 * task.w.len(),
+            };
+            let payload = wbytes + 4 * task.b.len() + task.artifact.len() + 128;
             if payload > wire::MAX_FRAME_LEN as usize {
                 return Err(Error::Config(format!(
                     "task {}: ~{payload} bytes of weights exceed the wire frame \

@@ -22,7 +22,7 @@
 //! |------|-------------|------------------------------------------------|
 //! | 0x01 | Hello       | magic u32, proto u16, seed u64, device u32     |
 //! | 0x02 | HelloAck    | proto u16 (worker → coordinator)               |
-//! | 0x03 | Deploy      | n u32, n × task(id, artifact, macs, reply_bytes, w, b) |
+//! | 0x03 | Deploy      | n u32, n × task(id, artifact, macs, reply_bytes, precision u8, weights, b) |
 //! | 0x04 | Undeploy    | n u32, n × id u64                              |
 //! | 0x05 | Work        | req u64, n u32, n × task u64, batch u32, input |
 //! | 0x06 | SetFailure  | tag u8 (+ u64 / f64)                           |
@@ -41,20 +41,29 @@
 //! listen port and join the fleet mid-session, `Heartbeat`/
 //! `HeartbeatAck` drive the suspicion ladder, and `Leave` asks for a
 //! graceful drain.
+//!
+//! A Deploy task's `weights` field depends on its precision byte
+//! (DESIGN.md §15): `0` (f32) carries the weight tensor; `1` (int8)
+//! carries `rows u32, cols u32, rows.div_ceil(4) × scale f32,
+//! rows×cols × i8` — the quantized form ships directly, about 4×
+//! smaller on the wire, and the worker executes it as-is. Packed f32
+//! panels are **never** on the wire: their layout is arch-local, so
+//! each worker rebuilds them from the f32 tensor at Deploy receipt.
 
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
 use crate::fleet::{FailurePlan, NetConfig, TaskDef};
-use crate::kernels::Scratch;
+use crate::kernels::{QuantWeights, Scratch, QBLOCK_ROWS};
 use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any wire-format change. The handshake
 /// rejects a peer speaking a different version — see
 /// [`proto_mismatch`] for the diagnostic it must produce. Version 2
 /// added the live-membership verbs (Register/RegisterAck/Heartbeat/
-/// HeartbeatAck/Leave).
-pub const PROTO_VERSION: u16 = 2;
+/// HeartbeatAck/Leave); version 3 added the per-task precision byte to
+/// Deploy (int8 weight shards ship quantized).
+pub const PROTO_VERSION: u16 = 3;
 
 /// Handshake magic ("CDCW" little-endian).
 pub const MAGIC: u32 = 0x5743_4443;
@@ -109,7 +118,8 @@ pub fn proto_mismatch(peer: &str, local: &str, peer_proto: u16) -> Error {
 }
 
 /// One deployed task as carried by a Deploy frame (the on-wire twin of
-/// [`TaskDef`], with owned weight tensors).
+/// [`TaskDef`], with owned weight payloads). Exactly one of `w` /
+/// `quant` is set, per the task's precision byte.
 #[derive(Debug, Clone)]
 pub struct WireTask {
     /// Session-unique task id.
@@ -120,9 +130,12 @@ pub struct WireTask {
     pub macs: u64,
     /// Reply payload bytes per batch member (drives emulation).
     pub reply_bytes: u64,
-    /// Weight shard.
-    pub w: Tensor,
-    /// Bias shard.
+    /// f32 weight shard (precision byte 0).
+    pub w: Option<Tensor>,
+    /// Int8 weight shard (precision byte 1) — ships quantized, the
+    /// worker executes it in the quantized domain (DESIGN.md §15).
+    pub quant: Option<QuantWeights>,
+    /// Bias shard (always f32).
     pub b: Tensor,
 }
 
@@ -266,6 +279,10 @@ impl Enc {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -293,6 +310,21 @@ impl Enc {
         for &v in t.data() {
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
+    }
+
+    fn qweights(&mut self, q: &QuantWeights) {
+        let (m, k) = q.dims();
+        let elems = (m as u64).saturating_mul(k as u64);
+        // Same always-on guard as `tensor`: the encoder must never
+        // produce what the decoder rejects.
+        assert!(elems <= MAX_TENSOR_ELEMS, "wire int8 weights of {elems} elements exceed cap");
+        self.u32(m as u32);
+        self.u32(k as u32);
+        for &s in q.scales() {
+            self.f32(s);
+        }
+        // i8 → u8 is a bit-level reinterpretation, not a value cast.
+        self.buf.extend(q.data().iter().map(|&v| v as u8));
     }
 
     fn finish(mut self) -> Vec<u8> {
@@ -329,7 +361,9 @@ pub fn hello_ack() -> Vec<u8> {
 }
 
 /// Encode a Deploy frame from coordinator-side task definitions (the
-/// `Arc`'d weight shards are serialised by value).
+/// `Arc`'d weight shards are serialised by value). A quantized task
+/// ships its int8 form (precision byte 1) instead of the f32 tensor;
+/// packed panels are arch-local and never serialised.
 pub fn deploy(tasks: &[TaskDef]) -> Vec<u8> {
     let mut e = Enc::frame(K_DEPLOY);
     e.u32(tasks.len() as u32);
@@ -338,7 +372,16 @@ pub fn deploy(tasks: &[TaskDef]) -> Vec<u8> {
         e.str(&t.artifact);
         e.u64(t.macs);
         e.u64(t.reply_bytes);
-        e.tensor(t.w.as_ref());
+        match &t.quant {
+            Some(q) => {
+                e.u8(1);
+                e.qweights(q);
+            }
+            None => {
+                e.u8(0);
+                e.tensor(t.w.as_ref());
+            }
+        }
         e.tensor(t.b.as_ref());
     }
     e.finish()
@@ -566,6 +609,30 @@ impl<'a, 's> Dec<'a, 's> {
             .map_err(|e| Error::Wire(format!("tensor on the wire: {e}")))
     }
 
+    /// Decode an int8 weight block (`rows u32, cols u32, scales, i8
+    /// data`). All caps run before any allocation, mirroring `tensor`.
+    fn qweights(&mut self) -> Result<QuantWeights> {
+        let m = self.u32()? as usize;
+        let k = self.u32()? as usize;
+        let elems = (m as u64).saturating_mul(k as u64);
+        if elems > MAX_TENSOR_ELEMS {
+            return Err(Error::Wire(format!(
+                "int8 weights of ≥ {elems} elements exceed cap {MAX_TENSOR_ELEMS}"
+            )));
+        }
+        let n_scales = m.div_ceil(QBLOCK_ROWS);
+        // Verify every byte exists on the wire *before* allocating.
+        let scale_bytes = self.take(n_scales * 4)?;
+        let data_bytes = self.take(elems as usize)?;
+        let scales: Vec<f32> = scale_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let data: Vec<i8> = data_bytes.iter().map(|&b| b as i8).collect();
+        QuantWeights::from_parts(m, k, data, scales)
+            .map_err(|e| Error::Wire(format!("int8 weights on the wire: {e}")))
+    }
+
     /// Read a `u32` element count, bounds-checked against both an
     /// explicit cap and the bytes actually present (`min_elem_bytes`
     /// per element), before any allocation.
@@ -618,16 +685,26 @@ fn decode_with(mut d: Dec<'_, '_>, kind: u8) -> Result<Frame> {
         }
         K_HELLO_ACK => Frame::HelloAck { proto: d.u16()? },
         K_DEPLOY => {
-            // Each task is ≥ 8+2+8+8 + 2×(1 byte rank) bytes.
+            // Each task is ≥ 8+2+8+8 + precision byte + 2×(1 byte rank).
             let n = d.count(MAX_TASKS, 28)?;
             let mut tasks = Vec::with_capacity(n);
             for _ in 0..n {
+                let id = d.u64()?;
+                let artifact = d.str()?;
+                let macs = d.u64()?;
+                let reply_bytes = d.u64()?;
+                let (w, quant) = match d.u8()? {
+                    0 => (Some(d.tensor()?), None),
+                    1 => (None, Some(d.qweights()?)),
+                    t => return Err(Error::Wire(format!("unknown task precision tag {t}"))),
+                };
                 tasks.push(WireTask {
-                    id: d.u64()?,
-                    artifact: d.str()?,
-                    macs: d.u64()?,
-                    reply_bytes: d.u64()?,
-                    w: d.tensor()?,
+                    id,
+                    artifact,
+                    macs,
+                    reply_bytes,
+                    w,
+                    quant,
                     b: d.tensor()?,
                 });
             }

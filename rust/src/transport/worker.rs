@@ -35,6 +35,7 @@ use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::fleet::{self, FailurePlan, NetConfig};
+use crate::kernels::{PackedWeights, QuantWeights};
 use crate::rng::Pcg32;
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
@@ -82,11 +83,27 @@ impl WorkerOptions {
 /// address after it.
 pub const LISTENING_PREFIX: &str = "cdc-dnn worker listening on ";
 
+/// A deployed task's resident weights (DESIGN.md §15): the f32 tensor
+/// with locally rebuilt packed panels, or the int8 form as shipped.
+/// Packed panels are never on the wire — their layout is arch-local —
+/// so each worker rebuilds them once at Deploy receipt.
+enum TaskWeights {
+    F32 {
+        w: Tensor,
+        /// Built when the shape can ever take the blocked kernel
+        /// ([`PackedWeights::pays_off`]); `None` keeps the naive path.
+        packed: Option<PackedWeights>,
+    },
+    Int8 {
+        quant: QuantWeights,
+    },
+}
+
 struct WorkerTask {
     artifact: String,
     macs: u64,
     reply_bytes: u64,
-    w: Tensor,
+    weights: TaskWeights,
     b: Tensor,
 }
 
@@ -254,8 +271,25 @@ fn serve_frames(
             }
             Frame::Deploy { tasks } => {
                 for t in tasks {
-                    let WireTask { id, artifact, macs, reply_bytes, w, b } = t;
-                    st.tasks.insert(id, WorkerTask { artifact, macs, reply_bytes, w, b });
+                    let WireTask { id, artifact, macs, reply_bytes, w, quant, b } = t;
+                    let weights = match (w, quant) {
+                        (_, Some(q)) => TaskWeights::Int8 { quant: q },
+                        (Some(w), None) => {
+                            let packed = match w.shape() {
+                                [m, k] if PackedWeights::pays_off(*m, *k) => {
+                                    Some(PackedWeights::pack(w.data(), *m, *k))
+                                }
+                                _ => None,
+                            };
+                            TaskWeights::F32 { w, packed }
+                        }
+                        (None, None) => {
+                            return Err(Error::Wire(format!(
+                                "deployed task {id} carries no weights"
+                            )));
+                        }
+                    };
+                    st.tasks.insert(id, WorkerTask { artifact, macs, reply_bytes, weights, b });
                 }
             }
             Frame::Undeploy { ids } => {
@@ -311,9 +345,20 @@ fn work(
     for task_id in tasks {
         let result = match st.tasks.get(&task_id) {
             Some(t) => {
-                let out = runtime
-                    .execute(manifest, &t.artifact, &[&t.w, &t.b, &input])
-                    .ok();
+                let out = match &t.weights {
+                    TaskWeights::F32 { w, packed } => runtime
+                        .execute_prepared(
+                            manifest,
+                            &t.artifact,
+                            &[w, &t.b, &input],
+                            packed.as_ref(),
+                            None,
+                        )
+                        .ok(),
+                    TaskWeights::Int8 { quant } => runtime
+                        .execute_prepared(manifest, &t.artifact, &[&t.b, &input], None, Some(quant))
+                        .ok(),
+                };
                 if let Some(rate) = st.rate {
                     let ms = (batch as u64 * t.macs) as f64 / rate;
                     sleep_ms(ms);

@@ -1,0 +1,221 @@
+//! SIMD dispatch-tier properties (DESIGN.md §15). Whatever micro-kernel
+//! tier runtime detection selects (AVX2 on x86_64, NEON on aarch64,
+//! scalar otherwise), results must be **bit-identical** to the scalar
+//! register tile on every shape — mul+add ordering is part of the kernel
+//! contract, not a tolerance question — and bit-identical to the naive
+//! triple loop whenever the depth fits one K panel (`k <= KC`, so panel
+//! accumulation never reorders the sum). The packed-weight and threaded
+//! drivers inherit the same contract. On a scalar-only host the SIMD
+//! assertions degenerate to scalar == scalar and still run; the CI
+//! aarch64 job executes this file under QEMU so the NEON tile is proven,
+//! and the x86_64 runners prove AVX2.
+//!
+//! Also here: the int8 quantized-CDC property — reconstructing a lost
+//! shard's output from the quantized parity task stays within the sum of
+//! the members' computable error bounds of the f32 oracle.
+
+use cdc_dnn::kernels::{self, simd, PackedWeights, QuantWeights, Scratch, Tier, KC};
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::testkit;
+
+/// Unit dims, primes, off-tile sizes, strip remainders, empty dims, and
+/// a zero-depth multiply (c must come back exactly zero).
+const EDGE_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (7, 1, 3),
+    (1, 64, 9),
+    (13, 17, 11),
+    (31, 31, 31),
+    (64, 64, 64),
+    (65, 67, 63),
+    (129, 96, 33),
+    (4, 256, 8),
+    (257, 19, 130),
+    (3, 300, 2),
+    (5, 0, 7),
+    (0, 3, 4),
+    (6, 9, 0),
+];
+
+fn randv(n: usize, rng: &mut Pcg32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Index of the first bitwise mismatch, if any — f32 equality here is
+/// `to_bits`, so -0.0 vs 0.0 or a 1-ulp drift fails loudly.
+fn first_bit_diff(a: &[f32], b: &[f32]) -> Option<usize> {
+    a.iter().zip(b).position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+fn note_tier() -> Tier {
+    let tier = simd::select();
+    if tier == Tier::Scalar {
+        eprintln!("note: no SIMD tier on this host — asserting scalar == scalar");
+    }
+    tier
+}
+
+#[test]
+fn active_tier_is_bitwise_identical_to_scalar_tile() {
+    let tier = note_tier();
+    let mut rng = Pcg32::seeded(1501);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in EDGE_SHAPES {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_tiled_with(&a, &b, &mut want, m, k, n, &mut sc, Tier::Scalar);
+        kernels::gemm_tiled_with(&a, &b, &mut got, m, k, n, &mut sc, tier);
+        assert_eq!(first_bit_diff(&got, &want), None, "{} vs scalar ({m},{k},{n})", tier.label());
+    }
+}
+
+#[test]
+fn active_tier_is_bitwise_identical_to_naive_within_one_k_panel() {
+    // One K panel means the blocked path accumulates each c element in
+    // the same scalar order as the naive loop — so for k <= KC the
+    // entire ladder (naive / tiled / simd) must agree to the bit.
+    let tier = note_tier();
+    let mut rng = Pcg32::seeded(1502);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in EDGE_SHAPES.iter().filter(|&&(_, k, _)| k <= KC) {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_naive(&a, &b, &mut want, m, k, n);
+        kernels::gemm_tiled_with(&a, &b, &mut got, m, k, n, &mut sc, tier);
+        assert_eq!(first_bit_diff(&got, &want), None, "{} vs naive ({m},{k},{n})", tier.label());
+    }
+}
+
+#[test]
+fn threaded_driver_is_bitwise_identical_across_thread_counts() {
+    // Row partitioning must never change any element's accumulation
+    // order: every thread count produces the single-threaded bits.
+    let tier = note_tier();
+    let mut rng = Pcg32::seeded(1503);
+    let mut sc = Scratch::new();
+    for &threads in &[1usize, 2, 3, 8] {
+        for &(m, k, n) in EDGE_SHAPES {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            kernels::gemm_tiled_with(&a, &b, &mut want, m, k, n, &mut sc, tier);
+            kernels::gemm_threaded_with(&a, &b, &mut got, m, k, n, threads, tier);
+            assert_eq!(
+                first_bit_diff(&got, &want),
+                None,
+                "threaded t={threads} {} ({m},{k},{n})",
+                tier.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn prepacked_weights_are_bitwise_identical_to_on_the_fly_packing() {
+    // Deploy-time packing rearranges storage, not arithmetic: the
+    // prepacked single-thread and threaded paths must reproduce the
+    // exact bits of packing A on the fly, on and off the tile grid.
+    let tier = note_tier();
+    let mut rng = Pcg32::seeded(1504);
+    let mut sc = Scratch::new();
+    for &(m, k, n) in &[(4usize, 8usize, 8usize), (64, 64, 64), (65, 300, 63), (129, 96, 33)] {
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let pw = PackedWeights::pack(&a, m, k);
+        assert_eq!(pw.dims(), (m, k));
+        let mut want = vec![0.0f32; m * n];
+        let mut got = vec![0.0f32; m * n];
+        kernels::gemm_tiled_with(&a, &b, &mut want, m, k, n, &mut sc, tier);
+        kernels::gemm_prepacked(&pw, &b, &mut got, n, &mut sc, tier);
+        assert_eq!(first_bit_diff(&got, &want), None, "prepacked ({m},{k},{n})");
+        let mut thr = vec![0.0f32; m * n];
+        kernels::gemm_prepacked_threaded(&pw, &b, &mut thr, n, 3, tier);
+        assert_eq!(first_bit_diff(&thr, &want), None, "prepacked threaded ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn quantized_cdc_reconstruction_stays_within_summed_error_bounds() {
+    // The int8 deployment quantizes the CDC parity task's weights (the
+    // f32 row-sum of the group) exactly like the data shards, so a lost
+    // shard's output is recovered as `parity_out - Σ received` entirely
+    // in the dequantized domain. Property: that recovery differs from
+    // the lost shard's f32 oracle by at most the sum of every group
+    // member's computable quantization bound (DESIGN.md §15) — each
+    // term of the subtraction contributes its own bound, nothing more.
+    testkit::forall(
+        0x51d8,
+        40,
+        |rng| {
+            let g = 2 + rng.below(3); // data shards in the CDC group
+            let m = 1 + rng.below(24); // rows per shard
+            let k = 1 + rng.below(64);
+            let n = 1 + rng.below(4);
+            let shards: Vec<Vec<f32>> = (0..g).map(|_| randv(m * k, rng)).collect();
+            let x = randv(k * n, rng);
+            let lost = rng.below(g);
+            (g, m, k, n, shards, x, lost)
+        },
+        |(g, m, k, n, shards, x, lost)| {
+            let (m, k, n) = (*m, *k, *n);
+            // Coordinator side: parity weights are the f32 sum of the
+            // group, quantized like any other shard.
+            let mut parity = vec![0.0f32; m * k];
+            for w in shards {
+                for (p, &v) in parity.iter_mut().zip(w) {
+                    *p += v;
+                }
+            }
+            let qs: Vec<QuantWeights> =
+                shards.iter().map(|w| QuantWeights::quantize(w, m, k)).collect();
+            let qp = QuantWeights::quantize(&parity, m, k);
+
+            // Worker side: every surviving task runs the int8 kernel.
+            let mut outs = vec![vec![0.0f32; m * n]; *g];
+            for (o, q) in outs.iter_mut().zip(&qs) {
+                kernels::qgemm(q, x, o, n, None, false);
+            }
+            let mut pout = vec![0.0f32; m * n];
+            kernels::qgemm(&qp, x, &mut pout, n, None, false);
+
+            // Recovery of the lost shard, and its f32 oracle.
+            let mut rec = pout;
+            for (i, o) in outs.iter().enumerate() {
+                if i != *lost {
+                    for (r, &v) in rec.iter_mut().zip(o) {
+                        *r -= v;
+                    }
+                }
+            }
+            let mut oracle = vec![0.0f32; m * n];
+            kernels::gemm_naive(&shards[*lost], x, &mut oracle, m, k, n);
+
+            // Summed bound: one term per task in the subtraction chain.
+            let mut bound = kernels::error_bound(&qp, x, n);
+            for (i, q) in qs.iter().enumerate() {
+                if i != *lost {
+                    for (b, v) in bound.iter_mut().zip(kernels::error_bound(q, x, n)) {
+                        *b += v;
+                    }
+                }
+            }
+            for idx in 0..m * n {
+                let err = (rec[idx] - oracle[idx]).abs();
+                if err > bound[idx] + 1e-4 {
+                    return Err(format!(
+                        "g={g} ({m},{k},{n}) lost={lost} elem {idx}: \
+                         err {err} > bound {}",
+                        bound[idx]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

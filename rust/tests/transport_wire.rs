@@ -7,6 +7,7 @@ use std::io::Cursor;
 use std::sync::Arc;
 
 use cdc_dnn::fleet::{FailurePlan, NetConfig, TaskDef};
+use cdc_dnn::kernels::Precision;
 use cdc_dnn::rng::Pcg32;
 use cdc_dnn::tensor::Tensor;
 use cdc_dnn::testkit;
@@ -161,15 +162,15 @@ fn payload_frames_roundtrip_property() {
                 Frame::Reply { result: None, .. } => {}
                 other => return Err(format!("lost reply decoded as {other:?}")),
             }
-            // Deploy
-            let def = TaskDef {
-                id: tasks[0],
-                artifact: format!("fc_m{}_k{}_lin", w.shape()[0], w.shape()[1]),
-                w: Arc::new(w.clone()),
-                b: Arc::new(bias.clone()),
-                macs: *req % 1_000_000,
-                reply_bytes: *req % 4096,
-            };
+            // Deploy (f32 precision byte 0)
+            let def = TaskDef::new(
+                tasks[0],
+                format!("fc_m{}_k{}_lin", w.shape()[0], w.shape()[1]),
+                Arc::new(w.clone()),
+                Arc::new(bias.clone()),
+                *req % 1_000_000,
+                *req % 4096,
+            );
             match roundtrip(&wire::deploy(&[def.clone()])) {
                 Frame::Deploy { tasks: ts } => {
                     let t = &ts[0];
@@ -177,13 +178,27 @@ fn payload_frames_roundtrip_property() {
                         || t.artifact != def.artifact
                         || t.macs != def.macs
                         || t.reply_bytes != def.reply_bytes
-                        || &t.w != w
+                        || t.w.as_ref() != Some(w)
+                        || t.quant.is_some()
                         || &t.b != bias
                     {
                         return Err("deploy roundtrip mismatch".into());
                     }
                 }
                 other => return Err(format!("deploy decoded as {other:?}")),
+            }
+            // Deploy (int8 precision byte 1): the quantized form must
+            // survive the wire bit-for-bit — scales and i8 data both.
+            let qdef = def.clone().prepare(Precision::Int8, true);
+            let q = qdef.quant.as_ref().expect("2-d fc task quantizes").clone();
+            match roundtrip(&wire::deploy(&[qdef])) {
+                Frame::Deploy { tasks: ts } => {
+                    let t = &ts[0];
+                    if t.w.is_some() || t.quant.as_ref() != Some(q.as_ref()) || &t.b != bias {
+                        return Err("quantized deploy roundtrip mismatch".into());
+                    }
+                }
+                other => return Err(format!("quantized deploy decoded as {other:?}")),
             }
             Ok(())
         },
@@ -265,18 +280,20 @@ fn garbage_never_panics() {
 /// mutation fuzzer perturbs.
 fn corpus() -> Vec<Vec<u8>> {
     let t = Tensor::col(&[1.0, -2.5, 3.25, 0.0]);
-    let def = TaskDef {
-        id: 11,
-        artifact: "fc_m4_k4_lin".into(),
-        w: Arc::new(Tensor::randn(vec![4, 4], &mut Pcg32::seeded(1))),
-        b: Arc::new(Tensor::col(&[0.0, 0.0, 0.0, 0.0])),
-        macs: 16,
-        reply_bytes: 16,
-    };
+    let def = TaskDef::new(
+        11,
+        "fc_m4_k4_lin",
+        Arc::new(Tensor::randn(vec![4, 4], &mut Pcg32::seeded(1))),
+        Arc::new(Tensor::col(&[0.0, 0.0, 0.0, 0.0])),
+        16,
+        16,
+    );
+    let qdef = def.clone().prepare(Precision::Int8, true);
     vec![
         wire::hello(0xfeed, 3),
         wire::hello_ack(),
         wire::deploy(&[def]),
+        wire::deploy(&[qdef]),
         wire::undeploy(&[11, 12]),
         wire::work(7, &[11], 2, &t),
         wire::reply(7, 11, Some(&t)),

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Fold CI bench artifacts into the committed baseline seeds.
+#
+# Usage: scripts/promote_baselines.sh [ARTIFACT_DIR]
+#
+# Scans ARTIFACT_DIR (default: .) recursively for BENCH_*.metrics.json
+# files (written by cdc_dnn::bench::guard_baseline on every bench run;
+# the CI bench matrix uploads them as artifacts — download with
+# `gh run download <run-id>`) and merges each file's "metrics" object
+# into rust/baselines/BENCH_<name>.json: existing keys are updated, new
+# keys added, and every non-"metrics" key of the seed (e.g. the
+# transport seed's "note") is preserved. Plain BENCH_*.json files are
+# accepted too when they are seed-shaped (carry a "metrics" object);
+# bench result docs without one are skipped.
+#
+# The script only edits files — review `git diff rust/baselines` and
+# commit. Seeds should only ever contain numbers measured on the
+# enforcing CI runner class (see rust/baselines/README.md).
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+src="${1:-.}"
+exec python3 - "$src" "$root/rust/baselines" <<'PY'
+import json
+import pathlib
+import sys
+
+src = pathlib.Path(sys.argv[1])
+dst = pathlib.Path(sys.argv[2])
+if not src.is_dir():
+    sys.exit(f"promote_baselines: artifact dir {src} does not exist")
+
+# Never promote the seeds into themselves when scanning the repo root.
+candidates = sorted(p for p in src.rglob("BENCH_*.json") if dst not in p.parents)
+if not candidates:
+    sys.exit(f"promote_baselines: no BENCH_*.json under {src}")
+
+promoted = 0
+for path in candidates:
+    try:
+        doc = json.loads(path.read_text())
+    except ValueError as e:
+        print(f"  skip {path}: unparsable ({e})")
+        continue
+    metrics = doc.get("metrics") if isinstance(doc, dict) else None
+    if not isinstance(metrics, dict) or not metrics:
+        print(f'  skip {path}: no "metrics" object (result doc, not a seed)')
+        continue
+    name = path.name.removesuffix(".json").removesuffix(".metrics")
+    seed_path = dst / f"{name}.json"
+    seed = json.loads(seed_path.read_text()) if seed_path.exists() else {}
+    old = seed.get("metrics", {})
+    changed = sum(1 for k, v in metrics.items() if old.get(k) != v)
+    merged = dict(seed)
+    merged["metrics"] = {**old, **metrics}
+    seed_path.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+    print(f"  {seed_path}: merged {len(metrics)} keys ({changed} changed) from {path}")
+    promoted += 1
+
+if promoted == 0:
+    sys.exit("promote_baselines: nothing promotable found")
+print(f"promoted {promoted} file(s) — review `git diff rust/baselines` and commit")
+PY
