@@ -401,6 +401,32 @@ mod tests {
     }
 
     #[test]
+    fn shipped_configs_carry_no_deprecated_keys() {
+        // The hard-deprecated `reaper_tick_ms` no-op must stay scrubbed
+        // from every example deployment we ship (old user files still
+        // parse with a one-time warning, tested above) — and every
+        // shipped file must actually load.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let mut checked = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(
+                !text.contains("reaper_tick_ms"),
+                "{} still ships the deprecated reaper_tick_ms knob",
+                path.display()
+            );
+            load_deployment(&path)
+                .unwrap_or_else(|e| panic!("{} does not load: {e}", path.display()));
+            checked += 1;
+        }
+        assert!(checked >= 2, "expected shipped configs in {}", dir.display());
+    }
+
+    #[test]
     fn ideal_net_tag() {
         let v = Value::parse(
             r#"{"model":"lenet5","n_devices":2,"net":"ideal"}"#,

@@ -483,6 +483,11 @@ pub struct Session {
     /// Serve-path buffer arena: merge/pool/decode buffers are reused
     /// across requests, so steady-state resolution allocates nothing.
     scratch: Scratch,
+    /// Live telemetry registry (DESIGN.md §16): counters, latency
+    /// histograms, and the trace-span ring. `Arc`-shared with the
+    /// gateway's HTTP threads, which render `/metrics` and `/v1/traces`
+    /// from it without touching the session.
+    telemetry: Arc<crate::telemetry::Telemetry>,
     _server: Option<ComputeServer>,
 }
 
@@ -622,6 +627,7 @@ impl Session {
             adaptive,
             extra_devices: extra,
             scratch: Scratch::new(),
+            telemetry: Arc::new(crate::telemetry::Telemetry::new()),
             _server: server,
         })
     }
@@ -634,6 +640,12 @@ impl Session {
     /// Transport tag ("sim" | "tcp") — report attribution.
     pub fn transport_label(&self) -> &'static str {
         self.transport.label()
+    }
+
+    /// The session's telemetry registry, shareable with export surfaces
+    /// (the gateway clones this `Arc` into its HTTP threads).
+    pub fn telemetry(&self) -> Arc<crate::telemetry::Telemetry> {
+        Arc::clone(&self.telemetry)
     }
 
     /// The model served by this session.

@@ -200,6 +200,13 @@ pub struct ServeReport {
     pub dropped: u64,
     /// End-to-end latency per completed request (arrival → done).
     pub latency: Series,
+    /// The same latencies folded into a [`telemetry::Histogram`] — the
+    /// estimator behind `GET /metrics` and `GET /v1/stats`, so report
+    /// percentiles and the live surfaces share one computation
+    /// (DESIGN.md §16).
+    ///
+    /// [`telemetry::Histogram`]: crate::telemetry::Histogram
+    pub latency_hist: crate::telemetry::Histogram,
     /// Service latency (first dispatch → done, excludes queue wait).
     pub service: Series,
     /// Admission-queue wait (arrival → first dispatch).
@@ -463,6 +470,11 @@ impl Session {
         // simulator keeps its round-synchronous virtual-time gather
         // (bit-identical to the pre-transport engine).
         let wall = self.transport.wall_clock();
+        // Telemetry registry (DESIGN.md §16), `Arc`-shared with the
+        // gateway's HTTP thread. Recording is relaxed-atomic or one
+        // short mutex hold — it never influences scheduling decisions,
+        // so sim-mode determinism is untouched.
+        let tel = Arc::clone(&self.telemetry);
 
         let first_req = self.next_req;
         self.next_req += total as u64;
@@ -568,6 +580,18 @@ impl Session {
         const GATEWAY_IDLE_MS: f64 = 25.0;
 
         loop {
+            // ---- telemetry mirror (DESIGN.md §16) --------------------
+            // Once per pass: transport-owned counters (bytes, frames,
+            // reaper fires, piggybacked worker counters) and the live
+            // gauges become visible to `GET /metrics` without the HTTP
+            // thread ever reaching into the transport.
+            tel.set_shared_counters(&self.transport.counters());
+            tel.fleet_devices.set(self.transport.n_devices() as u64);
+            tel.fleet_alive.set(self.active.len() as u64);
+            let in_system = stage_queue.iter().map(VecDeque::len).sum::<usize>()
+                + stage_busy.iter().flatten().map(|b| b.members.len()).sum::<usize>();
+            tel.inflight.set(in_system as u64);
+
             // ---- gateway commands (DESIGN.md §14) --------------------
             // External admissions and reads are handled the moment they
             // are seen; lifecycle verbs wait for the quiescent point
@@ -615,6 +639,8 @@ impl Session {
                                     continue;
                                 }
                             };
+                            tel.requests_total.inc();
+                            tel.traces.start(req, arrival);
                             let mut fl = InFlight {
                                 req,
                                 t_arrival: arrival,
@@ -640,6 +666,9 @@ impl Session {
                                 queue_wait.record(0.0);
                                 makespan = makespan.max(arrival);
                                 tp.completed += 1;
+                                tel.completed_total.inc();
+                                tel.latency_ms.record(0.0);
+                                tel.traces.finish(req, arrival, "merged");
                                 continue;
                             }
                             let s = fl.stage_idx;
@@ -679,7 +708,6 @@ impl Session {
                                     ])
                                 })
                                 .collect();
-                            let l = latency.summary();
                             let rps = if now > 0.0 {
                                 tp.completed as f64 * 1000.0 / now
                             } else {
@@ -696,17 +724,12 @@ impl Session {
                                     ("elapsed_ms", num(now)),
                                     ("rps", num(rps)),
                                     ("max_batch", num(max_batch as f64)),
-                                    (
-                                        "latency_ms",
-                                        json::obj(vec![
-                                            ("count", num(l.count as f64)),
-                                            ("mean", num(l.mean)),
-                                            ("p50", num(l.p50)),
-                                            ("p95", num(l.p95)),
-                                            ("p99", num(l.p99)),
-                                            ("max", num(l.max)),
-                                        ]),
-                                    ),
+                                    // Percentiles come from the shared
+                                    // telemetry histogram — the same
+                                    // estimator `GET /metrics` and the
+                                    // end-of-run report use, so the two
+                                    // surfaces can never disagree.
+                                    ("latency_ms", tel.latency_json()),
                                     ("stages", Value::Arr(stage_rows)),
                                 ]),
                             );
@@ -768,6 +791,8 @@ impl Session {
                     layers: Vec::new(),
                     any_recovery: false,
                 };
+                tel.requests_total.inc();
+                tel.traces.start(fl.req, arrival);
                 if advance_locals(&self.stages, &self.model, &mut fl, scratch)? {
                     // Degenerate model with no distributed stage:
                     // completes at its arrival instant.
@@ -785,6 +810,9 @@ impl Session {
                     queue_wait.record(0.0);
                     makespan = makespan.max(arrival);
                     tp.completed += 1;
+                    tel.completed_total.inc();
+                    tel.latency_ms.record(0.0);
+                    tel.traces.finish(fl.req, arrival, "merged");
                     traces.push(trace);
                     if closed_c.is_some() && next_admit < total {
                         pending_admissions.push_back((next_admit, arrival));
@@ -847,6 +875,11 @@ impl Session {
                     if balks(i, &starts) {
                         stage_queue[s].pop_front();
                         dropped += 1;
+                        tel.traces.finish(
+                            inflight[i].req,
+                            inflight[i].t_arrival,
+                            "dropped",
+                        );
                         continue;
                     }
                     break Some(i);
@@ -870,6 +903,11 @@ impl Session {
                         if balks(j, &starts) {
                             stage_queue[s].pop_front();
                             dropped += 1;
+                            tel.traces.finish(
+                                inflight[j].req,
+                                inflight[j].t_arrival,
+                                "dropped",
+                            );
                             continue;
                         }
                         if inflight[j].t_ready > window
@@ -956,6 +994,30 @@ impl Session {
                         starts.push((inflight[i].t_arrival, t_enter));
                     }
                 }
+                tel.batches_total.inc();
+                tel.batched_requests_total.add(members.len() as u64);
+                tel.batch_width.record(members.len() as f64);
+                tel.dispatch_orders_total
+                    .add((ds.data.len() + ds.parities.len()) as u64);
+                // Trace spans: every member records the batch it joined;
+                // per-device dispatch spans ride the leader's trace (the
+                // request id completions route by), pairing with the
+                // replied/reaped stamps the gather loop records.
+                for &i in &members {
+                    tel.traces.event(
+                        inflight[i].req,
+                        t_enter,
+                        "batched",
+                        -1,
+                        members.len() as f64,
+                    );
+                }
+                for &(d, _) in &ds.data {
+                    tel.traces.event(leader, t_enter, "dispatched", d as i64, 0.0);
+                }
+                for p in &ds.parities {
+                    tel.traces.event(leader, t_enter, "dispatched", p.0 as i64, 0.0);
+                }
                 req_to_stage.insert(leader, s);
                 let batched_input = if members.len() > 1 { Some(input) } else { None };
                 stage_busy[s] = Some(BusyStage {
@@ -994,8 +1056,19 @@ impl Session {
                                 );
                                 failures.push((req, "undeployed".to_string()));
                                 tp.failed += 1;
+                                tel.failed_total.inc();
+                                tel.traces.finish(
+                                    req,
+                                    self.transport.now_ms(),
+                                    "failed",
+                                );
                             } else {
                                 dropped += 1;
+                                tel.traces.finish(
+                                    req,
+                                    self.transport.now_ms(),
+                                    "dropped",
+                                );
                             }
                         }
                     }
@@ -1074,12 +1147,28 @@ impl Session {
                 };
                 if let Some(&s) = req_to_stage.get(&c.req) {
                     if let Some(b) = stage_busy[s].as_mut() {
+                        let (req, device, t_arr) = (c.req, c.device, c.t_arrival_ms);
                         // Stale-epoch replies (from before a live
                         // repartition) are discarded, never gathered.
                         if b.epoch == self.partition_epoch
                             && b.got.insert(c.task, c).is_none()
                         {
                             remaining -= 1;
+                            if t_arr.is_finite() {
+                                tel.replies_total.inc();
+                                tel.traces.event(req, t_arr, "replied", device as i64, 0.0);
+                            } else {
+                                // ∞-stamped: the reaper (or a dead
+                                // connection) synthesised this loss.
+                                tel.reaped_tasks_total.inc();
+                                tel.traces.event(
+                                    req,
+                                    self.transport.now_ms(),
+                                    "reaped",
+                                    device as i64,
+                                    0.0,
+                                );
+                            }
                         }
                     }
                 }
@@ -1101,7 +1190,8 @@ impl Session {
                 };
                 let layer = &self.model.layers[ds.layer_idx];
                 let batch = b.members.len();
-                req_to_stage.remove(&inflight[b.members[0]].req);
+                let leader = inflight[b.members[0]].req;
+                req_to_stage.remove(&leader);
                 // Adaptive mode replaces the static straggler gate with
                 // the policy's current (latency-tracked) factor. On a
                 // wall-clock transport the resolve-time gate is disabled
@@ -1167,6 +1257,13 @@ impl Session {
                         stage_free[s] = t_done;
                         occupancy[s].push(b.t_enter, t_done);
                         served[s] += batch;
+                        if trace.outcome == "recovered" {
+                            // The paper's claim, observable live: parity
+                            // substituted for the lost shard set with no
+                            // retry round (DESIGN.md §16).
+                            tel.recoveries_total.inc();
+                            tel.traces.event(leader, t_done, "recovered", -1, 1.0);
+                        }
                         // A batched output is the column concatenation of
                         // the member outputs; split it back so each
                         // member advances independently (and may join a
@@ -1213,6 +1310,9 @@ impl Session {
                                     if fl.any_recovery {
                                         tp.recovered += 1;
                                     }
+                                    tel.completed_total.inc();
+                                    tel.latency_ms.record(lat);
+                                    tel.traces.finish(fl.req, done_t, "merged");
                                     fl.layers.clear();
                                     continue;
                                 }
@@ -1234,6 +1334,9 @@ impl Session {
                                 if trace.any_recovery {
                                     tp.recovered += 1;
                                 }
+                                tel.completed_total.inc();
+                                tel.latency_ms.record(trace.total_ms);
+                                tel.traces.finish(trace.req, done_t, "merged");
                                 traces.push(trace);
                                 if closed_c.is_some() && next_admit < total {
                                     pending_admissions.push_back((next_admit, done_t));
@@ -1274,6 +1377,8 @@ impl Session {
                             }
                             failures.push((req, layer.name.clone()));
                             tp.failed += 1;
+                            tel.failed_total.inc();
+                            tel.traces.finish(req, t_free, "failed");
                             if ext.is_none() && closed_c.is_some() && next_admit < total
                             {
                                 pending_admissions.push_back((next_admit, t_free));
@@ -1304,11 +1409,18 @@ impl Session {
         let occ_refs: Vec<&Intervals> = occupancy.iter().collect();
         let max_concurrent_stages = metrics::max_overlap(&occ_refs);
         let max_concurrent_requests = metrics::max_overlap(&[&req_intervals]);
+        // This run's latencies only (the registry histogram is
+        // cumulative across a session's serve calls).
+        let latency_hist = crate::telemetry::Histogram::new();
+        for &sample in latency.samples() {
+            latency_hist.record(sample);
+        }
         Ok(ServeReport {
             traces,
             failures,
             dropped,
             latency,
+            latency_hist,
             service,
             queue_wait,
             throughput: tp,

@@ -46,7 +46,17 @@ const TICK: Duration = Duration::from_millis(200);
 pub struct ServerCtx {
     pub model: String,
     pub input_len: usize,
+    /// The session's telemetry registry (DESIGN.md §16), shared with
+    /// the serve loop: `GET /metrics` and `GET /v1/traces` render from
+    /// it right here on the HTTP thread — no pipeline round-trip, so
+    /// scrapes keep answering even while the serve loop is saturated.
+    pub telemetry: Arc<crate::telemetry::Telemetry>,
 }
+
+/// The dashboard page (`GET /`): a single self-contained HTML file —
+/// no external scripts, styles, or fonts — polling the gateway's own
+/// JSON + Prometheus endpoints.
+const DASHBOARD_HTML: &str = include_str!("dashboard.html");
 
 /// Handle to the running HTTP front door. Dropping it stops the thread.
 pub struct GatewayServer {
@@ -154,7 +164,13 @@ impl Conn {
 
     fn queue_json(&mut self, status: u16, body: &Value, keep_alive: bool) {
         let payload = body.to_string_compact();
-        self.queue(http::response(status, "application/json", payload.as_bytes(), keep_alive));
+        self.queue_raw(status, "application/json", payload.as_bytes(), keep_alive);
+    }
+
+    /// Queue a response with an arbitrary content type (Prometheus text,
+    /// the dashboard HTML, Chrome trace JSON).
+    fn queue_raw(&mut self, status: u16, content_type: &str, body: &[u8], keep_alive: bool) {
+        self.queue(http::response(status, content_type, body, keep_alive));
         if !keep_alive {
             self.close_after_flush = true;
         }
@@ -187,6 +203,9 @@ impl Conn {
 enum Routed {
     /// Answer from the HTTP thread, no pipeline involved.
     Now(u16, Value),
+    /// Answer from the HTTP thread with a non-JSON payload (`/metrics`
+    /// exposition text, the dashboard page).
+    Raw(u16, &'static str, Vec<u8>),
     /// Forward to the serve loop and park the connection.
     Cmd(CmdSpec),
 }
@@ -335,6 +354,7 @@ impl Loop {
                         // Absolute backstop: head cap + body cap + slack.
                         let cap = http::MAX_HEAD_BYTES + self.cfg.max_body_bytes + 4096;
                         if conn.rbuf.len() > cap {
+                            self.ctx.telemetry.gateway_errors_total.inc();
                             conn.queue_json(
                                 413,
                                 &error_body("request exceeds gateway buffer cap"),
@@ -376,9 +396,19 @@ impl Loop {
                     conn.rbuf.drain(..consumed);
                     let seq = conn.next_seq;
                     conn.next_seq += 1;
+                    self.ctx.telemetry.gateway_requests_total.inc();
                     match route(&req, &self.ctx) {
                         Routed::Now(status, body) => {
+                            if status >= 400 {
+                                self.ctx.telemetry.gateway_errors_total.inc();
+                            }
                             conn.queue_json(status, &body, req.keep_alive)
+                        }
+                        Routed::Raw(status, content_type, body) => {
+                            if status >= 400 {
+                                self.ctx.telemetry.gateway_errors_total.inc();
+                            }
+                            conn.queue_raw(status, content_type, &body, req.keep_alive)
                         }
                         Routed::Cmd(spec) => {
                             let resp = Responder::new(
@@ -389,6 +419,7 @@ impl Loop {
                             );
                             let cmd = attach(spec, resp);
                             if self.cmd_tx.send(cmd).is_err() {
+                                self.ctx.telemetry.gateway_errors_total.inc();
                                 let conn = self.conns.get_mut(&token).unwrap();
                                 conn.queue_json(
                                     503,
@@ -406,6 +437,8 @@ impl Loop {
                     }
                 }
                 Err(e) => {
+                    self.ctx.telemetry.gateway_requests_total.inc();
+                    self.ctx.telemetry.gateway_errors_total.inc();
                     conn.queue_json(e.status, &error_body(e.msg.clone()), false);
                     conn.rbuf.clear();
                     break;
@@ -445,6 +478,9 @@ impl Loop {
                 conn.parked = Some(parked);
                 continue;
             }
+            if reply.status >= 400 {
+                self.ctx.telemetry.gateway_errors_total.inc();
+            }
             conn.queue_json(reply.status, &reply.body, parked.keep_alive);
             // Un-parked: pipelined requests behind it may now proceed.
             self.advance(reply.conn);
@@ -462,6 +498,7 @@ impl Loop {
         for token in expired {
             if let Some(conn) = self.conns.get_mut(&token) {
                 conn.parked = None;
+                self.ctx.telemetry.gateway_errors_total.inc();
                 conn.queue_json(
                     504,
                     &error_body("pipeline did not answer before the gateway timeout"),
@@ -493,11 +530,62 @@ enum CmdSpec {
     Shutdown,
 }
 
+/// Value of `name` in a `k=v&k2=v2` query string, if present.
+fn query_field<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == name).then_some(v)
+    })
+}
+
 /// Decide what to do with one parsed request. Everything that needs the
 /// pipeline becomes a command; everything else is answered here with a
-/// typed status.
+/// typed status. Telemetry surfaces (`/metrics`, `/v1/traces`, the
+/// dashboard) render straight off the shared registry on this thread.
 fn route(req: &Request, ctx: &ServerCtx) -> Routed {
-    match (req.method.as_str(), req.target.as_str()) {
+    let (path, query) = match req.target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.target.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
+        ("GET", "/") => Routed::Raw(
+            200,
+            "text/html; charset=utf-8",
+            DASHBOARD_HTML.as_bytes().to_vec(),
+        ),
+        ("GET", "/metrics") => Routed::Raw(
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            ctx.telemetry.render_prometheus().into_bytes(),
+        ),
+        ("GET", "/v1/traces") => {
+            let doc = if query_field(query, "format") == Some("chrome") {
+                ctx.telemetry.traces.chrome_all()
+            } else {
+                ctx.telemetry.traces.list_json()
+            };
+            Routed::Now(200, doc)
+        }
+        ("GET", t) if t.starts_with("/v1/traces/") => {
+            let id = &t["/v1/traces/".len()..];
+            match id.parse::<u64>() {
+                Err(_) => Routed::Now(404, error_body(format!("bad trace id {id:?}"))),
+                Ok(req_id) => {
+                    let doc = if query_field(query, "format") == Some("chrome") {
+                        ctx.telemetry.traces.get_chrome(req_id)
+                    } else {
+                        ctx.telemetry.traces.get_json(req_id)
+                    };
+                    match doc {
+                        Some(v) => Routed::Now(200, v),
+                        None => Routed::Now(
+                            404,
+                            error_body(format!("trace {req_id} is not retained")),
+                        ),
+                    }
+                }
+            }
+        }
         ("GET", "/v1/healthz") => Routed::Now(
             200,
             json::obj(vec![
@@ -546,14 +634,18 @@ fn route(req: &Request, ctx: &ServerCtx) -> Routed {
         (m, t) => {
             let known = matches!(
                 t,
-                "/v1/healthz"
+                "/"
+                    | "/metrics"
+                    | "/v1/traces"
+                    | "/v1/healthz"
                     | "/v1/fleet"
                     | "/v1/stats"
                     | "/v1/policy"
                     | "/v1/deployments"
                     | "/v1/infer"
                     | "/v1/shutdown"
-            ) || t.starts_with("/v1/deployments/");
+            ) || t.starts_with("/v1/deployments/")
+                || t.starts_with("/v1/traces/");
             if known {
                 Routed::Now(405, error_body(format!("method {m} not allowed on {t}")))
             } else {

@@ -70,6 +70,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;
+pub mod telemetry;
 pub mod testkit;
 pub mod tensor;
 pub mod transport;

@@ -454,13 +454,12 @@ fn serve(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     } else {
         "virtual"
     };
-    let lat = report.latency.summary();
     println!(
         "transport={} arrivals=poisson@{rate}rps",
         session.transport_label()
     );
     println!("{}", report.line());
-    println!("{clock}-clock latency: {}", lat.line());
+    println!("{clock}-clock latency: {}", latency_line(&report.latency_hist));
     println!(
         "{clock}-clock throughput: {:.1} rps (harness wall total {wall:.2}s)",
         report.rps()
@@ -563,12 +562,17 @@ fn gateway(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<GatewayCmd>();
     let server = GatewayServer::start(
         &gw_cfg,
-        ServerCtx { model: model.clone(), input_len },
+        ServerCtx {
+            model: model.clone(),
+            input_len,
+            telemetry: session.telemetry(),
+        },
         cmd_tx.clone(),
     )?;
     println!(
         "gateway: serving {model} at {} (POST /v1/infer, GET /v1/fleet \
-         /v1/stats /v1/policy /v1/deployments, POST /v1/shutdown)",
+         /v1/stats /v1/policy /v1/deployments /v1/traces /metrics, \
+         POST /v1/shutdown; dashboard at /)",
         server.url()
     );
     // Machine-parseable line for harnesses (CI smoke greps for it).
@@ -626,9 +630,8 @@ fn gateway(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     let report = session.serve_gateway(&workload, &bridge)?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let lat = report.latency.summary();
     println!("{}", report.line());
-    println!("wall-clock latency: {}", lat.line());
+    println!("wall-clock latency: {}", latency_line(&report.latency_hist));
     println!(
         "wall-clock throughput: {:.1} rps (harness wall total {wall:.2}s)",
         report.rps()
@@ -648,6 +651,21 @@ fn gateway(ctx: &ExpCtx, opts: &CliOpts) -> cdc_dnn::Result<()> {
     drop(session); // disconnect before the fleet reaps its children
     drop(fleet);
     Ok(())
+}
+
+/// Render the report's latency percentiles from the telemetry histogram
+/// — the same estimator behind `GET /metrics` and `GET /v1/stats`
+/// (DESIGN.md §16), so the CLI report and the live surfaces agree.
+fn latency_line(h: &cdc_dnn::telemetry::Histogram) -> String {
+    format!(
+        "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+        h.count(),
+        h.mean_ms(),
+        h.quantile(0.50),
+        h.quantile(0.95),
+        h.quantile(0.99),
+        h.max_ms()
+    )
 }
 
 /// Run a standalone TCP shard-compute worker until killed (or told to

@@ -1,0 +1,596 @@
+//! Live telemetry: lock-light metrics registry + per-request trace
+//! spans + export rendering (DESIGN.md §16).
+//!
+//! The serving stack already *proves* the paper's zero-latency-recovery
+//! claim after a run (`ServeReport`); this module makes it observable
+//! while a fleet is live, without adding locks to the hot path:
+//!
+//! * [`Counter`] / [`Gauge`] are single `AtomicU64`s updated with
+//!   `Ordering::Relaxed` — monotonic event counts need no ordering
+//!   relative to other memory, and a scrape that reads mid-update sees
+//!   a value that was true a moment ago (exactly what Prometheus
+//!   semantics require).
+//! * [`Histogram`] is a fixed array of atomic log-spaced buckets with
+//!   `merge`, `quantile`, and a Prometheus-exposition snapshot. One
+//!   `record` is a handful of relaxed atomic adds — no allocation, no
+//!   lock, no sort.
+//! * [`trace::TraceRing`] keeps the last [`trace::RING_CAP`] requests'
+//!   span events in preallocated slots (zero allocation in steady
+//!   state); see [`trace`] for the lifecycle.
+//! * [`Telemetry`] is the registry the serve loop, gateway server, and
+//!   transport all share (`Arc`), and [`Telemetry::render_prometheus`]
+//!   is the hand-rolled `GET /metrics` text — no NaN/Inf ever leaks
+//!   into the exposition (the same non-finite rule the JSON control
+//!   plane applies via its `num()` helper).
+//!
+//! Transport-internal counters (bytes, frames, writev rounds, reaper
+//! fires, membership transitions, worker counters piggybacked on
+//! `HeartbeatAck`) live in transport-owned atomics; the serve loop
+//! mirrors them into the registry every pass via
+//! [`Telemetry::set_shared_counters`], so `GET /metrics` served from
+//! the gateway's HTTP thread never has to reach into the transport.
+
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::{obj, Value};
+
+pub use trace::{SpanEvent, TraceRing};
+
+/// Monotonic event counter (relaxed atomics: scrape-consistent, never
+/// decreasing, no hot-path synchronisation).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (fleet width, in-flight count).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log-spaced histogram buckets.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Upper bound of bucket 0 in ms; bucket `i` covers
+/// `(bound(i-1), bound(i)]` with `bound(i) = HIST_BASE_MS × √2ⁱ`, so 64
+/// buckets span 0.01 ms … ≈8.4 hours at ~±19% relative resolution.
+pub const HIST_BASE_MS: f64 = 0.01;
+
+const HIST_GROWTH: f64 = std::f64::consts::SQRT_2;
+
+/// Upper bound (ms) of bucket `i`.
+pub fn bucket_bound_ms(i: usize) -> f64 {
+    HIST_BASE_MS * HIST_GROWTH.powi(i as i32)
+}
+
+fn bucket_index(v_ms: f64) -> usize {
+    if !(v_ms > HIST_BASE_MS) {
+        // ≤ base, zero, negative, or NaN all land in the first bucket.
+        return 0;
+    }
+    let idx = ((v_ms / HIST_BASE_MS).ln() / HIST_GROWTH.ln()).ceil();
+    if idx.is_finite() {
+        (idx as usize).min(HIST_BUCKETS - 1)
+    } else {
+        HIST_BUCKETS - 1
+    }
+}
+
+/// Sentinel stored in the min tracker while a histogram is empty.
+const MIN_EMPTY: u64 = u64::MAX;
+
+/// Lock-free log-bucketed latency histogram (milliseconds).
+///
+/// `record` is a few relaxed atomic RMWs; `quantile` walks the 64
+/// buckets with linear interpolation inside the selected bucket and
+/// clamps to the observed min/max, so a single-sample histogram
+/// reports that exact sample at every quantile. `merge` folds another
+/// histogram in bucket-wise — the property `merge(a,b).quantile ≈`
+/// quantile of the concatenated samples holds to bucket resolution.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    /// Sum in integer microseconds (lock-free f64 sums need a CAS loop;
+    /// µs resolution is far below bucket resolution anyway).
+    sum_us: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(MIN_EMPTY),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (ms). Non-finite and negative samples clamp
+    /// to 0 (they still count — a lost stamp must not skew quantiles
+    /// upward by vanishing).
+    pub fn record(&self, v_ms: f64) {
+        let v = if v_ms.is_finite() && v_ms > 0.0 { v_ms } else { 0.0 };
+        let us = (v * 1e3).round().min(u64::MAX as f64 / 2.0) as u64;
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Fold `other`'s samples into `self`, bucket-wise.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = src.load(Ordering::Relaxed);
+            if n > 0 {
+                dst.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_us.fetch_min(other.min_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples (ms).
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Mean sample (ms); 0 when empty.
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ms() / n as f64
+        }
+    }
+
+    /// Smallest recorded sample (ms); 0 when empty.
+    pub fn min_ms(&self) -> f64 {
+        match self.min_us.load(Ordering::Relaxed) {
+            MIN_EMPTY => 0.0,
+            us => us as f64 / 1e3,
+        }
+    }
+
+    /// Largest recorded sample (ms); 0 when empty.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Quantile estimate (ms) at `q ∈ [0, 1]`: linear interpolation
+    /// within the selected log bucket, clamped to the observed
+    /// min/max. Empty histograms report 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = if q.is_finite() { q.clamp(0.0, 1.0) } else { 0.0 };
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        let mut est = bucket_bound_ms(HIST_BUCKETS - 1);
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if cum + n >= target {
+                let lower = if i == 0 { 0.0 } else { bucket_bound_ms(i - 1) };
+                let upper = bucket_bound_ms(i);
+                let frac = (target - cum) as f64 / n as f64;
+                est = lower + (upper - lower) * frac;
+                break;
+            }
+            cum += n;
+        }
+        est.clamp(self.min_ms(), self.max_ms())
+    }
+
+    /// Cumulative bucket counts paired with their `le` upper bounds —
+    /// the Prometheus histogram series shape.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut cum = 0u64;
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                cum += b.load(Ordering::Relaxed);
+                (bucket_bound_ms(i), cum)
+            })
+            .collect()
+    }
+}
+
+/// The shared registry: every counter, gauge, and histogram the serving
+/// stack exposes, plus the trace ring. One instance per [`Session`],
+/// shared (`Arc`) with the gateway's HTTP thread for `GET /metrics` and
+/// `GET /v1/traces`.
+///
+/// [`Session`]: crate::coordinator::Session
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    /// Requests admitted into the pipeline (paced workload + gateway).
+    pub requests_total: Counter,
+    /// Requests completed with an output.
+    pub completed_total: Counter,
+    /// Requests failed (a needed shard set was unrecoverable).
+    pub failed_total: Counter,
+    /// CDC parity recoveries performed (one per recovered layer-stage).
+    pub recoveries_total: Counter,
+    /// Shard tasks reaped by the straggler gate / connection death
+    /// (observed as `t_arrival = ∞` completions in the gather loop).
+    pub reaped_tasks_total: Counter,
+    /// Shard replies gathered with data.
+    pub replies_total: Counter,
+    /// Micro-batches formed.
+    pub batches_total: Counter,
+    /// Requests that entered a batch (`Σ` batch widths).
+    pub batched_requests_total: Counter,
+    /// Per-device work orders dispatched.
+    pub dispatch_orders_total: Counter,
+    /// HTTP requests routed by the gateway server.
+    pub gateway_requests_total: Counter,
+    /// HTTP responses with status ≥ 400.
+    pub gateway_errors_total: Counter,
+    /// Requests in flight right now.
+    pub inflight: Gauge,
+    /// Device slots assigned (data + parity + joiners).
+    pub fleet_devices: Gauge,
+    /// Device slots currently alive.
+    pub fleet_alive: Gauge,
+    /// End-to-end request latency (admission → merged output).
+    pub latency_ms: Histogram,
+    /// Micro-batch width distribution.
+    pub batch_width: Histogram,
+    /// Per-request trace spans (`GET /v1/traces`).
+    pub traces: TraceRing,
+    /// Transport-owned counters mirrored in by the serve loop each pass
+    /// (`Transport::counters`): bytes/frames/writev, reaper fires,
+    /// membership transitions, piggybacked worker counters.
+    shared: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+/// `(name, help)` for every registry counter, in exposition order.
+const COUNTER_HELP: &[(&str, &str)] = &[
+    ("cdc_requests_total", "Requests admitted into the serving pipeline"),
+    ("cdc_completed_total", "Requests completed with an output"),
+    ("cdc_failed_total", "Requests failed (shard set unrecoverable)"),
+    ("cdc_recoveries_total", "CDC parity recoveries performed"),
+    ("cdc_reaped_tasks_total", "Shard tasks reaped (straggler gate or device death)"),
+    ("cdc_replies_total", "Shard replies gathered with data"),
+    ("cdc_batches_total", "Micro-batches formed"),
+    ("cdc_batched_requests_total", "Requests that entered a micro-batch"),
+    ("cdc_dispatch_orders_total", "Per-device work orders dispatched"),
+    ("gateway_http_requests_total", "HTTP requests routed by the gateway"),
+    ("gateway_http_errors_total", "HTTP responses with status >= 400"),
+    ("trace_spans_dropped_total", "Trace events dropped by the span ring"),
+];
+
+impl Telemetry {
+    /// Fresh registry with an empty trace ring.
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Mirror transport-owned counters into the registry (called by
+    /// the serve loop once per pass; sources are monotonic atomics, so
+    /// the mirrored values are monotonic too).
+    pub fn set_shared_counters(&self, counters: &[(&'static str, u64)]) {
+        let mut shared = lock(&self.shared);
+        for &(name, v) in counters {
+            shared.insert(name, v);
+        }
+    }
+
+    /// Snapshot of the mirrored transport counters.
+    pub fn shared_counters(&self) -> Vec<(&'static str, u64)> {
+        lock(&self.shared).iter().map(|(&k, &v)| (k, v)).collect()
+    }
+
+    fn counter_values(&self) -> [u64; 12] {
+        [
+            self.requests_total.get(),
+            self.completed_total.get(),
+            self.failed_total.get(),
+            self.recoveries_total.get(),
+            self.reaped_tasks_total.get(),
+            self.replies_total.get(),
+            self.batches_total.get(),
+            self.batched_requests_total.get(),
+            self.dispatch_orders_total.get(),
+            self.gateway_requests_total.get(),
+            self.gateway_errors_total.get(),
+            self.traces.dropped(),
+        ]
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (version 0.0.4). Hand-rolled, zero deps; every emitted sample
+    /// value is finite (the control plane's `num()` rule: a non-finite
+    /// value is replaced by 0 rather than leaking `NaN`/`inf` into a
+    /// scraper).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for (&(name, help), value) in COUNTER_HELP.iter().zip(self.counter_values()) {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        for (name, help, value) in [
+            ("cdc_inflight_requests", "Requests in flight", self.inflight.get()),
+            ("fleet_devices_total", "Device slots assigned", self.fleet_devices.get()),
+            ("fleet_devices_alive", "Device slots alive", self.fleet_alive.get()),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        // Transport counters carry their own names (already suffixed
+        // `_total`); all are monotonic event counts.
+        for (name, value) in self.shared_counters() {
+            let _ = writeln!(out, "# HELP {name} Transport counter (see DESIGN.md \u{a7}16)");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        render_histogram(
+            &mut out,
+            "cdc_request_latency_ms",
+            "End-to-end request latency (ms)",
+            &self.latency_ms,
+        );
+        render_histogram(&mut out, "cdc_batch_width", "Micro-batch width", &self.batch_width);
+        out
+    }
+
+    /// The live-stats JSON block shared by `GET /v1/stats` and the
+    /// end-of-run report: percentiles come from [`Histogram::quantile`]
+    /// so the live endpoint and the bench output can never disagree.
+    pub fn latency_json(&self) -> Value {
+        let h = &self.latency_ms;
+        obj(vec![
+            ("count", finite_num(h.count() as f64)),
+            ("mean_ms", finite_num(h.mean_ms())),
+            ("min_ms", finite_num(h.min_ms())),
+            ("p50_ms", finite_num(h.quantile(0.50))),
+            ("p95_ms", finite_num(h.quantile(0.95))),
+            ("p99_ms", finite_num(h.quantile(0.99))),
+            ("max_ms", finite_num(h.max_ms())),
+        ])
+    }
+}
+
+/// `Value::Num`, with the control plane's non-finite rule applied
+/// (NaN/Inf → `null` is the JSON rule; for metrics we emit 0 so sums
+/// stay numeric).
+fn finite_num(v: f64) -> Value {
+    if v.is_finite() {
+        Value::Num(v)
+    } else {
+        Value::Num(0.0)
+    }
+}
+
+/// Format a bucket bound as a Prometheus `le` label value: plain
+/// decimal, never scientific notation, never non-finite.
+fn format_le(bound: f64) -> String {
+    if bound >= 100.0 {
+        format!("{bound:.1}")
+    } else {
+        format!("{bound:.5}")
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cum) in h.cumulative() {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", format_le(bound));
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let sum = h.sum_ms();
+    let sum = if sum.is_finite() { sum } else { 0.0 };
+    let _ = writeln!(out, "{name}_sum {sum:.3}");
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+pub(crate) fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.min_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let h = Histogram::new();
+        h.record(12.5);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert!((h.quantile(q) - 12.5).abs() < 1e-9, "q={q}");
+        }
+        assert!((h.mean_ms() - 12.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bucket_accurate() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // Log buckets: each estimate within one √2 growth factor.
+        assert!(p50 >= 500.0 / HIST_GROWTH && p50 <= 500.0 * HIST_GROWTH, "{p50}");
+        assert!(p99 >= 990.0 / HIST_GROWTH && p99 <= 990.0 * HIST_GROWTH, "{p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let (a, b, both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 1..=50 {
+            a.record(i as f64);
+            both.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64 * 10.0);
+            both.record(i as f64 * 10.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.sum_ms() - both.sum_ms()).abs() < 1e-6);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert!((a.quantile(q) - both.quantile(q)).abs() < 1e-9, "q={q}");
+        }
+        assert_eq!(a.min_ms(), both.min_ms());
+        assert_eq!(a.max_ms(), both.max_ms());
+    }
+
+    #[test]
+    fn pathological_samples_stay_finite() {
+        let h = Histogram::new();
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -3.0, 0.0, 1e12] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        for q in [0.0, 0.5, 1.0] {
+            assert!(h.quantile(q).is_finite());
+        }
+        assert!(h.sum_ms().is_finite());
+    }
+
+    #[test]
+    fn prometheus_exposition_parses_and_is_finite() {
+        let t = Telemetry::new();
+        t.requests_total.add(7);
+        t.latency_ms.record(3.25);
+        t.latency_ms.record(40.0);
+        t.batch_width.record(4.0);
+        t.inflight.set(2);
+        t.set_shared_counters(&[("net_tx_bytes_total", 1234)]);
+        let text = t.render_prometheus();
+        let mut samples = 0;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment line: {line}"
+                );
+                continue;
+            }
+            // `name{labels} value` or `name value`.
+            let (name, value) = line.rsplit_once(' ').expect(line);
+            assert!(!name.is_empty(), "{line}");
+            let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+            assert!(v.is_finite(), "non-finite sample leaked: {line}");
+            samples += 1;
+        }
+        assert!(samples > 20, "{samples} samples:\n{text}");
+        assert!(text.contains("cdc_requests_total 7"), "{text}");
+        assert!(text.contains("net_tx_bytes_total 1234"), "{text}");
+        assert!(text.contains("cdc_request_latency_ms_bucket{le=\"+Inf\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn le_labels_are_unique_and_increasing() {
+        let mut prev = 0.0;
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..HIST_BUCKETS {
+            let b = bucket_bound_ms(i);
+            assert!(b > prev, "bucket {i} bound {b} <= {prev}");
+            prev = b;
+            assert!(seen.insert(format_le(b)), "duplicate le label {}", format_le(b));
+        }
+    }
+
+    #[test]
+    fn latency_json_matches_histogram() {
+        let t = Telemetry::new();
+        t.latency_ms.record(10.0);
+        let j = t.latency_json();
+        assert_eq!(j.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!((j.get("p99_ms").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,455 @@
+//! Per-request trace spans in a fixed-size ring (DESIGN.md §16).
+//!
+//! Every admitted request gets one preallocated slot recording its
+//! lifecycle as timestamped span events:
+//!
+//! ```text
+//! admitted → batched(width) → dispatched(device)× → replied/reaped(device)×
+//!          → recovered(shard)? → merged | failed
+//! ```
+//!
+//! The ring holds the last [`RING_CAP`] requests. **Retention rules:**
+//! a slot is reused only once its trace has *finished* (merged or
+//! failed) — when the ring wraps onto a still-live trace the new
+//! request's trace is dropped (counted) instead of corrupting the live
+//! one, so an in-flight request's spans are never clobbered however
+//! fast traffic churns. Events beyond [`EVENTS_CAP`] per request are
+//! dropped (counted) rather than reallocating: in steady state the
+//! ring performs **zero allocations** — slots and their event arrays
+//! are preallocated at construction, event kinds are `&'static str`,
+//! and recording is a short critical section on one mutex (the serve
+//! loop is the only writer; the gateway HTTP thread reads on demand).
+//!
+//! Timestamps are dual: `t_ms` is serve-relative (the transport
+//! clock, comparable across a run's spans) and `t_unix_ms` is the
+//! wall clock (comparable across processes and to log lines). Export
+//! is JSON (`GET /v1/traces/{id}`) or Chrome trace-event format
+//! (`?format=chrome`, loadable in Perfetto / `chrome://tracing`).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::json::{obj, Value};
+
+use super::{lock, Counter};
+
+/// Request traces retained (ring capacity).
+pub const RING_CAP: usize = 256;
+
+/// Span events retained per request.
+pub const EVENTS_CAP: usize = 64;
+
+/// One timestamped span event.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// Wall-clock stamp (unix epoch ms).
+    pub t_unix_ms: f64,
+    /// Serve-relative stamp (transport clock ms).
+    pub t_ms: f64,
+    /// Event kind: `admitted`, `batched`, `dispatched`, `replied`,
+    /// `reaped`, `recovered`, `merged`, `failed`.
+    pub kind: &'static str,
+    /// Device the event concerns (−1 when not device-scoped).
+    pub device: i64,
+    /// Kind-specific value (batch width, recovered shard, …); 0 when
+    /// unused.
+    pub value: f64,
+}
+
+struct Slot {
+    req: u64,
+    used: bool,
+    /// Started and not yet finished — the slot must not be reused.
+    live: bool,
+    events: Vec<SpanEvent>,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    /// Next insertion index (monotonic; slot = head % RING_CAP).
+    head: u64,
+}
+
+/// Fixed-size ring of per-request traces. See the module docs for the
+/// retention and zero-allocation rules.
+#[derive(Default)]
+pub struct TraceRing {
+    inner: Mutex<Inner>,
+    dropped: Counter,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing").field("dropped", &self.dropped.get()).finish()
+    }
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            slots: (0..RING_CAP)
+                .map(|_| Slot {
+                    req: 0,
+                    used: false,
+                    live: false,
+                    events: Vec::with_capacity(EVENTS_CAP),
+                })
+                .collect(),
+            head: 0,
+        }
+    }
+}
+
+fn unix_now_ms() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .unwrap_or(0.0)
+}
+
+impl TraceRing {
+    /// Empty ring with all slots preallocated.
+    pub fn new() -> TraceRing {
+        TraceRing::default()
+    }
+
+    /// Events dropped so far (ring wrapped onto a live trace, or a
+    /// trace overflowed [`EVENTS_CAP`]).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Begin a trace for `req` with its `admitted` event. If the ring
+    /// wraps onto a still-live trace the new trace is dropped.
+    pub fn start(&self, req: u64, t_ms: f64) {
+        let mut inner = lock(&self.inner);
+        let idx = (inner.head % RING_CAP as u64) as usize;
+        if inner.slots[idx].live {
+            self.dropped.inc();
+            return;
+        }
+        inner.head += 1;
+        let slot = &mut inner.slots[idx];
+        slot.req = req;
+        slot.used = true;
+        slot.live = true;
+        slot.events.clear();
+        slot.events.push(SpanEvent {
+            t_unix_ms: unix_now_ms(),
+            t_ms,
+            kind: "admitted",
+            device: -1,
+            value: 0.0,
+        });
+    }
+
+    /// Append a span event to `req`'s trace (no-op if the trace was
+    /// never started or already rotated out).
+    pub fn event(&self, req: u64, t_ms: f64, kind: &'static str, device: i64, value: f64) {
+        let mut inner = lock(&self.inner);
+        let Some(slot) = inner.slots.iter_mut().find(|s| s.used && s.req == req) else {
+            return;
+        };
+        if slot.events.len() >= EVENTS_CAP {
+            drop(inner);
+            self.dropped.inc();
+            return;
+        }
+        slot.events.push(SpanEvent {
+            t_unix_ms: unix_now_ms(),
+            t_ms,
+            kind,
+            device,
+            value,
+        });
+    }
+
+    /// Finish `req`'s trace with a terminal `merged`, `failed`, or
+    /// `dropped` event; the slot becomes reusable.
+    pub fn finish(&self, req: u64, t_ms: f64, kind: &'static str) {
+        self.event(req, t_ms, kind, -1, 0.0);
+        let mut inner = lock(&self.inner);
+        if let Some(slot) = inner.slots.iter_mut().find(|s| s.used && s.req == req) {
+            slot.live = false;
+        }
+    }
+
+    /// Clone `req`'s events (`None` if unknown / rotated out).
+    pub fn get(&self, req: u64) -> Option<Vec<SpanEvent>> {
+        let inner = lock(&self.inner);
+        inner
+            .slots
+            .iter()
+            .find(|s| s.used && s.req == req)
+            .map(|s| s.events.clone())
+    }
+
+    /// Summaries of retained traces, newest first: `(req, live,
+    /// start_unix_ms, duration_ms, events, outcome)`.
+    #[allow(clippy::type_complexity)]
+    pub fn list(&self) -> Vec<(u64, bool, f64, f64, usize, &'static str)> {
+        let inner = lock(&self.inner);
+        let mut rows: Vec<(u64, &Slot)> = Vec::with_capacity(RING_CAP);
+        // head-1 is the newest slot; walk backwards over used slots.
+        for back in 0..RING_CAP as u64 {
+            if back >= inner.head {
+                break;
+            }
+            let idx = ((inner.head - 1 - back) % RING_CAP as u64) as usize;
+            let s = &inner.slots[idx];
+            if s.used {
+                rows.push((s.req, s));
+            }
+        }
+        rows.into_iter()
+            .map(|(req, s)| {
+                let first = s.events.first().map(|e| (e.t_unix_ms, e.t_ms)).unwrap_or((0.0, 0.0));
+                let last_t = s.events.last().map(|e| e.t_ms).unwrap_or(first.1);
+                let outcome = s.events.last().map(|e| e.kind).unwrap_or("admitted");
+                (req, s.live, first.0, last_t - first.1, s.events.len(), outcome)
+            })
+            .collect()
+    }
+
+    /// `GET /v1/traces` body: retained traces, newest first.
+    pub fn list_json(&self) -> Value {
+        let rows = self
+            .list()
+            .into_iter()
+            .map(|(req, live, start_unix_ms, duration_ms, events, outcome)| {
+                obj(vec![
+                    ("req", Value::Num(req as f64)),
+                    ("live", Value::Bool(live)),
+                    ("start_unix_ms", num(start_unix_ms)),
+                    ("duration_ms", num(duration_ms)),
+                    ("events", Value::Num(events as f64)),
+                    ("outcome", Value::Str(outcome.to_string())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("traces", Value::Arr(rows)),
+            ("ring_capacity", Value::Num(RING_CAP as f64)),
+            ("dropped", Value::Num(self.dropped() as f64)),
+        ])
+    }
+
+    /// `GET /v1/traces/{id}` body: one trace's events as JSON.
+    pub fn get_json(&self, req: u64) -> Option<Value> {
+        let events = self.get(req)?;
+        let rows = events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("t_unix_ms", num(e.t_unix_ms)),
+                    ("t_ms", num(e.t_ms)),
+                    ("kind", Value::Str(e.kind.to_string())),
+                    ("device", Value::Num(e.device as f64)),
+                    ("value", num(e.value)),
+                ])
+            })
+            .collect();
+        Some(obj(vec![
+            ("req", Value::Num(req as f64)),
+            ("events", Value::Arr(rows)),
+        ]))
+    }
+
+    /// One trace in Chrome trace-event format (Perfetto /
+    /// `chrome://tracing`): device spans become `X` complete events
+    /// from their `dispatched` stamp to the matching `replied`/`reaped`
+    /// stamp, milestones become `i` instants, and the whole request is
+    /// one enclosing `X` span.
+    pub fn get_chrome(&self, req: u64) -> Option<Value> {
+        let events = self.get(req)?;
+        Some(obj(vec![
+            ("traceEvents", Value::Arr(chrome_events(req, &events))),
+            ("displayTimeUnit", Value::Str("ms".to_string())),
+        ]))
+    }
+
+    /// All retained traces in one Chrome trace-event document.
+    pub fn chrome_all(&self) -> Value {
+        let reqs: Vec<u64> = self.list().iter().map(|&(req, ..)| req).collect();
+        let mut all = Vec::new();
+        for req in reqs {
+            if let Some(events) = self.get(req) {
+                all.extend(chrome_events(req, &events));
+            }
+        }
+        obj(vec![
+            ("traceEvents", Value::Arr(all)),
+            ("displayTimeUnit", Value::Str("ms".to_string())),
+        ])
+    }
+}
+
+fn num(v: f64) -> Value {
+    if v.is_finite() {
+        Value::Num(v)
+    } else {
+        Value::Null
+    }
+}
+
+fn chrome_event(
+    name: &str,
+    ph: &str,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    pid: u64,
+    tid: i64,
+    args: Vec<(&'static str, Value)>,
+) -> Value {
+    let mut fields = vec![
+        ("name", Value::Str(name.to_string())),
+        ("ph", Value::Str(ph.to_string())),
+        ("ts", num(ts_us)),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(tid as f64)),
+    ];
+    if let Some(d) = dur_us {
+        fields.push(("dur", num(d.max(0.0))));
+    }
+    if !args.is_empty() {
+        let map: BTreeMap<String, Value> =
+            args.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        fields.push(("args", Value::Obj(map)));
+    }
+    obj(fields)
+}
+
+fn chrome_events(req: u64, events: &[SpanEvent]) -> Vec<Value> {
+    let mut out = Vec::with_capacity(events.len() + 2);
+    let Some(first) = events.first() else {
+        return out;
+    };
+    let us = |e: &SpanEvent| e.t_unix_ms * 1e3;
+    // The request as one enclosing span on tid 0.
+    if let Some(last) = events.last() {
+        out.push(chrome_event(
+            &format!("req {req} ({})", last.kind),
+            "X",
+            us(first),
+            Some(us(last) - us(first)),
+            req,
+            0,
+            vec![("req", Value::Num(req as f64))],
+        ));
+    }
+    // Device spans: dispatched(d) → replied/reaped(d); milestones as
+    // instants on tid 0.
+    let mut open: BTreeMap<i64, &SpanEvent> = BTreeMap::new();
+    for e in events {
+        match e.kind {
+            "dispatched" => {
+                open.insert(e.device, e);
+            }
+            "replied" | "reaped" => {
+                let start = open.remove(&e.device);
+                let t0 = start.map(us).unwrap_or_else(|| us(e));
+                out.push(chrome_event(
+                    &format!("device {} {}", e.device, e.kind),
+                    "X",
+                    t0,
+                    Some(us(e) - t0),
+                    req,
+                    e.device + 1,
+                    vec![("kind", Value::Str(e.kind.to_string()))],
+                ));
+            }
+            kind => {
+                out.push(chrome_event(
+                    kind,
+                    "i",
+                    us(e),
+                    None,
+                    req,
+                    0,
+                    vec![("value", num(e.value)), ("device", Value::Num(e.device as f64))],
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_records_in_order() {
+        let ring = TraceRing::new();
+        ring.start(7, 1.0);
+        ring.event(7, 2.0, "batched", -1, 3.0);
+        ring.event(7, 3.0, "dispatched", 0, 0.0);
+        ring.event(7, 9.0, "replied", 0, 0.0);
+        ring.finish(7, 10.0, "merged");
+        let events = ring.get(7).unwrap();
+        let kinds: Vec<&str> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, ["admitted", "batched", "dispatched", "replied", "merged"]);
+        assert!(events.windows(2).all(|w| w[0].t_ms <= w[1].t_ms));
+        let (req, live, _, dur, n, outcome) = ring.list()[0];
+        assert_eq!((req, live, n, outcome), (7, false, 5, "merged"));
+        assert!((dur - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wraparound_never_corrupts_a_live_trace() {
+        let ring = TraceRing::new();
+        ring.start(0, 0.0);
+        ring.event(0, 1.0, "dispatched", 3, 0.0);
+        // Fill the rest of the ring and wrap back onto slot 0.
+        for req in 1..=(RING_CAP as u64 + 8) {
+            ring.start(req, req as f64);
+            if req < RING_CAP as u64 {
+                ring.finish(req, req as f64 + 1.0, "merged");
+            }
+        }
+        // The live trace's events survived the wrap intact.
+        let events = ring.get(0).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].kind, "dispatched");
+        assert_eq!(events[1].device, 3);
+        assert!(ring.dropped() > 0, "wrapped starts must be counted");
+        // Finishing frees the slot for the next wrap.
+        ring.finish(0, 2.0, "merged");
+        assert_eq!(ring.get(0).unwrap().last().unwrap().kind, "merged");
+    }
+
+    #[test]
+    fn event_overflow_is_dropped_and_counted() {
+        let ring = TraceRing::new();
+        ring.start(1, 0.0);
+        for i in 0..(EVENTS_CAP + 10) {
+            ring.event(1, i as f64, "replied", 0, 0.0);
+        }
+        assert_eq!(ring.get(1).unwrap().len(), EVENTS_CAP);
+        assert!(ring.dropped() >= 10);
+    }
+
+    #[test]
+    fn chrome_export_pairs_device_spans() {
+        let ring = TraceRing::new();
+        ring.start(5, 0.0);
+        ring.event(5, 1.0, "dispatched", 2, 0.0);
+        ring.event(5, 4.0, "reaped", 2, 0.0);
+        ring.event(5, 4.5, "recovered", -1, 1.0);
+        ring.finish(5, 5.0, "merged");
+        let doc = ring.get_chrome(5).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let reaped = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok()
+                    == Some("device 2 reaped".to_string())
+            })
+            .expect("device span present");
+        assert_eq!(reaped.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(reaped.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        // Unknown ids export as None.
+        assert!(ring.get_chrome(99).is_none());
+    }
+}

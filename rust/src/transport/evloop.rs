@@ -62,7 +62,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -437,6 +437,43 @@ pub(crate) struct State {
 /// a full house closes new connections at accept.
 pub(crate) const JOIN_SLOTS: usize = 16;
 
+/// Event-loop I/O and membership counters (DESIGN.md §16). All relaxed
+/// `AtomicU64`s: the loop thread is the only writer, scrapers read a
+/// monotonic snapshot, and no counter orders any other memory.
+#[derive(Default)]
+pub(crate) struct NetCounters {
+    /// Payload bytes accepted by `writev` (all connections).
+    pub bytes_tx: AtomicU64,
+    /// Bytes pulled off sockets by the read loop.
+    pub bytes_rx: AtomicU64,
+    /// Whole frames fully flushed to the wire.
+    pub frames_tx: AtomicU64,
+    /// Whole frames decoded from the wire.
+    pub frames_rx: AtomicU64,
+    /// `writev` calls that moved bytes (coalescing denominator: frames
+    /// per call is the batching win).
+    pub writev_calls: AtomicU64,
+    /// Tasks reaped past their straggler deadline.
+    pub reaped_tasks: AtomicU64,
+    /// Heartbeat pings queued to workers.
+    pub heartbeats_sent: AtomicU64,
+    /// Joiners admitted through `Register`.
+    pub joins: AtomicU64,
+    /// Registered connections declared dead.
+    pub deaths: AtomicU64,
+    /// Suspect transitions on the heartbeat ladder.
+    pub suspects: AtomicU64,
+    /// Graceful `Leave` requests received.
+    pub leaves: AtomicU64,
+}
+
+impl NetCounters {
+    /// Bump a counter (relaxed; see the struct docs).
+    fn inc(field: &AtomicU64, by: u64) {
+        field.fetch_add(by, Ordering::Relaxed);
+    }
+}
+
 /// Everything the event loop shares with the coordinator-side handles.
 pub(crate) struct Shared {
     /// Wall-clock zero of the current serve run.
@@ -463,6 +500,13 @@ pub(crate) struct Shared {
     pub suspect_after: u32,
     /// Silent intervals before a worker is declared dead.
     pub dead_after: u32,
+    /// Event-loop I/O and membership counters, read by
+    /// `Transport::counters` for the telemetry registry.
+    pub net: NetCounters,
+    /// Latest cumulative worker-counter snapshot per device slot, as
+    /// piggybacked on proto ≥ 4 `HeartbeatAck`s (indexed by
+    /// [`wire::WCTR_ORDERS`]-style ids). v3 workers leave zeros.
+    pub worker_counters: Mutex<Vec<[u64; wire::WCTR_SLOTS]>>,
     /// Device slots assigned so far (initial fleet + admitted joiners).
     /// Written only by the event loop; read by `Transport::n_devices`.
     width: AtomicUsize,
@@ -498,6 +542,8 @@ impl Shared {
             heartbeat_ms: cfg.heartbeat_ms,
             suspect_after: cfg.suspect_after_missed.max(1),
             dead_after: cfg.dead_after_missed.max(2),
+            net: NetCounters::default(),
+            worker_counters: Mutex::new(vec![[0; wire::WCTR_SLOTS]; capacity]),
             width: AtomicUsize::new(n_devices),
             events: Mutex::new(Vec::new()),
             waker,
@@ -857,11 +903,13 @@ fn heartbeat_tick(poller: &Poller, conns: &mut Vec<Option<Conn>>, shared: &Share
             }
             if c.missed >= shared.suspect_after && !c.suspect && c.registered {
                 c.suspect = true;
+                NetCounters::inc(&shared.net.suspects, 1);
                 shared.push_event(MembershipEvent::Suspect { device, missed: c.missed });
             }
         }
         if c.registered {
             nonce = nonce.wrapping_add(1);
+            NetCounters::inc(&shared.net.heartbeats_sent, 1);
             c.wq.push_back(wire::heartbeat(nonce));
         }
     }
@@ -937,6 +985,7 @@ fn kill_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared:
         None => true,
     };
     if shared.mark_dead(device) && registered {
+        NetCounters::inc(&shared.net.deaths, 1);
         shared.push_event(MembershipEvent::Dead { device });
     }
 }
@@ -946,7 +995,7 @@ fn kill_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared:
 fn flush_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared: &Shared) {
     let (res, fd, was) = match conns[device].as_mut() {
         None => return,
-        Some(c) => (write_queued(c), c.stream.as_raw_fd(), c.want_write),
+        Some(c) => (write_queued(c, &shared.net), c.stream.as_raw_fd(), c.want_write),
     };
     let pending = match res {
         Err(()) => {
@@ -968,7 +1017,7 @@ fn flush_conn(poller: &Poller, conns: &mut [Option<Conn>], device: usize, shared
 /// Drain `c.wq` into the socket, batching up to [`MAX_IOV`] frames per
 /// `writev` call. `Ok(true)` = socket full, bytes remain; `Ok(false)` =
 /// queue drained; `Err` = connection dead.
-fn write_queued(c: &mut Conn) -> std::result::Result<bool, ()> {
+fn write_queued(c: &mut Conn, net: &NetCounters) -> std::result::Result<bool, ()> {
     loop {
         if c.wq.is_empty() {
             return Ok(false);
@@ -989,6 +1038,8 @@ fn write_queued(c: &mut Conn) -> std::result::Result<bool, ()> {
                 _ => return Err(()),
             }
         }
+        NetCounters::inc(&net.writev_calls, 1);
+        NetCounters::inc(&net.bytes_tx, n as u64);
         let mut n = n as usize;
         while n > 0 {
             let left = c.wq[0].len() - c.woff;
@@ -996,6 +1047,7 @@ fn write_queued(c: &mut Conn) -> std::result::Result<bool, ()> {
                 c.wq.pop_front();
                 c.woff = 0;
                 n -= left;
+                NetCounters::inc(&net.frames_tx, 1);
             } else {
                 c.woff += n;
                 n = 0;
@@ -1018,6 +1070,7 @@ fn read_ready(c: &mut Conn, device: usize, shared: &Shared) -> bool {
             Ok(0) => return false,
             Ok(n) => {
                 c.rend += n;
+                NetCounters::inc(&shared.net.bytes_rx, n as u64);
                 // Any inbound bytes are proof of life for the
                 // heartbeat ladder — a worker busy streaming replies
                 // never needs to answer pings to stay healthy.
@@ -1072,23 +1125,40 @@ fn parse_frames(c: &mut Conn, device: usize, shared: &Shared) -> std::result::Re
             c.rstart = 0;
             c.rend = 0;
         }
+        NetCounters::inc(&shared.net.frames_rx, 1);
         match frame {
             Frame::Reply { req, task, result } if c.registered => {
                 deliver(shared, device, req, task, result)
             }
-            // Proof of life only; `c.seen` was already set by the read.
-            Frame::HeartbeatAck { .. } if c.registered => {}
+            // Proof of life (`c.seen` was already set by the read) —
+            // plus, from proto ≥ 4 workers, the piggybacked cumulative
+            // counter snapshot for this device slot.
+            Frame::HeartbeatAck { counters, .. } if c.registered => {
+                if !counters.is_empty() {
+                    let mut table = lock(&shared.worker_counters);
+                    if let Some(slot) = table.get_mut(device) {
+                        for (id, value) in counters {
+                            // Unknown ids are skipped: workers can grow
+                            // the set without a proto bump.
+                            if let Some(cell) = slot.get_mut(id as usize) {
+                                *cell = value;
+                            }
+                        }
+                    }
+                }
+            }
             // Graceful drain: the serve engine stops dispatching,
             // re-partitions, then retires the slot; the loop closes it
             // once the in-flight work drains (`close_drained`).
             Frame::Leave if c.registered => {
+                NetCounters::inc(&shared.net.leaves, 1);
                 shared.push_event(MembershipEvent::LeaveRequested { device });
             }
             // A pending joiner's one legal first frame. Valid magic is
             // checked at decode; here the protocol version and compute
             // capability gate admission.
             Frame::Register { proto, macs_per_ms, capabilities } if !c.registered => {
-                if proto != wire::PROTO_VERSION {
+                if !wire::proto_compatible(proto) {
                     let err = wire::proto_mismatch("joining worker", "coordinator", proto);
                     eprintln!("coordinator: rejecting join: {err}");
                     return Err(());
@@ -1101,6 +1171,7 @@ fn parse_frames(c: &mut Conn, device: usize, shared: &Shared) -> std::result::Re
                     return Err(());
                 }
                 c.registered = true;
+                NetCounters::inc(&shared.net.joins, 1);
                 c.wq.push_back(wire::register_ack(device as u32, shared.seed));
                 shared.push_event(MembershipEvent::Joined { device, macs_per_ms });
             }
@@ -1155,6 +1226,9 @@ fn reap(shared: &Shared) -> Option<f64> {
         }
         keys
     };
+    if !expired.is_empty() {
+        NetCounters::inc(&shared.net.reaped_tasks, expired.len() as u64);
+    }
     for (req, task, device) in expired {
         shared.send_lost(req, task, device);
     }

@@ -199,6 +199,14 @@ pub trait Transport: Send {
     /// in-flight orders finish — the graceful half of a `Leave`. No-op
     /// for the simulator.
     fn retire(&self, _device: usize) {}
+
+    /// Snapshot of transport-level counters as `(name, value)` pairs in
+    /// Prometheus naming style (`*_total` for monotonic counts). The
+    /// serve loop mirrors these into [`crate::telemetry::Telemetry`]
+    /// once per pass; the default (simulator) exposes none.
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
 }
 
 /// TCP transport parameters (the deployment file's `transport` section).

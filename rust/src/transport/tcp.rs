@@ -99,7 +99,7 @@ impl TcpTransport {
             let mut hs = &stream;
             wire::write_frame(&mut hs, &wire::hello(seed, device as u32))?;
             match wire::read_frame(&mut hs)? {
-                Some(Frame::HelloAck { proto }) if proto == wire::PROTO_VERSION => {}
+                Some(Frame::HelloAck { proto }) if wire::proto_compatible(proto) => {}
                 Some(Frame::HelloAck { proto }) => {
                     return Err(wire::proto_mismatch(
                         &format!("worker {addr}"),
@@ -359,6 +359,37 @@ impl Transport for TcpTransport {
         if device < self.shared.width() {
             self.shared.retire(device);
         }
+    }
+
+    fn counters(&self) -> Vec<(&'static str, u64)> {
+        let net = &self.shared.net;
+        let rel = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+        // Sum the per-device worker snapshots (cumulative per session;
+        // a dead worker's last snapshot keeps counting, which is the
+        // right monotone behaviour for a Prometheus counter).
+        let mut worker = [0u64; wire::WCTR_SLOTS];
+        for slot in lock(&self.shared.worker_counters).iter() {
+            for (acc, v) in worker.iter_mut().zip(slot) {
+                *acc += v;
+            }
+        }
+        vec![
+            ("net_tx_bytes_total", rel(&net.bytes_tx)),
+            ("net_rx_bytes_total", rel(&net.bytes_rx)),
+            ("net_tx_frames_total", rel(&net.frames_tx)),
+            ("net_rx_frames_total", rel(&net.frames_rx)),
+            ("net_writev_calls_total", rel(&net.writev_calls)),
+            ("transport_reaped_tasks_total", rel(&net.reaped_tasks)),
+            ("transport_heartbeats_sent_total", rel(&net.heartbeats_sent)),
+            ("fleet_joins_total", rel(&net.joins)),
+            ("fleet_deaths_total", rel(&net.deaths)),
+            ("fleet_suspects_total", rel(&net.suspects)),
+            ("fleet_leaves_total", rel(&net.leaves)),
+            ("worker_orders_total", worker[wire::WCTR_ORDERS as usize]),
+            ("worker_replies_total", worker[wire::WCTR_REPLIES as usize]),
+            ("worker_dropped_replies_total", worker[wire::WCTR_DROPPED as usize]),
+            ("worker_exec_errors_total", worker[wire::WCTR_EXEC_ERRORS as usize]),
+        ]
     }
 }
 

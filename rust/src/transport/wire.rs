@@ -33,7 +33,7 @@
 //! | 0x0B | Register    | magic u32, proto u16, macs_per_ms f64, caps u32 (worker →) |
 //! | 0x0C | RegisterAck | proto u16, device u32, seed u64                |
 //! | 0x0D | Heartbeat   | nonce u64                                      |
-//! | 0x0E | HeartbeatAck| nonce u64 (worker → coordinator)               |
+//! | 0x0E | HeartbeatAck| nonce u64 [, n u8, n × (id u8, value u64)] (worker →) |
 //! | 0x0F | Leave       | (empty) (worker → coordinator)                 |
 //!
 //! Kinds 0x0B–0x0F are the live-membership verbs (DESIGN.md §13):
@@ -58,12 +58,28 @@ use crate::kernels::{QuantWeights, Scratch, QBLOCK_ROWS};
 use crate::tensor::Tensor;
 
 /// Protocol version; bumped on any wire-format change. The handshake
-/// rejects a peer speaking a different version — see
-/// [`proto_mismatch`] for the diagnostic it must produce. Version 2
+/// rejects a peer outside [`MIN_PROTO_VERSION`]`..=`[`PROTO_VERSION`] —
+/// see [`proto_mismatch`] for the diagnostic it must produce. Version 2
 /// added the live-membership verbs (Register/RegisterAck/Heartbeat/
 /// HeartbeatAck/Leave); version 3 added the per-task precision byte to
-/// Deploy (int8 weight shards ship quantized).
-pub const PROTO_VERSION: u16 = 3;
+/// Deploy (int8 weight shards ship quantized); version 4 lets a worker
+/// piggyback telemetry counters on `HeartbeatAck` (DESIGN.md §16).
+pub const PROTO_VERSION: u16 = 4;
+
+/// Oldest peer protocol this build still speaks. v4 only *adds* an
+/// optional trailing counters payload to `HeartbeatAck`, so a v3 peer
+/// is negotiated down cleanly: a v4 coordinator accepts v3 workers
+/// (their bare acks decode as zero counters), and a v4 worker talking
+/// to a v3 coordinator simply never appends the counters.
+pub const MIN_PROTO_VERSION: u16 = 3;
+
+/// Whether a peer's announced protocol version is one this build
+/// speaks ([`MIN_PROTO_VERSION`]`..=`[`PROTO_VERSION`]). Every
+/// handshake site (Hello/HelloAck/Register/RegisterAck) gates on this
+/// and remembers the peer's version for downgrade decisions.
+pub fn proto_compatible(peer: u16) -> bool {
+    (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&peer)
+}
 
 /// Handshake magic ("CDCW" little-endian).
 pub const MAGIC: u32 = 0x5743_4443;
@@ -111,11 +127,28 @@ pub const CAP_COMPUTE: u32 = 1;
 /// versions instead of surfacing as a generic frame error.
 pub fn proto_mismatch(peer: &str, local: &str, peer_proto: u16) -> Error {
     Error::Wire(format!(
-        "{peer} speaks protocol {peer_proto}, {local} expects {PROTO_VERSION} — \
-         rebuild the older side (the wire format changes with the protocol \
-         version)"
+        "{peer} speaks protocol {peer_proto}, {local} expects \
+         {MIN_PROTO_VERSION}..={PROTO_VERSION} — rebuild the older side \
+         (the wire format changes with the protocol version)"
     ))
 }
+
+/// Worker counter ids piggybacked on `HeartbeatAck` (proto ≥ 4). Ids
+/// unknown to the coordinator are skipped, so workers can grow the set
+/// without a proto bump.
+pub const WCTR_ORDERS: u8 = 0;
+/// Work-order replies the worker actually sent.
+pub const WCTR_REPLIES: u8 = 1;
+/// Replies suppressed by the emulated failure plan (silent drops).
+pub const WCTR_DROPPED: u8 = 2;
+/// Worker-side execution failures (unknown task / shape error).
+pub const WCTR_EXEC_ERRORS: u8 = 3;
+/// Number of defined worker counter ids (coordinator-side table size).
+pub const WCTR_SLOTS: usize = 4;
+
+/// Cap on counters in one `HeartbeatAck` (hostile-input guard, far
+/// above [`WCTR_SLOTS`]).
+pub const MAX_ACK_COUNTERS: u32 = 64;
 
 /// One deployed task as carried by a Deploy frame (the on-wire twin of
 /// [`TaskDef`], with owned weight payloads). Exactly one of `w` /
@@ -242,6 +275,10 @@ pub enum Frame {
     HeartbeatAck {
         /// The probed nonce, echoed.
         nonce: u64,
+        /// Piggybacked worker telemetry (proto ≥ 4): cumulative
+        /// `(counter id, value)` pairs ([`WCTR_ORDERS`] …). Empty from
+        /// v3 workers, or from v4 workers talking to a v3 coordinator.
+        counters: Vec<(u8, u64)>,
     },
     /// Graceful-drain request (worker → coordinator): finish what is in
     /// flight, stop dispatching to this device, re-partition, then
@@ -497,10 +534,28 @@ pub fn heartbeat(nonce: u64) -> Vec<u8> {
     e.finish()
 }
 
-/// Encode a HeartbeatAck reply.
+/// Encode a bare HeartbeatAck reply (the proto-3 shape, still what a
+/// v4 worker sends to a v3 coordinator).
 pub fn heartbeat_ack(nonce: u64) -> Vec<u8> {
     let mut e = Enc::frame(K_HEARTBEAT_ACK);
     e.u64(nonce);
+    e.finish()
+}
+
+/// Encode a HeartbeatAck carrying piggybacked worker counters
+/// (proto ≥ 4): cumulative `(id, value)` pairs after the nonce.
+pub fn heartbeat_ack_with_counters(nonce: u64, counters: &[(u8, u64)]) -> Vec<u8> {
+    assert!(
+        counters.len() <= MAX_ACK_COUNTERS as usize,
+        "heartbeat ack counter set exceeds the wire cap"
+    );
+    let mut e = Enc::frame(K_HEARTBEAT_ACK);
+    e.u64(nonce);
+    e.u8(counters.len() as u8);
+    for &(id, value) in counters {
+        e.u8(id);
+        e.u64(value);
+    }
     e.finish()
 }
 
@@ -789,7 +844,26 @@ fn decode_with(mut d: Dec<'_, '_>, kind: u8) -> Result<Frame> {
             seed: d.u64()?,
         },
         K_HEARTBEAT => Frame::Heartbeat { nonce: d.u64()? },
-        K_HEARTBEAT_ACK => Frame::HeartbeatAck { nonce: d.u64()? },
+        K_HEARTBEAT_ACK => {
+            let nonce = d.u64()?;
+            // Proto-version negotiation lives in the payload shape: a
+            // v3 ack ends at the nonce, a v4 ack appends the counter
+            // set. One decoder accepts both (DESIGN.md §16).
+            let mut counters = Vec::new();
+            if d.remaining() > 0 {
+                let n = d.u8()?;
+                if u32::from(n) > MAX_ACK_COUNTERS {
+                    return Err(Error::Wire(format!(
+                        "heartbeat ack carries {n} counters, cap {MAX_ACK_COUNTERS}"
+                    )));
+                }
+                counters.reserve(n as usize);
+                for _ in 0..n {
+                    counters.push((d.u8()?, d.u64()?));
+                }
+            }
+            Frame::HeartbeatAck { nonce, counters }
+        }
         K_LEAVE => Frame::Leave,
         k => return Err(Error::Wire(format!("unknown frame kind {k:#x}"))),
     };

@@ -107,14 +107,41 @@ struct WorkerTask {
     b: Tensor,
 }
 
+/// Cumulative per-session worker counters, piggybacked on each
+/// `HeartbeatAck` to a proto ≥ 4 coordinator (DESIGN.md §16). Plain
+/// integers: everything that touches them runs on the frame loop.
+#[derive(Default)]
+struct WorkerCounters {
+    orders: u64,
+    replies: u64,
+    dropped: u64,
+    exec_errors: u64,
+}
+
+impl WorkerCounters {
+    /// The on-wire `(id, value)` snapshot for [`wire::heartbeat_ack_with_counters`].
+    fn snapshot(&self) -> [(u8, u64); wire::WCTR_SLOTS] {
+        [
+            (wire::WCTR_ORDERS, self.orders),
+            (wire::WCTR_REPLIES, self.replies),
+            (wire::WCTR_DROPPED, self.dropped),
+            (wire::WCTR_EXEC_ERRORS, self.exec_errors),
+        ]
+    }
+}
+
 /// Per-connection session state, reset for every coordinator.
 struct ConnState {
     seed: u64,
     device: usize,
+    /// The coordinator's announced protocol version (from Hello or
+    /// RegisterAck); decides whether HeartbeatAck carries counters.
+    peer_proto: u16,
     tasks: HashMap<u64, WorkerTask>,
     failure: FailurePlan,
     net: Option<NetConfig>,
     rate: Option<f64>,
+    counters: WorkerCounters,
 }
 
 /// Run a worker until its process is killed or a Shutdown frame
@@ -158,10 +185,15 @@ fn fresh_state(opts: &WorkerOptions) -> ConnState {
     ConnState {
         seed: 0,
         device: 0,
+        // Until the handshake announces otherwise, assume the oldest
+        // peer we speak — never send counters a v3 coordinator would
+        // reject as trailing garbage.
+        peer_proto: wire::MIN_PROTO_VERSION,
         tasks: HashMap::new(),
         failure: FailurePlan::None,
         net: opts.net.clone(),
         rate: opts.rate_macs_per_ms.filter(|r| r.is_finite() && *r > 0.0),
+        counters: WorkerCounters::default(),
     }
 }
 
@@ -189,9 +221,10 @@ fn run_joined(
     )?;
     let mut st = fresh_state(opts);
     match wire::read_frame(&mut stream)? {
-        Some(Frame::RegisterAck { proto, device, seed }) if proto == wire::PROTO_VERSION => {
+        Some(Frame::RegisterAck { proto, device, seed }) if wire::proto_compatible(proto) => {
             st.seed = seed;
             st.device = device as usize;
+            st.peer_proto = proto;
         }
         Some(Frame::RegisterAck { proto, .. }) => {
             return Err(wire::proto_mismatch("coordinator", "this worker", proto));
@@ -259,15 +292,24 @@ fn serve_frames(
         };
         match frame {
             Frame::Hello { proto, seed, device } => {
-                if proto != wire::PROTO_VERSION {
+                if !wire::proto_compatible(proto) {
                     return Err(wire::proto_mismatch("coordinator", "this worker", proto));
                 }
                 st.seed = seed;
                 st.device = device as usize;
+                st.peer_proto = proto;
                 wire::write_frame(&mut *lock(&writer), &wire::hello_ack())?;
             }
             Frame::Heartbeat { nonce } => {
-                wire::write_frame(&mut *lock(&writer), &wire::heartbeat_ack(nonce))?;
+                // Proto ≥ 4 coordinators get the cumulative counter set
+                // piggybacked on the ack; older peers get the bare v3
+                // shape (the v4 decoder reads either).
+                let ack = if st.peer_proto >= 4 {
+                    wire::heartbeat_ack_with_counters(nonce, &st.counters.snapshot())
+                } else {
+                    wire::heartbeat_ack(nonce)
+                };
+                wire::write_frame(&mut *lock(&writer), &ack)?;
             }
             Frame::Deploy { tasks } => {
                 for t in tasks {
@@ -341,6 +383,7 @@ fn work(
         fleet::order_stream(st.device, tasks.first().copied(), batch as usize, &input),
     );
     let dropped = st.failure.drops(req, &mut rng);
+    st.counters.orders += 1;
     let mut replies: Vec<u8> = Vec::new();
     for task_id in tasks {
         let result = match st.tasks.get(&task_id) {
@@ -373,8 +416,13 @@ fn work(
         if dropped && result.is_some() {
             // A "dropped" reply is silence — the coordinator's deadline
             // reaper is what notices, like a real lossy network.
+            st.counters.dropped += 1;
             continue;
         }
+        if result.is_none() {
+            st.counters.exec_errors += 1;
+        }
+        st.counters.replies += 1;
         replies.extend_from_slice(&wire::reply(req, task_id, result.as_ref()));
     }
     if !replies.is_empty() {

@@ -67,8 +67,8 @@ fn oracle(root: &Path, x: &Tensor) -> Tensor {
 }
 
 /// One-shot HTTP client: raw socket, `Connection: close`, blocking read
-/// to EOF. Returns (status, parsed JSON body).
-fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Value) {
+/// to EOF. Returns (status, raw body text).
+fn http_text(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
     let mut s = TcpStream::connect(addr).expect("connect gateway");
     let body = body.unwrap_or("");
     let req = format!(
@@ -85,13 +85,29 @@ fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Value
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| panic!("no status line in {text:?}"));
-    let json_body = text
+    let body = text
         .split_once("\r\n\r\n")
-        .map(|(_, b)| b)
+        .map(|(_, b)| b.to_string())
         .unwrap_or_else(|| panic!("no body in {text:?}"));
-    let v = Value::parse(json_body)
-        .unwrap_or_else(|e| panic!("bad JSON body {json_body:?}: {e}"));
+    (status, body)
+}
+
+/// [`http_text`] with the body parsed as JSON.
+fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> (u16, Value) {
+    let (status, text) = http_text(addr, method, path, body);
+    let v = Value::parse(&text)
+        .unwrap_or_else(|e| panic!("bad JSON body {text:?}: {e}"));
     (status, v)
+}
+
+/// Value of an unlabeled sample in Prometheus exposition text.
+fn prom_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("{name} not in exposition:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap()
 }
 
 fn infer_body(x: &Tensor) -> String {
@@ -121,12 +137,18 @@ fn assert_logits_match(root: &Path, x: &Tensor, reply: &Value) {
     assert_eq!(argmax, want.argmax(), "argmax");
 }
 
-/// Start the HTTP front door + command channel for a running test.
-fn start_gateway() -> (GatewayServer, GatewayBridge, String) {
+/// Start the HTTP front door + command channel for a running test. The
+/// gateway shares the session's telemetry registry, exactly as the CLI
+/// wires it, so `/metrics` and `/v1/traces` see serve-loop activity.
+fn start_gateway(session: &Session) -> (GatewayServer, GatewayBridge, String) {
     let (tx, rx) = mpsc::channel::<GatewayCmd>();
     let server = GatewayServer::start(
         &GatewayConfig::default(),
-        ServerCtx { model: synth::MODEL.to_string(), input_len: synth::FC1_K },
+        ServerCtx {
+            model: synth::MODEL.to_string(),
+            input_len: synth::FC1_K,
+            telemetry: session.telemetry(),
+        },
         tx,
     )
     .unwrap();
@@ -140,7 +162,7 @@ fn gateway_serves_oracle_exact_logits_alongside_paced_traffic() {
     let fleet =
         LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
     let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
-    let (server, bridge, addr) = start_gateway();
+    let (server, bridge, addr) = start_gateway(&session);
 
     // 6 client threads × 4 POSTs interleave with a 40-request paced
     // stream through the same pipeline.
@@ -180,6 +202,11 @@ fn gateway_serves_oracle_exact_logits_alongside_paced_traffic() {
         assert!(v.as_arr().unwrap()[0].get("deployed").unwrap().as_bool().unwrap());
         let (st, v) = http(&ctrl_addr, "GET", "/v1/stats", None);
         assert_eq!(st, 200, "{v:?}");
+        // Stats percentiles come from the shared telemetry histogram.
+        assert!(v.get("latency_ms").unwrap().get("p99_ms").is_ok(), "{v:?}");
+        let (st, page) = http_text(&ctrl_addr, "GET", "/", None);
+        assert_eq!(st, 200);
+        assert!(page.contains("<!DOCTYPE html>"), "dashboard did not render");
         let (st, _) = http(&ctrl_addr, "GET", "/v1/nope", None);
         assert_eq!(st, 404);
     });
@@ -226,7 +253,7 @@ fn gateway_survives_sigkill_with_oracle_exact_replies() {
     let fleet =
         LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
     let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
-    let (server, bridge, addr) = start_gateway();
+    let (server, bridge, addr) = start_gateway(&session);
 
     // Worker 1 owns data shards of both layers; kill it mid-POSTs. The
     // emulated ~5 ms/shard compute keeps the stream alive well past the
@@ -264,6 +291,61 @@ fn gateway_survives_sigkill_with_oracle_exact_replies() {
         .unwrap();
     let client_replies = shutter.join().unwrap();
     killer.join().unwrap();
+
+    // Telemetry over the same chaos run, scraped through the still-live
+    // HTTP thread: /metrics must show the recoveries and the latency
+    // series, and some retained trace must carry a reaped device span
+    // followed by a recovery event (ISSUE 10 acceptance).
+    let (st, metrics) = http_text(&addr, "GET", "/metrics", None);
+    assert_eq!(st, 200);
+    assert!(metrics.contains("# TYPE cdc_requests_total counter"), "{metrics}");
+    assert!(metrics.contains("# TYPE cdc_request_latency_ms histogram"), "{metrics}");
+    assert!(
+        prom_value(&metrics, "cdc_recoveries_total") > 0.0,
+        "kill landed but /metrics shows no recoveries:\n{metrics}"
+    );
+    assert!(
+        prom_value(&metrics, "cdc_request_latency_ms_count")
+            >= (CLIENTS * PER_CLIENT) as f64,
+        "latency histogram missed requests:\n{metrics}"
+    );
+    assert!(prom_value(&metrics, "gateway_http_requests_total") > 0.0, "{metrics}");
+
+    let (st, list) = http(&addr, "GET", "/v1/traces", None);
+    assert_eq!(st, 200, "{list:?}");
+    let rows = list.get("traces").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(rows.len(), CLIENTS * PER_CLIENT, "{list:?}");
+    let mut saw_reaped_then_recovered = false;
+    for row in &rows {
+        let req = row.get("req").unwrap().as_usize().unwrap() as u64;
+        let (st, detail) = http(&addr, "GET", &format!("/v1/traces/{req}"), None);
+        assert_eq!(st, 200, "{detail:?}");
+        let kinds: Vec<String> = detail
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+            .collect();
+        if let Some(i) = kinds.iter().position(|k| k == "reaped") {
+            if kinds[i..].iter().any(|k| k == "recovered") {
+                saw_reaped_then_recovered = true;
+            }
+        }
+    }
+    assert!(
+        saw_reaped_then_recovered,
+        "no retained trace shows a reaped span followed by a recovery"
+    );
+
+    // Both Chrome exports are loadable trace-event documents.
+    let (st, chrome) = http(&addr, "GET", "/v1/traces?format=chrome", None);
+    assert_eq!(st, 200);
+    assert!(!chrome.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    let (st, _) = http(&addr, "GET", "/v1/traces/999999", None);
+    assert_eq!(st, 404, "unknown trace id must 404");
+
     drop(server);
 
     assert!(report.failures.is_empty(), "chaos lost requests: {}", report.line());
@@ -291,7 +373,7 @@ fn gateway_lifecycle_migrate_undeploy_deploy() {
     let fleet =
         LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, None).unwrap();
     let mut session = Session::start(&arts.root, base_cfg(&fleet)).unwrap();
-    let (server, bridge, addr) = start_gateway();
+    let (server, bridge, addr) = start_gateway(&session);
     let root = arts.root.clone();
     let xs = inputs(4, 831);
 

@@ -1,0 +1,266 @@
+//! Telemetry integration tests (ISSUE 10): the metrics registry, the
+//! trace-span ring, and the Prometheus exposition exercised through
+//! real serve runs rather than unit fixtures.
+//!
+//! - `prometheus_exposition_is_conformant_after_serve`: a sim-transport
+//!   run, then a strict structural walk of the exposition text — HELP /
+//!   TYPE precede samples, histogram buckets are monotone and agree
+//!   with `_count`, every sample line parses.
+//! - `trace_ring_wraparound_keeps_recent_spans_intact`: more requests
+//!   than the ring holds; old slots are overwritten, retained spans are
+//!   complete and uncorrupted, nothing is counted as dropped.
+//! - `sigkill_serve_traces_show_reaped_then_recovery`: a real loopback
+//!   fleet with a SIGKILL mid-stream; the registry counts the reap and
+//!   the recovery, and a retained span shows them in order.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use cdc_dnn::coordinator::{Session, SessionConfig, SplitSpec, Workload};
+use cdc_dnn::json::Value;
+use cdc_dnn::rng::Pcg32;
+use cdc_dnn::tensor::Tensor;
+use cdc_dnn::testkit::synth;
+use cdc_dnn::transport::loopback::LoopbackFleet;
+use cdc_dnn::transport::{TcpConfig, TransportSpec};
+
+fn worker_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cdc-dnn"))
+}
+
+/// mlp over 2 data devices, both layers parity-coded (sim transport).
+fn sim_cfg() -> SessionConfig {
+    let mut cfg = SessionConfig::new(synth::MODEL);
+    cfg.n_devices = 2;
+    cfg.splits.insert("fc1".into(), SplitSpec::cdc(2));
+    cfg.splits.insert("fc2".into(), SplitSpec::cdc(2));
+    cfg
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| Tensor::randn(vec![synth::FC1_K], &mut rng)).collect()
+}
+
+/// Parse one exposition sample line into (series-with-labels, value).
+fn parse_sample(line: &str) -> (String, f64) {
+    let sp = line.rfind(' ').unwrap_or_else(|| panic!("bad sample line {line:?}"));
+    let v: f64 = line[sp + 1..]
+        .parse()
+        .unwrap_or_else(|e| panic!("bad value in {line:?}: {e}"));
+    (line[..sp].to_string(), v)
+}
+
+#[test]
+fn prometheus_exposition_is_conformant_after_serve() {
+    let arts = synth::build(101).unwrap();
+    let mut session = Session::start(&arts.root, sim_cfg()).unwrap();
+    let n = 24;
+    let report = session.serve(&Workload::closed(inputs(n, 1010), 3)).unwrap();
+    assert_eq!(report.throughput.completed, n as u64, "{}", report.line());
+
+    let tel = session.telemetry();
+    let text = tel.render_prometheus();
+
+    // Structural walk: every metric's HELP and TYPE lines come before
+    // its samples, every sample parses, no NaN/inf leaks.
+    let mut typed: HashMap<String, String> = HashMap::new();
+    let mut samples: Vec<(String, f64)> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest.split_once(' ').unwrap();
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE {kind} for {name}"
+            );
+            typed.insert(name.to_string(), kind.to_string());
+        } else if line.starts_with("# HELP ") {
+            continue;
+        } else {
+            assert!(!line.starts_with('#'), "unknown comment line {line:?}");
+            let (series, v) = parse_sample(line);
+            assert!(v.is_finite(), "non-finite sample {line:?}");
+            let base = series.split('{').next().unwrap();
+            let metric = base
+                .strip_suffix("_bucket")
+                .or_else(|| base.strip_suffix("_sum"))
+                .or_else(|| base.strip_suffix("_count"))
+                .filter(|m| typed.get(*m).map(String::as_str) == Some("histogram"))
+                .unwrap_or(base);
+            assert!(
+                typed.contains_key(metric),
+                "sample {series} has no preceding TYPE line"
+            );
+            samples.push((series, v));
+        }
+    }
+    let val = |name: &str| -> f64 {
+        samples
+            .iter()
+            .find(|(s, _)| s == name)
+            .unwrap_or_else(|| panic!("{name} missing from exposition"))
+            .1
+    };
+
+    // Registry counters agree with the run.
+    assert_eq!(val("cdc_requests_total"), n as f64);
+    assert_eq!(val("cdc_completed_total"), n as f64);
+    assert_eq!(val("cdc_failed_total"), 0.0);
+    assert_eq!(val("trace_spans_dropped_total"), 0.0);
+    assert_eq!(val("cdc_request_latency_ms_count"), n as f64);
+    assert!(val("cdc_batches_total") > 0.0);
+
+    // Histogram conformance: cumulative buckets are monotone
+    // nondecreasing, and the +Inf bucket equals _count.
+    for h in ["cdc_request_latency_ms", "cdc_batch_width"] {
+        let buckets: Vec<f64> = samples
+            .iter()
+            .filter(|(s, _)| s.starts_with(&format!("{h}_bucket{{")))
+            .map(|&(_, v)| v)
+            .collect();
+        assert!(!buckets.is_empty(), "{h} emitted no buckets");
+        for w in buckets.windows(2) {
+            assert!(w[1] >= w[0], "{h} buckets not monotone: {buckets:?}");
+        }
+        assert_eq!(
+            *buckets.last().unwrap(),
+            val(&format!("{h}_count")),
+            "{h}: le=\"+Inf\" must equal _count"
+        );
+        assert!(val(&format!("{h}_sum")) >= 0.0);
+    }
+
+    // Satellite (a): the report's percentiles come from the same
+    // histogram estimator as the live surfaces.
+    assert_eq!(report.latency_hist.count() as f64, val("cdc_request_latency_ms_count"));
+    let p50 = report.latency_hist.quantile(0.50);
+    let p99 = report.latency_hist.quantile(0.99);
+    assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+    assert!(p99 <= report.latency_hist.max_ms());
+}
+
+#[test]
+fn trace_ring_wraparound_keeps_recent_spans_intact() {
+    let arts = synth::build(102).unwrap();
+    let mut session = Session::start(&arts.root, sim_cfg()).unwrap();
+    // More requests than the ring retains (capacity 256): the oldest
+    // finished spans are overwritten, never the live ones.
+    let n = 300;
+    let report = session.serve(&Workload::closed(inputs(n, 1020), 4)).unwrap();
+    assert_eq!(report.throughput.completed, n as u64, "{}", report.line());
+
+    let tel = session.telemetry();
+    assert_eq!(tel.requests_total.get(), n as u64);
+    assert_eq!(tel.completed_total.get(), n as u64);
+    // Overwriting a *finished* slot is retention policy, not data loss.
+    assert_eq!(tel.traces.dropped(), 0);
+
+    let list = tel.traces.list_json();
+    let rows = list.get("traces").unwrap().as_arr().unwrap().to_vec();
+    let cap = list.get("ring_capacity").unwrap().as_usize().unwrap();
+    assert_eq!(rows.len(), cap, "ring must be full after {n} > {cap} requests");
+    for row in &rows {
+        let req = row.get("req").unwrap().as_usize().unwrap();
+        assert!(
+            req >= n - cap,
+            "req {req} should have been overwritten by a newer span"
+        );
+        assert!(!row.get("live").unwrap().as_bool().unwrap(), "req {req} never finished");
+        assert_eq!(row.get("outcome").unwrap().as_str().unwrap(), "merged");
+
+        // The retained span is complete: admitted first, merged last,
+        // monotone pipeline stamps in between.
+        let detail = tel.traces.get_json(req as u64).unwrap();
+        let events = detail.get("events").unwrap().as_arr().unwrap().to_vec();
+        assert!(events.len() >= 2, "req {req}: {detail:?}");
+        let kind = |e: &Value| e.get("kind").unwrap().as_str().unwrap().to_string();
+        assert_eq!(kind(&events[0]), "admitted");
+        assert_eq!(kind(events.last().unwrap()), "merged");
+        let mut last_t = f64::NEG_INFINITY;
+        for e in &events {
+            let t = e.get("t_ms").unwrap().as_f64().unwrap();
+            assert!(t >= last_t, "req {req}: event stamps regress: {detail:?}");
+            last_t = t;
+        }
+    }
+    // A scrolled-out id reads as absent, not as someone else's span.
+    assert!(tel.traces.get_json(0).is_none());
+}
+
+#[test]
+fn sigkill_serve_traces_show_reaped_then_recovery() {
+    let arts = synth::build(103).unwrap();
+    // Emulated ~5 ms/shard compute stretches the stream so the kill
+    // lands mid-serving (same harness as transport_loopback).
+    let fleet =
+        LoopbackFleet::spawn(Some(worker_bin()), &arts.root, 4, Some(20.0)).unwrap();
+    let mut cfg = sim_cfg();
+    cfg.detection_ms = 200.0;
+    cfg.batch_max = 4;
+    cfg.batch_wait_ms = 2.0;
+    let mut tcp: TcpConfig = fleet.tcp_config();
+    tcp.order_deadline_ms = 1_000.0;
+    cfg.transport = TransportSpec::Tcp(tcp);
+    let mut session = Session::start(&arts.root, cfg).unwrap();
+
+    let n = 120;
+    let killer = fleet.kill_after(1, 250);
+    let report = session.serve(&Workload::uniform(inputs(n, 1030), 6.0)).unwrap();
+    killer.join().unwrap();
+    assert_eq!(report.throughput.completed, n as u64, "{}", report.line());
+    assert!(report.throughput.recovered > 0, "{}", report.line());
+
+    let tel = session.telemetry();
+    // The registry saw the whole story: every request admitted and
+    // completed, at least one task reaped, at least one CDC recovery,
+    // and the piggybacked worker counters made it home over heartbeats.
+    assert_eq!(tel.requests_total.get(), n as u64);
+    assert_eq!(tel.completed_total.get(), n as u64);
+    assert_eq!(tel.failed_total.get(), 0);
+    assert!(tel.reaped_tasks_total.get() > 0, "kill left no reaped tasks");
+    assert!(tel.recoveries_total.get() > 0, "kill left no recoveries");
+    assert_eq!(tel.recoveries_total.get(), report.throughput.recovered);
+    let shared: std::collections::HashMap<&str, u64> =
+        tel.shared_counters().into_iter().collect();
+    assert!(
+        shared.get("worker_replies_total").copied().unwrap_or(0) > 0,
+        "worker counters never piggybacked on heartbeat acks: {shared:?}"
+    );
+    assert!(shared.get("net_rx_frames_total").copied().unwrap_or(0) > 0, "{shared:?}");
+
+    // Some retained span must record the reap on a device lane and the
+    // recovery after it — the ISSUE 10 acceptance shape.
+    let rows = tel.traces.list_json().get("traces").unwrap().as_arr().unwrap().to_vec();
+    let mut saw = false;
+    for row in &rows {
+        let req = row.get("req").unwrap().as_usize().unwrap() as u64;
+        let detail = tel.traces.get_json(req).unwrap();
+        let kinds: Vec<String> = detail
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+            .collect();
+        if let Some(i) = kinds.iter().position(|k| k == "reaped") {
+            if kinds[i..].iter().any(|k| k == "recovered") {
+                saw = true;
+            }
+        }
+    }
+    assert!(saw, "no retained span shows reaped followed by recovered");
+
+    // Chrome export over the same ring: a complete-span event per
+    // dispatched/replied (or reaped) device pair.
+    let chrome = tel.traces.chrome_all();
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    assert!(!events.is_empty());
+    assert!(events.iter().any(|e| {
+        e.get("ph").unwrap().as_str().unwrap() == "X"
+            && e.get("dur").and_then(|d| d.as_f64()).is_ok()
+    }));
+}

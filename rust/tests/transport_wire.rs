@@ -97,11 +97,40 @@ fn membership_frames_roundtrip() {
         roundtrip(&wire::heartbeat(41)),
         Frame::Heartbeat { nonce: 41 }
     ));
-    assert!(matches!(
-        roundtrip(&wire::heartbeat_ack(41)),
-        Frame::HeartbeatAck { nonce: 41 }
-    ));
+    // Bare (proto-3 shape) ack: decodes with zero counters.
+    match roundtrip(&wire::heartbeat_ack(41)) {
+        Frame::HeartbeatAck { nonce: 41, counters } => assert!(counters.is_empty()),
+        other => panic!("{other:?}"),
+    }
+    // v4 ack with piggybacked worker counters round-trips exactly.
+    let ctrs = [
+        (wire::WCTR_ORDERS, 12u64),
+        (wire::WCTR_REPLIES, 34),
+        (wire::WCTR_DROPPED, 0),
+        (wire::WCTR_EXEC_ERRORS, u64::MAX),
+    ];
+    match roundtrip(&wire::heartbeat_ack_with_counters(42, &ctrs)) {
+        Frame::HeartbeatAck { nonce: 42, counters } => assert_eq!(counters, ctrs.to_vec()),
+        other => panic!("{other:?}"),
+    }
     assert!(matches!(roundtrip(&wire::leave()), Frame::Leave));
+}
+
+/// The v3↔v4 negotiation window: both versions are accepted, anything
+/// outside the window is not, and an ack claiming more counters than
+/// the wire cap is rejected as hostile input.
+#[test]
+fn proto_window_and_counter_cap() {
+    assert!(wire::proto_compatible(wire::MIN_PROTO_VERSION));
+    assert!(wire::proto_compatible(wire::PROTO_VERSION));
+    assert!(!wire::proto_compatible(wire::MIN_PROTO_VERSION - 1));
+    assert!(!wire::proto_compatible(wire::PROTO_VERSION + 1));
+
+    // Patch a valid 1-counter ack to claim 200 counters.
+    let mut frame = wire::heartbeat_ack_with_counters(7, &[(wire::WCTR_ORDERS, 1)]);
+    frame[5 + 8] = 200; // count byte sits right after kind+len+nonce
+    let err = wire::read_frame(&mut Cursor::new(frame)).unwrap_err();
+    assert!(err.to_string().contains("cap"), "{err}");
 }
 
 /// The protocol-mismatch diagnostic names both sides and both versions —
@@ -306,6 +335,7 @@ fn corpus() -> Vec<Vec<u8>> {
         wire::register_ack(6, 0xabad_cafe),
         wire::heartbeat(3),
         wire::heartbeat_ack(3),
+        wire::heartbeat_ack_with_counters(4, &[(wire::WCTR_ORDERS, 9), (wire::WCTR_REPLIES, 8)]),
         wire::leave(),
     ]
 }
